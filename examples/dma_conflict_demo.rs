@@ -1,0 +1,103 @@
+//! DMA conflict walkthrough — the paper's §III-C + §III-D mechanisms on
+//! display: a page swap is started, and memory requests race it at
+//! different offsets and times; the demo prints which device each request
+//! was routed to and why, plus the Fig 3 tag-matching scenario.
+//!
+//! ```bash
+//! cargo run --release --example dma_conflict_demo
+//! ```
+
+use hymem::hmmu::dma::{DmaEngine, DmaRoute};
+use hymem::hmmu::redirection::{Device, Mapping};
+use hymem::hmmu::TagMatcher;
+
+fn main() {
+    println!("=== §III-D: DMA page swap with conflicting requests ===\n");
+    let mut dma = DmaEngine::new(512, 4096, false);
+    let map_nvm = Mapping {
+        device: Device::Nvm,
+        frame: 42,
+    };
+    let map_dram = Mapping {
+        device: Device::Dram,
+        frame: 7,
+    };
+    // Swap host page 100 (hot, in NVM) with host page 3 (cold, in DRAM).
+    let done = dma.start_swap(100, map_nvm, 3, map_dram, 0, &mut |dev, _a, k, _b, at| {
+        // NVM reads/writes slower than DRAM, per Table I.
+        at + match (dev, k.is_write()) {
+            (Device::Dram, false) => 30,
+            (Device::Dram, true) => 35,
+            (Device::Nvm, false) => 80,
+            (Device::Nvm, true) => 260,
+        }
+    });
+    println!("swap(page 100 <-> page 3) started at t=0, completes at t={done}ns");
+    println!("8 sub-blocks of 512B each (paper: 'data is transferred in units of 512B-block')\n");
+
+    println!(
+        "{:>6} {:>8} {:>22} {:>10}",
+        "t(ns)", "offset", "route", "serviced-by"
+    );
+    for (t, offset) in [
+        (0u64, 0u64),        // block 0 in flight
+        (0, 3584),           // block 7 untouched
+        (done / 2, 0),       // block 0 long committed
+        (done / 2, 2048),    // middle of the swap
+        (done / 2, 3584),    // tail still pending
+        (done + 1, 3584),    // swap complete
+    ] {
+        let (route, swap) = dma.route(100, offset, t);
+        let (label, dev) = match route {
+            DmaRoute::NotInvolved => ("not involved".to_string(), "table".to_string()),
+            DmaRoute::UseOriginal => (
+                "ahead of progress -> original".to_string(),
+                format!("{:?}", swap.unwrap().original(100).device),
+            ),
+            DmaRoute::UseDestination => (
+                "behind progress -> destination".to_string(),
+                format!("{:?}", swap.unwrap().destination(100).device),
+            ),
+            DmaRoute::Stall(until) => (
+                format!("in-flight block, stall to {until}"),
+                format!("{:?}", swap.unwrap().destination(100).device),
+            ),
+        };
+        println!("{t:>6} {offset:>8} {label:>22} {dev:>10}");
+    }
+
+    println!("\n=== §III-C / Fig 3: memory consistency via tag matching ===\n");
+    let mut tm = TagMatcher::new(8);
+    let req0 = tm.issue(); // -> NVM, slow
+    let req1 = tm.issue(); // -> DRAM, fast
+    println!("req0 (tag {req0}) -> NVM,  media completes at t=300ns");
+    println!("req1 (tag {req1}) -> DRAM, media completes at t=50ns (earlier!)");
+    let r1 = tm.complete(req1, 50);
+    println!("  at t=50:  DRAM data back; drained so far: {r1:?} (held — req0 is FIFO head)");
+    let r0 = tm.complete(req0, 300);
+    println!("  at t=300: NVM data back; drained: {r0:?}");
+    println!(
+        "  -> both responses released in request order; req1 waited {}ns for consistency",
+        tm.reorder_wait_ns
+    );
+
+    println!("\n=== write-during-swap correctness ===\n");
+    let mut dma2 = DmaEngine::new(512, 4096, false);
+    let done2 = dma2.start_swap(100, map_nvm, 3, map_dram, 0, &mut |_d, _a, k, _b, at| {
+        at + if k.is_write() { 40 } else { 30 }
+    });
+    let probe = done2 / 3;
+    let (route, _) = dma2.route(100, 3584, probe);
+    println!(
+        "write to not-yet-copied block at t={probe}: routed {:?} — lands in the source \
+         frame and will be carried over when its block is copied",
+        route
+    );
+    let (route, _) = dma2.route(100, 0, probe);
+    println!(
+        "write to already-copied block at t={probe}:  routed {:?} — the copy in the \
+         destination is the live one",
+        route
+    );
+    println!("\n({} conflict stalls recorded by the engine)", dma2.conflict_stalls);
+}

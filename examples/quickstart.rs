@@ -1,0 +1,39 @@
+//! Quickstart: run one SPEC-like workload on the emulation platform and
+//! print the full report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart -- [workload] [ops]
+//! ```
+
+use hymem::config::SystemConfig;
+use hymem::platform::{Platform, RunOpts};
+use hymem::workload::spec;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let wl_name = args.first().map(|s| s.as_str()).unwrap_or("505.mcf");
+    let ops: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(500_000);
+
+    let wl = spec::by_name(wl_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload {wl_name}"))?;
+
+    // Table II at 1/16 scale: 8 MiB DRAM + 64 MiB emulated 3D XPoint.
+    let cfg = SystemConfig::default_scaled(16);
+    println!("=== configuration ===\n{}\n", cfg.show());
+
+    let report = Platform::new(cfg).run_opts(
+        &wl,
+        RunOpts {
+            ops,
+            flush_at_end: false,
+        },
+    )?;
+    println!("=== run report ===\n{}", report.detail());
+    println!(
+        "\nFig 7 datapoint: {} slows down {:.2}x on the PCIe-attached \
+         hybrid platform (paper geomean: 3.17x)",
+        wl.name,
+        report.slowdown()
+    );
+    Ok(())
+}

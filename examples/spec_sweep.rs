@@ -1,0 +1,122 @@
+//! End-to-end driver: the full system on the full Table III workload set.
+//!
+//! This is the repository's E2E validation run (EXPERIMENTS.md): all
+//! three layers compose — synthetic SPEC traces → A57 core + caches →
+//! PCIe link → HMMU (hotness policy through the **AOT XLA artifact** when
+//! present) → DRAM/NVM timing models — and the Fig 7 + Fig 8 data come
+//! out the other side, with the gem5-like / champsim-like baselines
+//! measured on a sample for the speedup headline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example spec_sweep
+//! ```
+
+use hymem::baselines::run_fig7_row;
+use hymem::config::SystemConfig;
+use hymem::platform::{Platform, RunOpts};
+use hymem::runtime::XlaHotnessEngine;
+use hymem::util::stats::geomean;
+use hymem::util::units::fmt_bytes;
+use hymem::workload::WORKLOADS;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let ops: u64 = args
+        .first()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let baseline_instr: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200_000);
+
+    let cfg = SystemConfig::default_scaled(16);
+
+    // Engine: the AOT XLA policy step if artifacts exist.
+    let engine_label = match XlaHotnessEngine::load_default() {
+        Ok(e) => {
+            println!(
+                "XLA policy engine loaded (variants: {:?})",
+                e.variant_sizes()
+            );
+            "xla-aot"
+        }
+        Err(e) => {
+            println!("XLA artifacts unavailable ({e}); using native engine");
+            "native"
+        }
+    };
+
+    println!("\n=== E2E sweep: 12 workloads, policy=hotness/{engine_label}, {ops} mem-ops each ===\n");
+
+    let mut slowdowns = Vec::new();
+    let mut fig8: Vec<(String, u64, u64)> = Vec::new();
+    for wl in &WORKLOADS {
+        let mut p = Platform::new(cfg.clone());
+        if let Ok(e) = XlaHotnessEngine::load_default() {
+            p = p.with_engine(Box::new(e));
+        }
+        let r = p.run_opts(
+            wl,
+            RunOpts {
+                ops,
+                flush_at_end: false,
+            },
+        )?;
+        println!("{}", r.summary());
+        slowdowns.push(r.slowdown());
+        let (rb, wb) = r.fig8_scaled();
+        fig8.push((wl.name.to_string(), rb, wb));
+    }
+    let geo = geomean(&slowdowns);
+    println!("\nFig 7 (ours): geomean slowdown {geo:.2}x  (paper: 3.17x)");
+
+    println!("\n=== Fig 8: memory request volume (scaled to paper size) ===");
+    println!("(run lengths proportional to full-benchmark memory-op counts)");
+    println!("{:<16} {:>12} {:>12}", "workload", "read", "write");
+    fig8.clear();
+    for (wl, wl_ops) in hymem::workload::proportional_ops(ops) {
+        let r = Platform::new(cfg.clone()).run_opts(
+            &wl,
+            RunOpts {
+                ops: wl_ops,
+                // flush residual dirty lines so write-back volume is
+                // counted, as a full-benchmark run would see (Fig 8 has
+                // writes ~ reads).
+                flush_at_end: true,
+            },
+        )?;
+        let (rb, wb) = r.fig8_scaled();
+        fig8.push((wl.name.to_string(), rb, wb));
+    }
+    for (name, rb, wb) in &fig8 {
+        println!("{:<16} {:>12} {:>12}", name, fmt_bytes(*rb), fmt_bytes(*wb));
+    }
+    fig8.sort_by_key(|r| std::cmp::Reverse(r.1 + r.2));
+    println!(
+        "volume order: max={} min={} (paper: mcf max, imagick min)",
+        fig8.first().unwrap().0,
+        fig8.last().unwrap().0
+    );
+
+    // Baseline comparison on a representative subset (full set via
+    // `hymem fig7` / the fig7 bench; they are slow by design).
+    println!("\n=== baseline spot-check (sampled {baseline_instr} instructions) ===");
+    let mut ours = Vec::new();
+    let mut champ = Vec::new();
+    let mut gem5 = Vec::new();
+    for name in ["505.mcf", "538.imagick", "557.xz"] {
+        let wl = hymem::workload::spec::by_name(name).unwrap();
+        let row = run_fig7_row(&cfg, &wl, ops.min(200_000), baseline_instr)?;
+        println!(
+            "{:<16} ours {:>6.2}x   champsim-like {:>8.0}x   gem5-like {:>8.0}x",
+            row.workload, row.ours, row.champsim, row.gem5
+        );
+        ours.push(row.ours);
+        champ.push(row.champsim);
+        gem5.push(row.gem5);
+    }
+    println!(
+        "speedup vs gem5-like {:.0}x (paper 9280x), vs champsim-like {:.0}x (paper 2286x)",
+        geomean(&gem5) / geomean(&ours),
+        geomean(&champ) / geomean(&ours)
+    );
+    Ok(())
+}

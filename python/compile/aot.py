@@ -1,0 +1,85 @@
+"""AOT compilation: lower the L2 graphs to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the
+text with `HloModuleProto::from_text_file` and compiles it on the PJRT
+CPU client. HLO **text** is the interchange format (not
+`.serialize()`): jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Page-count variants for the policy step — keep in sync with
+# rust/src/runtime/mod.rs::ARTIFACT_SIZES.
+HOTNESS_SIZES = [4096, 16384, 65536, 262144]
+# Batch size for the latency model artifact.
+LATENCY_BATCH = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see /opt/xla-example)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_policy_step(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lowered = jax.jit(model.policy_step).lower(spec, spec, spec, spec)
+    return to_hlo_text(lowered)
+
+
+def lower_latency_model(batch: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    lowered = jax.jit(model.latency_estimate).lower(spec, spec, spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--sizes", default=",".join(map(str, HOTNESS_SIZES)),
+                    help="comma-separated policy-step page counts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"hotness_step": [], "latency_model": []}
+
+    for n in [int(s) for s in args.sizes.split(",") if s]:
+        text = lower_policy_step(n)
+        path = os.path.join(args.out_dir, f"hotness_step_{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["hotness_step"].append({"pages": n, "file": os.path.basename(path),
+                                         "chars": len(text)})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    text = lower_latency_model(LATENCY_BATCH)
+    path = os.path.join(args.out_dir, f"latency_model_{LATENCY_BATCH}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["latency_model"].append({"batch": LATENCY_BATCH,
+                                      "file": os.path.basename(path),
+                                      "chars": len(text)})
+    print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

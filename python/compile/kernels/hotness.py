@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: the epoch policy step.
+
+The HMMU accumulates per-page read/write counters during an epoch; at the
+boundary this kernel computes decayed hotness and migration scores for
+every page in one dense pass.
+
+TPU shape (DESIGN.md §Hardware-Adaptation): the page array is tiled
+through VMEM in `BLOCK`-page blocks; per block the math is a fused
+elementwise FMA + two selects — pure VPU work with all operands resident
+(4 input streams + 3 output streams x BLOCK x 4B = 28 KiB at BLOCK=1024,
+comfortably inside VMEM). interpret=True everywhere here: the CPU PJRT
+client cannot execute Mosaic custom-calls; on a real TPU the same
+pallas_call lowers natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import HOTNESS_DECAY, NEG_INF, WRITE_WEIGHT
+
+# Pages per VMEM block.
+BLOCK = 1024
+
+
+def _hotness_kernel(reads_ref, writes_ref, prev_ref, in_dram_ref,
+                    hot_ref, promote_ref, demote_ref):
+    """One block: fused hotness update + masked scores."""
+    reads = reads_ref[...]
+    writes = writes_ref[...]
+    prev = prev_ref[...]
+    in_dram = in_dram_ref[...]
+
+    hot = HOTNESS_DECAY * prev + (reads + WRITE_WEIGHT * writes)
+    dram = in_dram != 0.0
+    hot_ref[...] = hot
+    promote_ref[...] = jnp.where(dram, NEG_INF, hot)
+    demote_ref[...] = jnp.where(dram, -hot, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def hotness_step(reads, writes, prev, in_dram, *, block=BLOCK):
+    """Pallas policy step over f32[N] page arrays (N % block == 0)."""
+    n = reads.shape[0]
+    assert n % block == 0, f"page count {n} not a multiple of block {block}"
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        _hotness_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=(spec, spec, spec),
+        out_shape=(out, out, out),
+        interpret=True,  # CPU PJRT cannot run Mosaic; see module docstring
+    )(reads, writes, prev, in_dram)

@@ -1,0 +1,62 @@
+"""Layer-1 Pallas kernel: batched request-latency composition.
+
+Implements the paper's §III-F "arbitrary latency cycles" calibration as a
+batched estimator: given per-request device/type/queue-depth vectors and
+the measured DRAM round trip, produce per-request latency estimates. The
+`hymem calibrate` CLI uses the AOT artifact of this kernel to print the
+stall-cycle table for every Table I technology.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _latency_kernel(is_nvm_ref, is_write_ref, qd_ref, out_ref, *,
+                    dram_rt_ns, pcie_rtt_ns, nvm_read_stall_ns,
+                    nvm_write_stall_ns, service_ns):
+    is_nvm = is_nvm_ref[...]
+    is_write = is_write_ref[...]
+    qd = qd_ref[...]
+    nvm_stall = is_nvm * (
+        is_write * nvm_write_stall_ns + (1.0 - is_write) * nvm_read_stall_ns
+    )
+    out_ref[...] = pcie_rtt_ns + dram_rt_ns + nvm_stall + qd * service_ns
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block", "dram_rt_ns", "pcie_rtt_ns", "nvm_read_stall_ns",
+        "nvm_write_stall_ns", "service_ns",
+    ),
+)
+def latency_model(is_nvm, is_write, queue_depth, *, block=BLOCK,
+                  dram_rt_ns=32.0, pcie_rtt_ns=510.0,
+                  nvm_read_stall_ns=50.0, nvm_write_stall_ns=225.0,
+                  service_ns=18.0):
+    """Pallas latency estimator over f32[B] request vectors."""
+    n = is_nvm.shape[0]
+    assert n % block == 0, f"batch {n} not a multiple of block {block}"
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    kernel = functools.partial(
+        _latency_kernel,
+        dram_rt_ns=dram_rt_ns,
+        pcie_rtt_ns=pcie_rtt_ns,
+        nvm_read_stall_ns=nvm_read_stall_ns,
+        nvm_write_stall_ns=nvm_write_stall_ns,
+        service_ns=service_ns,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(is_nvm, is_write, queue_depth)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest sweeps shapes and values
+(hypothesis) asserting the Pallas kernels (interpret=True) match these
+references exactly, and the Rust `NativeHotnessEngine` mirrors the same
+math so the whole three-layer stack agrees.
+"""
+
+import jax.numpy as jnp
+
+# Policy constants — keep in sync with rust/src/hmmu/policy/hotness.rs.
+HOTNESS_DECAY = 0.5
+WRITE_WEIGHT = 2.0
+NEG_INF = -1.0e30
+
+
+def hotness_step_ref(reads, writes, prev, in_dram):
+    """Reference policy step.
+
+    hotness' = DECAY*prev + reads + WRITE_WEIGHT*writes
+    promote  = hotness' where NVM-resident else -inf
+    demote   = -hotness' where DRAM-resident else -inf
+    """
+    hot = HOTNESS_DECAY * prev + (reads + WRITE_WEIGHT * writes)
+    dram = in_dram != 0.0
+    promote = jnp.where(dram, NEG_INF, hot)
+    demote = jnp.where(dram, -hot, NEG_INF)
+    return hot, promote, demote
+
+
+def latency_model_ref(is_nvm, is_write, queue_depth, *, dram_rt_ns=32.0,
+                      pcie_rtt_ns=510.0, nvm_read_stall_ns=50.0,
+                      nvm_write_stall_ns=225.0, service_ns=18.0):
+    """Reference batched request-latency estimate (§III-F calibration).
+
+    latency = PCIe RTT + DRAM round trip
+            + NVM stall (read or write) when the request targets NVM
+            + queue_depth * per-request service time
+    """
+    nvm_stall = is_nvm * (
+        is_write * nvm_write_stall_ns + (1.0 - is_write) * nvm_read_stall_ns
+    )
+    return pcie_rtt_ns + dram_rt_ns + nvm_stall + queue_depth * service_ns

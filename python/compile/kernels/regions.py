@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernel: region access aggregation for pattern
+recognition.
+
+The paper's §III-A lists three policy aspects users implement in fabric:
+"the memory access pattern recognition, data placement policy, and data
+migration policy". This kernel is the *recognition* stage: it reduces
+per-page epoch counters into per-region aggregates (region = contiguous
+group of `pages_per_region` pages) so the policy can classify regions as
+streaming (uniform, read-heavy), hot-spot (skewed), or write-bursty —
+at region granularity instead of page granularity.
+
+Outputs per region: total reads, total writes, max page hotness (a
+skew/peak indicator which, together with the total, distinguishes a hot
+spot from a uniform stream).
+
+TPU shape: grid over regions; each step reduces one `pages_per_region`
+block from VMEM with `jnp.sum`/`jnp.max` (VPU reductions).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import HOTNESS_DECAY, WRITE_WEIGHT
+
+# Pages aggregated per region (4 KiB pages -> 1 MiB regions).
+PAGES_PER_REGION = 256
+
+
+def _region_kernel(reads_ref, writes_ref, prev_ref,
+                   sum_reads_ref, sum_writes_ref, max_hot_ref):
+    reads = reads_ref[...]
+    writes = writes_ref[...]
+    prev = prev_ref[...]
+    hot = HOTNESS_DECAY * prev + (reads + WRITE_WEIGHT * writes)
+    sum_reads_ref[...] = jnp.sum(reads)[None]
+    sum_writes_ref[...] = jnp.sum(writes)[None]
+    max_hot_ref[...] = jnp.max(hot)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_region",))
+def region_stats(reads, writes, prev, *, pages_per_region=PAGES_PER_REGION):
+    """Aggregate f32[N] page counters into f32[N/R] region stats."""
+    n = reads.shape[0]
+    assert n % pages_per_region == 0, (
+        f"page count {n} not a multiple of region size {pages_per_region}")
+    regions = n // pages_per_region
+    in_spec = pl.BlockSpec((pages_per_region,), lambda i: (i,))
+    out_spec = pl.BlockSpec((1,), lambda i: (i,))
+    out = jax.ShapeDtypeStruct((regions,), jnp.float32)
+    return pl.pallas_call(
+        _region_kernel,
+        grid=(regions,),
+        in_specs=[in_spec, in_spec, in_spec],
+        out_specs=(out_spec, out_spec, out_spec),
+        out_shape=(out, out, out),
+        interpret=True,
+    )(reads, writes, prev)
+
+
+def classify_regions(sum_reads, sum_writes, max_hot, *,
+                     write_burst_ratio=2.0, skew_ratio=0.25):
+    """Classify each region (plain jnp; runs inside the L2 graph).
+
+    Returns an i32 class per region:
+      0 = cold        (negligible traffic)
+      1 = streaming   (traffic spread evenly, read-dominated)
+      2 = hot-spot    (one page dominates: max_hot > skew_ratio * total)
+      3 = write-burst (writes dominate reads)
+    """
+    total = sum_reads + sum_writes
+    eps = 1e-6
+    is_cold = total < 1.0
+    is_burst = sum_writes > write_burst_ratio * (sum_reads + eps)
+    is_spot = max_hot > skew_ratio * (total + eps)
+    return jnp.where(
+        is_cold, 0,
+        jnp.where(is_burst, 3, jnp.where(is_spot, 2, 1))
+    ).astype(jnp.int32)

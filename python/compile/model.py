@@ -1,0 +1,26 @@
+"""Layer-2 JAX model: the HMMU policy step graph.
+
+Wraps the Layer-1 Pallas kernels into the exact computation the Rust
+coordinator executes each epoch, and is the function `aot.py` lowers to
+HLO text. Returns tuples so the Rust side can `to_tuple()` the result.
+"""
+
+from .kernels.hotness import hotness_step
+from .kernels.latency import latency_model
+
+
+def policy_step(reads, writes, prev, in_dram):
+    """Epoch policy step: (hotness, promote_score, demote_score).
+
+    Inputs are f32[N] page arrays; N is fixed per AOT variant (the Rust
+    runtime pads to the next variant size). The heavy lifting is the
+    Pallas kernel; this graph exists so future L2 additions (e.g.
+    cross-epoch smoothing, per-region aggregation) compose before AOT.
+    """
+    hot, promote, demote = hotness_step(reads, writes, prev, in_dram)
+    return (hot, promote, demote)
+
+
+def latency_estimate(is_nvm, is_write, queue_depth, **params):
+    """Batched latency estimate (§III-F calibration graph)."""
+    return (latency_model(is_nvm, is_write, queue_depth, **params),)

@@ -1,0 +1,97 @@
+"""AOT pipeline tests: lowering to HLO text, artifact structure, and
+round-trip executability on the CPU backend."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.ref import hotness_step_ref
+
+
+class TestLowering:
+    def test_policy_step_lowers_to_hlo_text(self):
+        text = aot.lower_policy_step(4096)
+        assert "HloModule" in text
+        assert "f32[4096]" in text
+        # return_tuple=True -> root is a 3-tuple.
+        assert "(f32[4096]" in text
+
+    def test_latency_model_lowers(self):
+        text = aot.lower_latency_model(1024)
+        assert "HloModule" in text
+        assert "f32[1024]" in text
+
+    def test_all_variants_lower(self):
+        for n in aot.HOTNESS_SIZES:
+            text = aot.lower_policy_step(n)
+            assert f"f32[{n}]" in text
+
+    def test_no_custom_calls_in_hlo(self):
+        """interpret=True must lower to plain HLO ops the CPU client can
+        run — a Mosaic custom-call here would break the Rust runtime."""
+        text = aot.lower_policy_step(4096)
+        assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+class TestArtifactGeneration:
+    def test_main_writes_artifacts(self, tmp_path):
+        out = tmp_path / "artifacts"
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+             "--sizes", "4096"],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        assert (out / "hotness_step_4096.hlo.txt").exists()
+        assert (out / "latency_model_1024.hlo.txt").exists()
+        manifest = json.loads((out / "manifest.json").read_text())
+        assert manifest["hotness_step"][0]["pages"] == 4096
+
+    def test_hlo_text_parses_back(self):
+        """Round-trip: the emitted text must parse back into an HloModule
+        — the same parser the Rust runtime invokes via
+        `HloModuleProto::from_text_file`. (Full execute-and-compare runs
+        in the Rust integration test `xla_policy_cross_check`.)"""
+        from jax._src.lib import xla_client as xc
+
+        n = 4096
+        text = aot.lower_policy_step(n)
+        module = xc._xla.hlo_module_from_text(text)
+        rendered = module.to_string()
+        assert "f32[4096]" in rendered
+
+    def test_lowered_output_matches_ref_semantics(self):
+        """Execute the jitted (pre-AOT) graph and compare against ref —
+        the computation being serialized is the computation we tested."""
+        import jax
+
+        n = 4096
+        rng = np.random.default_rng(5)
+        args = [
+            rng.integers(0, 50, n).astype(np.float32),
+            rng.integers(0, 50, n).astype(np.float32),
+            rng.random(n).astype(np.float32),
+            (rng.random(n) < 0.5).astype(np.float32),
+        ]
+        got = jax.jit(model.policy_step)(*args)
+        want = hotness_step_ref(*args)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+class TestManifestConsistency:
+    def test_sizes_match_rust_runtime(self):
+        """HOTNESS_SIZES must mirror rust/src/runtime/mod.rs::ARTIFACT_SIZES."""
+        rust_src = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+            "rust", "src", "runtime", "mod.rs",
+        )
+        with open(rust_src) as f:
+            content = f.read()
+        for n in aot.HOTNESS_SIZES:
+            assert str(n) in content, f"size {n} missing from Rust ARTIFACT_SIZES"

@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; exact equality is expected
+because interpret mode executes the same f32 ops in the same order.
+"""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.hotness import hotness_step
+from compile.kernels.latency import latency_model
+from compile.kernels.ref import (HOTNESS_DECAY, NEG_INF, WRITE_WEIGHT,
+                                 hotness_step_ref, latency_model_ref)
+
+RNG = np.random.default_rng(42)
+
+
+def _page_arrays(n, seed=0):
+    rng = np.random.default_rng(seed)
+    reads = rng.integers(0, 1000, n).astype(np.float32)
+    writes = rng.integers(0, 500, n).astype(np.float32)
+    prev = (rng.random(n) * 1e4).astype(np.float32)
+    in_dram = (rng.random(n) < 0.3).astype(np.float32)
+    return reads, writes, prev, in_dram
+
+
+class TestHotnessKernel:
+    def test_matches_ref_basic(self):
+        arrs = _page_arrays(4096)
+        got = hotness_step(*arrs)
+        want = hotness_step_ref(*arrs)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_constants_match_rust(self):
+        # Guard against drift vs rust/src/hmmu/policy/hotness.rs.
+        assert HOTNESS_DECAY == 0.5
+        assert WRITE_WEIGHT == 2.0
+        assert NEG_INF == -1.0e30
+
+    def test_known_values(self):
+        reads = jnp.array([3.0] + [0.0] * 1023, dtype=jnp.float32)
+        writes = jnp.array([1.0] + [0.0] * 1023, dtype=jnp.float32)
+        prev = jnp.array([4.0] + [0.0] * 1023, dtype=jnp.float32)
+        in_dram = jnp.zeros(1024, dtype=jnp.float32)
+        hot, promote, demote = hotness_step(reads, writes, prev, in_dram)
+        # 0.5*4 + 3 + 2*1 = 7 (mirrors the Rust unit test).
+        assert float(hot[0]) == 7.0
+        assert float(promote[0]) == 7.0
+        assert float(demote[0]) == np.float32(NEG_INF)
+
+    def test_dram_pages_masked(self):
+        n = 2048
+        reads, writes, prev, _ = _page_arrays(n, seed=1)
+        in_dram = np.ones(n, dtype=np.float32)
+        hot, promote, demote = hotness_step(reads, writes, prev, in_dram)
+        assert np.all(np.asarray(promote) == np.float32(NEG_INF))
+        np.testing.assert_array_equal(np.asarray(demote), -np.asarray(hot))
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        nblocks=st.integers(min_value=1, max_value=16),
+        block=st.sampled_from([8, 64, 128, 1024]),
+        seed=st.integers(min_value=0, max_value=2**31),
+        scale=st.sampled_from([1.0, 1e3, 1e6, 1e-3]),
+    )
+    def test_hypothesis_shapes_and_ranges(self, nblocks, block, seed, scale):
+        n = nblocks * block
+        rng = np.random.default_rng(seed)
+        reads = (rng.random(n) * scale).astype(np.float32)
+        writes = (rng.random(n) * scale).astype(np.float32)
+        prev = (rng.random(n) * scale).astype(np.float32)
+        in_dram = (rng.random(n) < 0.5).astype(np.float32)
+        got = hotness_step(reads, writes, prev, in_dram, block=block)
+        want = hotness_step_ref(reads, writes, prev, in_dram)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=0, atol=0)
+
+    def test_rejects_non_multiple_of_block(self):
+        with pytest.raises(AssertionError):
+            hotness_step(
+                jnp.zeros(1000), jnp.zeros(1000), jnp.zeros(1000), jnp.zeros(1000)
+            )
+
+    def test_zero_epoch_decays_only(self):
+        n = 1024
+        z = jnp.zeros(n, dtype=jnp.float32)
+        prev = jnp.full(n, 64.0, dtype=jnp.float32)
+        hot, _, _ = hotness_step(z, z, prev, z)
+        assert np.all(np.asarray(hot) == 32.0)
+
+
+class TestLatencyKernel:
+    def test_matches_ref(self):
+        n = 1024
+        rng = np.random.default_rng(7)
+        is_nvm = (rng.random(n) < 0.5).astype(np.float32)
+        is_write = (rng.random(n) < 0.4).astype(np.float32)
+        qd = rng.integers(0, 32, n).astype(np.float32)
+        got = latency_model(is_nvm, is_write, qd)
+        want = latency_model_ref(is_nvm, is_write, qd)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_nvm_write_is_slowest(self):
+        z = np.zeros(256, dtype=np.float32)
+        o = np.ones(256, dtype=np.float32)
+        dram_read = np.asarray(latency_model(z, z, z))[0]
+        nvm_read = np.asarray(latency_model(o, z, z))[0]
+        nvm_write = np.asarray(latency_model(o, o, z))[0]
+        assert dram_read < nvm_read < nvm_write
+
+    def test_queue_depth_adds_service(self):
+        z = np.zeros(256, dtype=np.float32)
+        qd = np.full(256, 10.0, dtype=np.float32)
+        base = np.asarray(latency_model(z, z, z))[0]
+        queued = np.asarray(latency_model(z, z, qd))[0]
+        assert queued == pytest.approx(base + 180.0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        nblocks=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, nblocks, seed):
+        n = nblocks * 256
+        rng = np.random.default_rng(seed)
+        is_nvm = (rng.random(n) < 0.5).astype(np.float32)
+        is_write = (rng.random(n) < 0.5).astype(np.float32)
+        qd = rng.integers(0, 64, n).astype(np.float32)
+        got = latency_model(is_nvm, is_write, qd)
+        want = latency_model_ref(is_nvm, is_write, qd)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_custom_params_flow_through(self):
+        z = np.zeros(256, dtype=np.float32)
+        o = np.ones(256, dtype=np.float32)
+        got = latency_model(o, z, z, dram_rt_ns=10.0, pcie_rtt_ns=0.0,
+                            nvm_read_stall_ns=90.0, service_ns=0.0)
+        assert np.asarray(got)[0] == pytest.approx(100.0)

@@ -1,0 +1,75 @@
+"""Region-aggregation kernel vs a pure-numpy oracle, plus classifier
+semantics (the paper's §III-A 'memory access pattern recognition')."""
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels.ref import HOTNESS_DECAY, WRITE_WEIGHT
+from compile.kernels.regions import classify_regions, region_stats
+
+
+def oracle(reads, writes, prev, r):
+    n = len(reads)
+    regions = n // r
+    sr = reads.reshape(regions, r).sum(axis=1)
+    sw = writes.reshape(regions, r).sum(axis=1)
+    hot = HOTNESS_DECAY * prev + (reads + WRITE_WEIGHT * writes)
+    mh = hot.reshape(regions, r).max(axis=1)
+    return sr, sw, mh
+
+
+class TestRegionStats:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(1)
+        n, r = 4096, 256
+        reads = rng.integers(0, 100, n).astype(np.float32)
+        writes = rng.integers(0, 100, n).astype(np.float32)
+        prev = rng.random(n).astype(np.float32) * 100
+        got = region_stats(reads, writes, prev)
+        want = oracle(reads, writes, prev, r)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), w, rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        regions=st.integers(min_value=1, max_value=8),
+        r=st.sampled_from([8, 64, 256]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, regions, r, seed):
+        rng = np.random.default_rng(seed)
+        n = regions * r
+        reads = (rng.random(n) * 50).astype(np.float32)
+        writes = (rng.random(n) * 50).astype(np.float32)
+        prev = (rng.random(n) * 10).astype(np.float32)
+        got = region_stats(reads, writes, prev, pages_per_region=r)
+        want = oracle(reads, writes, prev, r)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), w, rtol=1e-4)
+
+    def test_output_shapes(self):
+        z = np.zeros(2048, dtype=np.float32)
+        sr, sw, mh = region_stats(z, z, z)
+        assert sr.shape == (8,)
+        assert sw.shape == (8,)
+        assert mh.shape == (8,)
+
+
+class TestClassifier:
+    def test_classes(self):
+        # region 0: cold; 1: streaming; 2: hot-spot; 3: write-burst
+        sum_reads = np.array([0.0, 100.0, 100.0, 10.0], dtype=np.float32)
+        sum_writes = np.array([0.0, 10.0, 10.0, 100.0], dtype=np.float32)
+        max_hot = np.array([0.0, 2.0, 90.0, 5.0], dtype=np.float32)
+        cls = np.asarray(classify_regions(sum_reads, sum_writes, max_hot))
+        assert list(cls) == [0, 1, 2, 3]
+
+    def test_uniform_stream_not_hotspot(self):
+        # 256 pages each read ~4x: max_hot ~ 4 << 0.25 * total.
+        n, r = 1024, 256
+        reads = np.full(n, 4.0, dtype=np.float32)
+        z = np.zeros(n, dtype=np.float32)
+        sr, sw, mh = region_stats(reads, z, z, pages_per_region=r)
+        cls = np.asarray(classify_regions(sr, sw, mh))
+        assert np.all(cls == 1)

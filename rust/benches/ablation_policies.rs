@@ -1,0 +1,137 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. Placement policy (static / first-touch / hotness / hints).
+//! 2. Epoch length for the hotness policy.
+//! 3. Migration cap per epoch.
+//! 4. HDR FIFO depth (consistency backpressure).
+//!
+//! Each reports modeled slowdown + DRAM service ratio + migrations, so
+//! the trade-offs the paper's platform exists to explore are visible.
+
+use hymem::config::{PolicyKind, SystemConfig};
+use hymem::platform::{Platform, RunOpts};
+use hymem::util::bench::BenchSuite;
+use hymem::workload::spec;
+
+fn main() {
+    let suite = BenchSuite::new("ablations: policy / epoch / migration cap / FIFO depth");
+    suite.header();
+    let ops = if suite.quick() { 60_000 } else { 400_000 };
+    let wl = spec::by_name("531.deepsjeng").unwrap(); // skewed, DRAM-overflowing
+    let opts = RunOpts {
+        ops,
+        flush_at_end: false,
+    };
+
+    // 1. Policies.
+    suite.report_row("--- policy ablation (531.deepsjeng) ---");
+    suite.report_row(&format!(
+        "{:<14} {:>10} {:>10} {:>12} {:>10}",
+        "policy", "slowdown", "dram-serv", "migrations", "energy(mJ)"
+    ));
+    for kind in [
+        PolicyKind::Static,
+        PolicyKind::FirstTouch,
+        PolicyKind::Hotness,
+        PolicyKind::Hints,
+        PolicyKind::WearAware,
+    ] {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = kind;
+        let r = Platform::new(cfg).run_opts(&wl, opts).expect("run");
+        suite.report_row(&format!(
+            "{:<14} {:>9.2}x {:>9.1}% {:>12} {:>10.1}",
+            kind.name(),
+            r.slowdown(),
+            r.counters.dram_service_ratio() * 100.0,
+            r.counters.migrations,
+            r.counters.energy_estimate_mj()
+        ));
+    }
+
+    // 1b. Wear comparison: hotness vs wear-aware on a write-heavy load.
+    suite.report_row("--- NVM wear: hotness vs wear-aware (519.lbm, write-heavy) ---");
+    suite.report_row(&format!(
+        "{:<14} {:>10} {:>12} {:>12}",
+        "policy", "slowdown", "nvm-max-wear", "nvm-writes"
+    ));
+    let lbm = spec::by_name("519.lbm").unwrap();
+    for kind in [PolicyKind::Hotness, PolicyKind::WearAware] {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = kind;
+        cfg.hmmu.epoch_requests = 8_000;
+        let r = Platform::new(cfg).run_opts(&lbm, opts).expect("run");
+        suite.report_row(&format!(
+            "{:<14} {:>9.2}x {:>12} {:>12}",
+            kind.name(),
+            r.slowdown(),
+            r.nvm_max_wear,
+            r.counters.nvm_writes
+        ));
+    }
+
+    // 2. Epoch length.
+    suite.report_row("--- epoch-length ablation (hotness) ---");
+    suite.report_row(&format!(
+        "{:<14} {:>10} {:>10} {:>12}",
+        "epoch", "slowdown", "dram-serv", "migrations"
+    ));
+    for epoch in [1_000u64, 4_000, 16_000, 64_000] {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = epoch;
+        let r = Platform::new(cfg).run_opts(&wl, opts).expect("run");
+        suite.report_row(&format!(
+            "{:<14} {:>9.2}x {:>9.1}% {:>12}",
+            epoch,
+            r.slowdown(),
+            r.counters.dram_service_ratio() * 100.0,
+            r.counters.migrations
+        ));
+    }
+
+    // 3. Migration cap.
+    suite.report_row("--- migration-cap ablation (hotness, epoch=8000) ---");
+    suite.report_row(&format!(
+        "{:<14} {:>10} {:>10} {:>12} {:>14}",
+        "cap", "slowdown", "dram-serv", "migrations", "dma-conflicts"
+    ));
+    for cap in [4u32, 16, 64, 256] {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = 8_000;
+        cfg.hmmu.migrations_per_epoch = cap;
+        let r = Platform::new(cfg).run_opts(&wl, opts).expect("run");
+        suite.report_row(&format!(
+            "{:<14} {:>9.2}x {:>9.1}% {:>12} {:>14}",
+            cap,
+            r.slowdown(),
+            r.counters.dram_service_ratio() * 100.0,
+            r.counters.migrations,
+            r.counters.dma_conflict_stalls
+        ));
+    }
+
+    // 4. HDR FIFO depth.
+    suite.report_row("--- HDR FIFO depth ablation (505.mcf) ---");
+    suite.report_row(&format!(
+        "{:<14} {:>10} {:>14} {:>14}",
+        "depth", "slowdown", "fifo-stalls", "reorder-wait"
+    ));
+    let mcf = spec::by_name("505.mcf").unwrap();
+    for depth in [4u32, 16, 64, 256] {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = PolicyKind::Static;
+        cfg.hmmu.hdr_fifo_depth = depth;
+        let r = Platform::new(cfg).run_opts(&mcf, opts).expect("run");
+        suite.report_row(&format!(
+            "{:<14} {:>9.2}x {:>14} {:>11} ns",
+            depth,
+            r.slowdown(),
+            r.counters.fifo_full_stalls,
+            r.counters.reorder_wait_ns
+        ));
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,83 @@
+//! DMA engine benchmarks + the paper's design-parameter discussion
+//! (§III-D: "the choice of these two primary design parameters, bit width
+//! and buffer size"): sweep block size and buffering mode, reporting swap
+//! latency and throughput.
+
+use hymem::hmmu::dma::DmaEngine;
+use hymem::hmmu::redirection::{Device, Mapping};
+use hymem::util::bench::BenchSuite;
+
+fn maps() -> (Mapping, Mapping) {
+    (
+        Mapping {
+            device: Device::Nvm,
+            frame: 5,
+        },
+        Mapping {
+            device: Device::Dram,
+            frame: 9,
+        },
+    )
+}
+
+fn main() {
+    let suite = BenchSuite::new("DMA engine: block size x buffering sweep");
+    suite.header();
+
+    // Modeled swap latency per configuration (paper parameter study).
+    suite.report_row(&format!(
+        "{:<24} {:>14} {:>16}",
+        "config", "swap latency", "modeled MB/s"
+    ));
+    for &block in &[128u64, 256, 512, 1024, 2048] {
+        for pipelined in [false, true] {
+            let mut dma = DmaEngine::new(block, 4096, pipelined);
+            let (ma, mb) = maps();
+            let done = dma.start_swap(1, ma, 2, mb, 0, &mut |_d, _a, k, _b, at| {
+                // DRAM-ish read 30ns / write 40ns + per-block overhead.
+                at + if k.is_write() { 40 } else { 30 }
+            });
+            let mbps = (2.0 * 4096.0) / (done as f64 / 1e9) / 1e6;
+            suite.report_row(&format!(
+                "{:<24} {:>11} ns {:>13.0} MB/s",
+                format!("block={block}B pipelined={pipelined}"),
+                done,
+                mbps
+            ));
+        }
+    }
+    suite.report_row("paper default: 512B blocks; pipelined requires 2x block buffer (8KiB ok)");
+
+    // Host-time throughput of the swap machinery.
+    let mut host = BenchSuite::new("DMA engine: host-time throughput");
+    host.header();
+    {
+        let mut dma = DmaEngine::new(512, 4096, true);
+        let (ma, mb) = maps();
+        let mut t = 0u64;
+        let mut next_page = 0u64;
+        host.bench_items("start_swap+drain (batch 100)", 100, || {
+            for _ in 0..100 {
+                let pa = next_page;
+                let pb = next_page + 1;
+                next_page += 2;
+                t = dma.start_swap(pa, ma, pb, mb, t, &mut |_d, _a, _k, _b, at| at + 35);
+                dma.drain_committed(t);
+            }
+            100
+        });
+        let mut dma2 = DmaEngine::new(512, 4096, true);
+        let done = dma2.start_swap(1, ma, 2, mb, 0, &mut |_d, _a, _k, _b, at| at + 35);
+        host.bench_items("route probe during swap (batch 10K)", 10_000, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                let (r, _) = dma2.route(1 + (i % 2), (i * 64) % 4096, (i * 7) % done);
+                acc += matches!(r, hymem::hmmu::DmaRoute::UseDestination) as u64;
+            }
+            std::hint::black_box(acc);
+            10_000
+        });
+    }
+    host.finish();
+    suite.finish();
+}

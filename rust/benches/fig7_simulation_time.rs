@@ -1,0 +1,85 @@
+//! Fig 7 regeneration: simulation time normalized against native
+//! execution, for all 12 Table III workloads × {ours, champsim-like,
+//! gem5-like}, plus the geomean row and the headline speedup ratios.
+//!
+//! `cargo bench --bench fig7_simulation_time` (add `-- --quick` for a
+//! fast pass).
+
+use hymem::baselines::run_fig7_row;
+use hymem::config::SystemConfig;
+use hymem::util::bench::BenchSuite;
+use hymem::util::stats::geomean;
+use hymem::workload::WORKLOADS;
+
+fn main() {
+    let suite = BenchSuite::new("Fig 7: simulation slowdown vs native");
+    suite.header();
+    let (ops, binstr) = if suite.quick() {
+        (60_000, 40_000)
+    } else {
+        (400_000, 250_000)
+    };
+    let cfg = SystemConfig::default_scaled(16);
+
+    suite.report_row(&format!(
+        "{:<16} {:>10} {:>14} {:>12}",
+        "workload", "ours", "champsim-like", "gem5-like"
+    ));
+    let (mut ours, mut champ, mut gem5) = (Vec::new(), Vec::new(), Vec::new());
+    for wl in &WORKLOADS {
+        let row = run_fig7_row(&cfg, wl, ops, binstr).expect("fig7 row");
+        suite.report_row(&format!(
+            "{:<16} {:>9.2}x {:>13.0}x {:>11.0}x",
+            row.workload, row.ours, row.champsim, row.gem5
+        ));
+        ours.push(row.ours);
+        champ.push(row.champsim);
+        gem5.push(row.gem5);
+    }
+    let (go, gc, gg) = (geomean(&ours), geomean(&champ), geomean(&gem5));
+    suite.report_row(&format!(
+        "{:<16} {:>9.2}x {:>13.0}x {:>11.0}x   paper: 3.17x / 7,241x / 29,398x",
+        "geomean", go, gc, gg
+    ));
+    suite.report_row(&format!(
+        "headline: speedup vs gem5-like {:.0}x (paper 9,280x); vs champsim-like {:.0}x (paper 2,286x)",
+        gg / go,
+        gc / go
+    ));
+    suite.report_row(&format!(
+        "shape checks: ours single-digit geomean: {}; ordering gem5>champ>ours: {}",
+        go < 10.0,
+        gg > gc && gc > go
+    ));
+
+    // The paper's other alternative (§II): analytical modeling — instant
+    // but inaccurate. Report its per-workload slowdown error vs the
+    // platform simulation.
+    suite.report_row("--- analytical model (paper §II: 'large impact on accuracy') ---");
+    suite.report_row(&format!(
+        "{:<16} {:>10} {:>12} {:>8}",
+        "workload", "predicted", "simulated", "error"
+    ));
+    let model = hymem::baselines::AnalyticalModel::new(cfg.clone());
+    for wl in &WORKLOADS {
+        let r = hymem::platform::Platform::new(cfg.clone())
+            .run_opts(
+                wl,
+                hymem::platform::RunOpts {
+                    ops,
+                    flush_at_end: false,
+                },
+            )
+            .expect("run");
+        let p = model.predict(wl, r.instructions);
+        let err = (p.slowdown - r.slowdown()) / r.slowdown() * 100.0;
+        suite.report_row(&format!(
+            "{:<16} {:>9.2}x {:>11.2}x {:>+7.0}%",
+            wl.name,
+            p.slowdown,
+            r.slowdown(),
+            err
+        ));
+    }
+    suite.finish();
+}

@@ -1,0 +1,58 @@
+//! Fig 8 regeneration: memory request volume (bytes, read/write) seen by
+//! the HMMU for each workload, scaled back to paper-size footprints.
+//!
+//! Paper anchors: 505.mcf max (2.83 TB R / 2.82 TB W), 538.imagick min
+//! (4.47 GB R / 4.49 GB W). Absolute magnitudes differ (we run a trace
+//! sample, not the full benchmark); the *ordering* and the read/write
+//! balance are the reproduction targets.
+
+use hymem::config::SystemConfig;
+use hymem::platform::{Platform, RunOpts};
+use hymem::util::bench::BenchSuite;
+use hymem::util::units::fmt_bytes;
+
+
+fn main() {
+    let suite = BenchSuite::new("Fig 8: memory requests (bytes)");
+    suite.header();
+    let ops = if suite.quick() { 80_000 } else { 1_000_000 };
+    let cfg = SystemConfig::default_scaled(16);
+
+    suite.report_row(&format!(
+        "{:<16} {:>14} {:>14} {:>8}",
+        "workload", "read", "write", "rw-ratio"
+    ));
+    let mut rows: Vec<(String, u64, u64)> = Vec::new();
+    for (wl, wl_ops) in hymem::workload::proportional_ops(ops) {
+        let wl = &wl;
+        let r = Platform::new(cfg.clone())
+            .run_opts(
+                wl,
+                RunOpts {
+                    ops: wl_ops,
+                    // count residual dirty lines (full runs evict them)
+                    flush_at_end: true,
+                },
+            )
+            .expect("run");
+        let (rb, wb) = r.fig8_scaled();
+        suite.report_row(&format!(
+            "{:<16} {:>14} {:>14} {:>8.2}",
+            wl.name,
+            fmt_bytes(rb),
+            fmt_bytes(wb),
+            rb as f64 / wb.max(1) as f64
+        ));
+        rows.push((wl.name.to_string(), rb, wb));
+    }
+    rows.sort_by_key(|r| std::cmp::Reverse(r.1 + r.2));
+    suite.report_row(&format!(
+        "ordering: max={} (paper: 505.mcf) ... min={} (paper: 538.imagick)",
+        rows.first().unwrap().0,
+        rows.last().unwrap().0
+    ));
+    let mcf_ok = rows.first().unwrap().0 == "505.mcf";
+    let img_ok = rows.last().unwrap().0 == "538.imagick";
+    suite.report_row(&format!("shape checks: mcf max: {mcf_ok}; imagick min: {img_ok}"));
+    suite.finish();
+}

@@ -1,0 +1,108 @@
+//! Hot-path microbenchmarks: the HMMU request pipeline and its
+//! components. The §Perf target (DESIGN.md) is ≥10 M modeled requests/s
+//! through the full HMMU so the emulator is never the experiment
+//! bottleneck.
+
+use hymem::config::{PolicyKind, SystemConfig};
+use hymem::hmmu::{Hmmu, TagMatcher};
+use hymem::mem::AccessKind;
+use hymem::pcie::PcieLink;
+use hymem::util::bench::BenchSuite;
+use hymem::util::rng::Xoshiro256;
+use hymem::workload::{spec, TraceGenerator};
+
+fn main() {
+    let mut suite = BenchSuite::new("hot path: HMMU pipeline components");
+    suite.header();
+
+    // Full HMMU request path (static policy: pure routing).
+    {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = PolicyKind::Static;
+        let mut hmmu = Hmmu::new(cfg.clone(), None);
+        let mut rng = Xoshiro256::new(1);
+        let total = cfg.total_mem_bytes();
+        let mut t = 0u64;
+        suite.bench_items("hmmu_access/static (batch 10K)", 10_000, || {
+            for _ in 0..10_000 {
+                let addr = rng.below(total) & !63;
+                let kind = if rng.chance(0.3) {
+                    AccessKind::Write
+                } else {
+                    AccessKind::Read
+                };
+                t = hmmu.access(addr, kind, 64, t + 20);
+            }
+            10_000
+        });
+    }
+
+    // Full HMMU with hotness policy + migrations.
+    {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = 50_000;
+        let mut hmmu = Hmmu::new(cfg.clone(), None);
+        let mut rng = Xoshiro256::new(2);
+        let total = cfg.total_mem_bytes();
+        let mut t = 0u64;
+        suite.bench_items("hmmu_access/hotness (batch 10K)", 10_000, || {
+            for _ in 0..10_000 {
+                let addr = (rng.zipf(total / 4096, 1.1)) * 4096 + rng.below(4096) & !63;
+                let kind = if rng.chance(0.3) {
+                    AccessKind::Write
+                } else {
+                    AccessKind::Read
+                };
+                t = hmmu.access(addr, kind, 64, t + 20);
+            }
+            10_000
+        });
+    }
+
+    // Tag matcher alone.
+    {
+        let mut tm = TagMatcher::new(64);
+        let mut rng = Xoshiro256::new(3);
+        suite.bench_items("tag_matcher issue+complete (batch 10K)", 10_000, || {
+            for i in 0..10_000u64 {
+                if !tm.can_issue() {
+                    continue;
+                }
+                let tag = tm.issue();
+                let _ = tm.complete(tag, i * 10 + rng.below(200));
+            }
+            10_000
+        });
+    }
+
+    // PCIe link send path.
+    {
+        let cfg = SystemConfig::default_scaled(16);
+        let mut link = PcieLink::new(cfg.pcie);
+        let mut t = 0u64;
+        suite.bench_items("pcie send_to_device+host (batch 10K)", 10_000, || {
+            for _ in 0..10_000 {
+                t += 100;
+                let a = link.send_to_device(0, t);
+                let b = link.send_to_host(64, a + 50);
+                link.hold_credit_until(b);
+            }
+            10_000
+        });
+    }
+
+    // Trace generation alone (must never dominate).
+    {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let mut gen = TraceGenerator::new(wl, 16, 42);
+        suite.bench_items("trace_generator next (batch 10K)", 10_000, || {
+            for _ in 0..10_000 {
+                let _ = gen.next();
+            }
+            10_000
+        });
+    }
+
+    suite.finish();
+}

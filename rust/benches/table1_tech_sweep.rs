@@ -1,0 +1,64 @@
+//! Table I regeneration: the §III-F "arbitrary latency cycles" mechanism
+//! swept across every memory technology in Table I, reporting the derived
+//! stall cycles and the application-level slowdown each produces.
+
+use hymem::config::{MemTech, SystemConfig, TechPreset};
+use hymem::mem::{AccessKind, DramDevice, MemDevice};
+use hymem::platform::{Platform, RunOpts};
+use hymem::sim::Clock;
+use hymem::util::bench::BenchSuite;
+use hymem::workload::spec;
+
+fn main() {
+    let suite = BenchSuite::new("Table I: technology presets & latency emulation");
+    suite.header();
+    let ops = if suite.quick() { 50_000 } else { 300_000 };
+
+    // §III-F step 1: measured DRAM round trip in FPGA cycles.
+    let base_cfg = SystemConfig::default_scaled(16);
+    let mut dram = DramDevice::new(base_cfg.dram);
+    let (rt, _) = dram.access(0, AccessKind::Read, 64, 0);
+    let fpga = Clock::from_mhz(base_cfg.hmmu.fpga_freq_mhz);
+    suite.report_row(&format!(
+        "measured DRAM round trip: {rt} ns = {} FPGA cycles @ {} MHz",
+        fpga.ns_to_cycles(rt),
+        base_cfg.hmmu.fpga_freq_mhz
+    ));
+    suite.report_row(&format!(
+        "{:<12} {:>9} {:>9} {:>12} {:>12} {:>10} {:>10}",
+        "tech", "rd(ns)", "wr(ns)", "rd-stall(cy)", "wr-stall(cy)", "mcf", "imagick"
+    ));
+
+    for tech in MemTech::ALL {
+        let p = TechPreset::of(tech);
+        let mut slow = Vec::new();
+        for wl_name in ["505.mcf", "538.imagick"] {
+            let cfg = SystemConfig::default_scaled(16).with_tech(tech);
+            let r = Platform::new(cfg)
+                .run_opts(
+                    &spec::by_name(wl_name).unwrap(),
+                    RunOpts {
+                        ops,
+                        flush_at_end: false,
+                    },
+                )
+                .expect("run");
+            slow.push(r.slowdown());
+        }
+        suite.report_row(&format!(
+            "{:<12} {:>9} {:>9} {:>12} {:>12} {:>9.2}x {:>9.2}x",
+            tech.name(),
+            p.read_ns,
+            p.write_ns,
+            fpga.ns_to_cycles(p.read_stall_ns(rt)),
+            fpga.ns_to_cycles(p.write_stall_ns(rt)),
+            slow[0],
+            slow[1]
+        ));
+    }
+    suite.report_row(
+        "shape checks: FLASH unusable (huge slowdown); STT-RAM/MRAM ~ DRAM (0 stalls); \
+         3D XPoint intermediate",
+    );
+    suite.finish();
+}

@@ -1,0 +1,245 @@
+//! jemalloc-like arena allocator over the genpool frame allocator.
+//!
+//! Mirrors the paper's modified jemalloc: small allocations are served
+//! from size-class runs carved out of page-granular chunks obtained from
+//! the device pool (`pages.c` → mmap of `/dev/mem_driver`); large
+//! allocations go straight to the pool. Placement hints ride along and are
+//! recorded in the [`HintStore`] for the HMMU.
+
+use super::genpool::GenPool;
+use super::hints::{HintStore, Placement};
+use anyhow::Result;
+
+/// jemalloc-style small size classes (bytes).
+const SIZE_CLASSES: [u64; 12] = [16, 32, 48, 64, 96, 128, 192, 256, 384, 512, 1024, 2048];
+
+/// Allocation granularity fetched from the pool per run.
+const RUN_BYTES: u64 = 16 * 4096;
+
+#[derive(Clone, Debug)]
+struct Run {
+    base: u64,
+    class_bytes: u64,
+    /// Free-slot bitmap (bit set = free).
+    free_slots: Vec<u64>,
+    free_count: u32,
+}
+
+impl Run {
+    fn new(base: u64, class_bytes: u64) -> Self {
+        let slots = (RUN_BYTES / class_bytes) as u32;
+        let words = slots.div_ceil(64) as usize;
+        let mut free_slots = vec![u64::MAX; words];
+        // Clear bits beyond `slots`.
+        let extra = (words as u32 * 64) - slots;
+        if extra > 0 {
+            let last = free_slots.last_mut().unwrap();
+            *last >>= extra;
+        }
+        Run {
+            base,
+            class_bytes,
+            free_slots,
+            free_count: slots,
+        }
+    }
+
+    fn alloc(&mut self) -> Option<u64> {
+        if self.free_count == 0 {
+            return None;
+        }
+        for (w, word) in self.free_slots.iter_mut().enumerate() {
+            if *word != 0 {
+                let bit = word.trailing_zeros();
+                *word &= !(1u64 << bit);
+                self.free_count -= 1;
+                return Some(self.base + (w as u64 * 64 + bit as u64) * self.class_bytes);
+            }
+        }
+        None
+    }
+
+    fn contains(&self, addr: u64) -> bool {
+        addr >= self.base && addr < self.base + RUN_BYTES
+    }
+
+    fn free(&mut self, addr: u64) -> bool {
+        debug_assert!(self.contains(addr));
+        let slot = (addr - self.base) / self.class_bytes;
+        let (w, bit) = ((slot / 64) as usize, slot % 64);
+        if self.free_slots[w] & (1 << bit) != 0 {
+            return false; // double free
+        }
+        self.free_slots[w] |= 1 << bit;
+        self.free_count += 1;
+        true
+    }
+}
+
+/// Arena allocator with hint plumbing.
+pub struct ArenaAllocator {
+    pool: GenPool,
+    runs: Vec<Run>,
+    hints: HintStore,
+    /// (addr, bytes) of large allocations for free().
+    large: Vec<(u64, u64)>,
+    pub small_allocs: u64,
+    pub large_allocs: u64,
+}
+
+impl ArenaAllocator {
+    pub fn new(pool: GenPool) -> Self {
+        ArenaAllocator {
+            pool,
+            runs: Vec::new(),
+            hints: HintStore::new(),
+            large: Vec::new(),
+            small_allocs: 0,
+            large_allocs: 0,
+        }
+    }
+
+    fn class_for(bytes: u64) -> Option<u64> {
+        SIZE_CLASSES.iter().copied().find(|&c| c >= bytes)
+    }
+
+    /// `malloc(bytes)` with a placement hint (the paper's extended API).
+    pub fn malloc_hint(&mut self, bytes: u64, hint: Placement) -> Result<u64> {
+        let addr = if let Some(class) = Self::class_for(bytes) {
+            self.small_allocs += 1;
+            // Existing run with space?
+            if let Some(run) = self
+                .runs
+                .iter_mut()
+                .find(|r| r.class_bytes == class && r.free_count > 0)
+            {
+                run.alloc().unwrap()
+            } else {
+                let base = self.pool.alloc(RUN_BYTES)?;
+                let mut run = Run::new(base, class);
+                let a = run.alloc().unwrap();
+                self.runs.push(run);
+                a
+            }
+        } else {
+            self.large_allocs += 1;
+            let a = self.pool.alloc(bytes)?;
+            self.large.push((a, bytes));
+            a
+        };
+        if hint != Placement::Any {
+            self.hints.insert(addr, bytes.max(16), hint);
+        }
+        Ok(addr)
+    }
+
+    /// Plain `malloc`.
+    pub fn malloc(&mut self, bytes: u64) -> Result<u64> {
+        self.malloc_hint(bytes, Placement::Any)
+    }
+
+    /// `free(addr)`.
+    pub fn free(&mut self, addr: u64) -> Result<()> {
+        if let Some(run) = self.runs.iter_mut().find(|r| r.contains(addr)) {
+            if !run.free(addr) {
+                anyhow::bail!("arena: double free at {addr:#x}");
+            }
+            self.hints.remove(addr, run.class_bytes);
+            return Ok(());
+        }
+        if let Some(pos) = self.large.iter().position(|&(a, _)| a == addr) {
+            let (a, b) = self.large.swap_remove(pos);
+            self.hints.remove(a, b);
+            return self.pool.free(a, b);
+        }
+        anyhow::bail!("arena: free of unknown address {addr:#x}")
+    }
+
+    pub fn hints(&self) -> &HintStore {
+        &self.hints
+    }
+
+    pub fn pool(&self) -> &GenPool {
+        &self.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena() -> ArenaAllocator {
+        ArenaAllocator::new(GenPool::new(0x1000_0000, 4 << 20, 4096))
+    }
+
+    #[test]
+    fn small_allocations_share_a_run() {
+        let mut a = arena();
+        let p1 = a.malloc(40).unwrap();
+        let p2 = a.malloc(40).unwrap();
+        // Same 48-byte class, same run, adjacent slots.
+        assert_eq!(p2 - p1, 48);
+        assert_eq!(a.pool().alloc_count, 1); // one run fetched
+    }
+
+    #[test]
+    fn distinct_classes_distinct_runs() {
+        let mut a = arena();
+        let p1 = a.malloc(40).unwrap();
+        let p2 = a.malloc(400).unwrap();
+        assert!(p2 >= p1 + RUN_BYTES || p1 >= p2 + RUN_BYTES);
+    }
+
+    #[test]
+    fn large_goes_to_pool() {
+        let mut a = arena();
+        a.malloc(1 << 20).unwrap();
+        assert_eq!(a.large_allocs, 1);
+        assert_eq!(a.small_allocs, 0);
+    }
+
+    #[test]
+    fn free_and_reuse_slot() {
+        let mut a = arena();
+        let p1 = a.malloc(100).unwrap();
+        a.free(p1).unwrap();
+        let p2 = a.malloc(100).unwrap();
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut a = arena();
+        let p = a.malloc(64).unwrap();
+        a.free(p).unwrap();
+        assert!(a.free(p).is_err());
+        let l = a.malloc(1 << 20).unwrap();
+        a.free(l).unwrap();
+        assert!(a.free(l).is_err());
+    }
+
+    #[test]
+    fn hints_recorded_and_cleared() {
+        let mut a = arena();
+        let p = a.malloc_hint(128, Placement::PinDram).unwrap();
+        assert_eq!(a.hints().lookup(p), Placement::PinDram);
+        a.free(p).unwrap();
+        assert_eq!(a.hints().lookup(p), Placement::Any);
+    }
+
+    #[test]
+    fn run_exhaustion_fetches_new_run() {
+        let mut a = arena();
+        let slots = RUN_BYTES / 16;
+        for _ in 0..=slots {
+            a.malloc(16).unwrap();
+        }
+        assert_eq!(a.pool().alloc_count, 2);
+    }
+
+    #[test]
+    fn pool_exhaustion_propagates() {
+        let mut a = ArenaAllocator::new(GenPool::new(0, 64 << 10, 4096));
+        assert!(a.malloc(128 << 10).is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! Physical frame pool — the `mem_driver.ko` + kernel genpool analog.
+//!
+//! Manages page-granular frames of the hybrid-memory BAR window. First-fit
+//! over a free list kept sorted and coalesced, like the kernel's genpool
+//! in its default configuration.
+
+use anyhow::{bail, Result};
+
+/// A page-granular physical frame allocator over `[base, base+size)`.
+#[derive(Clone, Debug)]
+pub struct GenPool {
+    base: u64,
+    size: u64,
+    page: u64,
+    /// Sorted, coalesced free ranges (offset, len) in bytes.
+    free: Vec<(u64, u64)>,
+    pub allocated_bytes: u64,
+    pub alloc_count: u64,
+    pub fail_count: u64,
+}
+
+impl GenPool {
+    /// `base` is the BAR window base (the paper maps
+    /// [0x1240000000, 0x1288000000)); `size` its length.
+    pub fn new(base: u64, size: u64, page: u64) -> Self {
+        assert!(page.is_power_of_two());
+        assert_eq!(size % page, 0);
+        GenPool {
+            base,
+            size,
+            page,
+            free: vec![(0, size)],
+            allocated_bytes: 0,
+            alloc_count: 0,
+            fail_count: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.size
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.free.iter().map(|(_, l)| l).sum()
+    }
+
+    /// Allocate `bytes` (rounded up to pages); returns the physical address.
+    pub fn alloc(&mut self, bytes: u64) -> Result<u64> {
+        let len = bytes.div_ceil(self.page) * self.page;
+        // First fit.
+        for i in 0..self.free.len() {
+            let (off, flen) = self.free[i];
+            if flen >= len {
+                if flen == len {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (off + len, flen - len);
+                }
+                self.allocated_bytes += len;
+                self.alloc_count += 1;
+                return Ok(self.base + off);
+            }
+        }
+        self.fail_count += 1;
+        bail!("genpool: out of memory allocating {bytes} bytes")
+    }
+
+    /// Free a previously allocated range.
+    pub fn free(&mut self, addr: u64, bytes: u64) -> Result<()> {
+        let len = bytes.div_ceil(self.page) * self.page;
+        if addr < self.base || addr + len > self.base + self.size {
+            bail!("genpool: free outside pool");
+        }
+        let off = addr - self.base;
+        if off % self.page != 0 {
+            bail!("genpool: unaligned free");
+        }
+        // Insert sorted; check overlap with neighbours; coalesce.
+        let pos = self.free.partition_point(|&(o, _)| o < off);
+        if pos > 0 {
+            let (po, pl) = self.free[pos - 1];
+            if po + pl > off {
+                bail!("genpool: double free / overlap");
+            }
+        }
+        if pos < self.free.len() && off + len > self.free[pos].0 {
+            bail!("genpool: double free / overlap");
+        }
+        self.free.insert(pos, (off, len));
+        self.allocated_bytes = self.allocated_bytes.saturating_sub(len);
+        // Coalesce around pos.
+        self.coalesce(pos);
+        Ok(())
+    }
+
+    fn coalesce(&mut self, pos: usize) {
+        // Merge with next.
+        if pos + 1 < self.free.len() {
+            let (o, l) = self.free[pos];
+            if o + l == self.free[pos + 1].0 {
+                self.free[pos].1 += self.free[pos + 1].1;
+                self.free.remove(pos + 1);
+            }
+        }
+        // Merge with previous.
+        if pos > 0 {
+            let (po, pl) = self.free[pos - 1];
+            if po + pl == self.free[pos].0 {
+                self.free[pos - 1].1 += self.free[pos].1;
+                self.free.remove(pos);
+            }
+        }
+    }
+
+    /// Number of free fragments (fragmentation metric).
+    pub fn fragments(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BAR: u64 = 0x12_4000_0000; // paper's BAR base
+
+    fn pool() -> GenPool {
+        GenPool::new(BAR, 1 << 20, 4096)
+    }
+
+    #[test]
+    fn alloc_returns_bar_addresses() {
+        let mut p = pool();
+        let a = p.alloc(100).unwrap();
+        assert_eq!(a, BAR);
+        let b = p.alloc(4096).unwrap();
+        assert_eq!(b, BAR + 4096);
+    }
+
+    #[test]
+    fn rounds_to_pages() {
+        let mut p = pool();
+        p.alloc(1).unwrap();
+        assert_eq!(p.allocated_bytes, 4096);
+        assert_eq!(p.free_bytes(), (1 << 20) - 4096);
+    }
+
+    #[test]
+    fn exhaustion_fails_cleanly() {
+        let mut p = pool();
+        p.alloc(1 << 20).unwrap();
+        assert!(p.alloc(1).is_err());
+        assert_eq!(p.fail_count, 1);
+    }
+
+    #[test]
+    fn free_and_coalesce() {
+        let mut p = pool();
+        let a = p.alloc(4096).unwrap();
+        let b = p.alloc(4096).unwrap();
+        let c = p.alloc(4096).unwrap();
+        p.free(b, 4096).unwrap();
+        assert_eq!(p.fragments(), 2);
+        p.free(a, 4096).unwrap();
+        assert_eq!(p.fragments(), 2); // a+b coalesced, tail separate
+        p.free(c, 4096).unwrap();
+        assert_eq!(p.fragments(), 1); // fully coalesced
+        assert_eq!(p.free_bytes(), 1 << 20);
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut p = pool();
+        let a = p.alloc(4096).unwrap();
+        p.free(a, 4096).unwrap();
+        assert!(p.free(a, 4096).is_err());
+    }
+
+    #[test]
+    fn out_of_range_free_rejected() {
+        let mut p = pool();
+        assert!(p.free(0, 4096).is_err());
+        assert!(p.free(BAR + (2 << 20), 4096).is_err());
+    }
+
+    #[test]
+    fn reuse_after_free() {
+        let mut p = pool();
+        let a = p.alloc(64 * 4096).unwrap();
+        p.free(a, 64 * 4096).unwrap();
+        let b = p.alloc(64 * 4096).unwrap();
+        assert_eq!(a, b); // first-fit reuses
+    }
+}

@@ -1,0 +1,133 @@
+//! Placement hints (§III-G: "we extended the malloc API, to accept users'
+//! hints of memory device preference regarding data placement, and
+//! populate these information through the stack to the hardware hybrid
+//! memory controller").
+//!
+//! Hints are recorded per allocated range; the HMMU's hint-aware policy
+//! queries them by page.
+
+/// Device preference attached to an allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// No preference (policy decides).
+    Any,
+    /// Latency-sensitive: prefer DRAM.
+    PreferDram,
+    /// Cold/bulk data: prefer NVM.
+    PreferNvm,
+    /// Pin to DRAM (never migrate out).
+    PinDram,
+}
+
+/// Range → hint store, queried by page address.
+#[derive(Clone, Debug, Default)]
+pub struct HintStore {
+    /// Sorted, non-overlapping (start, end, hint) ranges.
+    ranges: Vec<(u64, u64, Placement)>,
+}
+
+impl HintStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a hint for `[start, start+len)`. Later inserts shadow
+    /// earlier ones (allocator reuse of freed ranges).
+    pub fn insert(&mut self, start: u64, len: u64, hint: Placement) {
+        if len == 0 {
+            return;
+        }
+        let end = start + len;
+        // Remove/trim any overlapped older ranges.
+        let mut next: Vec<(u64, u64, Placement)> = Vec::with_capacity(self.ranges.len() + 2);
+        for &(s, e, h) in &self.ranges {
+            if e <= start || s >= end {
+                next.push((s, e, h));
+            } else {
+                if s < start {
+                    next.push((s, start, h));
+                }
+                if e > end {
+                    next.push((end, e, h));
+                }
+            }
+        }
+        next.push((start, end, hint));
+        next.sort_by_key(|r| r.0);
+        self.ranges = next;
+    }
+
+    /// Remove hints covering `[start, start+len)` (on free).
+    pub fn remove(&mut self, start: u64, len: u64) {
+        self.insert(start, len, Placement::Any);
+        self.ranges.retain(|&(_, _, h)| h != Placement::Any);
+    }
+
+    /// Query the hint governing `addr`.
+    pub fn lookup(&self, addr: u64) -> Placement {
+        match self
+            .ranges
+            .binary_search_by(|&(s, e, _)| {
+                if addr < s {
+                    std::cmp::Ordering::Greater
+                } else if addr >= e {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Equal
+                }
+            }) {
+            Ok(i) => self.ranges[i].2,
+            Err(_) => Placement::Any,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_inside_and_outside() {
+        let mut h = HintStore::new();
+        h.insert(0x1000, 0x1000, Placement::PreferDram);
+        assert_eq!(h.lookup(0x1000), Placement::PreferDram);
+        assert_eq!(h.lookup(0x1FFF), Placement::PreferDram);
+        assert_eq!(h.lookup(0x2000), Placement::Any);
+        assert_eq!(h.lookup(0xFFF), Placement::Any);
+    }
+
+    #[test]
+    fn later_insert_shadows() {
+        let mut h = HintStore::new();
+        h.insert(0, 0x3000, Placement::PreferNvm);
+        h.insert(0x1000, 0x1000, Placement::PinDram);
+        assert_eq!(h.lookup(0x500), Placement::PreferNvm);
+        assert_eq!(h.lookup(0x1500), Placement::PinDram);
+        assert_eq!(h.lookup(0x2500), Placement::PreferNvm);
+        assert_eq!(h.len(), 3);
+    }
+
+    #[test]
+    fn remove_clears() {
+        let mut h = HintStore::new();
+        h.insert(0, 0x2000, Placement::PreferDram);
+        h.remove(0, 0x1000);
+        assert_eq!(h.lookup(0x500), Placement::Any);
+        assert_eq!(h.lookup(0x1800), Placement::PreferDram);
+    }
+
+    #[test]
+    fn zero_len_noop() {
+        let mut h = HintStore::new();
+        h.insert(0x1000, 0, Placement::PinDram);
+        assert!(h.is_empty());
+    }
+}

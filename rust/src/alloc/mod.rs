@@ -1,0 +1,19 @@
+//! Middleware substrate (paper Fig 4, §III-G).
+//!
+//! The paper forces applications onto the PCIe-attached hybrid memory via
+//! (1) a kernel driver managing physical frames of `/dev/mem` with the
+//! genpool subsystem, and (2) a modified jemalloc whose `pages.c` mmaps
+//! the device file. This module reproduces both layers:
+//!
+//! - [`genpool`] — the driver's physical frame pool over the BAR window.
+//! - [`arena`] — a jemalloc-like size-class arena allocator on top.
+//! - [`hints`] — the paper's extended-malloc placement hints, which flow
+//!   through the allocator down to the HMMU placement policy.
+
+pub mod arena;
+pub mod genpool;
+pub mod hints;
+
+pub use arena::ArenaAllocator;
+pub use genpool::GenPool;
+pub use hints::{HintStore, Placement};

@@ -1,0 +1,27 @@
+//! Software-simulator baselines for the Fig 7 comparison.
+//!
+//! The paper compares its platform against gem5 (SE mode) and ChampSim
+//! running the same workloads on a Xeon workstation. Neither tool exists
+//! in this offline environment, so we implement the two *cost regimes*
+//! they represent and measure real wall-clock on this host:
+//!
+//! - [`gem5_like`] — cycle-level out-of-order microarchitecture simulation:
+//!   every cycle ticks fetch/rename/issue/execute/commit structures, the
+//!   full cache hierarchy and a banked DRAM model. This is the "detailed,
+//!   slow" regime (real gem5: ~0.1 MIPS).
+//! - [`champsim_like`] — trace-driven simulation: per-instruction branch
+//!   predictor + cache hierarchy lookups with a simplified queue-based
+//!   memory model. The "faster, less detailed" regime (real ChampSim:
+//!   ~1-5 MIPS).
+//!
+//! Slowdowns are computed exactly as in the paper: simulator wall-clock
+//! time normalized by the *native* execution time of the same instruction
+//! count (from the platform's native reference model).
+
+pub mod analytical;
+pub mod champsim_like;
+pub mod gem5_like;
+pub mod harness;
+
+pub use analytical::{AnalyticalModel, AnalyticalPrediction};
+pub use harness::{run_fig7_row, BaselineResult, Fig7Row};

@@ -1,0 +1,385 @@
+//! System configuration: Table II defaults, Table I technology presets,
+//! and a minimal TOML-subset loader for experiment configs.
+
+pub mod presets;
+pub mod toml;
+
+pub use presets::{MemTech, TechPreset};
+
+/// Cache geometry (one level).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheConfig {
+    pub size_bytes: u64,
+    pub ways: u32,
+    pub line_bytes: u32,
+    /// Hit latency in CPU cycles.
+    pub hit_cycles: u32,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> u64 {
+        self.size_bytes / (self.ways as u64 * self.line_bytes as u64)
+    }
+}
+
+/// CPU core model parameters (ARM Cortex-A57-like, Table II).
+#[derive(Clone, Copy, Debug)]
+pub struct CpuConfig {
+    pub freq_ghz: f64,
+    pub cores: u32,
+    /// Base IPC for non-memory instructions (A57 is a 3-wide OoO; SPEC
+    /// achieves ~1.0-1.3 IPC on it).
+    pub base_ipc: f64,
+    /// Maximum outstanding misses the core tolerates before stalling
+    /// (models the MSHR/LSQ capacity that lets OoO hide some latency).
+    pub max_outstanding_misses: u32,
+}
+
+/// PCIe link parameters (Gen3 defaults per Table II).
+#[derive(Clone, Copy, Debug)]
+pub struct PcieConfig {
+    /// Per-lane raw rate in GT/s (Gen3 = 8.0).
+    pub gts_per_lane: f64,
+    pub lanes: u32,
+    /// 128b/130b encoding efficiency.
+    pub encoding: f64,
+    /// One-way propagation + PHY latency in ns (host->FPGA).
+    pub propagation_ns: u64,
+    /// TLP header bytes (3DW header + framing for memory requests).
+    pub tlp_header_bytes: u32,
+    /// Max TLP payload bytes.
+    pub max_payload_bytes: u32,
+    /// Flow-control credit count (outstanding TLPs each direction).
+    pub credits: u32,
+}
+
+impl PcieConfig {
+    /// Effective unidirectional bandwidth in bytes/ns (= GB/s).
+    pub fn bandwidth_bytes_per_ns(&self) -> f64 {
+        self.gts_per_lane * self.lanes as f64 * self.encoding / 8.0
+    }
+}
+
+/// DRAM device timing (DDR4-like).
+#[derive(Clone, Copy, Debug)]
+pub struct DramConfig {
+    pub size_bytes: u64,
+    pub banks: u32,
+    pub row_bytes: u32,
+    /// Activate (tRCD) in ns.
+    pub t_rcd_ns: u64,
+    /// CAS latency in ns.
+    pub t_cas_ns: u64,
+    /// Precharge (tRP) in ns.
+    pub t_rp_ns: u64,
+    /// Data burst transfer time for one 64B line in ns.
+    pub t_burst_ns: u64,
+    /// Memory controller queue depth per channel.
+    pub queue_depth: u32,
+}
+
+/// NVM emulation parameters (§III-F: DRAM with injected stall cycles).
+#[derive(Clone, Copy, Debug)]
+pub struct NvmConfig {
+    pub size_bytes: u64,
+    /// Extra read stall (ns) added on top of DRAM timing.
+    pub read_stall_ns: u64,
+    /// Extra write stall (ns) added on top of DRAM timing.
+    pub write_stall_ns: u64,
+    /// Write endurance budget per 4K page (for wear counters; 3D XPoint ~1e9).
+    pub endurance: u64,
+}
+
+/// HMMU / FPGA fabric parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct HmmuConfig {
+    /// FPGA fabric clock (the paper's RTL runs at a few hundred MHz).
+    pub fpga_freq_mhz: f64,
+    /// Control pipeline depth (Fig 2: decode + policy + route stages).
+    pub pipeline_stages: u32,
+    /// HDR FIFO capacity (outstanding requests tracked for tag matching).
+    pub hdr_fifo_depth: u32,
+    /// DMA sub-block size in bytes (paper: 512B).
+    pub dma_block_bytes: u32,
+    /// DMA internal buffer size in bytes.
+    pub dma_buffer_bytes: u32,
+    /// Page size managed by the redirection table.
+    pub page_bytes: u64,
+    /// Epoch length (in processed requests) between policy invocations.
+    pub epoch_requests: u64,
+    /// Max migrations enacted per epoch (top-k from the policy step).
+    pub migrations_per_epoch: u32,
+}
+
+/// Placement/migration policy selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Fixed address split: low addresses in DRAM.
+    Static,
+    /// Allocate DRAM until full, overflow to NVM; no migration.
+    FirstTouch,
+    /// Epoch-based hotness migration (the XLA policy step).
+    Hotness,
+    /// First-touch + allocation hints from the middleware (§III-G).
+    Hints,
+    /// Hotness migration with NVM-endurance write bias (extension
+    /// motivated by Table I's endurance column).
+    WearAware,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(Self::Static),
+            "first-touch" | "firsttouch" | "first_touch" => Some(Self::FirstTouch),
+            "hotness" | "migration" => Some(Self::Hotness),
+            "hints" => Some(Self::Hints),
+            "wear-aware" | "wearaware" | "wear" => Some(Self::WearAware),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Static => "static",
+            Self::FirstTouch => "first-touch",
+            Self::Hotness => "hotness",
+            Self::Hints => "hints",
+            Self::WearAware => "wear-aware",
+        }
+    }
+}
+
+/// Complete system configuration (Fig 1b / Table II).
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub cpu: CpuConfig,
+    pub l1i: CacheConfig,
+    pub l1d: CacheConfig,
+    pub l2: CacheConfig,
+    pub pcie: PcieConfig,
+    pub dram: DramConfig,
+    pub nvm: NvmConfig,
+    pub hmmu: HmmuConfig,
+    pub policy: PolicyKind,
+    /// Footprint/memory scale divisor (1 = paper-size, 16 = default).
+    pub scale: u64,
+    /// RNG seed for the whole platform.
+    pub seed: u64,
+}
+
+impl SystemConfig {
+    /// Paper Table II configuration at full size.
+    pub fn paper() -> Self {
+        SystemConfig {
+            cpu: CpuConfig {
+                freq_ghz: 2.0,
+                cores: 8,
+                base_ipc: 1.2,
+                max_outstanding_misses: 6,
+            },
+            l1i: CacheConfig {
+                size_bytes: 48 << 10,
+                ways: 3,
+                line_bytes: 64,
+                hit_cycles: 1,
+            },
+            l1d: CacheConfig {
+                size_bytes: 32 << 10,
+                ways: 2,
+                line_bytes: 64,
+                hit_cycles: 2,
+            },
+            // Table II says "64KB cache line size" — the obvious typo for
+            // 64B lines (A57 L2 has 64B lines).
+            l2: CacheConfig {
+                size_bytes: 1 << 20,
+                ways: 16,
+                line_bytes: 64,
+                hit_cycles: 12,
+            },
+            pcie: PcieConfig {
+                gts_per_lane: 8.0,
+                lanes: 8,
+                encoding: 128.0 / 130.0,
+                propagation_ns: 400,
+                tlp_header_bytes: 16,
+                max_payload_bytes: 256,
+                credits: 64,
+            },
+            dram: DramConfig {
+                size_bytes: 128 << 20,
+                banks: 16,
+                row_bytes: 2048,
+                t_rcd_ns: 14,
+                t_cas_ns: 14,
+                t_rp_ns: 14,
+                t_burst_ns: 4,
+                queue_depth: 32,
+            },
+            nvm: NvmConfig {
+                size_bytes: 1 << 30,
+                // §III-F scaling from Table I: 3D XPoint read 50-150ns vs
+                // DRAM 50ns -> +50ns; write 50-500ns -> +225ns.
+                read_stall_ns: 50,
+                write_stall_ns: 225,
+                endurance: 1_000_000_000,
+            },
+            hmmu: HmmuConfig {
+                fpga_freq_mhz: 250.0,
+                pipeline_stages: 4,
+                hdr_fifo_depth: 64,
+                dma_block_bytes: 512,
+                dma_buffer_bytes: 8192,
+                page_bytes: 4096,
+                epoch_requests: 100_000,
+                migrations_per_epoch: 32,
+            },
+            policy: PolicyKind::Hotness,
+            scale: 1,
+            seed: 0x5EED,
+        }
+    }
+
+    /// Table II scaled down by `scale` (memory sizes and footprints shrink
+    /// together so the DRAM:NVM ratio and pressure stay faithful).
+    pub fn default_scaled(scale: u64) -> Self {
+        let mut c = Self::paper();
+        assert!(scale >= 1);
+        c.scale = scale;
+        c.dram.size_bytes = (c.dram.size_bytes / scale).max(1 << 20);
+        c.nvm.size_bytes = (c.nvm.size_bytes / scale).max(8 << 20);
+        // Epochs scale so migration cadence per unique page stays similar.
+        c.hmmu.epoch_requests = (c.hmmu.epoch_requests / scale).max(4096);
+        c
+    }
+
+    /// Total hybrid capacity.
+    pub fn total_mem_bytes(&self) -> u64 {
+        self.dram.size_bytes + self.nvm.size_bytes
+    }
+
+    /// Number of managed pages in the hybrid space.
+    pub fn total_pages(&self) -> u64 {
+        self.total_mem_bytes() / self.hmmu.page_bytes
+    }
+
+    pub fn dram_pages(&self) -> u64 {
+        self.dram.size_bytes / self.hmmu.page_bytes
+    }
+
+    /// Apply a Table I technology preset to the NVM emulation parameters.
+    pub fn with_tech(mut self, tech: MemTech) -> Self {
+        let p = TechPreset::of(tech);
+        self.nvm.read_stall_ns = p.read_stall_ns(self.dram.t_cas_ns + self.dram.t_rcd_ns);
+        self.nvm.write_stall_ns = p.write_stall_ns(self.dram.t_cas_ns + self.dram.t_rcd_ns);
+        self.nvm.endurance = p.endurance;
+        self
+    }
+
+    /// Render the Table II block (used by `hymem config --show`).
+    pub fn show(&self) -> String {
+        use crate::util::units::fmt_bytes;
+        format!(
+            "CPU            ARM Cortex-A57-like @ {:.1}GHz, {} cores (modeled)\n\
+             L1 I-Cache     {} {}‑way\n\
+             L1 D-Cache     {} {}‑way\n\
+             L2 Cache       {} {}‑way, {}B lines\n\
+             Interconnect   PCIe Gen3 x{} ({:.1} GT/s, {:.2} GB/s eff.)\n\
+             DRAM           {} (scale 1/{})\n\
+             NVM            {} (DRAM + {}ns rd / {}ns wr stalls)\n\
+             HMMU           {} MHz fabric, {}‑deep HDR FIFO, {}B DMA blocks\n\
+             Policy         {}",
+            self.cpu.freq_ghz,
+            self.cpu.cores,
+            fmt_bytes(self.l1i.size_bytes),
+            self.l1i.ways,
+            fmt_bytes(self.l1d.size_bytes),
+            self.l1d.ways,
+            fmt_bytes(self.l2.size_bytes),
+            self.l2.ways,
+            self.l2.line_bytes,
+            self.pcie.lanes,
+            self.pcie.gts_per_lane,
+            self.pcie.bandwidth_bytes_per_ns(),
+            fmt_bytes(self.dram.size_bytes),
+            self.scale,
+            fmt_bytes(self.nvm.size_bytes),
+            self.nvm.read_stall_ns,
+            self.nvm.write_stall_ns,
+            self.hmmu.fpga_freq_mhz,
+            self.hmmu.hdr_fifo_depth,
+            self.hmmu.dma_block_bytes,
+            self.policy.name(),
+        )
+    }
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self::default_scaled(16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_matches_table2() {
+        let c = SystemConfig::paper();
+        assert_eq!(c.cpu.cores, 8);
+        assert_eq!(c.l1d.size_bytes, 32 << 10);
+        assert_eq!(c.l1d.ways, 2);
+        assert_eq!(c.l2.size_bytes, 1 << 20);
+        assert_eq!(c.l2.ways, 16);
+        assert_eq!(c.dram.size_bytes, 128 << 20);
+        assert_eq!(c.nvm.size_bytes, 1 << 30);
+    }
+
+    #[test]
+    fn scaling_preserves_ratio() {
+        let c = SystemConfig::default_scaled(16);
+        let p = SystemConfig::paper();
+        assert_eq!(
+            p.nvm.size_bytes / p.dram.size_bytes,
+            c.nvm.size_bytes / c.dram.size_bytes
+        );
+        assert_eq!(c.dram.size_bytes, 8 << 20);
+    }
+
+    #[test]
+    fn cache_sets() {
+        let c = SystemConfig::paper();
+        assert_eq!(c.l1d.sets(), 256); // 32K / (2 * 64)
+        assert_eq!(c.l2.sets(), 1024); // 1M / (16 * 64)
+    }
+
+    #[test]
+    fn pcie_bandwidth_gen3_x8() {
+        let c = SystemConfig::paper();
+        let bw = c.pcie.bandwidth_bytes_per_ns();
+        assert!((bw - 7.88).abs() < 0.1, "bw={bw}");
+    }
+
+    #[test]
+    fn page_counts() {
+        let c = SystemConfig::default_scaled(16);
+        assert_eq!(c.total_pages(), (8 + 64) * 256); // (8MiB+64MiB)/4KiB
+        assert_eq!(c.dram_pages(), 2048);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(PolicyKind::parse("hotness"), Some(PolicyKind::Hotness));
+        assert_eq!(PolicyKind::parse("STATIC"), Some(PolicyKind::Static));
+        assert_eq!(PolicyKind::parse("first-touch"), Some(PolicyKind::FirstTouch));
+        assert_eq!(PolicyKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn tech_preset_changes_stalls() {
+        let base = SystemConfig::paper();
+        let stt = base.clone().with_tech(MemTech::SttRam);
+        assert!(stt.nvm.read_stall_ns < base.nvm.read_stall_ns);
+    }
+}

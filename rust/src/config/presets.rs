@@ -1,0 +1,159 @@
+//! Table I technology presets.
+//!
+//! The paper's §III-F emulates an NVM by measuring the DRAM round trip and
+//! scaling stall cycles by the Table I latency ratio. These presets encode
+//! Table I so any technology can be swapped in (`--tech stt-ram` etc.),
+//! which Fig/Table I experiments sweep.
+
+/// Memory technologies from Table I.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemTech {
+    Flash,
+    Xpoint3D,
+    Dram,
+    SttRam,
+    Mram,
+}
+
+impl MemTech {
+    pub const ALL: [MemTech; 5] = [
+        MemTech::Flash,
+        MemTech::Xpoint3D,
+        MemTech::Dram,
+        MemTech::SttRam,
+        MemTech::Mram,
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+            "flash" => Some(Self::Flash),
+            "3dxpoint" | "xpoint" | "xpoint3d" | "optane" => Some(Self::Xpoint3D),
+            "dram" => Some(Self::Dram),
+            "sttram" | "stt" => Some(Self::SttRam),
+            "mram" => Some(Self::Mram),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Flash => "FLASH",
+            Self::Xpoint3D => "3D XPoint",
+            Self::Dram => "DRAM",
+            Self::SttRam => "STT-RAM",
+            Self::Mram => "MRAM",
+        }
+    }
+}
+
+/// One row of Table I (latencies in ns; endurance in cycles).
+#[derive(Clone, Copy, Debug)]
+pub struct TechPreset {
+    pub tech: MemTech,
+    pub read_ns: u64,
+    pub write_ns: u64,
+    pub endurance: u64,
+    /// $/GB midpoint (Table I), used only for report output.
+    pub dollars_per_gb: f64,
+}
+
+impl TechPreset {
+    /// Table I values (midpoints of the published ranges).
+    pub fn of(tech: MemTech) -> Self {
+        match tech {
+            MemTech::Flash => TechPreset {
+                tech,
+                read_ns: 100_000,
+                write_ns: 100_000,
+                endurance: 10_000,
+                dollars_per_gb: 0.54,
+            },
+            MemTech::Xpoint3D => TechPreset {
+                tech,
+                read_ns: 100,  // 50-150ns midpoint
+                write_ns: 275, // 50-500ns midpoint
+                endurance: 1_000_000_000,
+                dollars_per_gb: 6.5,
+            },
+            MemTech::Dram => TechPreset {
+                tech,
+                read_ns: 50,
+                write_ns: 50,
+                endurance: u64::MAX, // >10^16, effectively unlimited
+                dollars_per_gb: 6.65,
+            },
+            MemTech::SttRam => TechPreset {
+                tech,
+                read_ns: 20,
+                write_ns: 20,
+                endurance: u64::MAX,
+                dollars_per_gb: f64::NAN,
+            },
+            MemTech::Mram => TechPreset {
+                tech,
+                read_ns: 20,
+                write_ns: 20,
+                endurance: 1_000_000_000_000_000,
+                dollars_per_gb: f64::NAN,
+            },
+        }
+    }
+
+    /// §III-F: extra read stall over the measured DRAM round trip.
+    /// `dram_rt_ns` is the DRAM device round trip being scaled against.
+    pub fn read_stall_ns(&self, dram_rt_ns: u64) -> u64 {
+        let dram = TechPreset::of(MemTech::Dram);
+        let ratio = self.read_ns as f64 / dram.read_ns as f64;
+        ((ratio - 1.0).max(0.0) * dram_rt_ns as f64) as u64
+    }
+
+    /// §III-F: extra write stall over the measured DRAM round trip.
+    pub fn write_stall_ns(&self, dram_rt_ns: u64) -> u64 {
+        let dram = TechPreset::of(MemTech::Dram);
+        let ratio = self.write_ns as f64 / dram.write_ns as f64;
+        ((ratio - 1.0).max(0.0) * dram_rt_ns as f64) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(MemTech::parse("3d-xpoint"), Some(MemTech::Xpoint3D));
+        assert_eq!(MemTech::parse("optane"), Some(MemTech::Xpoint3D));
+        assert_eq!(MemTech::parse("STT_RAM"), Some(MemTech::SttRam));
+        assert_eq!(MemTech::parse("nope"), None);
+    }
+
+    #[test]
+    fn dram_has_zero_stall() {
+        let p = TechPreset::of(MemTech::Dram);
+        assert_eq!(p.read_stall_ns(28), 0);
+        assert_eq!(p.write_stall_ns(28), 0);
+    }
+
+    #[test]
+    fn xpoint_write_slower_than_read() {
+        let p = TechPreset::of(MemTech::Xpoint3D);
+        assert!(p.write_stall_ns(28) > p.read_stall_ns(28));
+    }
+
+    #[test]
+    fn stt_ram_faster_than_dram_no_negative_stall() {
+        let p = TechPreset::of(MemTech::SttRam);
+        assert_eq!(p.read_stall_ns(28), 0); // clamped at 0, not negative
+    }
+
+    #[test]
+    fn flash_stall_is_huge() {
+        let p = TechPreset::of(MemTech::Flash);
+        assert!(p.read_stall_ns(28) > 10_000);
+    }
+
+    #[test]
+    fn all_contains_five() {
+        assert_eq!(MemTech::ALL.len(), 5);
+    }
+}

@@ -1,0 +1,238 @@
+//! Minimal TOML-subset parser for experiment config files.
+//!
+//! Supports: `[section]` headers, `key = value` with string / integer /
+//! float / bool values, `#` comments, and byte-suffixed strings ("128MB").
+//! Nested tables, arrays and datetimes are intentionally out of scope —
+//! experiment configs are flat.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed flat TOML document: `section.key -> raw value string`.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, Value>,
+}
+
+/// TOML scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl TomlDoc {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if key.ends_with('.') || key.starts_with('.') || k.trim().is_empty() {
+                bail!("line {}: bad key", lineno + 1);
+            }
+            doc.values.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn get_i64(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.as_i64())
+            .map(|v| v.max(0) as u64)
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// "128MB"-style byte strings, or raw integers.
+    pub fn get_bytes(&self, key: &str, default: u64) -> u64 {
+        match self.get(key) {
+            Some(Value::Str(s)) => crate::util::units::parse_bytes(s).unwrap_or(default),
+            Some(Value::Int(i)) => (*i).max(0) as u64,
+            _ => default,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# experiment config
+scale = 16
+seed = 0
+
+[dram]
+size = "128MB"
+banks = 16
+
+[nvm]
+read_stall_ns = 50
+ratio = 2.5
+enabled = true
+name = "3D XPoint # not a comment"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.get_i64("scale", 0), 16);
+        assert_eq!(d.get_bytes("dram.size", 0), 128 << 20);
+        assert_eq!(d.get_i64("dram.banks", 0), 16);
+        assert_eq!(d.get_f64("nvm.ratio", 0.0), 2.5);
+        assert!(d.get_bool("nvm.enabled", false));
+        assert_eq!(d.get_str("nvm.name", ""), "3D XPoint # not a comment");
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let d = TomlDoc::parse("").unwrap();
+        assert!(d.is_empty());
+        assert_eq!(d.get_u64("nope", 9), 9);
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let d = TomlDoc::parse("n = 1_000_000").unwrap();
+        assert_eq!(d.get_i64("n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(TomlDoc::parse("key").is_err());
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("k = @@").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let d = TomlDoc::parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(d.get("a"), Some(&Value::Int(3)));
+        assert_eq!(d.get("b"), Some(&Value::Float(3.5)));
+        assert_eq!(d.get_f64("a", 0.0), 3.0); // int coerces to f64
+    }
+}

@@ -1,0 +1,226 @@
+//! A57-like core timing model.
+//!
+//! Converts a workload trace plus per-access memory latencies into
+//! execution time. The model is deliberately simple but captures the two
+//! effects the platform experiment depends on:
+//!
+//! 1. **Compute/memory overlap** — an out-of-order core hides independent
+//!    misses up to its MSHR capacity (`max_outstanding_misses`); we model
+//!    the miss window explicitly.
+//! 2. **Dependent loads stall** — pointer chases (`TraceOp::dependent`)
+//!    serialize on memory latency, which is why 505.mcf suffers 15.36×
+//!    on the paper's platform while 538.imagick barely notices (1.17×).
+
+use super::hierarchy::{CacheHierarchy, MemBackend};
+use crate::config::CpuConfig;
+use crate::sim::Time;
+use crate::workload::TraceOp;
+
+/// Execution statistics for a run.
+#[derive(Clone, Debug, Default)]
+pub struct CoreStats {
+    pub instructions: u64,
+    pub mem_ops: u64,
+    /// Total modeled execution time.
+    pub time_ns: u64,
+    /// Time attributable to memory stalls (dependent misses + full-window).
+    pub mem_stall_ns: u64,
+    /// Misses that went to main memory.
+    pub memory_accesses: u64,
+}
+
+impl CoreStats {
+    pub fn ipc(&self, freq_ghz: f64) -> f64 {
+        if self.time_ns == 0 {
+            return 0.0;
+        }
+        self.instructions as f64 / (self.time_ns as f64 * freq_ghz)
+    }
+}
+
+/// The core model: owns time; drives hierarchy + backend per op.
+pub struct CoreModel {
+    cfg: CpuConfig,
+    /// ns of compute per instruction at base IPC (sub-ns, hence f64 acc).
+    ns_per_instr: f64,
+    now_f: f64,
+    /// Outstanding independent-miss completion times (MSHR window).
+    window: Vec<Time>,
+    pub stats: CoreStats,
+}
+
+impl CoreModel {
+    pub fn new(cfg: CpuConfig) -> Self {
+        CoreModel {
+            ns_per_instr: 1.0 / (cfg.freq_ghz * cfg.base_ipc),
+            cfg,
+            now_f: 0.0,
+            window: Vec::new(),
+            stats: CoreStats::default(),
+        }
+    }
+
+    /// Current core time in ns.
+    #[inline]
+    pub fn now(&self) -> Time {
+        self.now_f as Time
+    }
+
+    /// Execute one trace op through the hierarchy.
+    pub fn step<B: MemBackend>(
+        &mut self,
+        op: &TraceOp,
+        hierarchy: &mut CacheHierarchy,
+        backend: &mut B,
+    ) {
+        // Compute phase: gap instructions at base IPC.
+        self.now_f += op.gap as f64 * self.ns_per_instr + self.ns_per_instr;
+        self.stats.instructions += op.gap as u64 + 1;
+        self.stats.mem_ops += 1;
+
+        // Retire completed window entries.
+        let now = self.now_f as Time;
+        self.window.retain(|&t| t > now);
+
+        let out = hierarchy.access(op.addr, op.is_write, now, backend);
+
+        if !out.memory_access {
+            // Cache hits are largely pipelined; charge half the hit
+            // latency as visible (load-to-use shadow).
+            self.now_f += out.latency_ns as f64 * 0.5;
+            return;
+        }
+
+        self.stats.memory_accesses += 1;
+        let completion = now + out.latency_ns;
+
+        if op.dependent {
+            // Serialized: the next op cannot start before the data is back.
+            let stall = completion.saturating_sub(now);
+            self.stats.mem_stall_ns += stall;
+            self.now_f = completion as f64;
+            // A dependent load also drains the window (its address came
+            // from the previous load; anything younger is squashed).
+            self.window.clear();
+        } else {
+            // Independent: occupy an MSHR; stall only when the window is full.
+            if self.window.len() >= self.cfg.max_outstanding_misses as usize {
+                let earliest = *self.window.iter().min().unwrap();
+                let stall = earliest.saturating_sub(now);
+                self.stats.mem_stall_ns += stall;
+                self.now_f = self.now_f.max(earliest as f64);
+                let e = earliest;
+                self.window.retain(|&t| t > e);
+            }
+            self.window.push(completion);
+        }
+    }
+
+    /// Drain the window at end-of-run; returns final time.
+    pub fn finish(&mut self) -> Time {
+        if let Some(&last) = self.window.iter().max() {
+            self.now_f = self.now_f.max(last as f64);
+        }
+        self.window.clear();
+        self.stats.time_ns = self.now_f as Time;
+        self.stats.time_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::cpu::hierarchy::CacheHierarchy;
+    use crate::mem::AccessKind;
+
+    struct FixedBackend {
+        latency: u64,
+    }
+    impl MemBackend for FixedBackend {
+        fn access(&mut self, _a: u64, _k: AccessKind, _b: u64, now: Time) -> Time {
+            now + self.latency
+        }
+    }
+
+    fn run(ops: &[TraceOp], latency: u64) -> CoreStats {
+        let cfg = SystemConfig::default_scaled(16);
+        let mut core = CoreModel::new(cfg.cpu);
+        let mut h = CacheHierarchy::new(&cfg);
+        let mut b = FixedBackend { latency };
+        for op in ops {
+            core.step(op, &mut h, &mut b);
+        }
+        core.finish();
+        core.stats.clone()
+    }
+
+    #[test]
+    fn compute_only_time_matches_ipc() {
+        // All hits after the first touch: 1000 ops to one line.
+        let ops: Vec<TraceOp> = (0..1000).map(|_| TraceOp::load(11, 0)).collect();
+        let s = run(&ops, 100);
+        // 12 instructions per op at 2.4 GIPS -> ~5ns/op.
+        let expect = 1000.0 * 12.0 / 2.4;
+        assert!(
+            (s.time_ns as f64) > expect * 0.9 && (s.time_ns as f64) < expect * 1.5,
+            "time {} vs expect {}",
+            s.time_ns,
+            expect
+        );
+    }
+
+    #[test]
+    fn dependent_misses_serialize() {
+        // Pointer chase over distinct lines, zero gap.
+        let ops: Vec<TraceOp> = (0..100)
+            .map(|i| TraceOp::chained_load(0, i * 4096))
+            .collect();
+        let s = run(&ops, 500);
+        // Each of the 100 misses costs its full 500ns.
+        assert!(s.time_ns >= 100 * 500, "time {}", s.time_ns);
+        assert!(s.mem_stall_ns >= 90 * 500);
+    }
+
+    #[test]
+    fn independent_misses_overlap() {
+        let ops_dep: Vec<TraceOp> = (0..100).map(|i| TraceOp::chained_load(0, i * 4096)).collect();
+        let ops_ind: Vec<TraceOp> = (0..100).map(|i| TraceOp::load(0, i * 4096)).collect();
+        let dep = run(&ops_dep, 500);
+        let ind = run(&ops_ind, 500);
+        assert!(
+            ind.time_ns * 3 < dep.time_ns,
+            "MLP should hide most latency: ind {} dep {}",
+            ind.time_ns,
+            dep.time_ns
+        );
+    }
+
+    #[test]
+    fn memory_latency_increases_time() {
+        let ops: Vec<TraceOp> = (0..200).map(|i| TraceOp::chained_load(3, i * 4096)).collect();
+        let fast = run(&ops, 80); // ~native DRAM
+        let slow = run(&ops, 800); // ~PCIe attached
+        let ratio = slow.time_ns as f64 / fast.time_ns as f64;
+        assert!(ratio > 3.0, "slowdown ratio {ratio}");
+    }
+
+    #[test]
+    fn ipc_sane() {
+        let ops: Vec<TraceOp> = (0..1000).map(|_| TraceOp::load(11, 0)).collect();
+        let s = run(&ops, 100);
+        let ipc = s.ipc(2.0);
+        assert!(ipc > 0.5 && ipc <= 1.3, "ipc={ipc}");
+    }
+
+    #[test]
+    fn finish_waits_for_outstanding() {
+        let cfg = SystemConfig::default_scaled(16);
+        let mut core = CoreModel::new(cfg.cpu);
+        let mut h = CacheHierarchy::new(&cfg);
+        let mut b = FixedBackend { latency: 10_000 };
+        core.step(&TraceOp::load(0, 0), &mut h, &mut b);
+        let t = core.finish();
+        assert!(t >= 10_000);
+    }
+}

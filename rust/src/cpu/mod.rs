@@ -1,0 +1,18 @@
+//! Host-CPU substrate: ARM Cortex-A57-like core timing, L1/L2 cache
+//! hierarchy and TLB.
+//!
+//! In the paper the host is real silicon (LS2085A); its only observable
+//! effect on the experiment is (a) the *cache-filtered* memory request
+//! stream reaching the HMMU and (b) execution time as a function of
+//! memory latency. Both are reproduced here: [`cache`] models the Table II
+//! hierarchy, [`core_model`] converts per-access latencies into cycles.
+
+pub mod cache;
+pub mod core_model;
+pub mod hierarchy;
+pub mod tlb;
+
+pub use cache::{Cache, CacheOutcome};
+pub use core_model::CoreModel;
+pub use hierarchy::{CacheHierarchy, HierarchyOutcome, MemBackend};
+pub use tlb::Tlb;

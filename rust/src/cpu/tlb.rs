@@ -1,0 +1,144 @@
+//! Two-level TLB model (A57: 48-entry L1, 1024-entry unified L2).
+//!
+//! A TLB miss costs a page-table walk, which in the platform means extra
+//! memory accesses; we charge a configurable walk penalty and surface the
+//! counters. Fully-associative LRU at both levels (small enough).
+
+/// A fully-associative LRU translation buffer.
+#[derive(Clone, Debug)]
+struct TlbLevel {
+    entries: Vec<(u64, u64)>, // (vpn, lru)
+    capacity: usize,
+    tick: u64,
+}
+
+impl TlbLevel {
+    fn new(capacity: usize) -> Self {
+        TlbLevel {
+            entries: Vec::with_capacity(capacity),
+            capacity,
+            tick: 0,
+        }
+    }
+
+    fn access(&mut self, vpn: u64) -> bool {
+        self.tick += 1;
+        if let Some(e) = self.entries.iter_mut().find(|(v, _)| *v == vpn) {
+            e.1 = self.tick;
+            return true;
+        }
+        if self.entries.len() == self.capacity {
+            let idx = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (_, lru))| *lru)
+                .map(|(i, _)| i)
+                .unwrap();
+            self.entries.swap_remove(idx);
+        }
+        self.entries.push((vpn, self.tick));
+        false
+    }
+}
+
+/// Two-level TLB with walk-penalty accounting.
+#[derive(Clone, Debug)]
+pub struct Tlb {
+    l1: TlbLevel,
+    l2: TlbLevel,
+    page_shift: u32,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub walks: u64,
+}
+
+impl Tlb {
+    pub fn new(l1_entries: usize, l2_entries: usize, page_bytes: u64) -> Self {
+        Tlb {
+            l1: TlbLevel::new(l1_entries),
+            l2: TlbLevel::new(l2_entries),
+            page_shift: page_bytes.trailing_zeros(),
+            l1_hits: 0,
+            l2_hits: 0,
+            walks: 0,
+        }
+    }
+
+    /// A57-ish defaults: 48-entry micro-TLB, 1024-entry L2, 4K pages.
+    pub fn a57(page_bytes: u64) -> Self {
+        Self::new(48, 1024, page_bytes)
+    }
+
+    /// Translate; returns extra latency class: 0 = L1 hit, 1 = L2 hit,
+    /// 2 = full walk.
+    pub fn access(&mut self, addr: u64) -> u32 {
+        let vpn = addr >> self.page_shift;
+        if self.l1.access(vpn) {
+            self.l1_hits += 1;
+            0
+        } else if self.l2.access(vpn) {
+            self.l2_hits += 1;
+            1
+        } else {
+            self.walks += 1;
+            2
+        }
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.l1_hits + self.l2_hits + self.walks
+    }
+
+    pub fn walk_rate(&self) -> f64 {
+        let t = self.accesses();
+        if t == 0 {
+            0.0
+        } else {
+            self.walks as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_page_hits_l1() {
+        let mut t = Tlb::new(4, 16, 4096);
+        assert_eq!(t.access(0x1000), 2); // cold walk
+        assert_eq!(t.access(0x1040), 0); // same page
+        assert_eq!(t.l1_hits, 1);
+        assert_eq!(t.walks, 1);
+    }
+
+    #[test]
+    fn capacity_spill_hits_l2() {
+        let mut t = Tlb::new(2, 16, 4096);
+        for p in 0..3u64 {
+            t.access(p * 4096);
+        }
+        // page 0 evicted from L1 but still in L2.
+        assert_eq!(t.access(0), 1);
+        assert_eq!(t.l2_hits, 1);
+    }
+
+    #[test]
+    fn huge_working_set_walks() {
+        let mut t = Tlb::new(4, 8, 4096);
+        for p in 0..100u64 {
+            t.access(p * 4096);
+        }
+        // Revisit early pages: both levels evicted them.
+        assert_eq!(t.access(0), 2);
+        assert!(t.walk_rate() > 0.9);
+    }
+
+    #[test]
+    fn a57_sizes() {
+        let t = Tlb::a57(4096);
+        assert_eq!(t.l1.capacity, 48);
+        assert_eq!(t.l2.capacity, 1024);
+    }
+}

@@ -1,0 +1,471 @@
+//! The Hybrid Memory Management Unit — the paper's contribution (Fig 2).
+//!
+//! Request flow, mirroring the paper's workflow:
+//!
+//! ```text
+//! PCIe RX → HDR FIFO → control pipeline (decode → policy → route)
+//!        → { DRAM MC | NVM MC | DMA-conflict redirect }
+//!        → tag-matching in-order completion → PCIe TX
+//! ```
+//!
+//! plus the DMA engine migrating pages between the devices under the
+//! control of the epoch policy, and performance counters on everything.
+//!
+//! The HMMU is deliberately independent of the PCIe link: it consumes
+//! requests with arrival timestamps and produces completion timestamps.
+//! The platform wraps it with the link model.
+
+pub mod counters;
+pub mod dma;
+pub mod policy;
+pub mod redirection;
+pub mod tags;
+
+pub use counters::HmmuCounters;
+pub use dma::{DmaEngine, DmaRoute};
+pub use policy::{build_policy, HotnessEngine, PlacementPolicy, PolicyView};
+pub use redirection::{Device, Mapping, RedirectionTable};
+pub use tags::TagMatcher;
+
+use crate::alloc::HintStore;
+use crate::config::SystemConfig;
+use crate::mem::{AccessKind, DramDevice, MemDevice, MemoryController, NvmDevice};
+use crate::sim::{Clock, Time};
+use std::collections::VecDeque;
+
+/// The HMMU model.
+pub struct Hmmu {
+    cfg: SystemConfig,
+    pub table: RedirectionTable,
+    tags: TagMatcher,
+    pub dma: DmaEngine,
+    policy: Box<dyn PlacementPolicy>,
+    dram_mc: MemoryController<DramDevice>,
+    nvm_mc: MemoryController<NvmDevice>,
+    pub counters: HmmuCounters,
+    hints: HintStore,
+    /// Pipeline latency (decode + policy + route stages) in ns.
+    pipeline_ns: u64,
+    /// Release times of outstanding HDR FIFO entries (occupancy model).
+    hdr_occupancy: VecDeque<Time>,
+    requests_since_epoch: u64,
+    /// Simulated time of the last processed request (drives epoch DMA).
+    last_now: Time,
+}
+
+impl Hmmu {
+    pub fn new(cfg: SystemConfig, engine: Option<Box<dyn HotnessEngine>>) -> Self {
+        let fpga = Clock::from_mhz(cfg.hmmu.fpga_freq_mhz);
+        let page_bytes = cfg.hmmu.page_bytes;
+        let dram_frames = (cfg.dram.size_bytes / page_bytes) as u32;
+        let nvm_frames = (cfg.nvm.size_bytes / page_bytes) as u32;
+        let host_pages = cfg.total_pages();
+
+        let mut table = RedirectionTable::new(host_pages, dram_frames, nvm_frames, page_bytes);
+        if cfg.policy == crate::config::PolicyKind::Static {
+            table.identity_map();
+        }
+
+        // Memory-controller clock: DDR4-1600-class command rate.
+        let mc_clock = Clock::from_mhz(1200.0);
+        let dram_mc = MemoryController::new(
+            DramDevice::new(cfg.dram),
+            mc_clock,
+            4,
+            cfg.dram.queue_depth,
+        );
+        let nvm_mc = MemoryController::new(
+            NvmDevice::new(cfg.nvm, cfg.dram, page_bytes),
+            mc_clock,
+            4,
+            cfg.dram.queue_depth,
+        );
+
+        let policy = build_policy(&cfg, engine);
+        let pipeline_ns = fpga.cycles_to_ns(cfg.hmmu.pipeline_stages as u64);
+
+        Hmmu {
+            table,
+            tags: TagMatcher::new(cfg.hmmu.hdr_fifo_depth as usize),
+            dma: DmaEngine::new(
+                cfg.hmmu.dma_block_bytes as u64,
+                page_bytes,
+                cfg.hmmu.dma_buffer_bytes as u64 >= 2 * cfg.hmmu.dma_block_bytes as u64,
+            ),
+            policy,
+            dram_mc,
+            nvm_mc,
+            counters: HmmuCounters::default(),
+            hints: HintStore::new(),
+            pipeline_ns,
+            hdr_occupancy: VecDeque::new(),
+            requests_since_epoch: 0,
+            last_now: 0,
+            cfg,
+        }
+    }
+
+    /// Install middleware hints (paper §III-G) for hint-aware placement.
+    pub fn set_hints(&mut self, hints: HintStore) {
+        self.hints = hints;
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// Dynamic-stall reconfiguration (Table I sweep: §III-F "arbitrary
+    /// latency cycles").
+    pub fn set_nvm_stalls(&mut self, read_ns: u64, write_ns: u64) {
+        self.nvm_mc.device_mut().set_stalls(read_ns, write_ns);
+    }
+
+    pub fn dram_stats(&self) -> &crate::mem::DeviceStats {
+        self.dram_mc.device().stats()
+    }
+
+    pub fn nvm_stats(&self) -> &crate::mem::DeviceStats {
+        self.nvm_mc.device().stats()
+    }
+
+    pub fn nvm_device(&self) -> &NvmDevice {
+        self.nvm_mc.device()
+    }
+
+    /// Process one memory request arriving at `now`. Returns the time the
+    /// response leaves the HMMU (for reads: data ready for the TX TLP;
+    /// for writes: commit time at the device — posted, the host does not
+    /// wait for it).
+    pub fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> Time {
+        self.last_now = now;
+        // --- counters: host side ---
+        match kind {
+            AccessKind::Read => {
+                self.counters.host_reads += 1;
+                self.counters.host_read_bytes += bytes;
+            }
+            AccessKind::Write => {
+                self.counters.host_writes += 1;
+                self.counters.host_write_bytes += bytes;
+            }
+        }
+
+        // --- commit any DMA swaps that finished before this request ---
+        self.commit_dma(now);
+
+        // --- HDR FIFO occupancy / backpressure ---
+        let mut t = now;
+        while let Some(&front) = self.hdr_occupancy.front() {
+            if front <= t {
+                self.hdr_occupancy.pop_front();
+            } else if self.hdr_occupancy.len() >= self.cfg.hmmu.hdr_fifo_depth as usize {
+                // FIFO full: stall the pipeline until the head drains.
+                self.counters.fifo_full_stalls += 1;
+                t = front;
+                self.hdr_occupancy.pop_front();
+            } else {
+                break;
+            }
+        }
+
+        // --- control pipeline (decode + policy + route stages) ---
+        t += self.pipeline_ns;
+
+        // --- placement on first touch ---
+        let page = addr / self.cfg.hmmu.page_bytes;
+        let offset = addr % self.cfg.hmmu.page_bytes;
+        if self.table.lookup(page).is_none() {
+            let hint = self.hints.lookup(addr);
+            let preferred = self.policy.place(page, hint);
+            let m = self
+                .table
+                .place(page, preferred)
+                .expect("hybrid memory exhausted: host space exceeds frames");
+            match m.device {
+                Device::Dram => self.counters.pages_placed_dram += 1,
+                Device::Nvm => self.counters.pages_placed_nvm += 1,
+            }
+        }
+
+        // --- policy accounting ---
+        self.policy.record_access(page, kind.is_write());
+
+        // --- DMA conflict routing (§III-D) ---
+        let (device, dev_addr) = {
+            let (route, swap) = self.dma.route(page, offset, t);
+            match route {
+                DmaRoute::NotInvolved => self.table.translate(addr).unwrap(),
+                DmaRoute::UseOriginal => {
+                    let m = swap.unwrap().original(page);
+                    (m.device, m.frame as u64 * self.cfg.hmmu.page_bytes + offset)
+                }
+                DmaRoute::UseDestination => {
+                    let m = swap.unwrap().destination(page);
+                    (m.device, m.frame as u64 * self.cfg.hmmu.page_bytes + offset)
+                }
+                DmaRoute::Stall(until) => {
+                    self.counters.dma_conflict_stalls += 1;
+                    let m = swap.unwrap().destination(page);
+                    t = until;
+                    (m.device, m.frame as u64 * self.cfg.hmmu.page_bytes + offset)
+                }
+            }
+        };
+
+        // --- tag issue + media access ---
+        let tag = if self.tags.can_issue() {
+            self.tags.issue()
+        } else {
+            // Shouldn't happen (occupancy model gates issues), but stay safe.
+            self.tags.note_full_stall();
+            self.tags.issue()
+        };
+        let done = match device {
+            Device::Dram => {
+                match kind {
+                    AccessKind::Read => self.counters.dram_reads += 1,
+                    AccessKind::Write => self.counters.dram_writes += 1,
+                }
+                self.dram_mc.issue(dev_addr, kind, bytes, t)
+            }
+            Device::Nvm => {
+                match kind {
+                    AccessKind::Read => self.counters.nvm_reads += 1,
+                    AccessKind::Write => self.counters.nvm_writes += 1,
+                }
+                self.nvm_mc.issue(dev_addr, kind, bytes, t)
+            }
+        };
+
+        // --- in-order completion drain (§III-C) ---
+        let release = self.tags.complete_inline(tag, done);
+        self.counters.reorder_wait_ns = self.tags.reorder_wait_ns;
+        self.hdr_occupancy.push_back(release);
+
+        self.counters.latency.record(release.saturating_sub(now));
+
+        // --- epoch boundary ---
+        self.requests_since_epoch += 1;
+        if self.requests_since_epoch >= self.cfg.hmmu.epoch_requests {
+            self.requests_since_epoch = 0;
+            self.run_epoch(release);
+        }
+
+        release
+    }
+
+    /// Commit DMA swaps completed by `now` into the redirection table.
+    fn commit_dma(&mut self, now: Time) {
+        for (a, b) in self.dma.drain_committed(now) {
+            self.table
+                .swap(a, b)
+                .expect("committed swap of unmapped pages");
+        }
+    }
+
+    /// Run the policy step and launch the selected migrations on the DMA
+    /// engine. The policy math itself executes off the request path (the
+    /// paper's control logic is pipelined in fabric); we account its host
+    /// wall time in the counters for the §Perf report.
+    fn run_epoch(&mut self, now: Time) {
+        self.counters.epochs += 1;
+        let wall = std::time::Instant::now();
+        let dma_ref = &self.dma;
+        let migrating = |page: u64| dma_ref.is_active(page);
+        let pairs = {
+            let view = PolicyView {
+                table: &self.table,
+                migrating: &migrating,
+                max_migrations: self.cfg.hmmu.migrations_per_epoch,
+            };
+            self.policy.epoch(&view)
+        };
+        self.counters.policy_wall_ns += wall.elapsed().as_nanos() as u64;
+
+        for (nvm_page, dram_page) in pairs {
+            let (Some(ma), Some(mb)) = (self.table.lookup(nvm_page), self.table.lookup(dram_page))
+            else {
+                continue;
+            };
+            // Policies see a consistent snapshot, but double-check
+            // directions: promote NVM→DRAM only.
+            if ma.device != Device::Nvm || mb.device != Device::Dram {
+                continue;
+            }
+            let dram_mc = &mut self.dram_mc;
+            let nvm_mc = &mut self.nvm_mc;
+            let mut issue = |dev: Device, a: u64, k: AccessKind, b: u64, at: Time| match dev {
+                Device::Dram => dram_mc.issue(a, k, b, at),
+                Device::Nvm => nvm_mc.issue(a, k, b, at),
+            };
+            self.dma
+                .start_swap(nvm_page, ma, dram_page, mb, now, &mut issue);
+            self.counters.migrations += 1;
+            self.counters.migration_bytes += 2 * self.cfg.hmmu.page_bytes;
+        }
+    }
+
+    /// Finish outstanding work at end-of-run (commit in-flight swaps).
+    pub fn drain(&mut self, now: Time) {
+        while self.dma.active_count() > 0 {
+            let horizon = self.dma.next_commit().unwrap().max(now);
+            self.commit_dma(horizon);
+        }
+    }
+
+    /// DRAM residency ratio of mapped pages (placement quality metric).
+    pub fn dram_residency(&self) -> f64 {
+        let mapped = self.table.iter_mapped().count() as f64;
+        if mapped == 0.0 {
+            return 0.0;
+        }
+        self.table.dram_resident_pages() as f64 / mapped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+
+    fn hmmu(policy: PolicyKind) -> Hmmu {
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = policy;
+        cfg.hmmu.epoch_requests = 1000;
+        Hmmu::new(cfg, None)
+    }
+
+    #[test]
+    fn read_and_write_complete() {
+        let mut h = hmmu(PolicyKind::Static);
+        let t_r = h.access(0, AccessKind::Read, 64, 0);
+        assert!(t_r > 0);
+        let t_w = h.access(4096, AccessKind::Write, 64, t_r);
+        assert!(t_w > t_r);
+        assert_eq!(h.counters.host_reads, 1);
+        assert_eq!(h.counters.host_writes, 1);
+    }
+
+    #[test]
+    fn static_policy_routes_by_address() {
+        let mut h = hmmu(PolicyKind::Static);
+        let dram_bytes = h.config().dram.size_bytes;
+        h.access(0, AccessKind::Read, 64, 0);
+        assert_eq!(h.counters.dram_reads, 1);
+        h.access(dram_bytes + 64, AccessKind::Read, 64, 1000);
+        assert_eq!(h.counters.nvm_reads, 1);
+    }
+
+    #[test]
+    fn nvm_read_slower_than_dram_read() {
+        let mut h = hmmu(PolicyKind::Static);
+        let dram_bytes = h.config().dram.size_bytes;
+        let t0 = h.access(0, AccessKind::Read, 64, 0);
+        let dram_latency = t0;
+        let t1 = h.access(dram_bytes + 4096, AccessKind::Read, 64, 100_000);
+        let nvm_latency = t1 - 100_000;
+        assert!(
+            nvm_latency > dram_latency + h.config().nvm.read_stall_ns / 2,
+            "nvm {nvm_latency} vs dram {dram_latency}"
+        );
+    }
+
+    #[test]
+    fn first_touch_fills_dram_then_nvm() {
+        let mut h = hmmu(PolicyKind::FirstTouch);
+        let page_bytes = h.config().hmmu.page_bytes;
+        let dram_pages = h.config().dram_pages();
+        let mut t = 0;
+        // Touch more pages than DRAM holds.
+        for p in 0..(dram_pages + 10) {
+            t = h.access(p * page_bytes, AccessKind::Write, 64, t + 100);
+        }
+        assert_eq!(h.counters.pages_placed_dram, dram_pages);
+        assert_eq!(h.counters.pages_placed_nvm, 10);
+    }
+
+    #[test]
+    fn hotness_policy_migrates_hot_nvm_pages() {
+        let mut h = hmmu(PolicyKind::Hotness);
+        let page_bytes = h.config().hmmu.page_bytes;
+        let dram_pages = h.config().dram_pages();
+        let mut t = 0;
+        // Fill DRAM with one-touch pages.
+        for p in 0..dram_pages {
+            t = h.access(p * page_bytes, AccessKind::Read, 64, t + 50);
+        }
+        // Overflow page lands in NVM, then becomes scorching hot.
+        let hot = dram_pages + 1;
+        for _ in 0..2000 {
+            t = h.access(hot * page_bytes, AccessKind::Read, 64, t + 50);
+        }
+        h.drain(t + 1_000_000);
+        assert!(h.counters.migrations > 0, "hot page should migrate");
+        // After drain, the hot page must be DRAM-resident.
+        let m = h.table.lookup(hot).unwrap();
+        assert_eq!(m.device, Device::Dram);
+    }
+
+    #[test]
+    fn migration_preserves_table_invariants() {
+        let mut h = hmmu(PolicyKind::Hotness);
+        let page_bytes = h.config().hmmu.page_bytes;
+        let total = h.config().total_pages();
+        let mut t = 0;
+        let mut rng = crate::util::rng::Xoshiro256::new(1);
+        for _ in 0..5000 {
+            let p = rng.below(total.min(4096));
+            let w = rng.chance(0.3);
+            let kind = if w { AccessKind::Write } else { AccessKind::Read };
+            t = h.access(p * page_bytes + rng.below(page_bytes), kind, 64, t + 20);
+        }
+        h.drain(t + 10_000_000);
+        h.table.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn counters_fig8_totals() {
+        let mut h = hmmu(PolicyKind::Static);
+        let mut t = 0;
+        for i in 0..100u64 {
+            t = h.access(i * 64, AccessKind::Read, 64, t + 10);
+        }
+        for i in 0..50u64 {
+            t = h.access(i * 64, AccessKind::Write, 64, t + 10);
+        }
+        let (rb, wb) = h.counters.fig8_row();
+        assert_eq!(rb, 6400);
+        assert_eq!(wb, 3200);
+    }
+
+    #[test]
+    fn latency_histogram_populated() {
+        let mut h = hmmu(PolicyKind::Static);
+        let mut t = 0;
+        for i in 0..100u64 {
+            t = h.access(i * 4096, AccessKind::Read, 64, t + 100);
+        }
+        assert_eq!(h.counters.latency.count(), 100);
+        assert!(h.counters.latency.mean() > 0.0);
+    }
+
+    #[test]
+    fn drain_commits_everything() {
+        let mut h = hmmu(PolicyKind::Hotness);
+        let page_bytes = h.config().hmmu.page_bytes;
+        let dram_pages = h.config().dram_pages();
+        let mut t = 0;
+        for p in 0..(dram_pages + 50) {
+            for _ in 0..30 {
+                t = h.access(p * page_bytes, AccessKind::Read, 64, t + 20);
+            }
+        }
+        h.drain(t + 100_000_000);
+        assert_eq!(h.dma.active_count(), 0);
+        h.table.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,45 @@
+//! First-touch policy: every new page prefers DRAM; once DRAM frames run
+//! out the redirection table falls back to NVM. No migration — whatever
+//! touched memory first keeps the fast frames. The classic baseline for
+//! migration studies.
+
+use super::{Device, PlacementPolicy, PolicyView};
+use crate::alloc::Placement;
+
+#[derive(Default)]
+pub struct FirstTouchPolicy;
+
+impl FirstTouchPolicy {
+    pub fn new() -> Self {
+        FirstTouchPolicy
+    }
+}
+
+impl PlacementPolicy for FirstTouchPolicy {
+    fn name(&self) -> &'static str {
+        "first-touch"
+    }
+
+    fn place(&mut self, _page: u64, _hint: Placement) -> Device {
+        Device::Dram // table falls back to NVM when DRAM is full
+    }
+
+    fn record_access(&mut self, _page: u64, _is_write: bool) {}
+
+    fn epoch(&mut self, _view: &PolicyView) -> Vec<(u64, u64)> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_prefers_dram() {
+        let mut p = FirstTouchPolicy::new();
+        for page in [0u64, 5, 1000, 1 << 40] {
+            assert_eq!(p.place(page, Placement::Any), Device::Dram);
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Hint-aware first-touch policy (paper §III-G): the extended malloc API
+//! populates device preferences "through the stack to the hardware hybrid
+//! memory controller". Pages with a hint honor it; unhinted pages behave
+//! like first-touch.
+
+use super::{Device, PlacementPolicy, PolicyView};
+use crate::alloc::Placement;
+use std::collections::HashSet;
+
+#[derive(Default)]
+pub struct HintsPolicy {
+    /// Pages pinned to DRAM (never offered as demotion victims).
+    pinned: HashSet<u64>,
+}
+
+impl HintsPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_pinned(&self, page: u64) -> bool {
+        self.pinned.contains(&page)
+    }
+}
+
+impl PlacementPolicy for HintsPolicy {
+    fn name(&self) -> &'static str {
+        "hints"
+    }
+
+    fn place(&mut self, page: u64, hint: Placement) -> Device {
+        match hint {
+            Placement::PreferNvm => Device::Nvm,
+            Placement::PinDram => {
+                self.pinned.insert(page);
+                Device::Dram
+            }
+            Placement::PreferDram | Placement::Any => Device::Dram,
+        }
+    }
+
+    fn record_access(&mut self, _page: u64, _is_write: bool) {}
+
+    fn epoch(&mut self, _view: &PolicyView) -> Vec<(u64, u64)> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn honors_hints() {
+        let mut p = HintsPolicy::new();
+        assert_eq!(p.place(1, Placement::PreferNvm), Device::Nvm);
+        assert_eq!(p.place(2, Placement::PreferDram), Device::Dram);
+        assert_eq!(p.place(3, Placement::PinDram), Device::Dram);
+        assert_eq!(p.place(4, Placement::Any), Device::Dram);
+        assert!(p.is_pinned(3));
+        assert!(!p.is_pinned(2));
+    }
+}

@@ -1,0 +1,400 @@
+//! Epoch-based hotness migration policy — the flagship policy, and the
+//! piece of the stack that runs through the AOT-compiled XLA artifact.
+//!
+//! Per-page read/write counters accumulate during an epoch (in HMMU SRAM
+//! in the paper; plain arrays here). At the epoch boundary a **policy
+//! step** computes, for every page:
+//!
+//! ```text
+//! hotness'      = DECAY * hotness + reads + WRITE_WEIGHT * writes
+//! promote_score = in_nvm  ? hotness' : -inf     (hot NVM pages move up)
+//! demote_score  = in_dram ? -hotness' : -inf    (cold DRAM pages move down)
+//! ```
+//!
+//! `WRITE_WEIGHT > 1` encodes NVM's write asymmetry (Table I: 3D XPoint
+//! writes are 2-10× its reads): write-hot pages benefit doubly from DRAM.
+//!
+//! The step is a dense elementwise pass over the page arrays — exactly
+//! the shape the Pallas kernel implements (`python/compile/kernels/
+//! hotness.py`). [`HotnessEngine`] abstracts the math so the HMMU can run
+//! either the [`NativeHotnessEngine`] (pure Rust, bit-compatible) or the
+//! AOT XLA executable loaded by `runtime::XlaHotnessEngine`. An
+//! integration test cross-checks the two.
+
+use super::{Device, PlacementPolicy, PolicyView};
+use crate::alloc::Placement;
+
+/// Exponential decay applied to hotness each epoch.
+pub const HOTNESS_DECAY: f32 = 0.5;
+/// Weight of a write relative to a read (NVM write asymmetry).
+pub const WRITE_WEIGHT: f32 = 2.0;
+/// A promoted NVM page must be this much hotter than the DRAM victim it
+/// replaces (hysteresis against thrashing).
+pub const HYSTERESIS: f32 = 1.25;
+
+/// Output of one policy step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyStepOutput {
+    pub hotness: Vec<f32>,
+    pub promote_score: Vec<f32>,
+    pub demote_score: Vec<f32>,
+}
+
+/// The hotness math, swappable between native Rust and the XLA artifact.
+pub trait HotnessEngine {
+    /// `reads`/`writes`: epoch counters; `prev`: hotness from last epoch;
+    /// `in_dram`: 1.0 where the page is DRAM-resident, 0.0 NVM-resident
+    /// (unmapped pages have 0 counters and are never candidates).
+    fn step(
+        &mut self,
+        reads: &[f32],
+        writes: &[f32],
+        prev: &[f32],
+        in_dram: &[f32],
+    ) -> PolicyStepOutput;
+
+    /// Implementation label for reports.
+    fn label(&self) -> &'static str;
+}
+
+/// Pure-Rust engine, bit-compatible with the Pallas kernel under
+/// `interpret=True` (same operation order: fma, mask by select).
+#[derive(Default)]
+pub struct NativeHotnessEngine;
+
+/// Mask value for non-candidates (matches `ref.py` / the kernel).
+pub const NEG_INF: f32 = -1.0e30;
+
+impl HotnessEngine for NativeHotnessEngine {
+    fn step(
+        &mut self,
+        reads: &[f32],
+        writes: &[f32],
+        prev: &[f32],
+        in_dram: &[f32],
+    ) -> PolicyStepOutput {
+        let n = reads.len();
+        let mut hotness = vec![0f32; n];
+        let mut promote = vec![0f32; n];
+        let mut demote = vec![0f32; n];
+        // §Perf: zipped iteration (no bounds checks) so LLVM vectorizes
+        // the FMA + selects, mirroring what the Pallas kernel's VPU does.
+        for (((((h, p), d), &r), &w), (&pv, &dram)) in hotness
+            .iter_mut()
+            .zip(promote.iter_mut())
+            .zip(demote.iter_mut())
+            .zip(reads)
+            .zip(writes)
+            .zip(prev.iter().zip(in_dram))
+        {
+            let hv = HOTNESS_DECAY * pv + (r + WRITE_WEIGHT * w);
+            *h = hv;
+            let is_dram = dram != 0.0;
+            *p = if is_dram { NEG_INF } else { hv };
+            *d = if is_dram { -hv } else { NEG_INF };
+        }
+        PolicyStepOutput {
+            hotness,
+            promote_score: promote,
+            demote_score: demote,
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The migration policy driving an engine.
+pub struct HotnessPolicy {
+    pages: usize,
+    reads: Vec<f32>,
+    writes: Vec<f32>,
+    hotness: Vec<f32>,
+    /// Residency bitmap scratch, reused across epochs (§Perf: avoids a
+    /// page-count allocation per epoch).
+    in_dram: Vec<f32>,
+    engine: Box<dyn HotnessEngine>,
+    /// Epochs run (for reports).
+    pub epochs: u64,
+}
+
+impl HotnessPolicy {
+    pub fn new(pages: u64, engine: Box<dyn HotnessEngine>) -> Self {
+        let pages = pages as usize;
+        HotnessPolicy {
+            pages,
+            reads: vec![0.0; pages],
+            writes: vec![0.0; pages],
+            hotness: vec![0.0; pages],
+            in_dram: vec![0.0; pages],
+            engine,
+            epochs: 0,
+        }
+    }
+
+    pub fn engine_label(&self) -> &'static str {
+        self.engine.label()
+    }
+
+    /// Select up to `k` (nvm_page, dram_page) swap pairs from the step
+    /// output, ranked by promote score desc / demote score desc with
+    /// index ascending as the tie-break (matches `jnp.argsort` stability
+    /// in the L2 model).
+    ///
+    /// §Perf: single pass with two bounded min-heaps (O(P log k)) instead
+    /// of materializing + sorting every candidate (O(P log P)) — the
+    /// epoch step used to dominate the hotness-policy hot path.
+    pub fn select_migrations(
+        out: &PolicyStepOutput,
+        k: usize,
+        hysteresis: f32,
+        skip: &dyn Fn(u64) -> bool,
+    ) -> Vec<(u64, u64)> {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        /// (score, idx) ordered by score asc then idx desc, so the heap
+        /// minimum is the *worst* retained candidate and ties keep the
+        /// smaller index (drop larger-index equals first).
+        #[derive(PartialEq)]
+        struct Cand(f32, u32);
+        impl Eq for Cand {}
+        impl PartialOrd for Cand {
+            fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(other))
+            }
+        }
+        impl Ord for Cand {
+            fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+                self.0
+                    .total_cmp(&other.0)
+                    .then(other.1.cmp(&self.1))
+            }
+        }
+
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut promote: BinaryHeap<Reverse<Cand>> = BinaryHeap::with_capacity(k + 1);
+        let mut demote: BinaryHeap<Reverse<Cand>> = BinaryHeap::with_capacity(k + 1);
+        for i in 0..out.promote_score.len() as u32 {
+            let ps = out.promote_score[i as usize];
+            if ps > 0.0 {
+                let better = promote.len() < k
+                    || promote.peek().map(|Reverse(c)| Cand(ps, i) > *c).unwrap();
+                if better && !skip(i as u64) {
+                    promote.push(Reverse(Cand(ps, i)));
+                    if promote.len() > k {
+                        promote.pop();
+                    }
+                }
+            }
+            let ds = out.demote_score[i as usize];
+            if ds > NEG_INF / 2.0 {
+                let better = demote.len() < k
+                    || demote.peek().map(|Reverse(c)| Cand(ds, i) > *c).unwrap();
+                if better && !skip(i as u64) {
+                    demote.push(Reverse(Cand(ds, i)));
+                    if demote.len() > k {
+                        demote.pop();
+                    }
+                }
+            }
+        }
+        // `into_sorted_vec` sorts ascending in `Reverse<Cand>`, i.e.
+        // descending in `Cand`: best candidates first.
+        let promote: Vec<u32> = promote.into_sorted_vec().into_iter().map(|Reverse(c)| c.1).collect();
+        let demote: Vec<u32> = demote.into_sorted_vec().into_iter().map(|Reverse(c)| c.1).collect();
+
+        let mut pairs = Vec::new();
+        for (p, d) in promote.iter().zip(demote.iter()).take(k) {
+            let hot_p = out.hotness[*p as usize];
+            let hot_d = out.hotness[*d as usize];
+            // Hysteresis: only swap if the NVM page is decisively hotter.
+            if hot_p > hot_d * hysteresis + 1.0 {
+                pairs.push((*p as u64, *d as u64));
+            } else {
+                break; // candidates are sorted; later pairs are worse
+            }
+        }
+        pairs
+    }
+}
+
+impl PlacementPolicy for HotnessPolicy {
+    fn name(&self) -> &'static str {
+        "hotness"
+    }
+
+    fn place(&mut self, _page: u64, hint: Placement) -> Device {
+        match hint {
+            Placement::PreferNvm => Device::Nvm,
+            _ => Device::Dram, // first-touch DRAM; migration fixes mistakes
+        }
+    }
+
+    fn record_access(&mut self, page: u64, is_write: bool) {
+        let i = page as usize;
+        debug_assert!(i < self.pages);
+        if is_write {
+            self.writes[i] += 1.0;
+        } else {
+            self.reads[i] += 1.0;
+        }
+    }
+
+    fn epoch(&mut self, view: &PolicyView) -> Vec<(u64, u64)> {
+        self.epochs += 1;
+        // Residency bitmap from the table (scratch buffer reused).
+        self.in_dram.iter_mut().for_each(|x| *x = 0.0);
+        for (page, m) in view.table.iter_mapped() {
+            if m.device == Device::Dram {
+                self.in_dram[page as usize] = 1.0;
+            }
+        }
+        let out = self
+            .engine
+            .step(&self.reads, &self.writes, &self.hotness, &self.in_dram);
+        // Reset epoch counters.
+        self.reads.iter_mut().for_each(|x| *x = 0.0);
+        self.writes.iter_mut().for_each(|x| *x = 0.0);
+
+        let pairs = Self::select_migrations(
+            &out,
+            view.max_migrations as usize,
+            HYSTERESIS,
+            view.migrating,
+        );
+        self.hotness = out.hotness; // move, not clone (§Perf)
+        pairs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmmu::redirection::RedirectionTable;
+
+    fn policy(pages: u64) -> HotnessPolicy {
+        HotnessPolicy::new(pages, Box::new(NativeHotnessEngine))
+    }
+
+    fn view(t: &RedirectionTable) -> PolicyView<'_> {
+        PolicyView {
+            table: t,
+            migrating: &|_| false,
+            max_migrations: 8,
+        }
+    }
+
+    #[test]
+    fn native_engine_math() {
+        let mut e = NativeHotnessEngine;
+        let out = e.step(&[3.0, 0.0], &[1.0, 0.0], &[4.0, 8.0], &[0.0, 1.0]);
+        // page0: 0.5*4 + 3 + 2*1 = 7, in NVM -> promote 7
+        assert_eq!(out.hotness, vec![7.0, 4.0]);
+        assert_eq!(out.promote_score[0], 7.0);
+        assert_eq!(out.demote_score[0], NEG_INF);
+        // page1: 0.5*8 = 4, in DRAM -> demote -4
+        assert_eq!(out.promote_score[1], NEG_INF);
+        assert_eq!(out.demote_score[1], -4.0);
+    }
+
+    #[test]
+    fn hot_nvm_page_promoted_over_cold_dram_page() {
+        let mut t = RedirectionTable::new(8, 4, 8, 4096);
+        t.identity_map(); // pages 0-3 DRAM, 4-7 NVM
+        let mut p = policy(8);
+        // Page 5 (NVM) is hot; page 2 (DRAM) is cold (untouched).
+        for _ in 0..100 {
+            p.record_access(5, false);
+        }
+        // Give other DRAM pages some heat so page 2 is the victim.
+        for d in [0u64, 1, 3] {
+            for _ in 0..50 {
+                p.record_access(d, false);
+            }
+        }
+        let pairs = p.epoch(&view(&t));
+        assert_eq!(pairs, vec![(5, 2)]);
+    }
+
+    #[test]
+    fn hysteresis_blocks_marginal_swaps() {
+        let mut t = RedirectionTable::new(4, 2, 4, 4096);
+        t.identity_map();
+        let mut p = policy(4);
+        // NVM page 2 barely warmer than DRAM page 0.
+        for _ in 0..10 {
+            p.record_access(2, false);
+        }
+        for _ in 0..9 {
+            p.record_access(0, false);
+        }
+        for _ in 0..20 {
+            p.record_access(1, false);
+        }
+        let pairs = p.epoch(&view(&t));
+        assert!(pairs.is_empty(), "10 vs 9 is within hysteresis: {pairs:?}");
+    }
+
+    #[test]
+    fn counters_reset_and_decay() {
+        let mut t = RedirectionTable::new(4, 2, 4, 4096);
+        t.identity_map();
+        let mut p = policy(4);
+        for _ in 0..64 {
+            p.record_access(3, false);
+        }
+        p.epoch(&view(&t));
+        assert_eq!(p.hotness[3], 64.0);
+        // Next epoch without accesses: decays.
+        p.epoch(&view(&t));
+        assert_eq!(p.hotness[3], 32.0);
+    }
+
+    #[test]
+    fn migrating_pages_skipped() {
+        let mut t = RedirectionTable::new(8, 4, 8, 4096);
+        t.identity_map();
+        let mut p = policy(8);
+        for _ in 0..100 {
+            p.record_access(5, false);
+        }
+        let busy = |page: u64| page == 5;
+        let v = PolicyView {
+            table: &t,
+            migrating: &busy,
+            max_migrations: 8,
+        };
+        let pairs = p.epoch(&v);
+        assert!(pairs.iter().all(|&(a, b)| a != 5 && b != 5));
+    }
+
+    #[test]
+    fn writes_weighted_heavier() {
+        let mut e = NativeHotnessEngine;
+        let out = e.step(&[10.0, 0.0], &[0.0, 6.0], &[0.0, 0.0], &[0.0, 0.0]);
+        // 6 writes (×2) > 10 reads? No: 12 > 10 — write-hot page wins.
+        assert!(out.promote_score[1] > out.promote_score[0]);
+    }
+
+    #[test]
+    fn respects_migration_cap() {
+        let mut t = RedirectionTable::new(64, 32, 32, 4096);
+        t.identity_map();
+        let mut p = policy(64);
+        for page in 32..64 {
+            for _ in 0..100 {
+                p.record_access(page, false);
+            }
+        }
+        let v = PolicyView {
+            table: &t,
+            migrating: &|_| false,
+            max_migrations: 4,
+        };
+        assert_eq!(p.epoch(&v).len(), 4);
+    }
+}

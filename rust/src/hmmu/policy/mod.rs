@@ -1,0 +1,91 @@
+//! Data placement / migration policies — the axis the paper's platform
+//! exists to explore ("users can implement their data placement/migration
+//! policies with the FPGA logic elements").
+//!
+//! A policy decides (1) where a first-touch page lands and (2) which page
+//! pairs to swap at each epoch boundary. Request routing, DMA mechanics,
+//! consistency and counters are the HMMU's job, not the policy's.
+
+mod first_touch;
+mod hints_policy;
+mod hotness;
+mod static_split;
+mod wear_aware;
+
+pub use first_touch::FirstTouchPolicy;
+pub use hints_policy::HintsPolicy;
+pub use hotness::{
+    HotnessEngine, HotnessPolicy, NativeHotnessEngine, PolicyStepOutput, HOTNESS_DECAY,
+    NEG_INF, WRITE_WEIGHT,
+};
+pub use static_split::StaticPolicy;
+pub use wear_aware::{WearAwarePolicy, WEAR_BIAS};
+
+use super::redirection::{Device, RedirectionTable};
+use crate::alloc::Placement;
+use crate::config::{PolicyKind, SystemConfig};
+
+/// Read-only state a policy may consult at an epoch boundary.
+pub struct PolicyView<'a> {
+    pub table: &'a RedirectionTable,
+    /// Pages currently involved in in-flight DMA swaps (cannot re-migrate).
+    pub migrating: &'a dyn Fn(u64) -> bool,
+    /// Cap on migrations this epoch.
+    pub max_migrations: u32,
+}
+
+/// A placement/migration policy.
+pub trait PlacementPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Choose the device for a first-touch page.
+    fn place(&mut self, page: u64, hint: Placement) -> Device;
+
+    /// Account one (post-cache-filter) request to `page`.
+    fn record_access(&mut self, page: u64, is_write: bool);
+
+    /// Epoch boundary: return up to `view.max_migrations` page pairs
+    /// `(nvm_page, dram_page)` to swap (promote the first, demote the
+    /// second).
+    fn epoch(&mut self, view: &PolicyView) -> Vec<(u64, u64)>;
+}
+
+/// Build the configured policy. `engine` supplies the hotness math
+/// (native or AOT-XLA); ignored by the stateless policies.
+pub fn build_policy(
+    cfg: &SystemConfig,
+    engine: Option<Box<dyn HotnessEngine>>,
+) -> Box<dyn PlacementPolicy> {
+    let pages = cfg.total_pages();
+    match cfg.policy {
+        PolicyKind::Static => Box::new(StaticPolicy::new(cfg.dram_pages())),
+        PolicyKind::FirstTouch => Box::new(FirstTouchPolicy::new()),
+        PolicyKind::Hints => Box::new(HintsPolicy::new()),
+        PolicyKind::Hotness => Box::new(HotnessPolicy::new(
+            pages,
+            engine.unwrap_or_else(|| Box::new(NativeHotnessEngine::default())),
+        )),
+        PolicyKind::WearAware => Box::new(WearAwarePolicy::new(pages)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_all_kinds() {
+        for kind in [
+            PolicyKind::Static,
+            PolicyKind::FirstTouch,
+            PolicyKind::Hotness,
+            PolicyKind::Hints,
+            PolicyKind::WearAware,
+        ] {
+            let mut cfg = SystemConfig::default_scaled(16);
+            cfg.policy = kind;
+            let p = build_policy(&cfg, None);
+            assert_eq!(p.name(), kind.name());
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Static address-split policy: host pages below the DRAM capacity live
+//! in DRAM, the rest in NVM; no migration ever. The trivial baseline —
+//! equivalent to the redirection table's identity mapping.
+
+use super::{Device, PlacementPolicy, PolicyView};
+use crate::alloc::Placement;
+
+pub struct StaticPolicy {
+    dram_pages: u64,
+}
+
+impl StaticPolicy {
+    pub fn new(dram_pages: u64) -> Self {
+        StaticPolicy { dram_pages }
+    }
+}
+
+impl PlacementPolicy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn place(&mut self, page: u64, _hint: Placement) -> Device {
+        if page < self.dram_pages {
+            Device::Dram
+        } else {
+            Device::Nvm
+        }
+    }
+
+    fn record_access(&mut self, _page: u64, _is_write: bool) {}
+
+    fn epoch(&mut self, _view: &PolicyView) -> Vec<(u64, u64)> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmmu::redirection::RedirectionTable;
+
+    #[test]
+    fn splits_at_capacity() {
+        let mut p = StaticPolicy::new(100);
+        assert_eq!(p.place(0, Placement::Any), Device::Dram);
+        assert_eq!(p.place(99, Placement::Any), Device::Dram);
+        assert_eq!(p.place(100, Placement::Any), Device::Nvm);
+        // Hints ignored by design.
+        assert_eq!(p.place(500, Placement::PreferDram), Device::Nvm);
+    }
+
+    #[test]
+    fn never_migrates() {
+        let mut p = StaticPolicy::new(10);
+        for page in 0..1000 {
+            p.record_access(page % 20, true);
+        }
+        let t = RedirectionTable::new(20, 10, 10, 4096);
+        let not_migrating = |_: u64| false;
+        let v = PolicyView {
+            table: &t,
+            migrating: &not_migrating,
+            max_migrations: 8,
+        };
+        assert!(p.epoch(&v).is_empty());
+    }
+}

@@ -1,0 +1,366 @@
+//! Address redirection table — the paper's §III-B "heterogeneity
+//! transparency" mechanism.
+//!
+//! The OS sees one flat physical space (the BAR window); the HMMU
+//! translates each host page to a *device frame* (DRAM or NVM). The
+//! mapping is the mutable core of every placement policy, and page
+//! migration is a frame swap in this table.
+
+use anyhow::{bail, Result};
+
+/// Which memory device backs a frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Device {
+    Dram,
+    Nvm,
+}
+
+impl Device {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Device::Dram => "DRAM",
+            Device::Nvm => "NVM",
+        }
+    }
+}
+
+/// Packed table entry: device bit + frame index (u32 capped: 16 TiB of 4K
+/// pages is far beyond the platform).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mapping {
+    pub device: Device,
+    pub frame: u32,
+}
+
+const UNMAPPED: u32 = u32::MAX;
+
+/// Host-page → device-frame redirection table with frame free lists.
+#[derive(Clone, Debug)]
+pub struct RedirectionTable {
+    page_bytes: u64,
+    /// Packed entries: high bit = device (1 = NVM), low 31 bits = frame;
+    /// `UNMAPPED` = not yet placed.
+    entries: Vec<u32>,
+    free_dram: Vec<u32>,
+    free_nvm: Vec<u32>,
+    dram_frames: u32,
+    nvm_frames: u32,
+}
+
+impl RedirectionTable {
+    /// `host_pages` = size of the flat space; frames per device from the
+    /// device capacities. Pages start **unmapped** (policies place them on
+    /// first touch) unless [`Self::identity_map`] is called.
+    pub fn new(host_pages: u64, dram_frames: u32, nvm_frames: u32, page_bytes: u64) -> Self {
+        assert!(host_pages <= (dram_frames as u64 + nvm_frames as u64));
+        // Free lists popped from the back → allocate low frames first.
+        let free_dram: Vec<u32> = (0..dram_frames).rev().collect();
+        let free_nvm: Vec<u32> = (0..nvm_frames).rev().collect();
+        RedirectionTable {
+            page_bytes,
+            entries: vec![UNMAPPED; host_pages as usize],
+            free_dram,
+            free_nvm,
+            dram_frames,
+            nvm_frames,
+        }
+    }
+
+    #[inline]
+    fn pack(m: Mapping) -> u32 {
+        debug_assert!(m.frame < (1 << 31));
+        match m.device {
+            Device::Dram => m.frame,
+            Device::Nvm => m.frame | 0x8000_0000,
+        }
+    }
+
+    #[inline]
+    fn unpack(e: u32) -> Mapping {
+        if e & 0x8000_0000 != 0 {
+            Mapping {
+                device: Device::Nvm,
+                frame: e & 0x7FFF_FFFF,
+            }
+        } else {
+            Mapping {
+                device: Device::Dram,
+                frame: e,
+            }
+        }
+    }
+
+    pub fn host_pages(&self) -> u64 {
+        self.entries.len() as u64
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    /// Identity mapping: host pages below the DRAM capacity map to DRAM
+    /// frames 1:1, the rest to NVM frames (the paper's "straightforward
+    /// approach" / the static policy's starting point).
+    pub fn identity_map(&mut self) {
+        for page in 0..self.entries.len() as u64 {
+            let m = if page < self.dram_frames as u64 {
+                Mapping {
+                    device: Device::Dram,
+                    frame: page as u32,
+                }
+            } else {
+                Mapping {
+                    device: Device::Nvm,
+                    frame: (page - self.dram_frames as u64) as u32,
+                }
+            };
+            self.entries[page as usize] = Self::pack(m);
+        }
+        self.free_dram.clear();
+        self.free_nvm.clear();
+        // Leftover NVM frames stay free.
+        let used_nvm = self.entries.len() as u64 - self.dram_frames as u64;
+        self.free_nvm = ((used_nvm as u32)..self.nvm_frames).rev().collect();
+    }
+
+    /// Look up a host page; `None` if unmapped.
+    #[inline]
+    pub fn lookup(&self, page: u64) -> Option<Mapping> {
+        let e = self.entries[page as usize];
+        if e == UNMAPPED {
+            None
+        } else {
+            Some(Self::unpack(e))
+        }
+    }
+
+    /// Translate a host address to (device, device address).
+    #[inline]
+    pub fn translate(&self, addr: u64) -> Option<(Device, u64)> {
+        let page = addr / self.page_bytes;
+        let off = addr % self.page_bytes;
+        self.lookup(page)
+            .map(|m| (m.device, m.frame as u64 * self.page_bytes + off))
+    }
+
+    /// Place an unmapped page on `device`; falls back to the other device
+    /// when full. Returns the final mapping.
+    pub fn place(&mut self, page: u64, device: Device) -> Result<Mapping> {
+        if self.entries[page as usize] != UNMAPPED {
+            bail!("page {page} already mapped");
+        }
+        let m = match device {
+            Device::Dram => {
+                if let Some(f) = self.free_dram.pop() {
+                    Mapping {
+                        device: Device::Dram,
+                        frame: f,
+                    }
+                } else if let Some(f) = self.free_nvm.pop() {
+                    Mapping {
+                        device: Device::Nvm,
+                        frame: f,
+                    }
+                } else {
+                    bail!("no free frames");
+                }
+            }
+            Device::Nvm => {
+                if let Some(f) = self.free_nvm.pop() {
+                    Mapping {
+                        device: Device::Nvm,
+                        frame: f,
+                    }
+                } else if let Some(f) = self.free_dram.pop() {
+                    Mapping {
+                        device: Device::Dram,
+                        frame: f,
+                    }
+                } else {
+                    bail!("no free frames");
+                }
+            }
+        };
+        self.entries[page as usize] = Self::pack(m);
+        Ok(m)
+    }
+
+    /// Swap the frames of two host pages (post-DMA commit of a migration).
+    pub fn swap(&mut self, page_a: u64, page_b: u64) -> Result<()> {
+        let (a, b) = (self.entries[page_a as usize], self.entries[page_b as usize]);
+        if a == UNMAPPED || b == UNMAPPED {
+            bail!("swap of unmapped page");
+        }
+        self.entries[page_a as usize] = b;
+        self.entries[page_b as usize] = a;
+        Ok(())
+    }
+
+    pub fn free_dram_frames(&self) -> usize {
+        self.free_dram.len()
+    }
+
+    pub fn free_nvm_frames(&self) -> usize {
+        self.free_nvm.len()
+    }
+
+    /// Count of mapped pages currently backed by DRAM.
+    pub fn dram_resident_pages(&self) -> u64 {
+        self.entries
+            .iter()
+            .filter(|&&e| e != UNMAPPED && e & 0x8000_0000 == 0)
+            .count() as u64
+    }
+
+    /// Iterate mapped (page, mapping) pairs.
+    pub fn iter_mapped(&self) -> impl Iterator<Item = (u64, Mapping)> + '_ {
+        self.entries.iter().enumerate().filter_map(|(p, &e)| {
+            if e == UNMAPPED {
+                None
+            } else {
+                Some((p as u64, Self::unpack(e)))
+            }
+        })
+    }
+
+    /// Invariant check (used by property tests): every mapped frame is
+    /// unique per device and no mapped frame is also on a free list.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut dram_seen = vec![false; self.dram_frames as usize];
+        let mut nvm_seen = vec![false; self.nvm_frames as usize];
+        for &e in &self.entries {
+            if e == UNMAPPED {
+                continue;
+            }
+            let m = Self::unpack(e);
+            let seen = match m.device {
+                Device::Dram => &mut dram_seen[m.frame as usize],
+                Device::Nvm => &mut nvm_seen[m.frame as usize],
+            };
+            if *seen {
+                bail!("frame {:?}:{} double-mapped", m.device, m.frame);
+            }
+            *seen = true;
+        }
+        for &f in &self.free_dram {
+            if dram_seen[f as usize] {
+                bail!("DRAM frame {f} both mapped and free");
+            }
+        }
+        for &f in &self.free_nvm {
+            if nvm_seen[f as usize] {
+                bail!("NVM frame {f} both mapped and free");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> RedirectionTable {
+        // 8 host pages, 4 DRAM + 8 NVM frames, 4K pages.
+        RedirectionTable::new(8, 4, 8, 4096)
+    }
+
+    #[test]
+    fn starts_unmapped() {
+        let t = table();
+        assert_eq!(t.lookup(0), None);
+        assert_eq!(t.translate(100), None);
+    }
+
+    #[test]
+    fn identity_map_splits_by_capacity() {
+        let mut t = table();
+        t.identity_map();
+        assert_eq!(
+            t.lookup(0),
+            Some(Mapping {
+                device: Device::Dram,
+                frame: 0
+            })
+        );
+        assert_eq!(
+            t.lookup(4),
+            Some(Mapping {
+                device: Device::Nvm,
+                frame: 0
+            })
+        );
+        assert_eq!(t.free_nvm_frames(), 4); // 8 - 4 used
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn translate_preserves_offset() {
+        let mut t = table();
+        t.identity_map();
+        let (dev, da) = t.translate(5 * 4096 + 123).unwrap();
+        assert_eq!(dev, Device::Nvm);
+        assert_eq!(da, 4096 + 123); // nvm frame 1, offset 123
+    }
+
+    #[test]
+    fn place_prefers_then_falls_back() {
+        let mut t = table();
+        for p in 0..4 {
+            let m = t.place(p, Device::Dram).unwrap();
+            assert_eq!(m.device, Device::Dram);
+        }
+        // DRAM exhausted → falls over to NVM.
+        let m = t.place(4, Device::Dram).unwrap();
+        assert_eq!(m.device, Device::Nvm);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_place_rejected() {
+        let mut t = table();
+        t.place(0, Device::Dram).unwrap();
+        assert!(t.place(0, Device::Dram).is_err());
+    }
+
+    #[test]
+    fn swap_moves_frames() {
+        let mut t = table();
+        t.identity_map();
+        let before_a = t.lookup(0).unwrap();
+        let before_b = t.lookup(7).unwrap();
+        t.swap(0, 7).unwrap();
+        assert_eq!(t.lookup(0), Some(before_b));
+        assert_eq!(t.lookup(7), Some(before_a));
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_unmapped_fails() {
+        let mut t = table();
+        t.place(0, Device::Dram).unwrap();
+        assert!(t.swap(0, 1).is_err());
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let mut t = RedirectionTable::new(3, 1, 2, 4096);
+        t.place(0, Device::Dram).unwrap();
+        t.place(1, Device::Dram).unwrap();
+        t.place(2, Device::Dram).unwrap();
+        let mut t2 = RedirectionTable::new(2, 1, 1, 4096);
+        t2.place(0, Device::Nvm).unwrap();
+        t2.place(1, Device::Nvm).unwrap();
+        // Everything mapped; placing again impossible (all pages mapped).
+        assert_eq!(t2.free_dram_frames() + t2.free_nvm_frames(), 0);
+    }
+
+    #[test]
+    fn dram_resident_count() {
+        let mut t = table();
+        t.identity_map();
+        assert_eq!(t.dram_resident_pages(), 4);
+        t.swap(0, 7).unwrap();
+        assert_eq!(t.dram_resident_pages(), 4); // swap conserves
+    }
+}

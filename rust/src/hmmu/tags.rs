@@ -1,0 +1,225 @@
+//! Tag-matching memory-consistency mechanism (paper §III-C, Fig 3).
+//!
+//! Requests split across the DRAM and NVM channels can complete out of
+//! order (a later DRAM read returns before an earlier NVM read). The OS
+//! sees one memory, so completions must return **in request order**. The
+//! paper stores each request's header in the HDR FIFO and uses it as the
+//! tag: media access proceeds out of order, but responses drain through
+//! the FIFO head.
+//!
+//! The model: `issue()` allocates a FIFO slot (stalling when the FIFO is
+//! full — backpressure), `complete()` records the media completion time,
+//! and the release time of each response is
+//! `max(own completion, previous release)` — i.e. in-order drain.
+
+use crate::sim::Time;
+use std::collections::VecDeque;
+
+/// One in-flight request tracked by the HDR FIFO.
+#[derive(Clone, Copy, Debug)]
+struct HdrEntry {
+    tag: u16,
+    /// Media completion time (None until `complete`).
+    done: Option<Time>,
+}
+
+/// The HDR-FIFO tag matcher.
+#[derive(Clone, Debug)]
+pub struct TagMatcher {
+    fifo: VecDeque<HdrEntry>,
+    depth: usize,
+    next_tag: u16,
+    /// Release time of the most recently drained response.
+    last_release: Time,
+    /// Total responses drained.
+    pub completed: u64,
+    /// Extra ns responses spent waiting for FIFO-order drain (the cost of
+    /// consistency vs raw out-of-order return).
+    pub reorder_wait_ns: u64,
+    /// Issue stalls due to a full FIFO.
+    pub fifo_full_stalls: u64,
+}
+
+impl TagMatcher {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth > 0);
+        TagMatcher {
+            fifo: VecDeque::with_capacity(depth),
+            depth,
+            next_tag: 0,
+            last_release: 0,
+            completed: 0,
+            reorder_wait_ns: 0,
+            fifo_full_stalls: 0,
+        }
+    }
+
+    /// True if a new request can issue (FIFO has a slot).
+    pub fn can_issue(&self) -> bool {
+        self.fifo.len() < self.depth
+    }
+
+    /// Allocate a tag for a new request. Returns the tag. Caller must
+    /// check [`Self::can_issue`]; issuing into a full FIFO is a model bug.
+    pub fn issue(&mut self) -> u16 {
+        assert!(self.can_issue(), "HDR FIFO overflow");
+        let tag = self.next_tag;
+        self.next_tag = self.next_tag.wrapping_add(1);
+        self.fifo.push_back(HdrEntry { tag, done: None });
+        tag
+    }
+
+    /// If the FIFO is full, the time until a slot frees given that the
+    /// head's media access completes at `head_done_hint`. Used by the
+    /// pipeline to compute backpressure stalls.
+    pub fn note_full_stall(&mut self) {
+        self.fifo_full_stalls += 1;
+    }
+
+    /// Record the media completion of `tag` at `done`; returns the
+    /// response release times of every entry that can now drain (in
+    /// order). The caller forwards them to TX.
+    pub fn complete(&mut self, tag: u16, done: Time) -> Vec<(u16, Time)> {
+        // Find and stamp the entry (it is somewhere in the FIFO).
+        let Some(e) = self.fifo.iter_mut().find(|e| e.tag == tag) else {
+            panic!("completion for unknown tag {tag}");
+        };
+        debug_assert!(e.done.is_none(), "double completion for tag {tag}");
+        e.done = Some(done);
+
+        // Drain from the head while completed.
+        let mut released = Vec::new();
+        while let Some(head) = self.fifo.front() {
+            let Some(head_done) = head.done else { break };
+            let release = head_done.max(self.last_release);
+            self.reorder_wait_ns += release - head_done;
+            self.last_release = release;
+            self.completed += 1;
+            released.push((head.tag, release));
+            self.fifo.pop_front();
+        }
+        released
+    }
+
+    /// Allocation-free fast path for the synchronous pipeline (§Perf):
+    /// when `tag` is the FIFO head and nothing else is pending, complete
+    /// and drain it in one step, returning its release time. Falls back
+    /// to the general path otherwise.
+    #[inline]
+    pub fn complete_inline(&mut self, tag: u16, done: Time) -> Time {
+        if self.fifo.len() == 1 && self.fifo.front().map(|e| e.tag) == Some(tag) {
+            self.fifo.pop_front();
+            let release = done.max(self.last_release);
+            self.reorder_wait_ns += release - done;
+            self.last_release = release;
+            self.completed += 1;
+            release
+        } else {
+            let released = self.complete(tag, done);
+            released
+                .iter()
+                .find(|(t, _)| *t == tag)
+                .map(|(_, r)| *r)
+                .unwrap_or_else(|| released.last().map(|(_, r)| *r).unwrap_or(done))
+        }
+    }
+
+    /// Outstanding (issued, not yet drained) requests.
+    pub fn outstanding(&self) -> usize {
+        self.fifo.len()
+    }
+
+    /// Release time of the head if it completed now (for stall estimates).
+    pub fn last_release(&self) -> Time {
+        self.last_release
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_order_completions_drain_immediately() {
+        let mut tm = TagMatcher::new(8);
+        let t0 = tm.issue();
+        let t1 = tm.issue();
+        let r0 = tm.complete(t0, 100);
+        assert_eq!(r0, vec![(t0, 100)]);
+        let r1 = tm.complete(t1, 200);
+        assert_eq!(r1, vec![(t1, 200)]);
+        assert_eq!(tm.reorder_wait_ns, 0);
+    }
+
+    #[test]
+    fn fig3_out_of_order_is_held() {
+        // Fig 3 scenario: req0 -> NVM (slow), req1 -> DRAM (fast).
+        let mut tm = TagMatcher::new(8);
+        let t0 = tm.issue(); // NVM
+        let t1 = tm.issue(); // DRAM
+        // DRAM completes first: nothing drains (head t0 incomplete).
+        assert_eq!(tm.complete(t1, 50), vec![]);
+        // NVM completes: both drain, t1 held until after t0's release.
+        let r = tm.complete(t0, 300);
+        assert_eq!(r, vec![(t0, 300), (t1, 300)]);
+        assert_eq!(tm.reorder_wait_ns, 250); // t1 waited 300-50
+        assert_eq!(tm.completed, 2);
+    }
+
+    #[test]
+    fn release_times_monotone() {
+        let mut tm = TagMatcher::new(16);
+        let tags: Vec<u16> = (0..10).map(|_| tm.issue()).collect();
+        // Complete in reverse order with decreasing times.
+        let mut all = Vec::new();
+        for (i, &tag) in tags.iter().enumerate().rev() {
+            all.extend(tm.complete(tag, 1000 - i as u64 * 50));
+        }
+        // Everything drains at the end, in tag order, non-decreasing time.
+        assert_eq!(all.len(), 10);
+        for w in all.windows(2) {
+            assert!(w[0].1 <= w[1].1, "release times must be monotone");
+            assert!(w[0].0 < w[1].0, "tags must drain in order");
+        }
+    }
+
+    #[test]
+    fn fifo_capacity_enforced() {
+        let mut tm = TagMatcher::new(2);
+        tm.issue();
+        tm.issue();
+        assert!(!tm.can_issue());
+        assert_eq!(tm.outstanding(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_panics() {
+        let mut tm = TagMatcher::new(1);
+        tm.issue();
+        tm.issue();
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_tag_panics() {
+        let mut tm = TagMatcher::new(2);
+        tm.complete(99, 10);
+    }
+
+    #[test]
+    fn tag_wraparound() {
+        let mut tm = TagMatcher::new(4);
+        tm.next_tag = u16::MAX - 1;
+        let a = tm.issue();
+        let b = tm.issue();
+        assert_eq!(a, u16::MAX - 1);
+        assert_eq!(b, u16::MAX);
+        let c = tm.issue();
+        assert_eq!(c, 0);
+        tm.complete(a, 10);
+        tm.complete(b, 20);
+        let r = tm.complete(c, 30);
+        assert_eq!(r, vec![(0, 30)]);
+    }
+}

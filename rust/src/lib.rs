@@ -1,0 +1,60 @@
+//! # hymem — Hybrid Memory Emulation Platform
+//!
+//! A full-stack reproduction of *"FPGA-based Hybrid Memory Emulation
+//! System"* (Wen, Qin, Gratz, Reddy — FPL 2021) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The paper builds an FPGA platform in which a **Hybrid Memory Management
+//! Unit (HMMU)** sits between a real ARM host and two DRAM DIMMs (one
+//! emulating NVM via injected stall cycles), attached over PCIe. This crate
+//! rebuilds every hardware component as a calibrated model so the same
+//! experiments run on a plain CPU:
+//!
+//! - [`sim`] — discrete-event simulation engine with multiple clock domains.
+//! - [`cpu`] — ARM-A57-like core + L1/L2 cache hierarchy (the *host*).
+//! - [`pcie`] — Gen3 TLP-level link model (the *interconnect*).
+//! - [`hmmu`] — the paper's contribution: request pipeline, tag-matching
+//!   consistency, address redirection, DMA page-swap engine, pluggable
+//!   placement/migration policies, performance counters.
+//! - [`mem`] — DDR4 timing model + stall-scaled NVM emulation (§III-F).
+//! - [`workload`] — synthetic SPEC CPU 2017 workload generators (Table III).
+//! - [`alloc`] — driver/allocator middleware (Fig 4): genpool frame pool +
+//!   jemalloc-like arenas + placement hints.
+//! - [`baselines`] — gem5-like and ChampSim-like software simulators for
+//!   the Fig 7 comparison.
+//! - [`platform`] — composes everything into the emulation platform and the
+//!   native-execution reference.
+//! - [`runtime`] — loads the AOT-compiled XLA policy step (L2/L1 artifacts)
+//!   via PJRT and exposes it to the HMMU, with a bit-compatible native
+//!   fallback.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hymem::config::SystemConfig;
+//! use hymem::platform::Platform;
+//! use hymem::workload::spec;
+//!
+//! let cfg = SystemConfig::default_scaled(16); // Table II at 1/16 scale
+//! let wl = spec::by_name("505.mcf").unwrap();
+//! let report = Platform::new(cfg).run(&wl).unwrap();
+//! println!("{}", report.summary());
+//! ```
+
+pub mod alloc;
+pub mod baselines;
+pub mod config;
+pub mod cpu;
+pub mod hmmu;
+pub mod mem;
+pub mod pcie;
+pub mod platform;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

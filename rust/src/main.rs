@@ -1,0 +1,406 @@
+//! `hymem` — CLI for the hybrid memory emulation platform.
+//!
+//! Subcommands:
+//! - `run`            run one workload on the platform (+ native ref)
+//! - `sweep`          run all Table III workloads (Fig 7 + Fig 8 data)
+//! - `fig7`           full Fig 7 comparison incl. gem5-like/champsim-like
+//! - `fig8`           Fig 8 memory-request-bytes table
+//! - `table1`         Table I technology sweep
+//! - `calibrate`      §III-F stall-cycle calibration (uses the XLA
+//!                    latency-model artifact when present)
+//! - `config`         show the (scaled) Table II configuration
+//! - `list-workloads` show the Table III workload set
+
+use hymem::baselines::run_fig7_row;
+use hymem::config::{MemTech, PolicyKind, SystemConfig, TechPreset};
+use hymem::platform::{Platform, RunOpts};
+use hymem::runtime;
+use hymem::util::cli::Args;
+use hymem::util::stats::geomean;
+use hymem::util::units::fmt_bytes;
+use hymem::workload::{spec, WORKLOADS};
+
+fn main() {
+    let args = Args::parse();
+    let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
+    let code = match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "fig7" => cmd_fig7(&args),
+        "fig8" => cmd_fig8(&args),
+        "table1" => cmd_table1(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "config" => cmd_config(&args),
+        "list-workloads" => cmd_list(),
+        "trace-dump" => cmd_trace_dump(&args),
+        "multicore" => cmd_multicore(&args),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn config_from(args: &Args) -> SystemConfig {
+    let scale = args.get_u64("scale", 16);
+    let mut cfg = SystemConfig::default_scaled(scale);
+    if let Some(p) = args.get("policy").and_then(PolicyKind::parse) {
+        cfg.policy = p;
+    }
+    if let Some(t) = args.get("tech").and_then(MemTech::parse) {
+        cfg = cfg.with_tech(t);
+    }
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    if let Some(e) = args.get("epoch") {
+        cfg.hmmu.epoch_requests = e.parse().unwrap_or(cfg.hmmu.epoch_requests);
+    }
+    cfg
+}
+
+fn engine_for(args: &Args) -> (Option<Box<dyn hymem::hmmu::HotnessEngine>>, &'static str) {
+    if args.flag("native-engine") {
+        return (None, "native");
+    }
+    match runtime::XlaHotnessEngine::load_default() {
+        Ok(e) => (Some(Box::new(e)), "xla-aot"),
+        Err(_) => (None, "native (no artifacts)"),
+    }
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let name = args.get_or("workload", "505.mcf");
+    let Some(wl) = spec::by_name(name) else {
+        eprintln!("unknown workload {name:?}; try `hymem list-workloads`");
+        return 1;
+    };
+    let cfg = config_from(args);
+    let (engine, label) = engine_for(args);
+    let opts = RunOpts {
+        ops: args.get_u64("ops", 2_000_000),
+        flush_at_end: args.flag("flush"),
+    };
+    let mut platform = Platform::new(cfg);
+    if let Some(e) = engine {
+        platform = platform.with_engine(e);
+    }
+    println!("# engine: {label}");
+    match platform.run_opts(&wl, opts) {
+        Ok(r) => {
+            println!("{}", r.detail());
+            0
+        }
+        Err(e) => {
+            eprintln!("run failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let cfg = config_from(args);
+    let ops = args.get_u64("ops", 1_000_000);
+    println!(
+        "# sweep: policy={} scale=1/{} ops={ops}",
+        cfg.policy.name(),
+        cfg.scale
+    );
+    let mut slowdowns = Vec::new();
+    for wl in &WORKLOADS {
+        let (engine, _) = engine_for(args);
+        let mut p = Platform::new(cfg.clone());
+        if let Some(e) = engine {
+            p = p.with_engine(e);
+        }
+        match p.run_opts(
+            wl,
+            RunOpts {
+                ops,
+                flush_at_end: false,
+            },
+        ) {
+            Ok(r) => {
+                println!("{}", r.summary());
+                slowdowns.push(r.slowdown());
+            }
+            Err(e) => {
+                eprintln!("{}: failed: {e:#}", wl.name);
+                return 1;
+            }
+        }
+    }
+    println!("geomean slowdown: {:.2}x (paper: 3.17x)", geomean(&slowdowns));
+    0
+}
+
+fn cmd_fig7(args: &Args) -> i32 {
+    let cfg = config_from(args);
+    let ops = args.get_u64("ops", 500_000);
+    let binstr = args.get_u64("baseline-instructions", 300_000);
+    println!("# Fig 7: simulation time normalized against native execution");
+    println!(
+        "{:<16} {:>10} {:>14} {:>12}",
+        "workload", "ours", "champsim-like", "gem5-like"
+    );
+    let (mut ours, mut champ, mut gem5) = (Vec::new(), Vec::new(), Vec::new());
+    for wl in &WORKLOADS {
+        match run_fig7_row(&cfg, wl, ops, binstr) {
+            Ok(row) => {
+                println!(
+                    "{:<16} {:>9.2}x {:>13.0}x {:>11.0}x",
+                    row.workload, row.ours, row.champsim, row.gem5
+                );
+                ours.push(row.ours);
+                champ.push(row.champsim);
+                gem5.push(row.gem5);
+            }
+            Err(e) => {
+                eprintln!("{}: {e:#}", wl.name);
+                return 1;
+            }
+        }
+    }
+    let (go, gc, gg) = (geomean(&ours), geomean(&champ), geomean(&gem5));
+    println!(
+        "{:<16} {:>9.2}x {:>13.0}x {:>11.0}x   (paper: 3.17x / 7241x / 29398x)",
+        "geomean", go, gc, gg
+    );
+    println!(
+        "speedup vs gem5-like: {:.0}x (paper 9280x), vs champsim-like: {:.0}x (paper 2286x)",
+        gg / go,
+        gc / go
+    );
+    0
+}
+
+fn cmd_fig8(args: &Args) -> i32 {
+    let cfg = config_from(args);
+    let ops = args.get_u64("ops", 1_000_000);
+    println!(
+        "# Fig 8: memory requests (bytes) seen by the HMMU, scaled x{}",
+        cfg.scale
+    );
+    println!("# run lengths proportional to full-benchmark memory-op counts");
+    println!("{:<16} {:>12} {:>12}", "workload", "read", "write");
+    let mut rows: Vec<(String, u64, u64)> = Vec::new();
+    for (wl, wl_ops) in hymem::workload::proportional_ops(ops) {
+        let wl = &wl;
+        let p = Platform::new(cfg.clone());
+        match p.run_opts(
+            wl,
+            RunOpts {
+                ops: wl_ops,
+                // flush residual dirty lines so write-back volume is
+                // counted, as a full-benchmark run would see (Fig 8 has
+                // writes ~ reads).
+                flush_at_end: true,
+            },
+        ) {
+            Ok(r) => {
+                let (rb, wb) = r.fig8_scaled();
+                println!("{:<16} {:>12} {:>12}", wl.name, fmt_bytes(rb), fmt_bytes(wb));
+                rows.push((wl.name.to_string(), rb, wb));
+            }
+            Err(e) => {
+                eprintln!("{}: {e:#}", wl.name);
+                return 1;
+            }
+        }
+    }
+    rows.sort_by_key(|r| std::cmp::Reverse(r.1 + r.2));
+    println!(
+        "\nmax: {} (paper: 505.mcf)  min: {} (paper: 538.imagick)",
+        rows.first().map(|r| r.0.as_str()).unwrap_or("-"),
+        rows.last().map(|r| r.0.as_str()).unwrap_or("-")
+    );
+    0
+}
+
+fn cmd_table1(args: &Args) -> i32 {
+    let ops = args.get_u64("ops", 300_000);
+    let wl_name = args.get_or("workload", "505.mcf");
+    let Some(wl) = spec::by_name(wl_name) else {
+        eprintln!("unknown workload {wl_name}");
+        return 1;
+    };
+    println!("# Table I sweep: emulated NVM technology vs platform slowdown ({wl_name})");
+    println!(
+        "{:<12} {:>9} {:>9} {:>10} {:>10} {:>10}",
+        "tech", "rd(ns)", "wr(ns)", "rd-stall", "wr-stall", "slowdown"
+    );
+    for tech in MemTech::ALL {
+        let preset = TechPreset::of(tech);
+        let cfg = config_from(args).with_tech(tech);
+        let (rs, ws) = (cfg.nvm.read_stall_ns, cfg.nvm.write_stall_ns);
+        let r = Platform::new(cfg)
+            .run_opts(
+                &wl,
+                RunOpts {
+                    ops,
+                    flush_at_end: false,
+                },
+            )
+            .unwrap();
+        println!(
+            "{:<12} {:>9} {:>9} {:>10} {:>10} {:>9.2}x",
+            tech.name(),
+            preset.read_ns,
+            preset.write_ns,
+            rs,
+            ws,
+            r.slowdown()
+        );
+    }
+    0
+}
+
+fn cmd_calibrate(args: &Args) -> i32 {
+    use hymem::mem::{DramDevice, MemDevice};
+    let cfg = config_from(args);
+    // §III-F step 1: measure the DRAM round trip.
+    let mut dram = DramDevice::new(cfg.dram);
+    let (rt, _) = dram.access(0, hymem::mem::AccessKind::Read, 64, 0);
+    let fpga = hymem::sim::Clock::from_mhz(cfg.hmmu.fpga_freq_mhz);
+    println!("# §III-F calibration");
+    println!(
+        "measured DRAM round trip: {rt} ns = {} FPGA cycles",
+        fpga.ns_to_cycles(rt)
+    );
+    println!(
+        "{:<12} {:>16} {:>16}",
+        "tech", "rd-stall(cycles)", "wr-stall(cycles)"
+    );
+    for tech in MemTech::ALL {
+        let p = TechPreset::of(tech);
+        println!(
+            "{:<12} {:>16} {:>16}",
+            tech.name(),
+            fpga.ns_to_cycles(p.read_stall_ns(rt)),
+            fpga.ns_to_cycles(p.write_stall_ns(rt))
+        );
+    }
+    // Optional: exercise the XLA latency-model artifact.
+    match runtime::XlaLatencyModel::load(&runtime::default_artifact_dir(), 1024) {
+        Ok(mut m) => {
+            let nvm: Vec<f32> = (0..1024).map(|i| (i % 2) as f32).collect();
+            let wr: Vec<f32> = (0..1024).map(|i| ((i / 2) % 2) as f32).collect();
+            let qd = vec![0.0f32; 1024];
+            match m.estimate(&nvm, &wr, &qd) {
+                Ok(lat) => println!(
+                    "xla latency model: dram-rd {:.0}ns nvm-rd {:.0}ns dram-wr {:.0}ns nvm-wr {:.0}ns",
+                    lat[0], lat[1], lat[2], lat[3]
+                ),
+                Err(e) => eprintln!("latency model execution failed: {e:#}"),
+            }
+        }
+        Err(_) => println!("(no latency-model artifact; run `make artifacts` for the XLA path)"),
+    }
+    0
+}
+
+fn cmd_trace_dump(args: &Args) -> i32 {
+    use hymem::workload::{dump_trace, TraceGenerator};
+    let name = args.get_or("workload", "505.mcf");
+    let Some(wl) = spec::by_name(name) else {
+        eprintln!("unknown workload {name}");
+        return 1;
+    };
+    let cfg = config_from(args);
+    let ops = args.get_u64("ops", 1_000_000);
+    let out = args.get_or("out", "trace.hymt").to_string();
+    let gen = TraceGenerator::new(wl, cfg.scale, cfg.seed).take_ops(ops);
+    match dump_trace(std::path::Path::new(&out), gen) {
+        Ok(n) => {
+            println!("wrote {n} records to {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("trace dump failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_multicore(args: &Args) -> i32 {
+    use hymem::platform::run_multicore;
+    let cfg = config_from(args);
+    let ops = args.get_u64("ops", 200_000);
+    let names = args.get_or("workloads", "505.mcf,557.xz,538.imagick,525.x264");
+    let mut wls = Vec::new();
+    for n in names.split(',') {
+        match spec::by_name(n.trim()) {
+            Some(w) => wls.push(w),
+            None => {
+                eprintln!("unknown workload {n}");
+                return 1;
+            }
+        }
+    }
+    match run_multicore(
+        cfg,
+        &wls,
+        RunOpts {
+            ops,
+            flush_at_end: false,
+        },
+        None,
+    ) {
+        Ok(r) => {
+            print!("{}", r.summary());
+            0
+        }
+        Err(e) => {
+            eprintln!("multicore run failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_config(args: &Args) -> i32 {
+    let cfg = config_from(args);
+    println!("# Table II (scaled 1/{})", cfg.scale);
+    println!("{}", cfg.show());
+    0
+}
+
+fn cmd_list() -> i32 {
+    println!("# Table III workloads");
+    println!(
+        "{:<16} {:<42} {:>10} {:>6}",
+        "name", "description", "footprint", "type"
+    );
+    for w in &WORKLOADS {
+        println!(
+            "{:<16} {:<42} {:>10} {:>6}",
+            w.name,
+            w.desc,
+            fmt_bytes(w.footprint_bytes),
+            if w.is_float { "fp" } else { "int" }
+        );
+    }
+    0
+}
+
+fn print_help() {
+    println!(
+        "hymem {} — hybrid memory emulation platform (FPL'21 reproduction)
+
+USAGE: hymem <command> [--options]
+
+COMMANDS:
+  run             --workload <name> [--policy static|first-touch|hotness|hints|wear-aware]
+                  [--ops N] [--scale N] [--tech 3dxpoint|stt-ram|...] [--flush]
+                  [--native-engine]
+  sweep           all 12 workloads; prints Fig7-style summaries [--ops N]
+  fig7            full comparison vs gem5-like and champsim-like
+                  [--ops N] [--baseline-instructions N]
+  fig8            memory request bytes per workload [--ops N]
+  table1          NVM technology sweep [--workload <name>] [--ops N]
+  calibrate       print §III-F stall-cycle calibration table
+  config          show the scaled Table II configuration [--scale N]
+  list-workloads  show the Table III workload set
+  trace-dump      --workload <name> --ops N --out trace.hymt
+  multicore       --workloads a,b,c --ops N   (shared-HMMU rate run)",
+        hymem::version()
+    );
+}

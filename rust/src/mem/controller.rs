@@ -1,0 +1,137 @@
+//! Per-device memory controller.
+//!
+//! Models the queue between the HMMU control logic and a memory device:
+//! a bounded request queue (Table II-class controllers run 32-deep) with
+//! FR-FCFS-flavoured service — the device model itself provides the
+//! row-hit preference; the controller adds queueing delay when the device
+//! falls behind, plus a fixed command-path latency in controller cycles.
+
+use super::device::{AccessKind, MemDevice};
+use crate::sim::{Clock, Time};
+
+/// A memory controller wrapping a device.
+pub struct MemoryController<D: MemDevice> {
+    device: D,
+    clock: Clock,
+    /// Fixed command-decode latency in controller cycles.
+    cmd_cycles: u64,
+    queue_depth: u32,
+    /// Completion times of in-flight requests (bounded by queue_depth).
+    inflight: Vec<Time>,
+    /// Running total of queueing delay (ns) for the utilization report.
+    pub queue_wait_ns: u64,
+    /// Requests rejected-then-retried due to a full queue.
+    pub stalls: u64,
+}
+
+impl<D: MemDevice> MemoryController<D> {
+    pub fn new(device: D, clock: Clock, cmd_cycles: u64, queue_depth: u32) -> Self {
+        MemoryController {
+            device,
+            clock,
+            cmd_cycles,
+            queue_depth,
+            inflight: Vec::with_capacity(queue_depth as usize),
+            queue_wait_ns: 0,
+            stalls: 0,
+        }
+    }
+
+    /// Issue an access at `now`; returns its completion time, including
+    /// any stall waiting for a queue slot.
+    pub fn issue(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> Time {
+        // §Perf: retire completed entries lazily — only when the queue
+        // looks full (amortized O(1) per issue vs O(depth) retain).
+        let mut start = now;
+        if self.inflight.len() >= self.queue_depth as usize {
+            self.inflight.retain(|&t| t > now);
+        }
+        if self.inflight.len() >= self.queue_depth as usize {
+            // Genuinely full: wait until the earliest completion frees a
+            // slot.
+            let earliest = self.inflight.iter().copied().min().unwrap();
+            self.queue_wait_ns += earliest.saturating_sub(now);
+            self.stalls += 1;
+            start = earliest;
+            let e = earliest;
+            self.inflight.retain(|&t| t > e);
+        }
+
+        let cmd_ns = self.clock.cycles_to_ns(self.cmd_cycles);
+        let (done, _hit) = self.device.access(addr, kind, bytes, start + cmd_ns);
+        self.inflight.push(done);
+        done
+    }
+
+    pub fn device(&self) -> &D {
+        &self.device
+    }
+
+    pub fn device_mut(&mut self) -> &mut D {
+        &mut self.device
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.inflight.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::mem::DramDevice;
+
+    fn mc() -> MemoryController<DramDevice> {
+        let c = SystemConfig::paper();
+        MemoryController::new(
+            DramDevice::new(c.dram),
+            Clock::from_mhz(1200.0),
+            4,
+            c.dram.queue_depth,
+        )
+    }
+
+    #[test]
+    fn single_access_adds_cmd_latency() {
+        let mut m = mc();
+        let done = m.issue(0, AccessKind::Read, 64, 0);
+        // cmd: 4 cycles @1200MHz = ceil(4*833ps/1000) = 4ns; then 32ns device.
+        assert_eq!(done, 4 + 32);
+    }
+
+    #[test]
+    fn full_queue_stalls() {
+        let mut m = mc();
+        // Saturate: issue many requests at t=0 to the same bank.
+        let mut last = 0;
+        for i in 0..100u64 {
+            last = m.issue(i * 4096 * 16, AccessKind::Read, 64, 0);
+        }
+        assert!(m.stalls > 0, "expected queue stalls");
+        assert!(m.queue_wait_ns > 0);
+        assert!(last > 32);
+    }
+
+    #[test]
+    fn queue_drains_over_time() {
+        // Drains are lazy (§Perf): fill to capacity, then a far-future
+        // issue must clear the retired entries instead of stalling.
+        let mut m = mc();
+        for i in 0..32u64 {
+            m.issue(i * 64, AccessKind::Read, 64, 0);
+        }
+        assert_eq!(m.outstanding(), 32);
+        let before = m.stalls;
+        m.issue(0, AccessKind::Read, 64, 1_000_000);
+        assert_eq!(m.stalls, before, "no stall: retired entries drained");
+        assert_eq!(m.outstanding(), 1);
+    }
+
+    #[test]
+    fn device_stats_visible() {
+        let mut m = mc();
+        m.issue(0, AccessKind::Write, 64, 0);
+        assert_eq!(m.device().stats().writes, 1);
+    }
+}

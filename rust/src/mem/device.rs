@@ -1,0 +1,123 @@
+//! Common device interface and statistics.
+
+use crate::sim::Time;
+
+/// Read or write access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    Read,
+    Write,
+}
+
+impl AccessKind {
+    pub fn is_write(&self) -> bool {
+        matches!(self, AccessKind::Write)
+    }
+}
+
+/// Per-device counters — the paper's §II-B "performance counters for
+/// read/write transactions to each memory device respectively".
+#[derive(Clone, Debug, Default)]
+pub struct DeviceStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    /// Total busy time (ns) — used for utilization and dynamic power est.
+    pub busy_ns: u64,
+}
+
+impl DeviceStats {
+    pub fn record(&mut self, kind: AccessKind, bytes: u64, service_ns: u64, row_hit: bool) {
+        match kind {
+            AccessKind::Read => {
+                self.reads += 1;
+                self.read_bytes += bytes;
+            }
+            AccessKind::Write => {
+                self.writes += 1;
+                self.write_bytes += bytes;
+            }
+        }
+        if row_hit {
+            self.row_hits += 1;
+        } else {
+            self.row_misses += 1;
+        }
+        self.busy_ns += service_ns;
+    }
+
+    pub fn total_accesses(&self) -> u64 {
+        self.reads + self.writes
+    }
+
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+
+    /// Rough dynamic energy estimate in nanojoules: per-access activation
+    /// plus per-byte transfer cost. Constants are DDR4-class ballparks;
+    /// they only matter for *relative* comparisons (the paper uses its
+    /// counters the same way).
+    pub fn dynamic_energy_nj(&self, act_nj: f64, byte_nj: f64) -> f64 {
+        (self.row_misses as f64) * act_nj
+            + (self.read_bytes + self.write_bytes) as f64 * byte_nj
+    }
+}
+
+/// Interface the memory controller drives: one line-sized access at `now`,
+/// returning when the device will have completed it.
+pub trait MemDevice {
+    /// Issue an access; returns (completion_time, was_row_hit).
+    fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> (Time, bool);
+
+    /// Device capacity in bytes.
+    fn size_bytes(&self) -> u64;
+
+    /// Counter snapshot.
+    fn stats(&self) -> &DeviceStats;
+
+    /// Reset counters (not state).
+    fn reset_stats(&mut self);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = DeviceStats::default();
+        s.record(AccessKind::Read, 64, 30, true);
+        s.record(AccessKind::Write, 64, 45, false);
+        assert_eq!(s.reads, 1);
+        assert_eq!(s.writes, 1);
+        assert_eq!(s.read_bytes, 64);
+        assert_eq!(s.write_bytes, 64);
+        assert_eq!(s.total_accesses(), 2);
+        assert!((s.row_hit_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(s.busy_ns, 75);
+    }
+
+    #[test]
+    fn energy_monotone_in_traffic() {
+        let mut a = DeviceStats::default();
+        let mut b = DeviceStats::default();
+        a.record(AccessKind::Read, 64, 10, false);
+        b.record(AccessKind::Read, 64, 10, false);
+        b.record(AccessKind::Write, 64, 10, false);
+        assert!(b.dynamic_energy_nj(1.0, 0.01) > a.dynamic_energy_nj(1.0, 0.01));
+    }
+
+    #[test]
+    fn hit_rate_empty_is_zero() {
+        assert_eq!(DeviceStats::default().row_hit_rate(), 0.0);
+    }
+}

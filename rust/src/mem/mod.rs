@@ -1,0 +1,19 @@
+//! Memory-device substrate: DDR4 timing model, NVM emulation (DRAM +
+//! injected stall cycles, paper §III-F), and the per-device memory
+//! controller the HMMU drives.
+//!
+//! In the paper these are *real* DIMMs behind real controllers; here they
+//! are timing models with the same interface the HMMU sees: issue a
+//! line-sized read/write, get back a completion time.
+
+pub mod controller;
+pub mod device;
+pub mod dram;
+pub mod energy;
+pub mod nvm;
+
+pub use controller::MemoryController;
+pub use device::{AccessKind, DeviceStats, MemDevice};
+pub use dram::DramDevice;
+pub use energy::{estimate as estimate_energy, EnergyReport};
+pub use nvm::NvmDevice;

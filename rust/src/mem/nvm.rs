@@ -1,0 +1,160 @@
+//! NVM emulation — exactly the paper's §III-F method, one level down.
+//!
+//! The paper emulates 3D XPoint with a *real DRAM DIMM plus injected stall
+//! cycles*, scaled from the measured DRAM round trip by the Table I speed
+//! ratio. We do the same: the NVM device wraps the DDR4 timing model and
+//! adds configurable read/write stalls. It additionally tracks per-page
+//! write counts against the endurance budget (Table I), which the wear
+//! report surfaces.
+
+use super::device::{AccessKind, DeviceStats, MemDevice};
+use super::dram::DramDevice;
+use crate::config::{DramConfig, NvmConfig};
+use crate::sim::Time;
+use std::collections::HashMap;
+
+/// An emulated NVM device: DRAM timing + stall injection + wear tracking.
+#[derive(Clone, Debug)]
+pub struct NvmDevice {
+    inner: DramDevice,
+    cfg: NvmConfig,
+    page_bytes: u64,
+    /// Per-page write counts (sparse; only touched pages).
+    wear: HashMap<u64, u64>,
+    /// Max write count seen on any single page.
+    max_wear: u64,
+}
+
+impl NvmDevice {
+    pub fn new(cfg: NvmConfig, dram_timing: DramConfig, page_bytes: u64) -> Self {
+        let mut timing = dram_timing;
+        timing.size_bytes = cfg.size_bytes;
+        NvmDevice {
+            inner: DramDevice::new(timing),
+            cfg,
+            page_bytes,
+            wear: HashMap::new(),
+            max_wear: 0,
+        }
+    }
+
+    pub fn config(&self) -> &NvmConfig {
+        &self.cfg
+    }
+
+    /// Change the injected stalls at runtime (the Table I sweep uses this).
+    pub fn set_stalls(&mut self, read_ns: u64, write_ns: u64) {
+        self.cfg.read_stall_ns = read_ns;
+        self.cfg.write_stall_ns = write_ns;
+    }
+
+    /// Highest per-page write count observed.
+    pub fn max_wear(&self) -> u64 {
+        self.max_wear
+    }
+
+    /// Fraction of the endurance budget consumed by the hottest page.
+    pub fn wear_fraction(&self) -> f64 {
+        if self.cfg.endurance == 0 || self.cfg.endurance == u64::MAX {
+            return 0.0;
+        }
+        self.max_wear as f64 / self.cfg.endurance as f64
+    }
+
+    /// Number of distinct pages ever written.
+    pub fn pages_written(&self) -> usize {
+        self.wear.len()
+    }
+}
+
+impl MemDevice for NvmDevice {
+    fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> (Time, bool) {
+        let (done, hit) = self.inner.access(addr, kind, bytes, now);
+        let stall = match kind {
+            AccessKind::Read => self.cfg.read_stall_ns,
+            AccessKind::Write => self.cfg.write_stall_ns,
+        };
+        if kind.is_write() {
+            let w = self.wear.entry(addr / self.page_bytes).or_insert(0);
+            *w += 1;
+            if *w > self.max_wear {
+                self.max_wear = *w;
+            }
+        }
+        (done + stall, hit)
+    }
+
+    fn size_bytes(&self) -> u64 {
+        self.cfg.size_bytes
+    }
+
+    fn stats(&self) -> &DeviceStats {
+        self.inner.stats()
+    }
+
+    fn reset_stats(&mut self) {
+        self.inner.reset_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn dev() -> NvmDevice {
+        let c = SystemConfig::paper();
+        NvmDevice::new(c.nvm, c.dram, c.hmmu.page_bytes)
+    }
+
+    #[test]
+    fn read_slower_than_dram_by_stall() {
+        let c = SystemConfig::paper();
+        let mut dram = DramDevice::new(c.dram);
+        let mut nvm = dev();
+        let (t_dram, _) = dram.access(0, AccessKind::Read, 64, 0);
+        let (t_nvm, _) = nvm.access(0, AccessKind::Read, 64, 0);
+        assert_eq!(t_nvm - t_dram, c.nvm.read_stall_ns);
+    }
+
+    #[test]
+    fn write_stall_larger_than_read_stall() {
+        let mut nvm = dev();
+        let (t_r, _) = nvm.access(0, AccessKind::Read, 64, 0);
+        let mut nvm2 = dev();
+        let (t_w, _) = nvm2.access(0, AccessKind::Write, 64, 0);
+        assert!(t_w > t_r);
+    }
+
+    #[test]
+    fn wear_tracks_hottest_page() {
+        let mut nvm = dev();
+        let mut t = 0;
+        for _ in 0..10 {
+            let (done, _) = nvm.access(4096, AccessKind::Write, 64, t);
+            t = done;
+        }
+        nvm.access(8192, AccessKind::Write, 64, t);
+        assert_eq!(nvm.max_wear(), 10);
+        assert_eq!(nvm.pages_written(), 2);
+        assert!(nvm.wear_fraction() > 0.0);
+    }
+
+    #[test]
+    fn reads_do_not_wear() {
+        let mut nvm = dev();
+        nvm.access(0, AccessKind::Read, 64, 0);
+        assert_eq!(nvm.max_wear(), 0);
+    }
+
+    #[test]
+    fn set_stalls_applies() {
+        let mut nvm = dev();
+        nvm.set_stalls(0, 0);
+        let c = SystemConfig::paper();
+        let mut dram = DramDevice::new(c.dram);
+        let (t_n, _) = nvm.access(0, AccessKind::Read, 64, 0);
+        let (t_d, _) = dram.access(0, AccessKind::Read, 64, 0);
+        assert_eq!(t_n, t_d);
+    }
+}

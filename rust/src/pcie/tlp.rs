@@ -1,0 +1,109 @@
+//! PCIe Transaction Layer Packet types.
+//!
+//! The HMMU's RX module receives memory-request TLPs (MRd/MWr) and its TX
+//! module returns completions-with-data (CplD) — Fig 2's entry and exit
+//! points. The `tag` field is the consistency handle the paper's
+//! tag-matching mechanism keys on (§III-C).
+
+/// TLP kinds used by the platform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TlpKind {
+    /// Memory read request.
+    MRd,
+    /// Memory write request (posted).
+    MWr,
+    /// Completion with data (read response).
+    CplD,
+}
+
+/// A transaction-layer packet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tlp {
+    pub kind: TlpKind,
+    /// Host physical address (within the BAR window).
+    pub addr: u64,
+    /// Payload length in bytes (write data or completion data).
+    pub bytes: u32,
+    /// Transaction tag — matches completions to requests.
+    pub tag: u16,
+    /// Requester id (core index in our model).
+    pub requester: u16,
+}
+
+impl Tlp {
+    pub fn read(addr: u64, bytes: u32, tag: u16, requester: u16) -> Self {
+        Tlp {
+            kind: TlpKind::MRd,
+            addr,
+            bytes,
+            tag,
+            requester,
+        }
+    }
+
+    pub fn write(addr: u64, bytes: u32, tag: u16, requester: u16) -> Self {
+        Tlp {
+            kind: TlpKind::MWr,
+            addr,
+            bytes,
+            tag,
+            requester,
+        }
+    }
+
+    pub fn completion(&self) -> Self {
+        debug_assert_eq!(self.kind, TlpKind::MRd);
+        Tlp {
+            kind: TlpKind::CplD,
+            addr: self.addr,
+            bytes: self.bytes,
+            tag: self.tag,
+            requester: self.requester,
+        }
+    }
+
+    /// Payload carried on the wire (writes carry data out, reads carry
+    /// data back in the completion).
+    pub fn wire_payload(&self) -> u32 {
+        match self.kind {
+            TlpKind::MRd => 0,
+            TlpKind::MWr | TlpKind::CplD => self.bytes,
+        }
+    }
+
+    pub fn is_read(&self) -> bool {
+        self.kind == TlpKind::MRd
+    }
+
+    pub fn is_write(&self) -> bool {
+        self.kind == TlpKind::MWr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completion_preserves_tag() {
+        let r = Tlp::read(0x1000, 64, 42, 1);
+        let c = r.completion();
+        assert_eq!(c.kind, TlpKind::CplD);
+        assert_eq!(c.tag, 42);
+        assert_eq!(c.addr, 0x1000);
+    }
+
+    #[test]
+    fn wire_payload_by_kind() {
+        assert_eq!(Tlp::read(0, 64, 0, 0).wire_payload(), 0);
+        assert_eq!(Tlp::write(0, 64, 0, 0).wire_payload(), 64);
+        assert_eq!(Tlp::read(0, 64, 0, 0).completion().wire_payload(), 64);
+    }
+
+    #[test]
+    fn predicates() {
+        assert!(Tlp::read(0, 64, 0, 0).is_read());
+        assert!(Tlp::write(0, 64, 0, 0).is_write());
+        assert!(!Tlp::write(0, 64, 0, 0).is_read());
+    }
+}

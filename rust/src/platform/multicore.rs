@@ -1,0 +1,267 @@
+//! Multi-programmed multicore runs (the LS2085A has 8 A57 cores; the
+//! paper's platform serves them all through one PCIe link and one HMMU).
+//!
+//! Each core runs its own workload trace through a private L1/L2
+//! hierarchy (A57 clusters share L2 pairwise; we give each core a
+//! half-sized L2 slice, which bounds the same capacity), with all
+//! post-cache traffic contending for the shared link + HMMU + devices.
+//! Address spaces are striped per core so working sets do not overlap
+//! (rate-style SPEC runs).
+//!
+//! Cores are interleaved on the shared timeline in lockstep-by-time:
+//! the core with the smallest local clock steps next, so cross-core
+//! contention at the link and memory controllers is ordered correctly.
+
+use super::{HmmuBackend, RunOpts};
+use crate::config::SystemConfig;
+use crate::cpu::{CacheHierarchy, CoreModel, MemBackend};
+use crate::hmmu::HotnessEngine;
+use crate::mem::AccessKind;
+use crate::sim::Time;
+use crate::workload::{TraceGenerator, Workload};
+use anyhow::{bail, Result};
+
+/// Report for one core of a multicore run.
+#[derive(Clone, Debug)]
+pub struct CoreReport {
+    pub core: usize,
+    pub workload: String,
+    pub instructions: u64,
+    pub mem_ops: u64,
+    pub memory_accesses: u64,
+    pub time_ns: u64,
+}
+
+/// Aggregate multicore report.
+#[derive(Clone, Debug)]
+pub struct MulticoreReport {
+    pub cores: Vec<CoreReport>,
+    /// Makespan: time when the last core finished.
+    pub makespan_ns: u64,
+    /// Total post-cache requests served by the HMMU.
+    pub hmmu_requests: u64,
+    pub pcie_credit_stalls: u64,
+    pub fifo_full_stalls: u64,
+    /// Aggregate modeled MIPS across cores.
+    pub aggregate_mips: f64,
+}
+
+impl MulticoreReport {
+    pub fn summary(&self) -> String {
+        use crate::util::units::fmt_ns;
+        let mut s = format!(
+            "{} cores, makespan {}, {} HMMU requests, {:.1} aggregate MIPS\n",
+            self.cores.len(),
+            fmt_ns(self.makespan_ns),
+            self.hmmu_requests,
+            self.aggregate_mips,
+        );
+        for c in &self.cores {
+            s.push_str(&format!(
+                "  core{} {:<16} {:>10} instr  {:>8} memAcc  {}\n",
+                c.core,
+                c.workload,
+                c.instructions,
+                c.memory_accesses,
+                fmt_ns(c.time_ns)
+            ));
+        }
+        s
+    }
+}
+
+/// Offset added to each core's addresses so rate-style copies do not
+/// share pages (stripes the flat space per core).
+fn core_stripe(cfg: &SystemConfig, core: usize, n_cores: usize) -> u64 {
+    let stripe = cfg.total_mem_bytes() / n_cores as u64;
+    (stripe & !(cfg.hmmu.page_bytes - 1)) * core as u64
+}
+
+/// Run `workloads` (one per core) against a single shared HMMU.
+pub fn run_multicore(
+    cfg: SystemConfig,
+    workloads: &[Workload],
+    opts: RunOpts,
+    engine: Option<Box<dyn HotnessEngine>>,
+) -> Result<MulticoreReport> {
+    let n = workloads.len();
+    if n == 0 || n > cfg.cpu.cores as usize {
+        bail!(
+            "need 1..={} workloads for {} cores, got {n}",
+            cfg.cpu.cores,
+            cfg.cpu.cores
+        );
+    }
+    // Shrink per-core footprints so the striped spaces fit the hybrid.
+    let mut wl_cfg = cfg.clone();
+    wl_cfg.scale = cfg.scale * n as u64;
+
+    // Per-core L2 slice (A57: 1MB per 2-core cluster).
+    let mut core_cfg = cfg.clone();
+    core_cfg.l2.size_bytes = (cfg.l2.size_bytes / 2).max(64 * 1024);
+
+    let mut backend = HmmuBackend::new(cfg.clone(), engine);
+
+    struct CoreState {
+        core: CoreModel,
+        hier: CacheHierarchy,
+        gen: TraceGenerator,
+        stripe: u64,
+        done: bool,
+        workload: String,
+    }
+
+    let mut cores: Vec<CoreState> = workloads
+        .iter()
+        .enumerate()
+        .map(|(i, wl)| CoreState {
+            core: CoreModel::new(cfg.cpu),
+            hier: CacheHierarchy::new(&core_cfg),
+            gen: TraceGenerator::new(*wl, wl_cfg.scale, cfg.seed ^ (i as u64) << 32)
+                .take_ops(opts.ops),
+            stripe: core_stripe(&cfg, i, n),
+            done: false,
+            workload: wl.name.to_string(),
+        })
+        .collect();
+
+    /// Shim that offsets addresses into the core's stripe.
+    struct StripedBackend<'a> {
+        inner: &'a mut HmmuBackend,
+        stripe: u64,
+    }
+    impl MemBackend for StripedBackend<'_> {
+        fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> Time {
+            self.inner.access(addr + self.stripe, kind, bytes, now)
+        }
+    }
+
+    // Time-ordered round-robin: always step the core with the earliest
+    // local clock so shared-resource contention is causally ordered.
+    loop {
+        let Some(idx) = cores
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| !c.done)
+            .min_by_key(|(_, c)| c.core.now())
+            .map(|(i, _)| i)
+        else {
+            break;
+        };
+        let c = &mut cores[idx];
+        match c.gen.next() {
+            Some(op) => {
+                let mut shim = StripedBackend {
+                    inner: &mut backend,
+                    stripe: c.stripe,
+                };
+                c.core.step(&op, &mut c.hier, &mut shim);
+            }
+            None => {
+                c.core.finish();
+                c.done = true;
+            }
+        }
+    }
+
+    let makespan = cores.iter().map(|c| c.core.stats.time_ns).max().unwrap_or(0);
+    backend.drain(makespan);
+
+    let reports: Vec<CoreReport> = cores
+        .iter()
+        .enumerate()
+        .map(|(i, c)| CoreReport {
+            core: i,
+            workload: c.workload.clone(),
+            instructions: c.core.stats.instructions,
+            mem_ops: c.core.stats.mem_ops,
+            memory_accesses: c.core.stats.memory_accesses,
+            time_ns: c.core.stats.time_ns,
+        })
+        .collect();
+    let total_instr: u64 = reports.iter().map(|r| r.instructions).sum();
+    Ok(MulticoreReport {
+        aggregate_mips: total_instr as f64 / (makespan.max(1) as f64 / 1000.0),
+        hmmu_requests: backend.hmmu.counters.total_host_requests(),
+        pcie_credit_stalls: backend.link.credit_stalls,
+        fifo_full_stalls: backend.hmmu.counters.fifo_full_stalls,
+        cores: reports,
+        makespan_ns: makespan,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec;
+
+    fn opts(ops: u64) -> RunOpts {
+        RunOpts {
+            ops,
+            flush_at_end: false,
+        }
+    }
+
+    #[test]
+    fn two_cores_run_to_completion() {
+        let cfg = SystemConfig::default_scaled(64);
+        let wls = vec![
+            spec::by_name("505.mcf").unwrap(),
+            spec::by_name("538.imagick").unwrap(),
+        ];
+        let r = run_multicore(cfg, &wls, opts(10_000), None).unwrap();
+        assert_eq!(r.cores.len(), 2);
+        assert_eq!(r.cores[0].mem_ops, 10_000);
+        assert_eq!(r.cores[1].mem_ops, 10_000);
+        assert!(r.makespan_ns > 0);
+        // mcf (memory bound) takes longer than imagick on-core.
+        assert!(r.cores[0].time_ns > r.cores[1].time_ns);
+    }
+
+    #[test]
+    fn contention_slows_vs_solo() {
+        let cfg = SystemConfig::default_scaled(64);
+        let mcf = spec::by_name("505.mcf").unwrap();
+        let solo = run_multicore(cfg.clone(), &[mcf], opts(15_000), None).unwrap();
+        let four = run_multicore(cfg, &[mcf, mcf, mcf, mcf], opts(15_000), None).unwrap();
+        // Sharing the link/HMMU/devices must not speed a copy up.
+        assert!(
+            four.cores[0].time_ns >= solo.cores[0].time_ns,
+            "contended {} < solo {}",
+            four.cores[0].time_ns,
+            solo.cores[0].time_ns
+        );
+    }
+
+    #[test]
+    fn stripes_do_not_overlap() {
+        let cfg = SystemConfig::default_scaled(64);
+        let n = 4;
+        let stripe_bytes = cfg.total_mem_bytes() / n as u64;
+        for i in 0..n {
+            let s = core_stripe(&cfg, i, n);
+            assert_eq!(s % cfg.hmmu.page_bytes, 0);
+            assert!(s + stripe_bytes <= cfg.total_mem_bytes() + stripe_bytes);
+        }
+    }
+
+    #[test]
+    fn too_many_cores_rejected() {
+        let cfg = SystemConfig::default_scaled(64);
+        let wl = spec::by_name("541.leela").unwrap();
+        let wls = vec![wl; cfg.cpu.cores as usize + 1];
+        assert!(run_multicore(cfg, &wls, opts(100), None).is_err());
+    }
+
+    #[test]
+    fn aggregate_mips_positive() {
+        let cfg = SystemConfig::default_scaled(64);
+        let wls = vec![
+            spec::by_name("541.leela").unwrap(),
+            spec::by_name("544.nab").unwrap(),
+        ];
+        let r = run_multicore(cfg, &wls, opts(5_000), None).unwrap();
+        assert!(r.aggregate_mips > 0.0);
+        assert!(r.hmmu_requests > 0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Native-execution reference: the workload running from the LS2085A's
+//! on-board DDR4 (16 GB), no PCIe, no HMMU. Fig 7 normalizes everything
+//! against this.
+
+use crate::config::SystemConfig;
+use crate::cpu::MemBackend;
+use crate::mem::{AccessKind, DramDevice, MemoryController};
+use crate::sim::{Clock, Time};
+
+/// SoC interconnect latency between LLC miss and the DRAM controller
+/// (CCN-504-class fabric on the LS2085A): a fixed cost per access.
+const SOC_FABRIC_NS: u64 = 45;
+
+/// Local-DRAM backend.
+pub struct NativeBackend {
+    mc: MemoryController<DramDevice>,
+    pub accesses: u64,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        // On-board DRAM: same DDR4 timing but board-sized (the paper's
+        // native runs use the 16 GB on-board memory; capacity is not the
+        // bottleneck for any Table III footprint).
+        let mut dram = cfg.dram;
+        dram.size_bytes = 16 << 30;
+        NativeBackend {
+            mc: MemoryController::new(
+                DramDevice::new(dram),
+                Clock::from_mhz(1200.0),
+                4,
+                cfg.dram.queue_depth,
+            ),
+            accesses: 0,
+        }
+    }
+}
+
+impl MemBackend for NativeBackend {
+    fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> Time {
+        self.accesses += 1;
+        self.mc.issue(addr, kind, bytes, now + SOC_FABRIC_NS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn native_latency_is_dram_class() {
+        let cfg = SystemConfig::paper();
+        let mut b = NativeBackend::new(&cfg);
+        let done = b.access(0, AccessKind::Read, 64, 0);
+        // ~45 fabric + ~36 device = ~81ns: an LLC-miss-to-DRAM figure.
+        assert!(done > 60 && done < 120, "native latency {done}");
+    }
+
+    #[test]
+    fn native_faster_than_pcie_roundtrip() {
+        let cfg = SystemConfig::paper();
+        let mut b = NativeBackend::new(&cfg);
+        let native = b.access(0, AccessKind::Read, 64, 0);
+        let link = crate::pcie::PcieLink::new(cfg.pcie);
+        assert!(link.unloaded_rtt_ns(64) > 3 * native);
+    }
+}

@@ -1,0 +1,194 @@
+//! Run reports: the numbers Fig 7 / Fig 8 are built from.
+
+use crate::hmmu::HmmuCounters;
+use crate::mem::DeviceStats;
+use crate::util::units::{fmt_bytes, fmt_ns};
+
+/// Everything measured in one platform run (plus its native reference).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub workload: String,
+    pub policy: String,
+    pub scale: u64,
+    pub instructions: u64,
+    pub mem_ops: u64,
+    /// Post-cache accesses (line fills) that reached main memory.
+    pub memory_accesses: u64,
+    pub l1d_miss_rate: f64,
+    pub l2_miss_rate: f64,
+    /// Modeled native execution time (on-board DRAM).
+    pub native_time_ns: u64,
+    /// Modeled execution time on the PCIe-attached hybrid platform.
+    pub platform_time_ns: u64,
+    /// Core-visible memory stall time on the platform.
+    pub mem_stall_ns: u64,
+    pub counters: HmmuCounters,
+    pub dram_stats: DeviceStats,
+    pub nvm_stats: DeviceStats,
+    pub nvm_max_wear: u64,
+    pub dram_residency: f64,
+    pub pcie_tx_bytes: u64,
+    pub pcie_rx_bytes: u64,
+    pub pcie_credit_stalls: u64,
+    /// Static + dynamic energy breakdown (paper §II-B counters use case).
+    pub energy: crate::mem::EnergyReport,
+    /// Wall-clock cost of simulating the platform pass (host ns).
+    pub host_wall_ns: u64,
+    /// Wall-clock cost of simulating the native pass.
+    pub native_wall_ns: u64,
+}
+
+impl RunReport {
+    /// Fig 7 metric for the platform: target-time / native-time.
+    pub fn slowdown(&self) -> f64 {
+        self.platform_time_ns as f64 / self.native_time_ns.max(1) as f64
+    }
+
+    /// Fig 8 row: bytes of memory requests seen by the HMMU, scaled back
+    /// up to paper-size footprints (×scale) for comparability.
+    pub fn fig8_scaled(&self) -> (u64, u64) {
+        let (r, w) = self.counters.fig8_row();
+        (r * self.scale, w * self.scale)
+    }
+
+    /// Simulated-time throughput of the emulator itself (modeled ns per
+    /// host wall ns — the emulator's own efficiency, §Perf).
+    pub fn emulation_efficiency(&self) -> f64 {
+        self.platform_time_ns as f64 / self.host_wall_ns.max(1) as f64
+    }
+
+    /// Modeled MIPS of the platform run.
+    pub fn platform_mips(&self) -> f64 {
+        self.instructions as f64 / (self.platform_time_ns as f64 / 1000.0)
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<16} policy={:<11} slowdown={:>6.2}x  native={:>10}  platform={:>10}  \
+             memAcc={:<9} L2miss={:>5.1}%  dramResid={:>5.1}%  migrations={}",
+            self.workload,
+            self.policy,
+            self.slowdown(),
+            fmt_ns(self.native_time_ns),
+            fmt_ns(self.platform_time_ns),
+            self.memory_accesses,
+            self.l2_miss_rate * 100.0,
+            self.dram_residency * 100.0,
+            self.counters.migrations,
+        )
+    }
+
+    /// Multi-line detail block.
+    pub fn detail(&self) -> String {
+        let (rb, wb) = self.counters.fig8_row();
+        format!(
+            "workload        {}\n\
+             policy          {} (scale 1/{})\n\
+             instructions    {}\n\
+             mem ops         {} ({} to memory, L1D miss {:.2}%, L2 miss {:.2}%)\n\
+             native time     {}\n\
+             platform time   {}  (slowdown {:.2}x, mem stalls {})\n\
+             HMMU traffic    R {} / W {}  (DRAM {}r+{}w, NVM {}r+{}w)\n\
+             placement       {:.1}% DRAM-resident, {} migrations ({} moved)\n\
+             consistency     reorder wait {}, fifo stalls {}, dma conflicts {}\n\
+             PCIe            TX {} RX {} creditStalls {}\n\
+             NVM wear        max {} writes/page\n\
+             energy est.     {:.2} mJ dynamic; {}\n\
+             latency         mean {:.0}ns p50 {}ns p99 {}ns max {}ns\n\
+             emulator        {} wall, {:.2} modeled-ns/wall-ns",
+            self.workload,
+            self.policy,
+            self.scale,
+            self.instructions,
+            self.mem_ops,
+            self.memory_accesses,
+            self.l1d_miss_rate * 100.0,
+            self.l2_miss_rate * 100.0,
+            fmt_ns(self.native_time_ns),
+            fmt_ns(self.platform_time_ns),
+            self.slowdown(),
+            fmt_ns(self.mem_stall_ns),
+            fmt_bytes(rb),
+            fmt_bytes(wb),
+            self.counters.dram_reads,
+            self.counters.dram_writes,
+            self.counters.nvm_reads,
+            self.counters.nvm_writes,
+            self.dram_residency * 100.0,
+            self.counters.migrations,
+            fmt_bytes(self.counters.migration_bytes),
+            fmt_ns(self.counters.reorder_wait_ns),
+            self.counters.fifo_full_stalls,
+            self.counters.dma_conflict_stalls,
+            fmt_bytes(self.pcie_tx_bytes),
+            fmt_bytes(self.pcie_rx_bytes),
+            self.pcie_credit_stalls,
+            self.nvm_max_wear,
+            self.counters.energy_estimate_mj(),
+            self.energy.summary(),
+            self.counters.latency.mean(),
+            self.counters.latency.percentile(50.0),
+            self.counters.latency.percentile(99.0),
+            self.counters.latency.max(),
+            fmt_ns(self.host_wall_ns),
+            self.emulation_efficiency(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> RunReport {
+        RunReport {
+            workload: "505.mcf".into(),
+            policy: "hotness".into(),
+            scale: 16,
+            instructions: 1_000_000,
+            mem_ops: 300_000,
+            memory_accesses: 50_000,
+            l1d_miss_rate: 0.3,
+            l2_miss_rate: 0.6,
+            native_time_ns: 1_000_000,
+            platform_time_ns: 15_360_000,
+            mem_stall_ns: 14_000_000,
+            counters: HmmuCounters::default(),
+            dram_stats: DeviceStats::default(),
+            nvm_stats: DeviceStats::default(),
+            nvm_max_wear: 3,
+            dram_residency: 0.4,
+            pcie_tx_bytes: 1000,
+            pcie_rx_bytes: 2000,
+            pcie_credit_stalls: 0,
+            energy: crate::mem::EnergyReport::default(),
+            host_wall_ns: 5_000_000,
+            native_wall_ns: 3_000_000,
+        }
+    }
+
+    #[test]
+    fn slowdown_matches_paper_math() {
+        let r = report();
+        assert!((r.slowdown() - 15.36).abs() < 0.01);
+    }
+
+    #[test]
+    fn fig8_scaling() {
+        let mut r = report();
+        r.counters.host_read_bytes = 100;
+        r.counters.host_write_bytes = 50;
+        assert_eq!(r.fig8_scaled(), (1600, 800));
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let s = report().summary();
+        assert!(s.contains("505.mcf"));
+        assert!(s.contains("15.36"));
+        let d = report().detail();
+        assert!(d.contains("PCIe"));
+        assert!(d.contains("NVM wear"));
+    }
+}

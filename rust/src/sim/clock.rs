@@ -1,0 +1,107 @@
+//! Clock-domain conversion.
+//!
+//! The emulation platform spans four clock domains (CPU 2 GHz, FPGA fabric
+//! 250 MHz, PCIe SerDes, DDR4 controller). All timing converges on the
+//! shared nanosecond timeline; `Clock` converts cycle counts of a domain
+//! to/from nanoseconds with integer-safe rounding (always rounding
+//! *up* to whole cycles, like real synchronizers do).
+
+/// A fixed-frequency clock domain.
+#[derive(Clone, Copy, Debug)]
+pub struct Clock {
+    /// Frequency in MHz (u64 picosecond period derived from it).
+    period_ps: u64,
+    freq_mhz: f64,
+}
+
+impl Clock {
+    pub fn from_mhz(freq_mhz: f64) -> Self {
+        assert!(freq_mhz > 0.0);
+        Clock {
+            period_ps: (1_000_000.0 / freq_mhz).round() as u64,
+            freq_mhz,
+        }
+    }
+
+    pub fn from_ghz(freq_ghz: f64) -> Self {
+        Self::from_mhz(freq_ghz * 1000.0)
+    }
+
+    pub fn freq_mhz(&self) -> f64 {
+        self.freq_mhz
+    }
+
+    /// Clock period in picoseconds.
+    pub fn period_ps(&self) -> u64 {
+        self.period_ps
+    }
+
+    /// Convert a cycle count to nanoseconds (rounded up).
+    #[inline]
+    pub fn cycles_to_ns(&self, cycles: u64) -> u64 {
+        (cycles.saturating_mul(self.period_ps)).div_ceil(1000)
+    }
+
+    /// Convert nanoseconds to whole cycles (rounded up — crossing into a
+    /// domain costs at least the partial cycle).
+    #[inline]
+    pub fn ns_to_cycles(&self, ns: u64) -> u64 {
+        ns.saturating_mul(1000).div_ceil(self.period_ps)
+    }
+
+    /// Next domain edge at or after time `ns` (models synchronizer align).
+    #[inline]
+    pub fn align_up_ns(&self, ns: u64) -> u64 {
+        let ps = ns * 1000;
+        let edges = ps.div_ceil(self.period_ps);
+        (edges * self.period_ps).div_ceil(1000)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_2ghz() {
+        let c = Clock::from_ghz(2.0);
+        assert_eq!(c.period_ps(), 500);
+        assert_eq!(c.cycles_to_ns(2), 1);
+        assert_eq!(c.cycles_to_ns(3), 2); // 1.5ns rounds up
+        assert_eq!(c.ns_to_cycles(1), 2);
+    }
+
+    #[test]
+    fn fpga_250mhz() {
+        let c = Clock::from_mhz(250.0);
+        assert_eq!(c.period_ps(), 4000);
+        assert_eq!(c.cycles_to_ns(1), 4);
+        assert_eq!(c.ns_to_cycles(10), 3); // 10ns -> 2.5 cycles -> 3
+    }
+
+    #[test]
+    fn roundtrip_is_monotone() {
+        let c = Clock::from_mhz(333.0);
+        for cycles in [1u64, 7, 100, 12345] {
+            let ns = c.cycles_to_ns(cycles);
+            // ns->cycles of that may round up by at most one cycle
+            let back = c.ns_to_cycles(ns);
+            assert!(back >= cycles && back <= cycles + 1, "{cycles} -> {ns} -> {back}");
+        }
+    }
+
+    #[test]
+    fn align_up() {
+        let c = Clock::from_mhz(250.0); // 4ns period
+        assert_eq!(c.align_up_ns(0), 0);
+        assert_eq!(c.align_up_ns(1), 4);
+        assert_eq!(c.align_up_ns(4), 4);
+        assert_eq!(c.align_up_ns(5), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_freq_panics() {
+        let _ = Clock::from_mhz(0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Discrete-event simulation substrate.
+//!
+//! Everything timed in the platform — PCIe link, HMMU pipeline, memory
+//! controllers, DMA engine — advances on a shared nanosecond timeline
+//! driven by [`event::EventQueue`]. [`clock::Clock`] converts between the
+//! several clock domains involved (CPU 2 GHz, FPGA fabric 250 MHz, PCIe,
+//! memory controller) and the wall timeline.
+
+pub mod clock;
+pub mod engine;
+pub mod event;
+
+pub use clock::Clock;
+pub use engine::{tandem_analytic, DesRequest, TandemDes};
+pub use event::{EventQueue, Scheduled};
+
+/// Simulation timestamp in nanoseconds.
+pub type Time = u64;

@@ -1,0 +1,180 @@
+//! Micro/macro benchmark harness (criterion is unavailable offline).
+//!
+//! Each `[[bench]]` target is a plain binary with `harness = false` that
+//! builds a [`BenchSuite`], registers closures, and calls `run()`. The
+//! harness warms up, runs a fixed wall-clock budget per benchmark, and
+//! prints mean / stddev / min plus optional throughput, in a stable
+//! table format that `cargo bench` output captures.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    /// Optional items/sec derived from `throughput_items`.
+    pub throughput: Option<f64>,
+}
+
+/// Benchmark suite: register closures, run, print a table.
+pub struct BenchSuite {
+    title: String,
+    warmup: Duration,
+    budget: Duration,
+    min_iters: u64,
+    results: Vec<BenchResult>,
+    quick: bool,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        // `--quick` or HYMEM_BENCH_QUICK=1 shrinks budgets (CI-friendly).
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("HYMEM_BENCH_QUICK").is_ok();
+        Self {
+            title: title.to_string(),
+            warmup: if quick { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            budget: if quick { Duration::from_millis(300) } else { Duration::from_secs(2) },
+            min_iters: 3,
+            results: Vec::new(),
+            quick,
+        }
+    }
+
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Time `f` repeatedly; each call is one iteration.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_items(name, 0, move || {
+            f();
+            0
+        })
+    }
+
+    /// Time `f` which returns the number of items processed per iteration;
+    /// reports throughput when nonzero.
+    pub fn bench_items(&mut self, name: &str, _hint: u64, mut f: impl FnMut() -> u64) -> &BenchResult {
+        // Warmup.
+        let wstart = Instant::now();
+        let mut items_per_iter = 0u64;
+        while wstart.elapsed() < self.warmup {
+            items_per_iter = f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let mut total_items = 0u64;
+        let mut iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.budget || iters < self.min_iters {
+            let t0 = Instant::now();
+            let items = f();
+            let dt = t0.elapsed().as_nanos() as f64;
+            samples.push(dt);
+            total_items += items;
+            items_per_iter = items;
+            iters += 1;
+            if iters > 1_000_000 {
+                break;
+            }
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        let throughput = if total_items > 0 {
+            Some(total_items as f64 / elapsed)
+        } else {
+            None
+        };
+        let _ = items_per_iter;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: stats::mean(&samples),
+            stddev_ns: stats::stddev(&samples),
+            min_ns: stats::min(&samples),
+            throughput,
+        };
+        println!(
+            "  {:<44} {:>12.0} ns/iter (±{:>10.0})  min {:>12.0}  iters {:>7}{}",
+            result.name,
+            result.mean_ns,
+            result.stddev_ns,
+            result.min_ns,
+            result.iters,
+            result
+                .throughput
+                .map(|t| format!("  {}", super::units::fmt_rate(t)))
+                .unwrap_or_default()
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print a free-form report row (used by the figure-regeneration
+    /// benches, which report modeled metrics rather than wall time).
+    pub fn report_row(&self, row: &str) {
+        println!("  {row}");
+    }
+
+    pub fn header(&self) {
+        println!("\n=== {} ===", self.title);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn finish(self) {
+        println!("=== {} done ({} benchmarks) ===", self.title, self.results.len());
+    }
+}
+
+/// Convenience: time a single closure once, returning (result, ns).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, u64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_nanos() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_measures() {
+        let (v, ns) = time_once(|| {
+            let mut s = 0u64;
+            for i in 0..10_000u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert_eq!(v, 49_995_000);
+        assert!(ns > 0);
+    }
+
+    #[test]
+    fn suite_runs_quickly_in_quick_mode() {
+        std::env::set_var("HYMEM_BENCH_QUICK", "1");
+        let mut s = BenchSuite::new("test");
+        s.bench("noop", || {});
+        assert_eq!(s.results().len(), 1);
+        assert!(s.results()[0].iters >= 3);
+        std::env::remove_var("HYMEM_BENCH_QUICK");
+    }
+
+    #[test]
+    fn throughput_reported() {
+        std::env::set_var("HYMEM_BENCH_QUICK", "1");
+        let mut s = BenchSuite::new("test2");
+        let r = s.bench_items("items", 0, || 100).clone();
+        assert!(r.throughput.unwrap_or(0.0) > 0.0);
+        std::env::remove_var("HYMEM_BENCH_QUICK");
+    }
+}

@@ -1,0 +1,128 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands. Enough surface for the `hymem` binary, examples and
+//! bench harnesses.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, options, flags and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-option token (if any) — treated as the subcommand.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` pairs (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` tokens.
+    pub flags: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token stream (testable without process args).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let mut tokens = iter.into_iter().peekable();
+        while let Some(tok) = tokens.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if tokens
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = tokens.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process arguments (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: a bare `--flag` consumes a following non-`--` token as its
+        // value (there are no declared flags), so flags go last or use
+        // `=`. This is the documented convention for our binaries.
+        let a = parse("run --workload 505.mcf --scale=16 pos1 --verbose");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("workload"), Some("505.mcf"));
+        assert_eq!(a.get_u64("scale", 1), 16);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn flag_at_end() {
+        let a = parse("bench --quick");
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("quick"), None);
+    }
+
+    #[test]
+    fn option_value_looks_positional() {
+        let a = parse("--policy hotness");
+        assert_eq!(a.get("policy"), Some("hotness"));
+        assert_eq!(a.command, None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_u64("missing", 7), 7);
+        assert_eq!(a.get_f64("missing", 0.5), 0.5);
+        assert_eq!(a.get_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = parse("--k 1 --k 2");
+        assert_eq!(a.get("k"), Some("2"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Dependency-free utility infrastructure.
+//!
+//! The offline build environment vendors only the `xla` crate closure, so
+//! everything a normal project would pull from crates.io lives here:
+//! deterministic RNG ([`rng`]), statistics ([`stats`]), a minimal CLI
+//! argument parser ([`cli`]), SI-unit formatting ([`units`]), a tiny
+//! property-testing harness ([`prop`]) and a micro-benchmark harness
+//! ([`bench`]).
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod units;

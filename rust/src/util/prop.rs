@@ -1,0 +1,76 @@
+//! Tiny property-based testing harness (proptest is unavailable offline).
+//!
+//! `run_prop` drives a closure with a deterministic RNG over N cases and
+//! reports the failing seed, which can be replayed with `replay_prop`.
+//! Shrinking is deliberately omitted — failures print the case seed so the
+//! failing input can be reconstructed exactly.
+
+use super::rng::Xoshiro256;
+
+/// Number of cases to run by default (overridable via `HYMEM_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("HYMEM_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Run `f` for `cases` deterministic cases derived from `seed`.
+/// Panics (via the closure's asserts) with the case index and seed.
+pub fn run_prop_n(name: &str, seed: u64, cases: u64, mut f: impl FnMut(&mut Xoshiro256)) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Xoshiro256::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "[prop] property '{name}' FAILED at case {case} (replay seed {case_seed:#x})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Run with the default case count and a fixed master seed.
+pub fn run_prop(name: &str, f: impl FnMut(&mut Xoshiro256)) {
+    run_prop_n(name, 0xC0FFEE, default_cases(), f);
+}
+
+/// Replay a single failing case seed printed by `run_prop_n`.
+pub fn replay_prop(case_seed: u64, mut f: impl FnMut(&mut Xoshiro256)) {
+    let mut rng = Xoshiro256::new(case_seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        run_prop_n("count", 1, 50, |_| n += 1);
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    fn failing_property_panics() {
+        let r = std::panic::catch_unwind(|| {
+            run_prop_n("fail", 2, 50, |rng| {
+                assert!(rng.below(10) < 9, "hit a 9");
+            });
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn deterministic_case_streams() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        run_prop_n("det-a", 3, 10, |r| a.push(r.next_u64()));
+        run_prop_n("det-b", 3, 10, |r| b.push(r.next_u64()));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,226 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! `splitmix64` for seeding, `xoshiro256**` for the main stream — the same
+//! generators the `rand` ecosystem uses for non-crypto simulation work.
+//! Every simulator component takes an explicit seed so whole-platform runs
+//! are reproducible bit-for-bit.
+
+/// SplitMix64: used to expand a single `u64` seed into generator state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality, 256-bit state PRNG.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 (never produces the all-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` (Lemire reduction; unbiased enough for sim).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Geometric burst length in `[1, max]` with mean ~`mean`.
+    /// §Perf: closed-form inverse-CDF sample (one log) instead of a
+    /// trial-per-step loop (O(mean) RNG draws) — the trace generator
+    /// calls this once per memory op.
+    pub fn burst(&mut self, mean: f64, max: u64) -> u64 {
+        let p = 1.0 / mean.max(1.0);
+        if p >= 1.0 {
+            return 1;
+        }
+        // Small means: the trial loop beats the transcendental (measured
+        // crossover ~6 on this host).
+        if mean <= 6.0 {
+            let mut n = 1;
+            while n < max && !self.chance(p) {
+                n += 1;
+            }
+            return n;
+        }
+        let u = self.f64();
+        // Geometric(p) via inverse CDF: 1 + floor(ln(1-u)/ln(1-p)).
+        let n = 1.0 + ((1.0 - u).ln() / (1.0 - p).ln()).floor();
+        (n as u64).clamp(1, max)
+    }
+
+    /// Sample an index from a Zipf(s) distribution over `[0, n)` using the
+    /// inverse-CDF approximation (good enough for locality modeling; exact
+    /// Zipf is unnecessarily slow for trace generation).
+    #[inline]
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        debug_assert!(n > 0);
+        // Inverse transform of the continuous bounded Pareto approximation.
+        let u = self.f64();
+        if (s - 1.0).abs() < 1e-9 {
+            // H(x) ~ ln(x); x = exp(u * ln(n))
+            let x = ((n as f64).ln() * u).exp();
+            (x as u64).min(n - 1)
+        } else {
+            let t = 1.0 - s;
+            let x = ((n as f64).powf(t) - 1.0) * u + 1.0;
+            let x = x.powf(1.0 / t);
+            (x as u64 - 1).min(n - 1)
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Xoshiro256::new(42);
+        let mut b = Xoshiro256::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Xoshiro256::new(1);
+        let mut b = Xoshiro256::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Xoshiro256::new(7);
+        for bound in [1u64, 2, 3, 10, 1000, u64::MAX / 2] {
+            for _ in 0..200 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xoshiro256::new(9);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Xoshiro256::new(11);
+        let n = 100_000;
+        let sum: f64 = (0..n).map(|_| r.f64()).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_skews_to_small_indices() {
+        let mut r = Xoshiro256::new(13);
+        let n = 10_000u64;
+        let mut low = 0usize;
+        let trials = 50_000;
+        for _ in 0..trials {
+            if r.zipf(n, 1.1) < n / 100 {
+                low += 1;
+            }
+        }
+        // Zipf(1.1): the first 1% of items should take far more than 1% of mass.
+        assert!(low as f64 / trials as f64 > 0.2, "low frac {}", low as f64 / trials as f64);
+    }
+
+    #[test]
+    fn zipf_in_range() {
+        let mut r = Xoshiro256::new(17);
+        for n in [1u64, 2, 5, 100, 1 << 20] {
+            for _ in 0..300 {
+                assert!(r.zipf(n, 0.99) < n);
+                assert!(r.zipf(n, 1.0) < n);
+                assert!(r.zipf(n, 1.5) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(23);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn burst_bounds() {
+        let mut r = Xoshiro256::new(29);
+        for _ in 0..1000 {
+            let b = r.burst(4.0, 16);
+            assert!((1..=16).contains(&b));
+        }
+    }
+}

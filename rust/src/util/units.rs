@@ -1,0 +1,118 @@
+//! Human-readable formatting/parsing of bytes, times and rates.
+
+/// Format a byte count with binary prefixes ("4.47 GiB").
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 7] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB", "EiB"];
+    let mut v = b as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i < UNITS.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[i])
+    }
+}
+
+/// Format a nanosecond duration at a sensible precision ("1.25 ms").
+pub fn fmt_ns(ns: u64) -> String {
+    let v = ns as f64;
+    if v < 1e3 {
+        format!("{ns} ns")
+    } else if v < 1e6 {
+        format!("{:.2} us", v / 1e3)
+    } else if v < 1e9 {
+        format!("{:.2} ms", v / 1e6)
+    } else {
+        format!("{:.3} s", v / 1e9)
+    }
+}
+
+/// Format a rate ("12.3 M/s").
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} /s")
+    }
+}
+
+/// Parse "128MB", "1GiB", "4096", "64K" into bytes. Decimal suffixes (KB,
+/// MB, GB) are treated as binary, matching the paper's loose usage.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| !c.is_ascii_digit() && c != '.')?;
+    let (num, suffix) = if split == 0 {
+        return None;
+    } else {
+        s.split_at(split)
+    };
+    let v: f64 = num.parse().ok()?;
+    let mult: u64 = match suffix.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => 1 << 10,
+        "m" | "mb" | "mib" => 1 << 20,
+        "g" | "gb" | "gib" => 1 << 30,
+        "t" | "tb" | "tib" => 1 << 40,
+        _ => return None,
+    };
+    Some((v * mult as f64) as u64)
+}
+
+/// Parse a byte string with no suffix handling failure: full-string digits.
+pub fn parse_bytes_or(s: &str, default: u64) -> u64 {
+    if s.chars().all(|c| c.is_ascii_digit()) {
+        s.parse().unwrap_or(default)
+    } else {
+        parse_bytes(s).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        assert_eq!(parse_bytes("128MB"), Some(128 << 20));
+        assert_eq!(parse_bytes("1GiB"), Some(1 << 30));
+        assert_eq!(parse_bytes("64K"), Some(64 << 10));
+        assert_eq!(parse_bytes("512b"), Some(512));
+        assert_eq!(parse_bytes("junk"), None);
+        assert_eq!(parse_bytes(""), None);
+    }
+
+    #[test]
+    fn fmt_bytes_scales() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(1 << 20), "1.00 MiB");
+        assert_eq!(fmt_bytes(4809063988u64), "4.48 GiB");
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500), "500 ns");
+        assert_eq!(fmt_ns(1_500), "1.50 us");
+        assert_eq!(fmt_ns(2_500_000), "2.50 ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000 s");
+    }
+
+    #[test]
+    fn fmt_rate_scales() {
+        assert_eq!(fmt_rate(1234.0), "1.23 K/s");
+        assert_eq!(fmt_rate(12_300_000.0), "12.30 M/s");
+    }
+
+    #[test]
+    fn parse_bytes_or_plain_digits() {
+        assert_eq!(parse_bytes_or("4096", 0), 4096);
+        assert_eq!(parse_bytes_or("8M", 0), 8 << 20);
+        assert_eq!(parse_bytes_or("zzz", 7), 7);
+    }
+}

@@ -1,0 +1,25 @@
+//! Synthetic SPEC CPU 2017 workloads (Table III).
+//!
+//! We cannot run the real SPEC binaries on the modeled platform, so each
+//! benchmark is replaced by a calibrated synthetic trace generator that
+//! reproduces the properties the platform actually responds to:
+//!
+//! - **memory footprint** (Table III, scaled by the platform scale factor),
+//! - **memory intensity** (accesses per kilo-instruction — calibrated so
+//!   the Fig 8 request-volume *ordering* holds: 505.mcf max, 538.imagick
+//!   min, consistent with the SPEC2017 characterization study [24]),
+//! - **read/write mix**,
+//! - **access pattern**: streaming / strided / pointer-chasing /
+//!   zipf-random region mixes per benchmark class,
+//! - **dependence**: pointer-chase loads are latency-bound (no MLP);
+//!   streaming loads overlap.
+
+pub mod generator;
+pub mod spec;
+pub mod trace;
+pub mod tracefile;
+
+pub use generator::TraceGenerator;
+pub use spec::{by_name, proportional_ops, Workload, WORKLOADS};
+pub use trace::TraceOp;
+pub use tracefile::{dump as dump_trace, TraceReader};

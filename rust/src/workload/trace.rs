@@ -1,0 +1,75 @@
+//! Trace record types.
+
+/// One memory operation in a workload trace, with the number of
+/// non-memory instructions preceding it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceOp {
+    /// Non-memory instructions executed since the previous memory op.
+    pub gap: u32,
+    /// Virtual address accessed.
+    pub addr: u64,
+    /// Store (true) or load (false).
+    pub is_write: bool,
+    /// True if this access depends on the previous one (pointer chase):
+    /// its issue cannot overlap the previous miss.
+    pub dependent: bool,
+    /// Which generator pattern produced this op (PAT_*). Baselines use it
+    /// as a stable synthetic instruction pointer so IP-indexed structures
+    /// (stride prefetchers) can train, as they would on a real loop body.
+    pub pattern: u8,
+}
+
+impl TraceOp {
+    pub const PAT_STREAM: u8 = 0;
+    pub const PAT_STRIDE: u8 = 1;
+    pub const PAT_CHASE: u8 = 2;
+    pub const PAT_RANDOM: u8 = 3;
+
+    pub fn load(gap: u32, addr: u64) -> Self {
+        TraceOp {
+            gap,
+            addr,
+            is_write: false,
+            dependent: false,
+            pattern: Self::PAT_RANDOM,
+        }
+    }
+
+    pub fn store(gap: u32, addr: u64) -> Self {
+        TraceOp {
+            gap,
+            addr,
+            is_write: true,
+            dependent: false,
+            pattern: Self::PAT_RANDOM,
+        }
+    }
+
+    pub fn chained_load(gap: u32, addr: u64) -> Self {
+        TraceOp {
+            gap,
+            addr,
+            is_write: false,
+            dependent: true,
+            pattern: Self::PAT_CHASE,
+        }
+    }
+
+    /// Total instructions this op accounts for (gap + the op itself).
+    pub fn instructions(&self) -> u64 {
+        self.gap as u64 + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        assert!(!TraceOp::load(3, 0x10).is_write);
+        assert!(TraceOp::store(3, 0x10).is_write);
+        assert!(TraceOp::chained_load(0, 0x10).dependent);
+        assert_eq!(TraceOp::load(3, 0x10).instructions(), 4);
+    }
+}

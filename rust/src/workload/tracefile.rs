@@ -1,0 +1,161 @@
+//! Trace file I/O — dump synthetic traces to disk and replay them, in
+//! the spirit of ChampSim's trace-driven workflow. Useful for (a)
+//! regression-pinning a workload's exact request stream, (b) feeding the
+//! same trace to external tools, (c) skipping generation cost in
+//! repeated experiments.
+//!
+//! Format (little-endian, 18 bytes/record after a 16-byte header):
+//!
+//! ```text
+//! header:  magic "HYMT" | u16 version | u16 flags | u64 record count
+//! record:  u32 gap | u64 addr | u8 flags(bit0=write, bit1=dependent) | u8 pattern | u32 pad? no
+//! ```
+//! Record layout: gap u32, addr u64, flags u8, pattern u8 → 14 bytes.
+
+use super::trace::TraceOp;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"HYMT";
+const VERSION: u16 = 1;
+const RECORD_BYTES: usize = 14;
+
+/// Write `ops` to `path`. Returns the record count.
+pub fn dump<I: IntoIterator<Item = TraceOp>>(path: &Path, ops: I) -> Result<u64> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating trace file {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    // Header with a placeholder count; rewritten at the end.
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&0u16.to_le_bytes())?;
+    w.write_all(&0u64.to_le_bytes())?;
+    let mut count = 0u64;
+    for op in ops {
+        w.write_all(&op.gap.to_le_bytes())?;
+        w.write_all(&op.addr.to_le_bytes())?;
+        let flags = op.is_write as u8 | (op.dependent as u8) << 1;
+        w.write_all(&[flags, op.pattern])?;
+        count += 1;
+    }
+    w.flush()?;
+    drop(w);
+    // Patch the count.
+    use std::io::{Seek, SeekFrom};
+    let mut f = std::fs::OpenOptions::new().write(true).open(path)?;
+    f.seek(SeekFrom::Start(8))?;
+    f.write_all(&count.to_le_bytes())?;
+    Ok(count)
+}
+
+/// Streaming trace-file reader.
+pub struct TraceReader {
+    r: BufReader<std::fs::File>,
+    remaining: u64,
+    pub count: u64,
+}
+
+impl TraceReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file =
+            std::fs::File::open(path).with_context(|| format!("opening trace {path:?}"))?;
+        let mut r = BufReader::new(file);
+        let mut header = [0u8; 16];
+        r.read_exact(&mut header).context("reading trace header")?;
+        if &header[0..4] != MAGIC {
+            bail!("not a hymem trace file (bad magic)");
+        }
+        let version = u16::from_le_bytes([header[4], header[5]]);
+        if version != VERSION {
+            bail!("unsupported trace version {version}");
+        }
+        let count = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        Ok(TraceReader {
+            r,
+            remaining: count,
+            count,
+        })
+    }
+}
+
+impl Iterator for TraceReader {
+    type Item = TraceOp;
+
+    fn next(&mut self) -> Option<TraceOp> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let mut buf = [0u8; RECORD_BYTES];
+        if self.r.read_exact(&mut buf).is_err() {
+            self.remaining = 0;
+            return None; // truncated file: stop cleanly
+        }
+        self.remaining -= 1;
+        Some(TraceOp {
+            gap: u32::from_le_bytes(buf[0..4].try_into().unwrap()),
+            addr: u64::from_le_bytes(buf[4..12].try_into().unwrap()),
+            is_write: buf[12] & 1 != 0,
+            dependent: buf[12] & 2 != 0,
+            pattern: buf[13],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{spec, TraceGenerator};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("hymem_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn roundtrip_preserves_ops() {
+        let path = tmp("roundtrip.trace");
+        let ops: Vec<TraceOp> = TraceGenerator::new(spec::by_name("505.mcf").unwrap(), 64, 9)
+            .take_ops(5000)
+            .collect();
+        let n = dump(&path, ops.iter().copied()).unwrap();
+        assert_eq!(n, 5000);
+        let back: Vec<TraceOp> = TraceReader::open(&path).unwrap().collect();
+        assert_eq!(back, ops);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmp("bad.trace");
+        std::fs::write(&path, b"NOPE0123456789ab").unwrap();
+        assert!(TraceReader::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_stops_cleanly() {
+        let path = tmp("trunc.trace");
+        let ops: Vec<TraceOp> = TraceGenerator::new(spec::by_name("541.leela").unwrap(), 64, 9)
+            .take_ops(100)
+            .collect();
+        dump(&path, ops).unwrap();
+        // Chop the file mid-record.
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() - 7]).unwrap();
+        let back: Vec<TraceOp> = TraceReader::open(&path).unwrap().collect();
+        assert_eq!(back.len(), 99);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn count_header_accurate() {
+        let path = tmp("count.trace");
+        let gen = TraceGenerator::new(spec::by_name("557.xz").unwrap(), 64, 3).take_ops(321);
+        dump(&path, gen).unwrap();
+        let r = TraceReader::open(&path).unwrap();
+        assert_eq!(r.count, 321);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,130 @@
+//! Property tests for the tag-matching consistency mechanism (§III-C).
+//!
+//! The paper's Fig 3 risk: requests split across the fast and slow
+//! channels must not return out of order. We sweep randomized
+//! issue/completion interleavings and check the invariants the RTL
+//! designers "spent considerable time to verify".
+
+use hymem::hmmu::TagMatcher;
+use hymem::util::prop::run_prop;
+use hymem::util::rng::Xoshiro256;
+
+/// Simulate a random episode: issue a random number of requests with
+/// random (device-dependent) latencies, completing them in random order.
+/// Returns (tags in drain order, release times in drain order).
+fn random_episode(rng: &mut Xoshiro256) -> (Vec<u16>, Vec<u64>, u64) {
+    let depth = 1 + rng.below(63) as usize;
+    let mut tm = TagMatcher::new(depth);
+    let n = 1 + rng.below(depth as u64 * 4);
+    let mut drained_tags = Vec::new();
+    let mut drained_times = Vec::new();
+
+    let mut outstanding: Vec<(u16, u64)> = Vec::new(); // (tag, media done)
+    let mut now = 0u64;
+    for _ in 0..n {
+        // Random think time.
+        now += rng.below(50);
+        // Backpressure: completing a random (possibly non-head) request
+        // may not free a FIFO slot until the head completes — keep
+        // completing until a slot opens, as the hardware would.
+        while !tm.can_issue() {
+            let idx = rng.below(outstanding.len() as u64) as usize;
+            let (tag, done) = outstanding.swap_remove(idx);
+            for (t, r) in tm.complete(tag, done) {
+                drained_tags.push(t);
+                drained_times.push(r);
+            }
+        }
+        let tag = tm.issue();
+        // DRAM-ish (fast) or NVM-ish (slow) media completion.
+        let latency = if rng.chance(0.5) {
+            30 + rng.below(40)
+        } else {
+            80 + rng.below(400)
+        };
+        outstanding.push((tag, now + latency));
+    }
+    // Drain the rest in random order.
+    while !outstanding.is_empty() {
+        let idx = rng.below(outstanding.len() as u64) as usize;
+        let (tag, done) = outstanding.swap_remove(idx);
+        for (t, r) in tm.complete(tag, done) {
+            drained_tags.push(t);
+            drained_times.push(r);
+        }
+    }
+    (drained_tags, drained_times, n)
+}
+
+#[test]
+fn prop_responses_drain_in_request_order() {
+    run_prop("drain-order", |rng| {
+        let (tags, _, n) = random_episode(rng);
+        assert_eq!(tags.len() as u64, n, "every request must drain exactly once");
+        for w in tags.windows(2) {
+            // Tags are allocated sequentially (wrapping); drains must
+            // follow the same sequence.
+            assert_eq!(w[1], w[0].wrapping_add(1), "out-of-order drain");
+        }
+    });
+}
+
+#[test]
+fn prop_release_times_monotone() {
+    run_prop("release-monotone", |rng| {
+        let (_, times, _) = random_episode(rng);
+        for w in times.windows(2) {
+            assert!(w[0] <= w[1], "release times must be non-decreasing");
+        }
+    });
+}
+
+#[test]
+fn prop_release_never_before_completion() {
+    run_prop("release-after-media", |rng| {
+        let depth = 2 + rng.below(30) as usize;
+        let mut tm = TagMatcher::new(depth);
+        let n = depth as u64;
+        let mut media: Vec<(u16, u64)> = (0..n)
+            .map(|_| {
+                let tag = tm.issue();
+                (tag, rng.below(1000))
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..media.len()).collect();
+        rng.shuffle(&mut order);
+        let mut releases = std::collections::HashMap::new();
+        for &i in &order {
+            let (tag, done) = media[i];
+            for (t, r) in tm.complete(tag, done) {
+                releases.insert(t, r);
+            }
+        }
+        media.sort_by_key(|&(t, _)| t);
+        for (tag, done) in media {
+            let r = releases[&tag];
+            assert!(r >= done, "tag {tag} released at {r} before media done {done}");
+        }
+    });
+}
+
+#[test]
+fn prop_reorder_wait_only_when_inverted() {
+    run_prop("reorder-accounting", |rng| {
+        let mut tm = TagMatcher::new(16);
+        let a = tm.issue();
+        let b = tm.issue();
+        let la = 50 + rng.below(500);
+        let lb = 50 + rng.below(500);
+        // Complete b first, then a.
+        assert!(tm.complete(b, lb).is_empty());
+        let rel = tm.complete(a, la);
+        assert_eq!(rel.len(), 2);
+        if lb >= la {
+            // b was already later: it waited lb.max(la) - lb = 0 extra.
+            assert_eq!(tm.reorder_wait_ns, 0);
+        } else {
+            assert_eq!(tm.reorder_wait_ns, la - lb);
+        }
+    });
+}

@@ -1,0 +1,167 @@
+//! Property tests for the DMA page-swap engine (§III-D).
+//!
+//! "When a memory request is targeted at the page being swapped, we use
+//! the swap progress indicator to decide where to redirect the memory
+//! requests. ... We spent considerable time to design and verify the
+//! logic design to ensure all possible cases are covered and processed
+//! properly." — these sweeps are that verification for our model:
+//! arbitrary probe times × offsets × block sizes must route to exactly
+//! the device that holds the current copy of the data.
+
+use hymem::hmmu::dma::{DmaEngine, DmaRoute};
+use hymem::hmmu::redirection::{Device, Mapping};
+use hymem::util::prop::run_prop;
+
+fn maps() -> (Mapping, Mapping) {
+    (
+        Mapping {
+            device: Device::Nvm,
+            frame: 7,
+        },
+        Mapping {
+            device: Device::Dram,
+            frame: 3,
+        },
+    )
+}
+
+#[test]
+fn prop_route_is_consistent_with_block_windows() {
+    run_prop("dma-route-windows", |rng| {
+        let block = *[128u64, 256, 512, 1024].get(rng.below(4) as usize).unwrap();
+        let page = 4096u64;
+        let pipelined = rng.chance(0.5);
+        let mut dma = DmaEngine::new(block, page, pipelined);
+        let (ma, mb) = maps();
+        let start = rng.below(10_000);
+        // Random per-access latencies for this episode.
+        let lat_r = 20 + rng.below(60);
+        let lat_w = 30 + rng.below(80);
+        let done = dma.start_swap(
+            10,
+            ma,
+            20,
+            mb,
+            start,
+            &mut |_d, _a, k, _b, at| at + if k.is_write() { lat_w } else { lat_r },
+        );
+        assert!(done > start);
+
+        // Probe random (page, offset, time) triples.
+        for _ in 0..64 {
+            let probe_page = if rng.chance(0.8) {
+                if rng.chance(0.5) {
+                    10
+                } else {
+                    20
+                }
+            } else {
+                rng.below(100)
+            };
+            let offset = rng.below(page);
+            let t = start + rng.below((done - start) * 2);
+            let (route, swap) = dma.route(probe_page, offset, t);
+            if probe_page != 10 && probe_page != 20 {
+                assert_eq!(route, DmaRoute::NotInvolved);
+                continue;
+            }
+            let s = swap.expect("swap record for involved page");
+            match route {
+                DmaRoute::NotInvolved => panic!("involved page not routed"),
+                DmaRoute::UseOriginal => {
+                    // Data not yet moved: the original frame holds it.
+                    assert_eq!(s.original(probe_page), if probe_page == 10 { ma } else { mb });
+                }
+                DmaRoute::UseDestination => {
+                    assert_eq!(
+                        s.destination(probe_page),
+                        if probe_page == 10 { mb } else { ma }
+                    );
+                }
+                DmaRoute::Stall(until) => {
+                    // Stall must end strictly after the probe and no
+                    // later than the whole swap.
+                    assert!(until > t, "stall {until} <= probe {t}");
+                    assert!(until <= done);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_progress_partitions_page_at_any_instant() {
+    // At any time t, the page's blocks partition into
+    // committed (dest) | in-flight (stall) | pending (orig),
+    // in that order with at most one in-flight region boundary pair.
+    run_prop("dma-progress-partition", |rng| {
+        let mut dma = DmaEngine::new(512, 4096, rng.chance(0.5));
+        let (ma, mb) = maps();
+        let lat = 25 + rng.below(100);
+        let done = dma.start_swap(1, ma, 2, mb, 0, &mut |_d, _a, _k, _b, at| at + lat);
+        let t = rng.below(done + 10);
+        let mut seen_states = Vec::new();
+        for b in 0..8u64 {
+            let (route, _) = dma.route(1, b * 512, t);
+            seen_states.push(match route {
+                DmaRoute::UseDestination => 0u8,
+                DmaRoute::Stall(_) => 1,
+                DmaRoute::UseOriginal => 2,
+                DmaRoute::NotInvolved => panic!("page 1 is involved"),
+            });
+        }
+        // States must be non-decreasing (committed prefix, then in-flight,
+        // then pending) for sequential DMA; pipelined overlap allows
+        // multiple in-flight blocks but still no committed-after-pending.
+        for w in seen_states.windows(2) {
+            assert!(
+                w[0] <= w[1],
+                "non-monotone swap progress: {seen_states:?} at t={t}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_commit_exactly_once() {
+    run_prop("dma-commit-once", |rng| {
+        let mut dma = DmaEngine::new(512, 4096, false);
+        let (ma, mb) = maps();
+        let mut commits = 0;
+        let n_swaps = 1 + rng.below(4);
+        let mut t = 0;
+        for i in 0..n_swaps {
+            let pa = 100 + i * 2;
+            let pb = 101 + i * 2;
+            t = dma.start_swap(pa, ma, pb, mb, t + rng.below(100), &mut |_d, _a, _k, _b, at| {
+                at + 10
+            });
+        }
+        // Drain at random times, possibly before completion.
+        let mut probe = 0;
+        for _ in 0..10 {
+            probe += rng.below(t + 100);
+            commits += dma.drain_committed(probe).len();
+        }
+        commits += dma.drain_committed(t + 1).len();
+        assert_eq!(commits as u64, n_swaps, "each swap commits exactly once");
+        assert_eq!(dma.active_count(), 0);
+    });
+}
+
+#[test]
+fn prop_byte_accounting() {
+    run_prop("dma-bytes", |rng| {
+        let block = *[256u64, 512, 1024].get(rng.below(3) as usize).unwrap();
+        let mut dma = DmaEngine::new(block, 4096, false);
+        let (ma, mb) = maps();
+        let n = 1 + rng.below(5);
+        let mut t = 0;
+        for i in 0..n {
+            t = dma.start_swap(i * 2, ma, i * 2 + 1, mb, t, &mut |_d, _a, _k, _b, at| at + 5);
+        }
+        // A swap moves both pages: 2 * page_bytes per swap.
+        assert_eq!(dma.bytes_moved, n * 2 * 4096);
+        assert_eq!(dma.blocks_moved, n * (4096 / block));
+    });
+}

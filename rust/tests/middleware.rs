@@ -1,0 +1,151 @@
+//! Middleware-path integration (paper Fig 4 + §III-G): driver frame pool
+//! → jemalloc-like arenas → placement hints → HMMU placement; plus
+//! allocator property sweeps and failure injection.
+
+use hymem::alloc::{ArenaAllocator, GenPool, HintStore, Placement};
+use hymem::config::{PolicyKind, SystemConfig};
+use hymem::hmmu::{Device, Hmmu};
+use hymem::mem::AccessKind;
+use hymem::util::prop::run_prop;
+
+#[test]
+fn hints_flow_from_malloc_to_hmmu_placement() {
+    // Allocate with hints through the middleware, then touch the memory
+    // through the HMMU: placement must honor the hints (§III-G).
+    let mut cfg = SystemConfig::default_scaled(64);
+    cfg.policy = PolicyKind::Hints;
+    let page = cfg.hmmu.page_bytes;
+
+    let pool = GenPool::new(0, cfg.total_mem_bytes(), page);
+    let mut arena = ArenaAllocator::new(pool);
+
+    // Cold bulk data -> NVM; latency-critical index -> pinned DRAM.
+    let bulk = arena.malloc_hint(64 * page, Placement::PreferNvm).unwrap();
+    let index = arena.malloc_hint(4 * page, Placement::PinDram).unwrap();
+    let plain = arena.malloc(2 * page).unwrap();
+
+    let mut hmmu = Hmmu::new(cfg, None);
+    hmmu.set_hints(arena.hints().clone());
+
+    let mut t = 0;
+    for off in (0..64 * page).step_by(page as usize) {
+        t = hmmu.access(bulk + off, AccessKind::Write, 64, t + 100);
+    }
+    for off in (0..4 * page).step_by(page as usize) {
+        t = hmmu.access(index + off, AccessKind::Read, 64, t + 100);
+    }
+    hmmu.access(plain, AccessKind::Read, 64, t + 100);
+
+    // Bulk pages must be NVM-resident; index pages DRAM-resident.
+    for off in (0..64 * page).step_by(page as usize) {
+        let (dev, _) = hmmu.table.translate(bulk + off).unwrap();
+        assert_eq!(dev, Device::Nvm, "bulk page at +{off} not in NVM");
+    }
+    for off in (0..4 * page).step_by(page as usize) {
+        let (dev, _) = hmmu.table.translate(index + off).unwrap();
+        assert_eq!(dev, Device::Dram, "index page at +{off} not in DRAM");
+    }
+}
+
+#[test]
+fn prop_arena_alloc_free_never_overlaps() {
+    run_prop("arena-no-overlap", |rng| {
+        let mut arena = ArenaAllocator::new(GenPool::new(0x10_0000, 8 << 20, 4096));
+        let mut live: Vec<(u64, u64)> = Vec::new();
+        for _ in 0..200 {
+            if live.is_empty() || rng.chance(0.6) {
+                let size = 1 + rng.below(100_000);
+                if let Ok(addr) = arena.malloc(size) {
+                    // No overlap with any live allocation.
+                    for &(a, s) in &live {
+                        assert!(
+                            addr + size <= a || a + s <= addr,
+                            "overlap: new [{addr:#x},+{size}) vs live [{a:#x},+{s})"
+                        );
+                    }
+                    live.push((addr, size));
+                }
+            } else {
+                let idx = rng.below(live.len() as u64) as usize;
+                let (addr, _) = live.swap_remove(idx);
+                arena.free(addr).unwrap();
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_genpool_free_bytes_conserved() {
+    run_prop("genpool-conservation", |rng| {
+        let cap = 4 << 20;
+        let mut pool = GenPool::new(0, cap, 4096);
+        let mut live: Vec<(u64, u64)> = Vec::new();
+        for _ in 0..100 {
+            if live.is_empty() || rng.chance(0.55) {
+                let bytes = 1 + rng.below(300_000);
+                if let Ok(a) = pool.alloc(bytes) {
+                    live.push((a, bytes));
+                }
+            } else {
+                let idx = rng.below(live.len() as u64) as usize;
+                let (a, b) = live.swap_remove(idx);
+                pool.free(a, b).unwrap();
+            }
+            let live_pages: u64 = live
+                .iter()
+                .map(|&(_, b)| b.div_ceil(4096) * 4096)
+                .sum();
+            assert_eq!(
+                pool.free_bytes() + live_pages,
+                cap,
+                "leak or double-count with {} live allocations",
+                live.len()
+            );
+        }
+    });
+}
+
+#[test]
+fn failure_injection_exhaustion_and_recovery() {
+    // Drive the pool to exhaustion, verify clean failure, then recover.
+    let mut pool = GenPool::new(0, 1 << 20, 4096);
+    let a = pool.alloc(1 << 20).unwrap();
+    assert!(pool.alloc(4096).is_err(), "exhausted pool must fail");
+    assert_eq!(pool.fail_count, 1);
+    pool.free(a, 1 << 20).unwrap();
+    assert!(pool.alloc(4096).is_ok(), "pool must recover after free");
+}
+
+#[test]
+fn hint_store_shadowing_is_exact() {
+    let mut h = HintStore::new();
+    h.insert(0x0000, 0x10000, Placement::PreferNvm);
+    h.insert(0x4000, 0x1000, Placement::PinDram);
+    h.insert(0x8000, 0x2000, Placement::PreferDram);
+    // Boundaries are half-open.
+    assert_eq!(h.lookup(0x3FFF), Placement::PreferNvm);
+    assert_eq!(h.lookup(0x4000), Placement::PinDram);
+    assert_eq!(h.lookup(0x4FFF), Placement::PinDram);
+    assert_eq!(h.lookup(0x5000), Placement::PreferNvm);
+    assert_eq!(h.lookup(0x9FFF), Placement::PreferDram);
+    assert_eq!(h.lookup(0xA000), Placement::PreferNvm);
+    assert_eq!(h.lookup(0x10000), Placement::Any);
+}
+
+#[test]
+fn hybrid_exhaustion_is_a_model_error_not_ub() {
+    // Touching more pages than DRAM+NVM frames must panic with a clear
+    // message (the paper's platform would fault the same way).
+    let mut cfg = SystemConfig::default_scaled(64);
+    cfg.policy = PolicyKind::FirstTouch;
+    let pages = cfg.total_pages();
+    let page = cfg.hmmu.page_bytes;
+    let mut hmmu = Hmmu::new(cfg, None);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut t = 0;
+        for p in 0..pages + 1 {
+            t = hmmu.access(p * page, AccessKind::Read, 64, t + 10);
+        }
+    }));
+    assert!(result.is_err(), "over-commit must be detected");
+}

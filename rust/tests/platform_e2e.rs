@@ -1,0 +1,161 @@
+//! End-to-end platform integration tests: invariants that must hold
+//! across the full stack (trace → caches → PCIe → HMMU → devices),
+//! property-swept over workloads, policies and scales.
+
+use hymem::config::{PolicyKind, SystemConfig};
+use hymem::platform::{Platform, RunOpts};
+use hymem::util::prop::run_prop_n;
+use hymem::workload::{spec, WORKLOADS};
+
+fn opts(ops: u64) -> RunOpts {
+    RunOpts {
+        ops,
+        flush_at_end: false,
+    }
+}
+
+#[test]
+fn all_workloads_run_under_all_policies() {
+    for wl in &WORKLOADS {
+        for kind in [
+            PolicyKind::Static,
+            PolicyKind::FirstTouch,
+            PolicyKind::Hotness,
+            PolicyKind::Hints,
+        ] {
+            let mut cfg = SystemConfig::default_scaled(64);
+            cfg.policy = kind;
+            cfg.hmmu.epoch_requests = 3000;
+            let r = Platform::new(cfg).run_opts(wl, opts(12_000)).unwrap();
+            assert!(
+                r.platform_time_ns >= r.native_time_ns,
+                "{} under {:?}: platform faster than native?",
+                wl.name,
+                kind
+            );
+            assert_eq!(r.mem_ops, 12_000);
+        }
+    }
+}
+
+#[test]
+fn prop_conservation_of_requests() {
+    // Every post-cache access must be accounted at the HMMU: host
+    // reads = fills, and device routing partitions host requests.
+    run_prop_n("request-conservation", 0xAB, 12, |rng| {
+        let wl = WORKLOADS[rng.below(WORKLOADS.len() as u64) as usize];
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = if rng.chance(0.5) {
+            PolicyKind::Hotness
+        } else {
+            PolicyKind::FirstTouch
+        };
+        cfg.seed = rng.next_u64();
+        cfg.hmmu.epoch_requests = 2000 + rng.below(4000);
+        let r = Platform::new(cfg).run_opts(&wl, opts(15_000)).unwrap();
+        let c = &r.counters;
+        assert_eq!(c.host_reads, r.memory_accesses, "{}", wl.name);
+        // Host requests (reads+writes) = device requests (DMA traffic is
+        // counted at the devices, not as host traffic).
+        let host = c.host_reads + c.host_writes;
+        let device = c.dram_reads + c.dram_writes + c.nvm_reads + c.nvm_writes;
+        assert_eq!(host, device, "{}: host {host} != device {device}", wl.name);
+        // Page placement happened for every touched page.
+        assert!(c.pages_placed_dram + c.pages_placed_nvm > 0);
+    });
+}
+
+#[test]
+fn prop_migration_bookkeeping_consistent() {
+    run_prop_n("migration-bookkeeping", 0xCD, 8, |rng| {
+        let wl = spec::by_name("520.omnetpp").unwrap();
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = PolicyKind::Hotness;
+        cfg.seed = rng.next_u64();
+        cfg.hmmu.epoch_requests = 1500;
+        cfg.hmmu.migrations_per_epoch = 1 + rng.below(16) as u32;
+        let r = Platform::new(cfg.clone()).run_opts(&wl, opts(20_000)).unwrap();
+        // Migration byte accounting: 2 pages per swap.
+        assert_eq!(
+            r.counters.migration_bytes,
+            r.counters.migrations * 2 * cfg.hmmu.page_bytes
+        );
+        // Migration cap respected per epoch (on average, can't exceed).
+        assert!(
+            r.counters.migrations
+                <= r.counters.epochs * cfg.hmmu.migrations_per_epoch as u64,
+            "migrations {} > epochs {} * cap {}",
+            r.counters.migrations,
+            r.counters.epochs,
+            cfg.hmmu.migrations_per_epoch
+        );
+    });
+}
+
+#[test]
+fn hotness_beats_first_touch_on_dram_service_for_skewed_overflow() {
+    // A workload whose hot set overflows DRAM: migration should raise the
+    // fraction of traffic served by DRAM vs frozen first-touch placement.
+    let wl = spec::by_name("531.deepsjeng").unwrap(); // zipf random dominant
+    let mut ft_cfg = SystemConfig::default_scaled(32);
+    ft_cfg.policy = PolicyKind::FirstTouch;
+    let mut hot_cfg = SystemConfig::default_scaled(32);
+    hot_cfg.policy = PolicyKind::Hotness;
+    hot_cfg.hmmu.epoch_requests = 4000;
+    hot_cfg.hmmu.migrations_per_epoch = 64;
+
+    let ops = opts(150_000);
+    let ft = Platform::new(ft_cfg).run_opts(&wl, ops).unwrap();
+    let hot = Platform::new(hot_cfg).run_opts(&wl, ops).unwrap();
+    assert!(
+        hot.counters.dram_service_ratio() > ft.counters.dram_service_ratio(),
+        "hotness {:.3} should beat first-touch {:.3}",
+        hot.counters.dram_service_ratio(),
+        ft.counters.dram_service_ratio()
+    );
+}
+
+#[test]
+fn fig8_ordering_mcf_max_imagick_min() {
+    // The Fig 8 calibration target on a fast subset.
+    let cfg = SystemConfig::default_scaled(64);
+    let names = ["505.mcf", "557.xz", "541.leela", "538.imagick"];
+    let mut volumes = Vec::new();
+    for n in names {
+        let wl = spec::by_name(n).unwrap();
+        let r = Platform::new(cfg.clone()).run_opts(&wl, opts(60_000)).unwrap();
+        let (rb, wb) = r.counters.fig8_row();
+        volumes.push((n, rb + wb));
+    }
+    let mcf = volumes[0].1;
+    let imagick = volumes[3].1;
+    for &(n, v) in &volumes[1..3] {
+        assert!(mcf >= v, "mcf should be max, but {n} has {v} > {mcf}");
+        assert!(imagick <= v, "imagick should be min, but {n} has {v} < {imagick}");
+    }
+}
+
+#[test]
+fn scale_one_paper_config_smoke() {
+    // Full-size Table II config must at least run (short trace).
+    let mut cfg = SystemConfig::paper();
+    cfg.policy = PolicyKind::FirstTouch;
+    let wl = spec::by_name("541.leela").unwrap();
+    let r = Platform::new(cfg).run_opts(&wl, opts(5_000)).unwrap();
+    assert_eq!(r.scale, 1);
+    assert!(r.platform_time_ns > 0);
+}
+
+#[test]
+fn seeds_change_traffic_but_not_structure() {
+    let wl = spec::by_name("500.perlbench").unwrap();
+    let mut a_cfg = SystemConfig::default_scaled(64);
+    a_cfg.seed = 1;
+    let mut b_cfg = SystemConfig::default_scaled(64);
+    b_cfg.seed = 2;
+    let a = Platform::new(a_cfg).run_opts(&wl, opts(20_000)).unwrap();
+    let b = Platform::new(b_cfg).run_opts(&wl, opts(20_000)).unwrap();
+    assert_ne!(a.platform_time_ns, b.platform_time_ns);
+    // Same op count and same conservation invariants regardless of seed.
+    assert_eq!(a.mem_ops, b.mem_ops);
+}

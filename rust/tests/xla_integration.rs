@@ -1,0 +1,136 @@
+//! Integration tests: the AOT XLA artifacts loaded through PJRT must be
+//! bit-compatible with the native Rust engine, and the full platform must
+//! run end-to-end through the XLA policy step.
+//!
+//! These tests are skipped (with a message) when `artifacts/` has not
+//! been built — run `make artifacts` first. CI runs them via `make test`.
+
+use hymem::config::{PolicyKind, SystemConfig};
+use hymem::hmmu::policy::{HotnessEngine, NativeHotnessEngine};
+use hymem::platform::{Platform, RunOpts};
+use hymem::runtime::{default_artifact_dir, XlaHotnessEngine, XlaLatencyModel};
+use hymem::util::rng::Xoshiro256;
+use hymem::workload::spec;
+
+fn artifacts_available() -> bool {
+    XlaHotnessEngine::load_default().is_ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: no artifacts (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn xla_policy_cross_check_exact() {
+    require_artifacts!();
+    let mut xla = XlaHotnessEngine::load_default().unwrap();
+    let mut native = NativeHotnessEngine;
+
+    let mut rng = Xoshiro256::new(777);
+    for &n in &[100usize, 4096, 5000, 16384, 20000] {
+        let reads: Vec<f32> = (0..n).map(|_| rng.below(1000) as f32).collect();
+        let writes: Vec<f32> = (0..n).map(|_| rng.below(500) as f32).collect();
+        let prev: Vec<f32> = (0..n).map(|_| rng.f64() as f32 * 1e4).collect();
+        let in_dram: Vec<f32> = (0..n).map(|_| (rng.chance(0.3)) as u8 as f32).collect();
+
+        let a = xla.step(&reads, &writes, &prev, &in_dram);
+        let b = native.step(&reads, &writes, &prev, &in_dram);
+        assert_eq!(a.hotness.len(), n);
+        // Exact equality: same f32 ops in the same order on both sides.
+        assert_eq!(a.hotness, b.hotness, "hotness mismatch at n={n}");
+        assert_eq!(a.promote_score, b.promote_score, "promote mismatch at n={n}");
+        assert_eq!(a.demote_score, b.demote_score, "demote mismatch at n={n}");
+    }
+    assert!(xla.invocations >= 5);
+}
+
+#[test]
+fn xla_engine_padding_is_invisible() {
+    require_artifacts!();
+    let mut xla = XlaHotnessEngine::load_default().unwrap();
+    // 100 pages -> padded to 4096 internally; outputs truncated back.
+    let out = xla.step(&[1.0; 100], &[0.0; 100], &[0.0; 100], &[0.0; 100]);
+    assert_eq!(out.hotness.len(), 100);
+    assert!(out.hotness.iter().all(|&h| h == 1.0));
+}
+
+#[test]
+fn platform_runs_with_xla_engine_end_to_end() {
+    require_artifacts!();
+    let mut cfg = SystemConfig::default_scaled(64);
+    cfg.policy = PolicyKind::Hotness;
+    cfg.hmmu.epoch_requests = 5_000;
+    let engine = XlaHotnessEngine::load_default().unwrap();
+    let wl = spec::by_name("520.omnetpp").unwrap();
+    let r = Platform::new(cfg)
+        .with_engine(Box::new(engine))
+        .run_opts(
+            &wl,
+            RunOpts {
+                ops: 40_000,
+                flush_at_end: false,
+            },
+        )
+        .unwrap();
+    assert!(r.counters.epochs > 0, "policy epochs must have run");
+    assert!(r.platform_time_ns > r.native_time_ns);
+}
+
+#[test]
+fn xla_and_native_engines_produce_identical_platform_runs() {
+    require_artifacts!();
+    let wl = spec::by_name("505.mcf").unwrap();
+    let mut cfg = SystemConfig::default_scaled(64);
+    cfg.policy = PolicyKind::Hotness;
+    cfg.hmmu.epoch_requests = 4_000;
+    let opts = RunOpts {
+        ops: 30_000,
+        flush_at_end: false,
+    };
+
+    let r_native = Platform::new(cfg.clone()).run_opts(&wl, opts).unwrap();
+    let r_xla = Platform::new(cfg)
+        .with_engine(Box::new(XlaHotnessEngine::load_default().unwrap()))
+        .run_opts(&wl, opts)
+        .unwrap();
+
+    // Bit-compatible engines => identical simulated timelines & counters.
+    assert_eq!(r_native.platform_time_ns, r_xla.platform_time_ns);
+    assert_eq!(r_native.counters.migrations, r_xla.counters.migrations);
+    assert_eq!(
+        r_native.counters.host_read_bytes,
+        r_xla.counters.host_read_bytes
+    );
+}
+
+#[test]
+fn latency_model_artifact_matches_formula() {
+    require_artifacts!();
+    let mut m = match XlaLatencyModel::load(&default_artifact_dir(), 1024) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP: latency artifact missing: {e}");
+            return;
+        }
+    };
+    let is_nvm: Vec<f32> = (0..1024).map(|i| (i % 2) as f32).collect();
+    let is_write: Vec<f32> = (0..1024).map(|i| ((i / 2) % 2) as f32).collect();
+    let qd: Vec<f32> = (0..1024).map(|i| (i % 8) as f32).collect();
+    let out = m.estimate(&is_nvm, &is_write, &qd).unwrap();
+    for i in 0..1024 {
+        let expect = 510.0
+            + 32.0
+            + is_nvm[i] * (is_write[i] * 225.0 + (1.0 - is_write[i]) * 50.0)
+            + qd[i] * 18.0;
+        assert!(
+            (out[i] - expect).abs() < 1e-3,
+            "i={i}: got {} want {expect}",
+            out[i]
+        );
+    }
+}
