@@ -10,12 +10,12 @@ use hymem::config::{MemTech, SystemConfig, TechPreset};
 use hymem::platform::{Platform, RunOpts};
 use hymem::workload::spec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hymem::util::error::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let wl_name = args.first().map(|s| s.as_str()).unwrap_or("505.mcf");
     let ops: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400_000);
     let wl = spec::by_name(wl_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown workload {wl_name}"))?;
+        .ok_or_else(|| hymem::anyhow!("unknown workload {wl_name}"))?;
 
     println!("=== NVM technology sensitivity: {} ===\n", wl.name);
     println!(

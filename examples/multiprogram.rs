@@ -11,7 +11,7 @@ use hymem::config::SystemConfig;
 use hymem::platform::{run_multicore, RunOpts};
 use hymem::workload::spec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hymem::util::error::Result<()> {
     let ops: u64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())

@@ -2,23 +2,25 @@
 //! enable — evaluate data placement/migration policies against each
 //! other on the same workload.
 //!
-//! Compares static / first-touch / hotness-migration on slowdown, DRAM
-//! service ratio, NVM wear and estimated dynamic energy.
+//! Compares static / first-touch / hotness-migration / wear-aware on
+//! slowdown, DRAM service ratio, NVM wear and estimated dynamic energy.
+//! The four policy runs are independent scenarios, so they go through the
+//! parallel sweep engine — one thread each, bit-identical to serial.
 //!
 //! ```bash
 //! cargo run --release --example policy_comparison -- [workload] [ops]
 //! ```
 
 use hymem::config::{PolicyKind, SystemConfig};
-use hymem::platform::{Platform, RunOpts};
+use hymem::sweep::{run_sweep, Scenario};
 use hymem::workload::spec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hymem::util::error::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let wl_name = args.first().map(|s| s.as_str()).unwrap_or("520.omnetpp");
     let ops: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(800_000);
     let wl = spec::by_name(wl_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown workload {wl_name}"))?;
+        .ok_or_else(|| hymem::anyhow!("unknown workload {wl_name}"))?;
 
     println!("=== policy comparison on {} ({} mem-ops) ===\n", wl.name, ops);
     println!(
@@ -26,32 +28,33 @@ fn main() -> anyhow::Result<()> {
         "policy", "slowdown", "dram-serv", "migrations", "nvm-wear", "energy", "p99(ns)"
     );
 
-    for kind in [
+    let policies = [
         PolicyKind::Static,
         PolicyKind::FirstTouch,
         PolicyKind::Hotness,
         PolicyKind::WearAware,
-    ] {
-        let mut cfg = SystemConfig::default_scaled(16);
-        cfg.policy = kind;
-        let r = Platform::new(cfg).run_opts(
-            &wl,
-            RunOpts {
-                ops,
-                flush_at_end: false,
-            },
-        )?;
+    ];
+    let base = SystemConfig::default_scaled(16);
+    let scenarios = Scenario::grid(&[wl], &policies, &base, ops);
+    let report = run_sweep(&scenarios, policies.len())?;
+
+    for r in &report.scenarios {
         println!(
             "{:<12} {:>8.2}x {:>9.1}% {:>12} {:>10} {:>8.1}mJ {:>9}",
-            kind.name(),
-            r.slowdown(),
-            r.counters.dram_service_ratio() * 100.0,
-            r.counters.migrations,
+            r.policy,
+            r.slowdown,
+            r.dram_service_ratio * 100.0,
+            r.migrations,
             r.nvm_max_wear,
-            r.counters.energy_estimate_mj(),
-            r.counters.latency.percentile(99.0),
+            r.energy_mj,
+            r.latency_p99_ns,
         );
     }
+    println!(
+        "\n{} scenarios in {:.2}x less wall time than serial",
+        report.scenarios.len(),
+        report.parallel_speedup()
+    );
 
     println!(
         "\nExpected shape: hotness > first-touch > static on DRAM service \

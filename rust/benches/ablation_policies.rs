@@ -1,27 +1,99 @@
 //! Ablation benches for the design choices DESIGN.md calls out:
 //!
-//! 1. Placement policy (static / first-touch / hotness / hints).
-//! 2. Epoch length for the hotness policy.
-//! 3. Migration cap per epoch.
-//! 4. HDR FIFO depth (consistency backpressure).
+//! 1. Placement policy (static / first-touch / hotness / hints / wear).
+//! 2. NVM wear under hotness vs wear-aware on a write-heavy load.
+//! 3. Epoch length for the hotness policy.
+//! 4. Migration cap per epoch.
+//! 5. HDR FIFO depth (consistency backpressure).
 //!
 //! Each reports modeled slowdown + DRAM service ratio + migrations, so
 //! the trade-offs the paper's platform exists to explore are visible.
+//!
+//! All 19 ablation points are independent scenarios, so the whole bench
+//! runs as **one parallel sweep** (`hymem::sweep`) — results are printed
+//! grouped, and are bit-identical to running each point serially.
 
 use hymem::config::{PolicyKind, SystemConfig};
-use hymem::platform::{Platform, RunOpts};
+use hymem::sweep::{default_threads, run_sweep, Scenario, ScenarioResult, SweepReport};
 use hymem::util::bench::BenchSuite;
+use hymem::util::units::fmt_ns;
 use hymem::workload::spec;
+
+fn find<'a>(report: &'a SweepReport, name: &str) -> &'a ScenarioResult {
+    report
+        .scenarios
+        .iter()
+        .find(|r| r.name == name)
+        .unwrap_or_else(|| panic!("missing scenario {name}"))
+}
 
 fn main() {
     let suite = BenchSuite::new("ablations: policy / epoch / migration cap / FIFO depth");
     suite.header();
     let ops = if suite.quick() { 60_000 } else { 400_000 };
     let wl = spec::by_name("531.deepsjeng").unwrap(); // skewed, DRAM-overflowing
-    let opts = RunOpts {
-        ops,
-        flush_at_end: false,
-    };
+    let lbm = spec::by_name("519.lbm").unwrap(); // write-heavy
+    let mcf = spec::by_name("505.mcf").unwrap();
+
+    let mut scenarios: Vec<Scenario> = Vec::new();
+
+    // 1. Policies on deepsjeng.
+    let policy_kinds = [
+        PolicyKind::Static,
+        PolicyKind::FirstTouch,
+        PolicyKind::Hotness,
+        PolicyKind::Hints,
+        PolicyKind::WearAware,
+    ];
+    for kind in policy_kinds {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = kind;
+        scenarios.push(Scenario::new(format!("policy/{}", kind.name()), wl, cfg, ops));
+    }
+
+    // 2. Wear comparison on write-heavy lbm.
+    for kind in [PolicyKind::Hotness, PolicyKind::WearAware] {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = kind;
+        cfg.hmmu.epoch_requests = 8_000;
+        scenarios.push(Scenario::new(format!("wear/{}", kind.name()), lbm, cfg, ops));
+    }
+
+    // 3. Epoch length (hotness).
+    let epochs = [1_000u64, 4_000, 16_000, 64_000];
+    for epoch in epochs {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = epoch;
+        scenarios.push(Scenario::new(format!("epoch/{epoch}"), wl, cfg, ops));
+    }
+
+    // 4. Migration cap (hotness, epoch=8000).
+    let caps = [4u32, 16, 64, 256];
+    for cap in caps {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = 8_000;
+        cfg.hmmu.migrations_per_epoch = cap;
+        scenarios.push(Scenario::new(format!("cap/{cap}"), wl, cfg, ops));
+    }
+
+    // 5. HDR FIFO depth (static, mcf).
+    let depths = [4u32, 16, 64, 256];
+    for depth in depths {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = PolicyKind::Static;
+        cfg.hmmu.hdr_fifo_depth = depth;
+        scenarios.push(Scenario::new(format!("fifo/{depth}"), mcf, cfg, ops));
+    }
+
+    let threads = default_threads();
+    suite.report_row(&format!(
+        "running {} ablation scenarios on {} threads...",
+        scenarios.len(),
+        threads
+    ));
+    let report = run_sweep(&scenarios, threads).expect("ablation sweep");
 
     // 1. Policies.
     suite.report_row("--- policy ablation (531.deepsjeng) ---");
@@ -29,109 +101,92 @@ fn main() {
         "{:<14} {:>10} {:>10} {:>12} {:>10}",
         "policy", "slowdown", "dram-serv", "migrations", "energy(mJ)"
     ));
-    for kind in [
-        PolicyKind::Static,
-        PolicyKind::FirstTouch,
-        PolicyKind::Hotness,
-        PolicyKind::Hints,
-        PolicyKind::WearAware,
-    ] {
-        let mut cfg = SystemConfig::default_scaled(16);
-        cfg.policy = kind;
-        let r = Platform::new(cfg).run_opts(&wl, opts).expect("run");
+    for kind in policy_kinds {
+        let r = find(&report, &format!("policy/{}", kind.name()));
         suite.report_row(&format!(
             "{:<14} {:>9.2}x {:>9.1}% {:>12} {:>10.1}",
             kind.name(),
-            r.slowdown(),
-            r.counters.dram_service_ratio() * 100.0,
-            r.counters.migrations,
-            r.counters.energy_estimate_mj()
+            r.slowdown,
+            r.dram_service_ratio * 100.0,
+            r.migrations,
+            r.energy_mj
         ));
     }
 
-    // 1b. Wear comparison: hotness vs wear-aware on a write-heavy load.
+    // 2. Wear.
     suite.report_row("--- NVM wear: hotness vs wear-aware (519.lbm, write-heavy) ---");
     suite.report_row(&format!(
         "{:<14} {:>10} {:>12} {:>12}",
         "policy", "slowdown", "nvm-max-wear", "nvm-writes"
     ));
-    let lbm = spec::by_name("519.lbm").unwrap();
     for kind in [PolicyKind::Hotness, PolicyKind::WearAware] {
-        let mut cfg = SystemConfig::default_scaled(16);
-        cfg.policy = kind;
-        cfg.hmmu.epoch_requests = 8_000;
-        let r = Platform::new(cfg).run_opts(&lbm, opts).expect("run");
+        let r = find(&report, &format!("wear/{}", kind.name()));
         suite.report_row(&format!(
             "{:<14} {:>9.2}x {:>12} {:>12}",
             kind.name(),
-            r.slowdown(),
+            r.slowdown,
             r.nvm_max_wear,
-            r.counters.nvm_writes
+            r.nvm_writes
         ));
     }
 
-    // 2. Epoch length.
+    // 3. Epoch length.
     suite.report_row("--- epoch-length ablation (hotness) ---");
     suite.report_row(&format!(
         "{:<14} {:>10} {:>10} {:>12}",
         "epoch", "slowdown", "dram-serv", "migrations"
     ));
-    for epoch in [1_000u64, 4_000, 16_000, 64_000] {
-        let mut cfg = SystemConfig::default_scaled(16);
-        cfg.policy = PolicyKind::Hotness;
-        cfg.hmmu.epoch_requests = epoch;
-        let r = Platform::new(cfg).run_opts(&wl, opts).expect("run");
+    for epoch in epochs {
+        let r = find(&report, &format!("epoch/{epoch}"));
         suite.report_row(&format!(
             "{:<14} {:>9.2}x {:>9.1}% {:>12}",
             epoch,
-            r.slowdown(),
-            r.counters.dram_service_ratio() * 100.0,
-            r.counters.migrations
+            r.slowdown,
+            r.dram_service_ratio * 100.0,
+            r.migrations
         ));
     }
 
-    // 3. Migration cap.
+    // 4. Migration cap.
     suite.report_row("--- migration-cap ablation (hotness, epoch=8000) ---");
     suite.report_row(&format!(
         "{:<14} {:>10} {:>10} {:>12} {:>14}",
         "cap", "slowdown", "dram-serv", "migrations", "dma-conflicts"
     ));
-    for cap in [4u32, 16, 64, 256] {
-        let mut cfg = SystemConfig::default_scaled(16);
-        cfg.policy = PolicyKind::Hotness;
-        cfg.hmmu.epoch_requests = 8_000;
-        cfg.hmmu.migrations_per_epoch = cap;
-        let r = Platform::new(cfg).run_opts(&wl, opts).expect("run");
+    for cap in caps {
+        let r = find(&report, &format!("cap/{cap}"));
         suite.report_row(&format!(
             "{:<14} {:>9.2}x {:>9.1}% {:>12} {:>14}",
             cap,
-            r.slowdown(),
-            r.counters.dram_service_ratio() * 100.0,
-            r.counters.migrations,
-            r.counters.dma_conflict_stalls
+            r.slowdown,
+            r.dram_service_ratio * 100.0,
+            r.migrations,
+            r.dma_conflict_stalls
         ));
     }
 
-    // 4. HDR FIFO depth.
+    // 5. HDR FIFO depth.
     suite.report_row("--- HDR FIFO depth ablation (505.mcf) ---");
     suite.report_row(&format!(
         "{:<14} {:>10} {:>14} {:>14}",
         "depth", "slowdown", "fifo-stalls", "reorder-wait"
     ));
-    let mcf = spec::by_name("505.mcf").unwrap();
-    for depth in [4u32, 16, 64, 256] {
-        let mut cfg = SystemConfig::default_scaled(16);
-        cfg.policy = PolicyKind::Static;
-        cfg.hmmu.hdr_fifo_depth = depth;
-        let r = Platform::new(cfg).run_opts(&mcf, opts).expect("run");
+    for depth in depths {
+        let r = find(&report, &format!("fifo/{depth}"));
         suite.report_row(&format!(
             "{:<14} {:>9.2}x {:>14} {:>11} ns",
             depth,
-            r.slowdown(),
-            r.counters.fifo_full_stalls,
-            r.counters.reorder_wait_ns
+            r.slowdown,
+            r.fifo_full_stalls,
+            r.reorder_wait_ns
         ));
     }
 
+    suite.report_row(&format!(
+        "sweep wall {} vs serial-equivalent {} => {:.2}x parallel speedup",
+        fmt_ns(report.wall_ns),
+        fmt_ns(report.serial_wall_ns),
+        report.parallel_speedup()
+    ));
     suite.finish();
 }

@@ -4,7 +4,8 @@
 //! bottleneck.
 
 use hymem::config::{PolicyKind, SystemConfig};
-use hymem::hmmu::{Hmmu, TagMatcher};
+use hymem::hmmu::policy::{HotnessPolicy, NativeHotnessEngine, PlacementPolicy};
+use hymem::hmmu::{build_policy, Hmmu, TagMatcher};
 use hymem::mem::AccessKind;
 use hymem::pcie::PcieLink;
 use hymem::util::bench::BenchSuite;
@@ -104,5 +105,40 @@ fn main() {
         });
     }
 
+    // De-virtualization before/after: the old `Box<dyn PlacementPolicy>`
+    // vtable dispatch vs the enum-dispatched `PolicyImpl` the HMMU now
+    // uses on its per-request path (place + record_access).
+    {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = PolicyKind::Hotness;
+        let pages = cfg.total_pages();
+        let mut boxed: Box<dyn PlacementPolicy> = Box::new(HotnessPolicy::new(
+            pages,
+            Box::new(NativeHotnessEngine),
+        ));
+        let mut rng = Xoshiro256::new(4);
+        suite.bench_items("policy_dispatch/boxed-dyn (batch 10K)", 10_000, || {
+            for i in 0..10_000u64 {
+                boxed.record_access(rng.below(pages), i % 3 == 0);
+            }
+            10_000
+        });
+
+        let mut enumd = build_policy(&cfg, None);
+        let mut rng = Xoshiro256::new(4);
+        suite.bench_items("policy_dispatch/enum (batch 10K)", 10_000, || {
+            for i in 0..10_000u64 {
+                enumd.record_access(rng.below(pages), i % 3 == 0);
+            }
+            10_000
+        });
+    }
+
+    // Machine-readable perf trajectory: CI archives this per PR, and the
+    // before/after throughput comparison for hmmu_access/static and
+    // hmmu_access/hotness reads straight out of it.
+    suite
+        .write_json("BENCH_hot_path.json")
+        .expect("writing BENCH_hot_path.json");
     suite.finish();
 }

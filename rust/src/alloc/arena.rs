@@ -8,7 +8,7 @@
 
 use super::genpool::GenPool;
 use super::hints::{HintStore, Placement};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// jemalloc-style small size classes (bytes).
 const SIZE_CLASSES: [u64; 12] = [16, 32, 48, 64, 96, 128, 192, 256, 384, 512, 1024, 2048];
@@ -142,7 +142,7 @@ impl ArenaAllocator {
     pub fn free(&mut self, addr: u64) -> Result<()> {
         if let Some(run) = self.runs.iter_mut().find(|r| r.contains(addr)) {
             if !run.free(addr) {
-                anyhow::bail!("arena: double free at {addr:#x}");
+                crate::bail!("arena: double free at {addr:#x}");
             }
             self.hints.remove(addr, run.class_bytes);
             return Ok(());
@@ -152,7 +152,7 @@ impl ArenaAllocator {
             self.hints.remove(a, b);
             return self.pool.free(a, b);
         }
-        anyhow::bail!("arena: free of unknown address {addr:#x}")
+        crate::bail!("arena: free of unknown address {addr:#x}")
     }
 
     pub fn hints(&self) -> &HintStore {

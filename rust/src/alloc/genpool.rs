@@ -4,7 +4,8 @@
 //! over a free list kept sorted and coalesced, like the kernel's genpool
 //! in its default configuration.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 /// A page-granular physical frame allocator over `[base, base+size)`.
 #[derive(Clone, Debug)]

@@ -15,7 +15,7 @@ use super::gem5_like::Gem5Like;
 use crate::config::SystemConfig;
 use crate::platform::{Platform, RunOpts};
 use crate::workload::Workload;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// One simulator measurement.
 #[derive(Clone, Debug)]

@@ -7,7 +7,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 /// A parsed flat TOML document: `section.key -> raw value string`.
 #[derive(Clone, Debug, Default)]

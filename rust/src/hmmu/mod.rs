@@ -23,7 +23,7 @@ pub mod tags;
 
 pub use counters::HmmuCounters;
 pub use dma::{DmaEngine, DmaRoute};
-pub use policy::{build_policy, HotnessEngine, PlacementPolicy, PolicyView};
+pub use policy::{build_policy, HotnessEngine, PlacementPolicy, PolicyImpl, PolicyView};
 pub use redirection::{Device, Mapping, RedirectionTable};
 pub use tags::TagMatcher;
 
@@ -31,7 +31,65 @@ use crate::alloc::HintStore;
 use crate::config::SystemConfig;
 use crate::mem::{AccessKind, DramDevice, MemDevice, MemoryController, NvmDevice};
 use crate::sim::{Clock, Time};
-use std::collections::VecDeque;
+
+/// Fixed-capacity ring of outstanding-response release times — the HDR
+/// FIFO occupancy model. §Perf: replaces a per-request `VecDeque` (which
+/// reallocated and bounds-checked on the hot path) with one boxed slice
+/// allocated at construction; push/pop are two or three arithmetic ops.
+/// Entries are pushed in release order (the tag matcher's in-order drain
+/// makes release times monotone), so the front is always the earliest.
+#[derive(Clone, Debug)]
+struct ReleaseRing {
+    buf: Box<[Time]>,
+    head: usize,
+    len: usize,
+}
+
+impl ReleaseRing {
+    fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        ReleaseRing {
+            buf: vec![0; capacity].into_boxed_slice(),
+            head: 0,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn is_full(&self) -> bool {
+        self.len == self.buf.len()
+    }
+
+    #[inline]
+    fn front(&self) -> Option<Time> {
+        if self.len == 0 {
+            None
+        } else {
+            Some(self.buf[self.head])
+        }
+    }
+
+    #[inline]
+    fn pop_front(&mut self) {
+        debug_assert!(self.len > 0);
+        self.head += 1;
+        if self.head == self.buf.len() {
+            self.head = 0;
+        }
+        self.len -= 1;
+    }
+
+    #[inline]
+    fn push_back(&mut self, t: Time) {
+        debug_assert!(!self.is_full(), "HDR occupancy ring overflow");
+        let mut i = self.head + self.len;
+        if i >= self.buf.len() {
+            i -= self.buf.len();
+        }
+        self.buf[i] = t;
+        self.len += 1;
+    }
+}
 
 /// The HMMU model.
 pub struct Hmmu {
@@ -39,7 +97,9 @@ pub struct Hmmu {
     pub table: RedirectionTable,
     tags: TagMatcher,
     pub dma: DmaEngine,
-    policy: Box<dyn PlacementPolicy>,
+    /// Enum-dispatched placement policy (§Perf: de-virtualized hot path;
+    /// `dyn` survives only at the `HotnessEngine` boundary).
+    policy: PolicyImpl,
     dram_mc: MemoryController<DramDevice>,
     nvm_mc: MemoryController<NvmDevice>,
     pub counters: HmmuCounters,
@@ -47,7 +107,7 @@ pub struct Hmmu {
     /// Pipeline latency (decode + policy + route stages) in ns.
     pipeline_ns: u64,
     /// Release times of outstanding HDR FIFO entries (occupancy model).
-    hdr_occupancy: VecDeque<Time>,
+    hdr_occupancy: ReleaseRing,
     requests_since_epoch: u64,
     /// Simulated time of the last processed request (drives epoch DMA).
     last_now: Time,
@@ -98,7 +158,7 @@ impl Hmmu {
             counters: HmmuCounters::default(),
             hints: HintStore::new(),
             pipeline_ns,
-            hdr_occupancy: VecDeque::new(),
+            hdr_occupancy: ReleaseRing::new(cfg.hmmu.hdr_fifo_depth as usize),
             requests_since_epoch: 0,
             last_now: 0,
             cfg,
@@ -159,16 +219,26 @@ impl Hmmu {
 
         // --- HDR FIFO occupancy / backpressure ---
         let mut t = now;
-        while let Some(&front) = self.hdr_occupancy.front() {
+        // Responses that left by `t` free their slots.
+        while let Some(front) = self.hdr_occupancy.front() {
             if front <= t {
-                self.hdr_occupancy.pop_front();
-            } else if self.hdr_occupancy.len() >= self.cfg.hmmu.hdr_fifo_depth as usize {
-                // FIFO full: stall the pipeline until the head drains.
-                self.counters.fifo_full_stalls += 1;
-                t = front;
                 self.hdr_occupancy.pop_front();
             } else {
                 break;
+            }
+        }
+        if self.hdr_occupancy.is_full() {
+            // FIFO full: stall the pipeline until the head drains (and
+            // free anything else that drains while we wait).
+            self.counters.fifo_full_stalls += 1;
+            t = self.hdr_occupancy.front().unwrap();
+            self.hdr_occupancy.pop_front();
+            while let Some(front) = self.hdr_occupancy.front() {
+                if front <= t {
+                    self.hdr_occupancy.pop_front();
+                } else {
+                    break;
+                }
             }
         }
 
@@ -220,9 +290,16 @@ impl Hmmu {
         let tag = if self.tags.can_issue() {
             self.tags.issue()
         } else {
-            // Shouldn't happen (occupancy model gates issues), but stay safe.
-            self.tags.note_full_stall();
-            self.tags.issue()
+            // No free HDR tag (the occupancy model normally gates this):
+            // block until the earliest outstanding response drains and
+            // count the stall, instead of issuing into a full FIFO. The
+            // occupancy ring front is that earliest completion; the tag
+            // matcher uses it for its unstamped head.
+            self.counters.fifo_full_stalls += 1;
+            let hint = self.hdr_occupancy.front().unwrap_or(t);
+            let (tag, freed_at) = self.tags.issue_blocking(t, hint);
+            t = freed_at;
+            tag
         };
         let done = match device {
             Device::Dram => {
@@ -318,8 +395,10 @@ impl Hmmu {
     }
 
     /// DRAM residency ratio of mapped pages (placement quality metric).
+    /// O(1): both terms are counters maintained by the redirection table
+    /// (§Perf — this used to walk every table entry per report).
     pub fn dram_residency(&self) -> f64 {
-        let mapped = self.table.iter_mapped().count() as f64;
+        let mapped = self.table.mapped_pages() as f64;
         if mapped == 0.0 {
             return 0.0;
         }
@@ -451,6 +530,41 @@ mod tests {
         }
         assert_eq!(h.counters.latency.count(), 100);
         assert!(h.counters.latency.mean() > 0.0);
+    }
+
+    #[test]
+    fn resident_counters_match_recount_after_migrations() {
+        // Pins the O(1) residency counters against a full-table recount
+        // after a run with placements, migrations and DMA commits.
+        let mut h = hmmu(PolicyKind::Hotness);
+        let page_bytes = h.config().hmmu.page_bytes;
+        let total = h.config().total_pages();
+        let mut t = 0;
+        let mut rng = crate::util::rng::Xoshiro256::new(7);
+        for _ in 0..8000 {
+            let p = rng.below(total.min(4096));
+            let kind = if rng.chance(0.3) {
+                AccessKind::Write
+            } else {
+                AccessKind::Read
+            };
+            t = h.access(p * page_bytes, kind, 64, t + 20);
+        }
+        h.drain(t + 10_000_000);
+        assert_eq!(
+            h.table.dram_resident_pages(),
+            h.table.recount_dram_resident(),
+            "resident counter drifted from recount"
+        );
+        assert_eq!(
+            h.table.mapped_pages(),
+            h.table.iter_mapped().count() as u64,
+            "mapped counter drifted from recount"
+        );
+        let mapped = h.table.mapped_pages();
+        assert!(mapped > 0);
+        let expect = h.table.dram_resident_pages() as f64 / mapped as f64;
+        assert!((h.dram_residency() - expect).abs() < 1e-12);
     }
 
     #[test]

@@ -50,22 +50,83 @@ pub trait PlacementPolicy {
     fn epoch(&mut self, view: &PolicyView) -> Vec<(u64, u64)>;
 }
 
+/// Enum-dispatched policy — the HMMU's request hot path calls
+/// [`PolicyImpl::record_access`] once per request, so §Perf replaces the
+/// old `Box<dyn PlacementPolicy>` vtable indirection with a match that
+/// the compiler can inline (and often hoist out of the request loop
+/// entirely for the stateless policies). Dynamic dispatch survives only
+/// at the [`HotnessEngine`] boundary, where it is needed to swap the
+/// native math for the AOT-XLA executable.
+pub enum PolicyImpl {
+    Static(StaticPolicy),
+    FirstTouch(FirstTouchPolicy),
+    Hints(HintsPolicy),
+    Hotness(HotnessPolicy),
+    WearAware(WearAwarePolicy),
+}
+
+impl PolicyImpl {
+    #[inline]
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyImpl::Static(p) => p.name(),
+            PolicyImpl::FirstTouch(p) => p.name(),
+            PolicyImpl::Hints(p) => p.name(),
+            PolicyImpl::Hotness(p) => p.name(),
+            PolicyImpl::WearAware(p) => p.name(),
+        }
+    }
+
+    /// Choose the device for a first-touch page.
+    #[inline]
+    pub fn place(&mut self, page: u64, hint: Placement) -> Device {
+        match self {
+            PolicyImpl::Static(p) => p.place(page, hint),
+            PolicyImpl::FirstTouch(p) => p.place(page, hint),
+            PolicyImpl::Hints(p) => p.place(page, hint),
+            PolicyImpl::Hotness(p) => p.place(page, hint),
+            PolicyImpl::WearAware(p) => p.place(page, hint),
+        }
+    }
+
+    /// Account one (post-cache-filter) request to `page` — the per-request
+    /// call on the HMMU hot path.
+    #[inline]
+    pub fn record_access(&mut self, page: u64, is_write: bool) {
+        match self {
+            PolicyImpl::Static(p) => p.record_access(page, is_write),
+            PolicyImpl::FirstTouch(p) => p.record_access(page, is_write),
+            PolicyImpl::Hints(p) => p.record_access(page, is_write),
+            PolicyImpl::Hotness(p) => p.record_access(page, is_write),
+            PolicyImpl::WearAware(p) => p.record_access(page, is_write),
+        }
+    }
+
+    /// Epoch boundary: migration pair selection (off the request path).
+    pub fn epoch(&mut self, view: &PolicyView) -> Vec<(u64, u64)> {
+        match self {
+            PolicyImpl::Static(p) => p.epoch(view),
+            PolicyImpl::FirstTouch(p) => p.epoch(view),
+            PolicyImpl::Hints(p) => p.epoch(view),
+            PolicyImpl::Hotness(p) => p.epoch(view),
+            PolicyImpl::WearAware(p) => p.epoch(view),
+        }
+    }
+}
+
 /// Build the configured policy. `engine` supplies the hotness math
 /// (native or AOT-XLA); ignored by the stateless policies.
-pub fn build_policy(
-    cfg: &SystemConfig,
-    engine: Option<Box<dyn HotnessEngine>>,
-) -> Box<dyn PlacementPolicy> {
+pub fn build_policy(cfg: &SystemConfig, engine: Option<Box<dyn HotnessEngine>>) -> PolicyImpl {
     let pages = cfg.total_pages();
     match cfg.policy {
-        PolicyKind::Static => Box::new(StaticPolicy::new(cfg.dram_pages())),
-        PolicyKind::FirstTouch => Box::new(FirstTouchPolicy::new()),
-        PolicyKind::Hints => Box::new(HintsPolicy::new()),
-        PolicyKind::Hotness => Box::new(HotnessPolicy::new(
+        PolicyKind::Static => PolicyImpl::Static(StaticPolicy::new(cfg.dram_pages())),
+        PolicyKind::FirstTouch => PolicyImpl::FirstTouch(FirstTouchPolicy::new()),
+        PolicyKind::Hints => PolicyImpl::Hints(HintsPolicy::new()),
+        PolicyKind::Hotness => PolicyImpl::Hotness(HotnessPolicy::new(
             pages,
-            engine.unwrap_or_else(|| Box::new(NativeHotnessEngine::default())),
+            engine.unwrap_or_else(|| Box::new(NativeHotnessEngine)),
         )),
-        PolicyKind::WearAware => Box::new(WearAwarePolicy::new(pages)),
+        PolicyKind::WearAware => PolicyImpl::WearAware(WearAwarePolicy::new(pages)),
     }
 }
 

@@ -6,7 +6,8 @@
 //! mapping is the mutable core of every placement policy, and page
 //! migration is a frame swap in this table.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 /// Which memory device backs a frame.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -45,6 +46,11 @@ pub struct RedirectionTable {
     free_nvm: Vec<u32>,
     dram_frames: u32,
     nvm_frames: u32,
+    /// Mapped-page count, maintained on place (§Perf: keeps
+    /// `dram_residency()` O(1) instead of a full-table walk per report).
+    mapped: u64,
+    /// Mapped pages currently backed by DRAM, maintained on place/swap.
+    dram_resident: u64,
 }
 
 impl RedirectionTable {
@@ -63,6 +69,8 @@ impl RedirectionTable {
             free_nvm,
             dram_frames,
             nvm_frames,
+            mapped: 0,
+            dram_resident: 0,
         }
     }
 
@@ -121,6 +129,8 @@ impl RedirectionTable {
         // Leftover NVM frames stay free.
         let used_nvm = self.entries.len() as u64 - self.dram_frames as u64;
         self.free_nvm = ((used_nvm as u32)..self.nvm_frames).rev().collect();
+        self.mapped = self.entries.len() as u64;
+        self.dram_resident = self.mapped.min(self.dram_frames as u64);
     }
 
     /// Look up a host page; `None` if unmapped.
@@ -182,10 +192,16 @@ impl RedirectionTable {
             }
         };
         self.entries[page as usize] = Self::pack(m);
+        self.mapped += 1;
+        if m.device == Device::Dram {
+            self.dram_resident += 1;
+        }
         Ok(m)
     }
 
     /// Swap the frames of two host pages (post-DMA commit of a migration).
+    /// Residency counters are conserved: the two entries trade places, so
+    /// the multiset of mapped frames is unchanged.
     pub fn swap(&mut self, page_a: u64, page_b: u64) -> Result<()> {
         let (a, b) = (self.entries[page_a as usize], self.entries[page_b as usize]);
         if a == UNMAPPED || b == UNMAPPED {
@@ -204,8 +220,20 @@ impl RedirectionTable {
         self.free_nvm.len()
     }
 
-    /// Count of mapped pages currently backed by DRAM.
+    /// Count of mapped pages — O(1), maintained on place.
+    pub fn mapped_pages(&self) -> u64 {
+        self.mapped
+    }
+
+    /// Count of mapped pages currently backed by DRAM — O(1), maintained
+    /// on place/swap (§Perf: was a full-table scan per call).
     pub fn dram_resident_pages(&self) -> u64 {
+        self.dram_resident
+    }
+
+    /// Full-table recount of DRAM-resident pages; tests pin the O(1)
+    /// counter against this.
+    pub fn recount_dram_resident(&self) -> u64 {
         self.entries
             .iter()
             .filter(|&&e| e != UNMAPPED && e & 0x8000_0000 == 0)
@@ -251,6 +279,17 @@ impl RedirectionTable {
             if nvm_seen[f as usize] {
                 bail!("NVM frame {f} both mapped and free");
             }
+        }
+        let mapped_recount = self.entries.iter().filter(|&&e| e != UNMAPPED).count() as u64;
+        if self.mapped != mapped_recount {
+            bail!("mapped counter {} != recount {mapped_recount}", self.mapped);
+        }
+        let dram_recount = self.recount_dram_resident();
+        if self.dram_resident != dram_recount {
+            bail!(
+                "dram_resident counter {} != recount {dram_recount}",
+                self.dram_resident
+            );
         }
         Ok(())
     }
@@ -362,5 +401,43 @@ mod tests {
         assert_eq!(t.dram_resident_pages(), 4);
         t.swap(0, 7).unwrap();
         assert_eq!(t.dram_resident_pages(), 4); // swap conserves
+    }
+
+    #[test]
+    fn resident_counters_track_recount() {
+        // Random place/swap churn: the O(1) counters must stay pinned to
+        // the full-table recount the whole way.
+        let mut t = RedirectionTable::new(64, 16, 64, 4096);
+        let mut rng = crate::util::rng::Xoshiro256::new(99);
+        let mut placed: Vec<u64> = Vec::new();
+        for page in 0..48u64 {
+            let dev = if rng.chance(0.5) {
+                Device::Dram
+            } else {
+                Device::Nvm
+            };
+            t.place(page, dev).unwrap();
+            placed.push(page);
+            assert_eq!(t.dram_resident_pages(), t.recount_dram_resident());
+            assert_eq!(t.mapped_pages(), page + 1);
+        }
+        for _ in 0..200 {
+            let a = placed[rng.below(placed.len() as u64) as usize];
+            let b = placed[rng.below(placed.len() as u64) as usize];
+            if a != b {
+                t.swap(a, b).unwrap();
+            }
+            assert_eq!(t.dram_resident_pages(), t.recount_dram_resident());
+        }
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn identity_map_sets_counters() {
+        let mut t = table();
+        t.identity_map();
+        assert_eq!(t.mapped_pages(), 8);
+        assert_eq!(t.dram_resident_pages(), t.recount_dram_resident());
+        t.check_invariants().unwrap();
     }
 }

@@ -101,6 +101,46 @@ impl TagMatcher {
         released
     }
 
+    /// Issue a tag at `now`, **blocking** (advancing simulated time)
+    /// until a slot frees when the FIFO is full — instead of tripping the
+    /// overflow assert as a bare `issue()` after `note_full_stall()` did.
+    ///
+    /// The slot frees when the head response drains. If the head is
+    /// already stamped, its own completion time is used; if not, the
+    /// caller's occupancy model — which knows every outstanding
+    /// completion — supplies `head_done_hint`. Entries stamped behind the
+    /// head drain with it (in-order semantics, matching [`Self::complete`]).
+    /// Counts the stall in `fifo_full_stalls`. Returns `(tag, issue_time)`
+    /// with `issue_time == now` when no stall occurred.
+    pub fn issue_blocking(&mut self, now: Time, head_done_hint: Time) -> (u16, Time) {
+        let mut t = now;
+        if !self.can_issue() {
+            self.note_full_stall();
+            let head_done = self
+                .fifo
+                .front()
+                .expect("full FIFO must have a head")
+                .done
+                .unwrap_or(head_done_hint);
+            let release = head_done.max(self.last_release);
+            self.reorder_wait_ns += release - head_done;
+            self.last_release = release;
+            self.completed += 1;
+            self.fifo.pop_front();
+            t = t.max(release);
+            // Anything stamped right behind the head drains with it.
+            while let Some(head) = self.fifo.front() {
+                let Some(done) = head.done else { break };
+                let release = done.max(self.last_release);
+                self.reorder_wait_ns += release - done;
+                self.last_release = release;
+                self.completed += 1;
+                self.fifo.pop_front();
+            }
+        }
+        (self.issue(), t)
+    }
+
     /// Allocation-free fast path for the synchronous pipeline (§Perf):
     /// when `tag` is the FIFO head and nothing else is pending, complete
     /// and drain it in one step, returning its release time. Falls back
@@ -205,6 +245,52 @@ mod tests {
     fn unknown_tag_panics() {
         let mut tm = TagMatcher::new(2);
         tm.complete(99, 10);
+    }
+
+    #[test]
+    fn issue_blocking_fast_path_no_stall() {
+        let mut tm = TagMatcher::new(2);
+        let (_, t) = tm.issue_blocking(42, 999);
+        assert_eq!(t, 42);
+        assert_eq!(tm.fifo_full_stalls, 0);
+        assert_eq!(tm.outstanding(), 1);
+    }
+
+    #[test]
+    fn issue_blocking_waits_for_unstamped_head() {
+        // Regression: a full FIFO used to panic via the bare `issue()`
+        // fallback; now the issue blocks until the earliest outstanding
+        // completion (the occupancy model's hint for the unstamped head).
+        let mut tm = TagMatcher::new(2);
+        tm.issue();
+        tm.issue();
+        assert!(!tm.can_issue());
+        let (_, t) = tm.issue_blocking(100, 500);
+        assert_eq!(t, 500, "must block until the head drains");
+        assert_eq!(tm.fifo_full_stalls, 1);
+        assert_eq!(tm.completed, 1);
+        assert_eq!(tm.last_release(), 500);
+        assert_eq!(tm.outstanding(), 2); // drained head + new issue
+    }
+
+    #[test]
+    fn issue_blocking_drains_stamped_followers_in_order() {
+        let mut tm = TagMatcher::new(3);
+        let _a = tm.issue();
+        let b = tm.issue();
+        let c = tm.issue();
+        // b and c completed early but are held behind the unstamped head.
+        assert_eq!(tm.complete(b, 50), vec![]);
+        assert_eq!(tm.complete(c, 60), vec![]);
+        assert!(!tm.can_issue());
+        let (_, t) = tm.issue_blocking(10, 200);
+        // Slot freed when the head drained at 200; b and c drain behind
+        // it at the same release (in-order hold).
+        assert_eq!(t, 200);
+        assert_eq!(tm.completed, 3);
+        assert_eq!(tm.last_release(), 200);
+        assert_eq!(tm.outstanding(), 1); // only the new issue remains
+        assert_eq!(tm.fifo_full_stalls, 1);
     }
 
     #[test]

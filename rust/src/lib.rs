@@ -24,6 +24,9 @@
 //!   the Fig 7 comparison.
 //! - [`platform`] — composes everything into the emulation platform and the
 //!   native-execution reference.
+//! - [`sweep`] — deterministic parallel scenario-sweep engine: fans
+//!   workload × policy × config grids across OS threads with bit-identical
+//!   results and machine-readable `BENCH_sweep.json` reports.
 //! - [`runtime`] — loads the AOT-compiled XLA policy step (L2/L1 artifacts)
 //!   via PJRT and exposes it to the HMMU, with a bit-compatible native
 //!   fallback.
@@ -51,6 +54,7 @@ pub mod pcie;
 pub mod platform;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 pub mod workload;
 

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //! - `run`            run one workload on the platform (+ native ref)
-//! - `sweep`          run all Table III workloads (Fig 7 + Fig 8 data)
+//! - `sweep`          parallel scenario sweep over all Table III workloads
+//!                    (× policies × NVM-stall points), deterministic
+//!                    across thread counts, with `BENCH_sweep.json` output
 //! - `fig7`           full Fig 7 comparison incl. gem5-like/champsim-like
 //! - `fig8`           Fig 8 memory-request-bytes table
 //! - `table1`         Table I technology sweep
@@ -15,6 +17,7 @@ use hymem::baselines::run_fig7_row;
 use hymem::config::{MemTech, PolicyKind, SystemConfig, TechPreset};
 use hymem::platform::{Platform, RunOpts};
 use hymem::runtime;
+use hymem::sweep::{default_threads, run_sweep, Scenario};
 use hymem::util::cli::Args;
 use hymem::util::stats::geomean;
 use hymem::util::units::fmt_bytes;
@@ -97,40 +100,88 @@ fn cmd_run(args: &Args) -> i32 {
     }
 }
 
+/// Parallel scenario sweep: Table III workloads × `--policies` ×
+/// `--nvm-stalls` points, fanned across `--threads` OS threads with
+/// bit-identical-to-serial results (per-scenario derived seeds).
 fn cmd_sweep(args: &Args) -> i32 {
     let cfg = config_from(args);
     let ops = args.get_u64("ops", 1_000_000);
+    let threads = args.get_usize("threads", default_threads());
+
+    let policies: Vec<PolicyKind> = match args.get("policies") {
+        None => vec![cfg.policy],
+        Some(list) => {
+            let mut out = Vec::new();
+            for tok in list.split(',') {
+                match PolicyKind::parse(tok.trim()) {
+                    Some(p) => out.push(p),
+                    None => {
+                        eprintln!("unknown policy {tok:?}");
+                        return 1;
+                    }
+                }
+            }
+            out
+        }
+    };
+
+    let mut scenarios = Scenario::grid(&WORKLOADS, &policies, &cfg, ops);
+    // Optional NVM-stall axis: `--nvm-stalls 50:225,200:900` (read:write ns).
+    if let Some(list) = args.get("nvm-stalls") {
+        let mut points = Vec::new();
+        for tok in list.split(',') {
+            let Some((r, w)) = tok.trim().split_once(':') else {
+                eprintln!("bad --nvm-stalls entry {tok:?}; want rd:wr in ns");
+                return 1;
+            };
+            match (r.parse::<u64>(), w.parse::<u64>()) {
+                (Ok(r), Ok(w)) => points.push((r, w)),
+                _ => {
+                    eprintln!("bad --nvm-stalls entry {tok:?}; want rd:wr in ns");
+                    return 1;
+                }
+            }
+        }
+        scenarios = Scenario::stall_grid(&scenarios, &points);
+    }
+
     println!(
-        "# sweep: policy={} scale=1/{} ops={ops}",
-        cfg.policy.name(),
+        "# sweep: {} scenarios ({} workloads x {} policies) scale=1/{} ops={ops} threads={threads}",
+        scenarios.len(),
+        WORKLOADS.len(),
+        policies.len(),
         cfg.scale
     );
-    let mut slowdowns = Vec::new();
-    for wl in &WORKLOADS {
-        let (engine, _) = engine_for(args);
-        let mut p = Platform::new(cfg.clone());
-        if let Some(e) = engine {
-            p = p.with_engine(e);
+    // Sweep scenarios always use the native hotness engine (bit-compatible
+    // with the XLA artifact); say so instead of silently ignoring the
+    // engine selection that `run` honors.
+    if runtime::XlaHotnessEngine::load_default().is_ok() {
+        println!(
+            "# note: sweep scenarios use the native engine (bit-identical to the XLA \
+             artifact); use `hymem run` to exercise the artifact path"
+        );
+    } else if args.flag("native-engine") {
+        println!("# note: --native-engine is implied for sweep (scenarios always run native)");
+    }
+    match run_sweep(&scenarios, threads) {
+        Ok(report) => {
+            println!("{}", report.summary());
+            println!("(paper geomean: 3.17x)");
+            let path = args.get_or("json", "BENCH_sweep.json");
+            match report.write_json(path) {
+                Ok(()) => println!("wrote {path}"),
+                Err(e) => {
+                    eprintln!("writing {path}: {e:#}");
+                    return 1;
+                }
+            }
+            0
         }
-        match p.run_opts(
-            wl,
-            RunOpts {
-                ops,
-                flush_at_end: false,
-            },
-        ) {
-            Ok(r) => {
-                println!("{}", r.summary());
-                slowdowns.push(r.slowdown());
-            }
-            Err(e) => {
-                eprintln!("{}: failed: {e:#}", wl.name);
-                return 1;
-            }
+        Err(e) => {
+            eprintln!("sweep failed: {e:#}");
+            1
         }
     }
-    println!("geomean slowdown: {:.2}x (paper: 3.17x)", geomean(&slowdowns));
-    0
 }
 
 fn cmd_fig7(args: &Args) -> i32 {
@@ -391,7 +442,10 @@ COMMANDS:
   run             --workload <name> [--policy static|first-touch|hotness|hints|wear-aware]
                   [--ops N] [--scale N] [--tech 3dxpoint|stt-ram|...] [--flush]
                   [--native-engine]
-  sweep           all 12 workloads; prints Fig7-style summaries [--ops N]
+  sweep           parallel scenario sweep: 12 workloads [x --policies a,b,..]
+                  [x --nvm-stalls rd:wr,rd:wr,..] on --threads N OS threads
+                  (default: all cores; bit-identical to serial), writes
+                  --json <path> (default BENCH_sweep.json) [--ops N]
   fig7            full comparison vs gem5-like and champsim-like
                   [--ops N] [--baseline-instructions N]
   fig8            memory request bytes per workload [--ops N]

@@ -19,7 +19,8 @@ use crate::hmmu::HotnessEngine;
 use crate::mem::AccessKind;
 use crate::sim::Time;
 use crate::workload::{TraceGenerator, Workload};
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 /// Report for one core of a multicore run.
 #[derive(Clone, Debug)]
@@ -107,7 +108,6 @@ pub fn run_multicore(
         hier: CacheHierarchy,
         gen: TraceGenerator,
         stripe: u64,
-        done: bool,
         workload: String,
     }
 
@@ -120,7 +120,6 @@ pub fn run_multicore(
             gen: TraceGenerator::new(*wl, wl_cfg.scale, cfg.seed ^ (i as u64) << 32)
                 .take_ops(opts.ops),
             stripe: core_stripe(&cfg, i, n),
-            done: false,
             workload: wl.name.to_string(),
         })
         .collect();
@@ -138,16 +137,19 @@ pub fn run_multicore(
 
     // Time-ordered round-robin: always step the core with the earliest
     // local clock so shared-resource contention is causally ordered.
-    loop {
-        let Some(idx) = cores
-            .iter()
-            .enumerate()
-            .filter(|(_, c)| !c.done)
-            .min_by_key(|(_, c)| c.core.now())
-            .map(|(i, _)| i)
-        else {
-            break;
-        };
+    // §Perf: an indexed min-heap replaces the old O(cores) min-scan per
+    // step; ties break on core index (lexicographic `(time, idx)`),
+    // matching the old first-minimum selection exactly, so timelines are
+    // bit-identical. Each live core has exactly one heap entry; a core's
+    // clock only changes when it is stepped, so entries are never stale.
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut ready: BinaryHeap<Reverse<(Time, usize)>> = cores
+        .iter()
+        .enumerate()
+        .map(|(i, c)| Reverse((c.core.now(), i)))
+        .collect();
+    while let Some(Reverse((_, idx))) = ready.pop() {
         let c = &mut cores[idx];
         match c.gen.next() {
             Some(op) => {
@@ -156,10 +158,10 @@ pub fn run_multicore(
                     stripe: c.stripe,
                 };
                 c.core.step(&op, &mut c.hier, &mut shim);
+                ready.push(Reverse((c.core.now(), idx)));
             }
             None => {
                 c.core.finish();
-                c.done = true;
             }
         }
     }

@@ -1,0 +1,286 @@
+//! Deterministic parallel scenario-sweep engine.
+//!
+//! The paper's pitch is *simulation throughput* (9280× over gem5); the
+//! emulator must never be the experiment bottleneck. Design-space sweeps
+//! — workload × policy × config × NVM-stall point — are embarrassingly
+//! parallel: every [`Scenario`] is an independent platform run with its
+//! own seed. This module fans a `Vec<Scenario>` across OS threads
+//! (`std::thread::scope`, no dependencies) and aggregates a structured
+//! [`SweepReport`] with machine-readable JSON emission
+//! (`BENCH_sweep.json`) so the perf trajectory is tracked across PRs.
+//!
+//! **Determinism contract:** every run is a pure function of the
+//! scenario's own data (config, seed, workload, ops) — never of thread
+//! identity or completion order — and no state is shared between
+//! scenarios, so a parallel sweep is bit-identical to running the same
+//! scenarios serially — pinned by
+//! [`SweepReport::deterministic_fingerprint`] and
+//! `tests/sweep_determinism.rs` across thread counts.
+//!
+//! **Seeding:** [`Scenario::grid`] points deliberately share the base
+//! seed, so compared points (policy A vs policy B on the same workload)
+//! run the **identical trace** — deltas measure the design axis, not
+//! trace randomness. Use [`Scenario::replicates`] when you want
+//! decorrelated seeds (error bars) instead; it derives them from the
+//! replicate index via [`derive_seed`].
+
+pub mod report;
+
+pub use report::{ScenarioResult, SweepReport};
+
+use crate::config::{PolicyKind, SystemConfig};
+use crate::platform::{Platform, RunOpts};
+use crate::util::error::Result;
+use crate::util::rng::splitmix64;
+use crate::workload::Workload;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One point of a design-space sweep: a workload on a full system
+/// configuration (policy, scale, NVM stalls, epoch length… all live in
+/// `cfg`).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Unique label, e.g. `"505.mcf/hotness"` (used in reports and JSON).
+    pub name: String,
+    pub workload: Workload,
+    pub cfg: SystemConfig,
+    /// Memory operations to simulate.
+    pub ops: u64,
+    /// Flush caches at the end (write-back volume, Fig 8 style).
+    pub flush_at_end: bool,
+}
+
+impl Scenario {
+    pub fn new(name: impl Into<String>, workload: Workload, cfg: SystemConfig, ops: u64) -> Self {
+        Scenario {
+            name: name.into(),
+            workload,
+            cfg,
+            ops,
+            flush_at_end: false,
+        }
+    }
+
+    /// Override the emulated NVM stall point (§III-F "arbitrary latency
+    /// cycles") — the sweep axis the FPGA reconfigures per experiment.
+    pub fn with_nvm_stalls(mut self, read_ns: u64, write_ns: u64) -> Self {
+        self.cfg.nvm.read_stall_ns = read_ns;
+        self.cfg.nvm.write_stall_ns = write_ns;
+        self
+    }
+
+    /// Build the workload × policy grid from a base configuration.
+    pub fn grid(
+        workloads: &[Workload],
+        policies: &[PolicyKind],
+        base: &SystemConfig,
+        ops: u64,
+    ) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(workloads.len() * policies.len());
+        for wl in workloads {
+            for &policy in policies {
+                let mut cfg = base.clone();
+                cfg.policy = policy;
+                out.push(Scenario::new(
+                    format!("{}/{}", wl.name, policy.name()),
+                    *wl,
+                    cfg,
+                    ops,
+                ));
+            }
+        }
+        out
+    }
+
+    /// Expand scenarios across NVM stall points, suffixing names with
+    /// `@rd:wr`.
+    pub fn stall_grid(scenarios: &[Scenario], stall_points: &[(u64, u64)]) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(scenarios.len() * stall_points.len());
+        for sc in scenarios {
+            for &(rd, wr) in stall_points {
+                let mut s = sc.clone().with_nvm_stalls(rd, wr);
+                s.name = format!("{}@{rd}:{wr}", sc.name);
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    /// `n` statistical replicates of each scenario, with distinct seeds
+    /// derived from the replicate index (names suffixed `#k`). This is
+    /// the opt-in path for decorrelated traces; plain grids share the
+    /// base seed on purpose so compared points stay trace-identical.
+    pub fn replicates(scenarios: &[Scenario], n: u64) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(scenarios.len() * n as usize);
+        for sc in scenarios {
+            for k in 0..n {
+                let mut s = sc.clone();
+                s.cfg.seed = derive_seed(sc.cfg.seed, k);
+                s.name = format!("{}#{k}", sc.name);
+                out.push(s);
+            }
+        }
+        out
+    }
+}
+
+/// Worker-thread count to use when the caller doesn't specify one: all
+/// available cores (shared by the CLI, examples and benches).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Derive a decorrelated seed from a base seed and a replicate index
+/// (pure function of `(base, index)`, so it is thread- and
+/// order-independent). Used by [`Scenario::replicates`]; plain sweeps run
+/// each scenario with the seed its config carries.
+pub fn derive_seed(base: u64, index: u64) -> u64 {
+    // Golden-ratio stride decorrelates neighbouring indices, then one
+    // splitmix round scrambles; identical to seeding Xoshiro substreams.
+    let mut s = base ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(index.wrapping_add(1));
+    splitmix64(&mut s)
+}
+
+/// Run one scenario with the seed its config carries. The scenario is
+/// the unit of parallelism, so the platform/native passes run serially
+/// inside it — spawning the concurrent-pass helper here would
+/// oversubscribe the CPU under a multi-threaded sweep and contaminate
+/// the per-scenario wall clocks.
+fn run_scenario(sc: &Scenario) -> Result<ScenarioResult> {
+    let wall = Instant::now();
+    let seed = sc.cfg.seed;
+    let report = Platform::new(sc.cfg.clone()).run_opts_serial(
+        &sc.workload,
+        RunOpts {
+            ops: sc.ops,
+            flush_at_end: sc.flush_at_end,
+        },
+    )?;
+    Ok(ScenarioResult::new(sc, seed, &report, wall.elapsed().as_nanos() as u64))
+}
+
+/// Fan `scenarios` across `threads` OS threads (clamped to the scenario
+/// count; `1` = serial). Results come back in scenario order regardless
+/// of which thread ran what, and are bit-identical across thread counts.
+pub fn run_sweep(scenarios: &[Scenario], threads: usize) -> Result<SweepReport> {
+    let n = scenarios.len();
+    let threads = threads.max(1).min(n.max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<ScenarioResult>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+
+    let wall = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                // Dynamic work-stealing queue: one atomic fetch per
+                // scenario, so long and short scenarios balance.
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let result = run_scenario(&scenarios[i]);
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    let wall_ns = wall.elapsed().as_nanos() as u64;
+
+    let mut results = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().unwrap() {
+            Some(Ok(r)) => results.push(r),
+            Some(Err(e)) => return Err(e.context(format!("scenario {:?}", scenarios[i].name))),
+            None => crate::bail!("scenario {:?} never ran (worker died?)", scenarios[i].name),
+        }
+    }
+    Ok(SweepReport::new(threads, wall_ns, results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec;
+
+    fn small_cfg() -> SystemConfig {
+        SystemConfig::default_scaled(64)
+    }
+
+    #[test]
+    fn grid_names_are_unique() {
+        let wls = [
+            spec::by_name("505.mcf").unwrap(),
+            spec::by_name("557.xz").unwrap(),
+        ];
+        let scenarios = Scenario::grid(
+            &wls,
+            &[PolicyKind::Static, PolicyKind::Hotness],
+            &small_cfg(),
+            1000,
+        );
+        assert_eq!(scenarios.len(), 4);
+        let mut names: Vec<&str> = scenarios.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 4);
+        assert!(scenarios.iter().any(|s| s.name == "505.mcf/hotness"));
+    }
+
+    #[test]
+    fn stall_grid_expands_and_overrides() {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let base = vec![Scenario::new("mcf/static", wl, small_cfg(), 1000)];
+        let grid = Scenario::stall_grid(&base, &[(50, 225), (200, 900)]);
+        assert_eq!(grid.len(), 2);
+        assert_eq!(grid[0].name, "mcf/static@50:225");
+        assert_eq!(grid[1].cfg.nvm.read_stall_ns, 200);
+        assert_eq!(grid[1].cfg.nvm.write_stall_ns, 900);
+    }
+
+    #[test]
+    fn derived_seeds_decorrelate() {
+        let a = derive_seed(0x5EED, 0);
+        let b = derive_seed(0x5EED, 1);
+        let c = derive_seed(0x5EED + 1, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        // And are pure functions of (base, index).
+        assert_eq!(a, derive_seed(0x5EED, 0));
+    }
+
+    #[test]
+    fn grid_shares_seed_replicates_derive() {
+        // Controlled comparison: grid points share the base seed so the
+        // compared policies see the identical trace.
+        let wl = spec::by_name("505.mcf").unwrap();
+        let grid = Scenario::grid(
+            &[wl],
+            &[PolicyKind::Static, PolicyKind::Hotness],
+            &small_cfg(),
+            1000,
+        );
+        assert_eq!(grid[0].cfg.seed, grid[1].cfg.seed);
+        // Error bars: replicates get distinct derived seeds and names.
+        let reps = Scenario::replicates(&grid[..1], 3);
+        assert_eq!(reps.len(), 3);
+        assert_eq!(reps[0].name, "505.mcf/static#0");
+        assert_ne!(reps[0].cfg.seed, reps[1].cfg.seed);
+        assert_ne!(reps[1].cfg.seed, reps[2].cfg.seed);
+        assert_eq!(reps[2].cfg.seed, derive_seed(grid[0].cfg.seed, 2));
+    }
+
+    #[test]
+    fn single_scenario_sweep_runs() {
+        let wl = spec::by_name("557.xz").unwrap();
+        let scenarios = vec![Scenario::new("557.xz/static", wl, small_cfg(), 5_000)];
+        let r = run_sweep(&scenarios, 4).unwrap();
+        assert_eq!(r.scenarios.len(), 1);
+        assert_eq!(r.threads, 1, "threads clamp to scenario count");
+        assert!(r.scenarios[0].platform_time_ns > 0);
+        assert!(r.scenarios[0].slowdown > 1.0);
+    }
+}

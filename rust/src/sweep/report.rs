@@ -1,0 +1,322 @@
+//! Structured sweep results: per-scenario modeled metrics, aggregates,
+//! the determinism fingerprint, and JSON emission.
+
+use crate::platform::RunReport;
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::stats::geomean;
+use crate::util::units::fmt_ns;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::Scenario;
+
+/// Modeled outcome of one scenario. Every field except `wall_ns` is a
+/// deterministic function of the scenario and its derived seed.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub name: String,
+    pub workload: String,
+    pub policy: String,
+    pub seed: u64,
+    pub ops: u64,
+    pub platform_time_ns: u64,
+    pub native_time_ns: u64,
+    pub slowdown: f64,
+    pub l2_miss_rate: f64,
+    pub dram_service_ratio: f64,
+    pub dram_residency: f64,
+    pub migrations: u64,
+    pub epochs: u64,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    pub nvm_reads: u64,
+    pub nvm_writes: u64,
+    pub host_read_bytes: u64,
+    pub host_write_bytes: u64,
+    pub fifo_full_stalls: u64,
+    pub reorder_wait_ns: u64,
+    pub dma_conflict_stalls: u64,
+    pub nvm_max_wear: u64,
+    pub energy_mj: f64,
+    pub latency_mean_ns: f64,
+    pub latency_p50_ns: u64,
+    pub latency_p99_ns: u64,
+    pub latency_max_ns: u64,
+    /// Host wall clock of this scenario's run (nondeterministic; excluded
+    /// from the fingerprint).
+    pub wall_ns: u64,
+}
+
+impl ScenarioResult {
+    pub fn new(sc: &Scenario, seed: u64, r: &RunReport, wall_ns: u64) -> Self {
+        ScenarioResult {
+            name: sc.name.clone(),
+            workload: r.workload.clone(),
+            policy: r.policy.clone(),
+            seed,
+            ops: sc.ops,
+            platform_time_ns: r.platform_time_ns,
+            native_time_ns: r.native_time_ns,
+            slowdown: r.slowdown(),
+            l2_miss_rate: r.l2_miss_rate,
+            dram_service_ratio: r.counters.dram_service_ratio(),
+            dram_residency: r.dram_residency,
+            migrations: r.counters.migrations,
+            epochs: r.counters.epochs,
+            dram_reads: r.counters.dram_reads,
+            dram_writes: r.counters.dram_writes,
+            nvm_reads: r.counters.nvm_reads,
+            nvm_writes: r.counters.nvm_writes,
+            host_read_bytes: r.counters.host_read_bytes,
+            host_write_bytes: r.counters.host_write_bytes,
+            fifo_full_stalls: r.counters.fifo_full_stalls,
+            reorder_wait_ns: r.counters.reorder_wait_ns,
+            dma_conflict_stalls: r.counters.dma_conflict_stalls,
+            nvm_max_wear: r.nvm_max_wear,
+            energy_mj: r.counters.energy_estimate_mj(),
+            latency_mean_ns: r.counters.latency.mean(),
+            latency_p50_ns: r.counters.latency.percentile(50.0),
+            latency_p99_ns: r.counters.latency.percentile(99.0),
+            latency_max_ns: r.counters.latency.max(),
+            wall_ns,
+        }
+    }
+
+    /// One summary line (RunReport::summary-style).
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<26} slowdown={:>6.2}x  dramServ={:>5.1}%  dramResid={:>5.1}%  \
+             migrations={:<6} p99={:>7}ns  wall={}",
+            self.name,
+            self.slowdown,
+            self.dram_service_ratio * 100.0,
+            self.dram_residency * 100.0,
+            self.migrations,
+            self.latency_p99_ns,
+            fmt_ns(self.wall_ns),
+        )
+    }
+
+    /// Every modeled field, rendered canonically. Two runs of the same
+    /// scenario must produce byte-identical lines regardless of thread
+    /// count — this is what the determinism tests compare.
+    pub fn deterministic_key(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{}|{}|{}|seed={:#x}|ops={}|plat={}|native={}|slow={:?}|l2={:?}|serv={:?}|resid={:?}\
+             |mig={}|epochs={}|dr={}|dw={}|nr={}|nw={}|hrb={}|hwb={}|fifo={}|reorder={}|dma={}\
+             |wear={}|mj={:?}|lat=({:?},{},{},{})",
+            self.name,
+            self.workload,
+            self.policy,
+            self.seed,
+            self.ops,
+            self.platform_time_ns,
+            self.native_time_ns,
+            self.slowdown,
+            self.l2_miss_rate,
+            self.dram_service_ratio,
+            self.dram_residency,
+            self.migrations,
+            self.epochs,
+            self.dram_reads,
+            self.dram_writes,
+            self.nvm_reads,
+            self.nvm_writes,
+            self.host_read_bytes,
+            self.host_write_bytes,
+            self.fifo_full_stalls,
+            self.reorder_wait_ns,
+            self.dma_conflict_stalls,
+            self.nvm_max_wear,
+            self.energy_mj,
+            self.latency_mean_ns,
+            self.latency_p50_ns,
+            self.latency_p99_ns,
+            self.latency_max_ns,
+        );
+        s
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("workload", self.workload.as_str())
+            .set("policy", self.policy.as_str())
+            .set("seed", self.seed)
+            .set("ops", self.ops)
+            .set("platform_time_ns", self.platform_time_ns)
+            .set("native_time_ns", self.native_time_ns)
+            .set("slowdown", self.slowdown)
+            .set("l2_miss_rate", self.l2_miss_rate)
+            .set("dram_service_ratio", self.dram_service_ratio)
+            .set("dram_residency", self.dram_residency)
+            .set("migrations", self.migrations)
+            .set("epochs", self.epochs)
+            .set("dram_reads", self.dram_reads)
+            .set("dram_writes", self.dram_writes)
+            .set("nvm_reads", self.nvm_reads)
+            .set("nvm_writes", self.nvm_writes)
+            .set("host_read_bytes", self.host_read_bytes)
+            .set("host_write_bytes", self.host_write_bytes)
+            .set("fifo_full_stalls", self.fifo_full_stalls)
+            .set("reorder_wait_ns", self.reorder_wait_ns)
+            .set("dma_conflict_stalls", self.dma_conflict_stalls)
+            .set("nvm_max_wear", self.nvm_max_wear)
+            .set("energy_mj", self.energy_mj)
+            .set("latency_mean_ns", self.latency_mean_ns)
+            .set("latency_p50_ns", self.latency_p50_ns)
+            .set("latency_p99_ns", self.latency_p99_ns)
+            .set("latency_max_ns", self.latency_max_ns)
+            .set("wall_ns", self.wall_ns);
+        o
+    }
+}
+
+/// Aggregate of one sweep invocation.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// Parallel wall clock of the whole sweep.
+    pub wall_ns: u64,
+    /// Sum of per-scenario walls. Each pass runs serially inside its
+    /// scenario, so this estimates the serial-equivalent cost;
+    /// `serial_wall_ns / wall_ns` is the sweep-level speedup. Under a
+    /// parallel sweep the per-scenario walls still share caches/memory
+    /// bandwidth with sibling scenarios, so treat the estimate as a lower
+    /// bound on true serial cost — for an uncontended baseline run the
+    /// same scenarios with `threads = 1` and compare `wall_ns` directly.
+    pub serial_wall_ns: u64,
+    pub geomean_slowdown: f64,
+    /// Results in scenario order (independent of execution order).
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+impl SweepReport {
+    pub fn new(threads: usize, wall_ns: u64, scenarios: Vec<ScenarioResult>) -> Self {
+        let slowdowns: Vec<f64> = scenarios.iter().map(|s| s.slowdown).collect();
+        SweepReport {
+            threads,
+            wall_ns,
+            serial_wall_ns: scenarios.iter().map(|s| s.wall_ns).sum(),
+            geomean_slowdown: geomean(&slowdowns),
+            scenarios,
+        }
+    }
+
+    /// Sweep-level parallel speedup vs running the same scenarios
+    /// back-to-back.
+    pub fn parallel_speedup(&self) -> f64 {
+        self.serial_wall_ns as f64 / self.wall_ns.max(1) as f64
+    }
+
+    /// Multi-line human summary.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for r in &self.scenarios {
+            s.push_str(&r.summary());
+            s.push('\n');
+        }
+        let _ = write!(
+            s,
+            "{} scenarios on {} threads: wall {} (serial-equivalent {}, {:.2}x speedup), \
+             geomean slowdown {:.2}x",
+            self.scenarios.len(),
+            self.threads,
+            fmt_ns(self.wall_ns),
+            fmt_ns(self.serial_wall_ns),
+            self.parallel_speedup(),
+            self.geomean_slowdown,
+        );
+        s
+    }
+
+    /// Canonical rendering of every modeled field of every scenario.
+    /// Byte-identical across thread counts (walls and thread counts are
+    /// excluded); the determinism tests compare exactly this.
+    pub fn deterministic_fingerprint(&self) -> String {
+        let mut s = String::new();
+        for r in &self.scenarios {
+            s.push_str(&r.deterministic_key());
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("schema", "hymem/sweep/v1")
+            .set("threads", self.threads)
+            .set("wall_ns", self.wall_ns)
+            .set("serial_wall_ns", self.serial_wall_ns)
+            .set("parallel_speedup", self.parallel_speedup())
+            .set("geomean_slowdown", self.geomean_slowdown)
+            .set(
+                "scenarios",
+                Json::Arr(self.scenarios.iter().map(|r| r.to_json()).collect()),
+            );
+        o
+    }
+
+    /// Write the machine-readable report (e.g. `BENCH_sweep.json`).
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::sweep::{run_sweep, Scenario};
+    use crate::workload::spec;
+
+    fn tiny_sweep() -> SweepReport {
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = crate::config::PolicyKind::Static;
+        let wl = spec::by_name("541.leela").unwrap();
+        let scenarios = vec![
+            Scenario::new("a", wl, cfg.clone(), 3_000),
+            Scenario::new("b", wl, cfg, 3_000),
+        ];
+        run_sweep(&scenarios, 2).unwrap()
+    }
+
+    #[test]
+    fn aggregates_and_fingerprint() {
+        let r = tiny_sweep();
+        assert_eq!(r.scenarios.len(), 2);
+        assert!(r.geomean_slowdown > 0.0);
+        assert!(r.serial_wall_ns >= r.scenarios[0].wall_ns);
+        let fp = r.deterministic_fingerprint();
+        assert_eq!(fp.lines().count(), 2);
+        // Same scenario list, same seeds -> same fingerprint lines except
+        // the differing names/seeds.
+        assert!(fp.contains("a|"));
+        assert!(fp.contains("b|"));
+        assert!(!fp.contains("wall"), "fingerprint must exclude wall time");
+    }
+
+    #[test]
+    fn json_has_schema_and_scenarios() {
+        let r = tiny_sweep();
+        let js = r.to_json().render();
+        assert!(js.contains("\"schema\":\"hymem/sweep/v1\""));
+        assert!(js.contains("\"scenarios\":["));
+        assert!(js.contains("\"platform_time_ns\""));
+        let pretty = r.to_json().pretty();
+        assert!(pretty.ends_with("}\n"));
+    }
+
+    #[test]
+    fn summary_mentions_speedup() {
+        let r = tiny_sweep();
+        let s = r.summary();
+        assert!(s.contains("scenarios on"));
+        assert!(s.contains("geomean slowdown"));
+    }
+}

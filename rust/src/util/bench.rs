@@ -8,6 +8,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 /// One measured benchmark result.
@@ -128,6 +129,44 @@ impl BenchSuite {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// Machine-readable results (`BENCH_*.json`): the cross-PR perf
+    /// trajectory is tracked from these files, not from console scrapes.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("schema", "hymem/bench/v1")
+            .set("title", self.title.as_str())
+            .set("quick", self.quick)
+            .set(
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            let mut b = Json::obj();
+                            b.set("name", r.name.as_str())
+                                .set("iters", r.iters)
+                                .set("mean_ns", r.mean_ns)
+                                .set("stddev_ns", r.stddev_ns)
+                                .set("min_ns", r.min_ns)
+                                .set(
+                                    "throughput_per_sec",
+                                    r.throughput.map(Json::F64).unwrap_or(Json::Null),
+                                );
+                            b
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    /// Write the JSON report; prints where it went.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        println!("  wrote {path}");
+        Ok(())
     }
 
     pub fn finish(self) {

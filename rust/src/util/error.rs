@@ -1,0 +1,131 @@
+//! Minimal `anyhow`-style error handling (anyhow is unavailable offline).
+//!
+//! Provides the small surface the crate actually uses: a string-backed
+//! [`Error`], a defaulted [`Result`] alias, a [`Context`] extension trait
+//! for `Result`/`Option`, and the crate-root [`crate::bail!`] /
+//! [`crate::anyhow!`] macros.
+
+use std::fmt;
+
+/// A flattened error: the message plus any context prefixes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix the error with context, `anyhow`-style (`context: cause`).
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NB: `Error` deliberately does NOT implement `std::error::Error`, so this
+// blanket conversion cannot overlap the reflexive `From<Error> for Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulted to [`Error`], mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures (`anyhow::Context` subset).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`] (drop-in for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Construct a formatted [`Error`] value (drop-in for `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "boom 42");
+    }
+
+    #[test]
+    fn io_error_converts_with_context() {
+        let r: std::io::Result<()> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let e = r.context("opening trace").unwrap_err();
+        assert!(e.to_string().starts_with("opening trace: "));
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("looking up {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "looking up key");
+        assert_eq!(Some(7u32).context("x").unwrap(), 7);
+    }
+
+    #[test]
+    fn anyhow_macro_builds_error() {
+        let e = crate::anyhow!("bad value {v}", v = 3);
+        assert_eq!(e.to_string(), "bad value 3");
+    }
+}

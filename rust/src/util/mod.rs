@@ -1,14 +1,17 @@
 //! Dependency-free utility infrastructure.
 //!
-//! The offline build environment vendors only the `xla` crate closure, so
-//! everything a normal project would pull from crates.io lives here:
-//! deterministic RNG ([`rng`]), statistics ([`stats`]), a minimal CLI
-//! argument parser ([`cli`]), SI-unit formatting ([`units`]), a tiny
-//! property-testing harness ([`prop`]) and a micro-benchmark harness
-//! ([`bench`]).
+//! The offline build environment has no crates.io access (the optional
+//! `xla` feature expects a vendored crate closure), so everything a normal
+//! project would pull from crates.io lives here: deterministic RNG
+//! ([`rng`]), statistics ([`stats`]), a minimal CLI argument parser
+//! ([`cli`]), SI-unit formatting ([`units`]), a tiny property-testing
+//! harness ([`prop`]), a micro-benchmark harness ([`bench`]), an
+//! `anyhow`-style error type ([`error`]) and write-only JSON ([`json`]).
 
 pub mod bench;
 pub mod cli;
+pub mod error;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -13,7 +13,8 @@
 //! Record layout: gap u32, addr u64, flags u8, pattern u8 → 14 bytes.
 
 use super::trace::TraceOp;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 

@@ -1,0 +1,114 @@
+//! The sweep engine's determinism contract: a parallel sweep is
+//! bit-identical to a serial one — every modeled report field and counter,
+//! across thread counts — because per-scenario seeds derive from scenario
+//! index, never from thread identity or completion order.
+
+use hymem::config::{PolicyKind, SystemConfig};
+use hymem::sweep::{derive_seed, run_sweep, Scenario};
+use hymem::workload::spec;
+
+/// 8 mixed scenarios (4 workloads × 2 policies), small enough to run the
+/// whole matrix three times in tier-1.
+fn scenarios() -> Vec<Scenario> {
+    let mut base = SystemConfig::default_scaled(64);
+    base.hmmu.epoch_requests = 2_000;
+    let workloads = [
+        spec::by_name("505.mcf").unwrap(),
+        spec::by_name("538.imagick").unwrap(),
+        spec::by_name("557.xz").unwrap(),
+        spec::by_name("531.deepsjeng").unwrap(),
+    ];
+    let policies = [PolicyKind::Static, PolicyKind::Hotness];
+    let out = Scenario::grid(&workloads, &policies, &base, 8_000);
+    assert_eq!(out.len(), 8);
+    out
+}
+
+#[test]
+fn parallel_sweep_identical_to_serial_across_thread_counts() {
+    let serial = run_sweep(&scenarios(), 1).unwrap();
+    assert_eq!(serial.threads, 1);
+    let fp_serial = serial.deterministic_fingerprint();
+    assert_eq!(fp_serial.lines().count(), 8);
+
+    for threads in [2usize, 4] {
+        let par = run_sweep(&scenarios(), threads).unwrap();
+        assert_eq!(par.threads, threads);
+        assert_eq!(
+            fp_serial,
+            par.deterministic_fingerprint(),
+            "parallel sweep (threads={threads}) diverged from serial"
+        );
+        // True serial-vs-parallel wall ratio (threads=1 run above is the
+        // uncontended baseline). Informational only: CI machines are too
+        // noisy to hard-assert the <0.5x acceptance ratio here.
+        eprintln!(
+            "threads={threads}: wall {}ns vs serial wall {}ns ({:.2}x)",
+            par.wall_ns,
+            serial.wall_ns,
+            serial.wall_ns as f64 / par.wall_ns.max(1) as f64
+        );
+    }
+}
+
+#[test]
+fn repeated_sweep_is_reproducible() {
+    // Same scenario list twice at the same thread count: identical too
+    // (catches any hidden global state between runs).
+    let a = run_sweep(&scenarios(), 4).unwrap();
+    let b = run_sweep(&scenarios(), 4).unwrap();
+    assert_eq!(a.deterministic_fingerprint(), b.deterministic_fingerprint());
+}
+
+#[test]
+fn results_keep_scenario_order() {
+    let names: Vec<String> = scenarios().iter().map(|s| s.name.clone()).collect();
+    let r = run_sweep(&scenarios(), 4).unwrap();
+    let got: Vec<String> = r.scenarios.iter().map(|s| s.name.clone()).collect();
+    assert_eq!(names, got, "results must come back in scenario order");
+}
+
+#[test]
+fn grid_scenarios_share_the_trace_replicates_do_not() {
+    // Controlled comparison: every grid point reports the shared base
+    // seed, so policy deltas on a workload are measured on the identical
+    // trace — and identical traces show up as identical host-side request
+    // volumes for the same workload across policies.
+    let scs = scenarios();
+    let r = run_sweep(&scs, 4).unwrap();
+    for (sc, res) in scs.iter().zip(&r.scenarios) {
+        assert_eq!(res.seed, sc.cfg.seed, "grid must not rewrite seeds");
+    }
+    let mcf: Vec<_> = r
+        .scenarios
+        .iter()
+        .filter(|s| s.workload == "505.mcf")
+        .collect();
+    assert_eq!(mcf.len(), 2);
+    // Same trace + same caches => identical post-cache request volumes;
+    // only the timing/placement columns may differ between policies.
+    assert_eq!(mcf[0].host_read_bytes, mcf[1].host_read_bytes);
+    assert_eq!(mcf[0].host_write_bytes, mcf[1].host_write_bytes);
+
+    // Error-bar path: replicates carry distinct index-derived seeds.
+    let reps = Scenario::replicates(&scs[..1], 4);
+    let rr = run_sweep(&reps, 4).unwrap();
+    let mut seeds: Vec<u64> = rr.scenarios.iter().map(|s| s.seed).collect();
+    for (k, s) in rr.scenarios.iter().enumerate() {
+        assert_eq!(s.seed, derive_seed(scs[0].cfg.seed, k as u64));
+    }
+    seeds.sort_unstable();
+    seeds.dedup();
+    assert_eq!(seeds.len(), 4, "replicate seeds must be distinct");
+}
+
+#[test]
+fn json_report_round_trips_key_fields() {
+    let r = run_sweep(&scenarios()[..2], 2).unwrap();
+    let js = r.to_json().pretty();
+    assert!(js.contains("\"schema\": \"hymem/sweep/v1\""));
+    for sc in &r.scenarios {
+        assert!(js.contains(&format!("\"name\": \"{}\"", sc.name)));
+        assert!(js.contains(&format!("\"platform_time_ns\": {}", sc.platform_time_ns)));
+    }
+}
