@@ -4,13 +4,15 @@
 //! bottleneck.
 
 use hymem::config::{PolicyKind, SystemConfig};
-use hymem::hmmu::policy::{HotnessPolicy, NativeHotnessEngine, PlacementPolicy};
+use hymem::cpu::{CacheHierarchy, CoreModel};
+use hymem::hmmu::policy::{HotnessEngine, HotnessPolicy, NativeHotnessEngine, PlacementPolicy};
 use hymem::hmmu::{build_policy, Hmmu, TagMatcher};
 use hymem::mem::AccessKind;
 use hymem::pcie::PcieLink;
+use hymem::platform::HmmuBackend;
 use hymem::util::bench::BenchSuite;
 use hymem::util::rng::Xoshiro256;
-use hymem::workload::{spec, TraceGenerator};
+use hymem::workload::{spec, TraceBlock, TraceGenerator, TRACE_BLOCK_OPS};
 
 fn main() {
     let mut suite = BenchSuite::new("hot path: HMMU pipeline components");
@@ -102,6 +104,76 @@ fn main() {
                 let _ = gen.next();
             }
             10_000
+        });
+    }
+
+    // Per-op vs block: trace generation. The block path amortizes the
+    // per-op iterator call into one `fill_block` per 4096 ops writing
+    // straight into recycled struct-of-arrays buffers.
+    {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let mut gen = TraceGenerator::new(wl, 16, 42);
+        let ops = TRACE_BLOCK_OPS as u64;
+        suite.bench_items("trace_gen/per-op (batch 4096)", ops, || {
+            for _ in 0..TRACE_BLOCK_OPS {
+                let _ = gen.next();
+            }
+            ops
+        });
+        let mut gen = TraceGenerator::new(wl, 16, 42);
+        let mut block = TraceBlock::new();
+        suite.bench_items("trace_gen/fill_block (batch 4096)", ops, || {
+            gen.fill_block(&mut block) as u64
+        });
+    }
+
+    // Per-op vs block: the full platform inner loop (generator → core →
+    // L1/L2 → PCIe+HMMU). This is the pipeline `Platform::run_opts` and
+    // the sweep engine now drive in blocks; the per-op row is the old
+    // iterator loop kept for the before/after delta.
+    {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = PolicyKind::Static;
+        let ops = TRACE_BLOCK_OPS as u64;
+
+        let mut backend = HmmuBackend::new(cfg.clone(), None);
+        let mut core = CoreModel::new(cfg.cpu);
+        let mut hier = CacheHierarchy::new(&cfg);
+        let mut gen = TraceGenerator::new(wl, cfg.scale, 42);
+        suite.bench_items("platform_step/per-op (batch 4096)", ops, || {
+            for _ in 0..TRACE_BLOCK_OPS {
+                let op = gen.next().unwrap();
+                core.step(&op, &mut hier, &mut backend);
+            }
+            ops
+        });
+
+        let mut backend = HmmuBackend::new(cfg.clone(), None);
+        let mut core = CoreModel::new(cfg.cpu);
+        let mut hier = CacheHierarchy::new(&cfg);
+        let mut gen = TraceGenerator::new(wl, cfg.scale, 42);
+        let mut block = TraceBlock::new();
+        suite.bench_items("platform_step/block (batch 4096)", ops, || {
+            let n = gen.fill_block(&mut block) as u64;
+            core.step_block(&block, &mut hier, &mut backend);
+            n
+        });
+    }
+
+    // Tiled hotness step (the epoch-boundary dense pass; HOTNESS_TILE
+    // chunks, auto-vectorized inner loop).
+    {
+        let pages = 16_384usize;
+        let mut rng = Xoshiro256::new(5);
+        let reads: Vec<f32> = (0..pages).map(|_| rng.below(64) as f32).collect();
+        let writes: Vec<f32> = (0..pages).map(|_| rng.below(16) as f32).collect();
+        let prev: Vec<f32> = (0..pages).map(|_| rng.below(512) as f32 / 4.0).collect();
+        let in_dram: Vec<f32> = (0..pages).map(|_| rng.below(2) as f32).collect();
+        let mut engine = NativeHotnessEngine;
+        suite.bench_items("hotness_step/tiled (16K pages)", pages as u64, || {
+            let out = engine.step(&reads, &writes, &prev, &in_dram);
+            out.hotness.len() as u64
         });
     }
 

@@ -109,6 +109,12 @@ pub struct HmmuConfig {
     pub epoch_requests: u64,
     /// Max migrations enacted per epoch (top-k from the policy step).
     pub migrations_per_epoch: u32,
+    /// Fidelity: DMA migration block transfers occupy HDR FIFO slots
+    /// (and stall when it is full) like demand requests do in hardware —
+    /// the engine shares the same DDR interfaces and header FIFO. `false`
+    /// restores the pre-PR-2 model where migration traffic bypassed the
+    /// occupancy model entirely.
+    pub dma_hdr_occupancy: bool,
 }
 
 /// Placement/migration policy selection.
@@ -233,6 +239,7 @@ impl SystemConfig {
                 page_bytes: 4096,
                 epoch_requests: 100_000,
                 migrations_per_epoch: 32,
+                dma_hdr_occupancy: true,
             },
             policy: PolicyKind::Hotness,
             scale: 1,

@@ -66,6 +66,10 @@ impl CacheHierarchy {
     }
 
     /// One data access at time `now`; misses go to `backend`.
+    /// `#[inline]`: monomorphized per backend and called from
+    /// `CoreModel::step_block`'s tight loop — inlining it there lets the
+    /// TLB/L1 hit path fold into the block loop without a call.
+    #[inline]
     pub fn access<B: MemBackend>(
         &mut self,
         addr: u64,

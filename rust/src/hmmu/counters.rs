@@ -40,6 +40,15 @@ pub struct HmmuCounters {
     pub fifo_full_stalls: u64,
     /// DMA conflict redirects/stalls.
     pub dma_conflict_stalls: u64,
+    /// HDR FIFO slots consumed by DMA migration block transfers (only
+    /// counted when `HmmuConfig::dma_hdr_occupancy` is on; exactly 4 per
+    /// migrated block — two reads + two cross-writes).
+    pub dma_hdr_slots: u64,
+    /// DMA block transfers that stalled on a full HDR FIFO before
+    /// issuing (kept separate from `fifo_full_stalls`, which counts only
+    /// demand-pipeline stalls, so that series stays comparable across
+    /// configurations and PRs).
+    pub dma_hdr_stalls: u64,
 }
 
 impl HmmuCounters {

@@ -86,6 +86,11 @@ impl ActiveSwap {
     }
 }
 
+/// Cap on the recycled-buffer free list: enough for every swap a default
+/// epoch can launch (`migrations_per_epoch` = 32) with headroom; beyond
+/// this, returned buffers are simply dropped.
+const FREE_BUF_CAP: usize = 64;
+
 /// The DMA engine: at most `max_inflight` concurrent swaps; per-block
 /// timing is produced by the HMMU's memory controllers via the `issue`
 /// callback so DMA traffic contends with demand traffic at the devices
@@ -97,12 +102,18 @@ pub struct DmaEngine {
     /// (requires 2× block buffer, which the paper's 8 KiB buffer allows).
     pub pipelined: bool,
     active: Vec<ActiveSwap>,
+    /// Arena of recycled per-swap block-window buffers (§Perf): committed
+    /// swaps return their `start`/`done` vectors here instead of dropping
+    /// them, so steady-state migration launches allocate nothing.
+    free_bufs: Vec<(Vec<Time>, Vec<Time>)>,
     pub swaps_started: u64,
     pub swaps_committed: u64,
     pub blocks_moved: u64,
     pub bytes_moved: u64,
     pub busy_ns: u64,
     pub conflict_stalls: u64,
+    /// Swap launches served from the free list (no allocation).
+    pub bufs_recycled: u64,
 }
 
 impl DmaEngine {
@@ -113,12 +124,14 @@ impl DmaEngine {
             page_bytes,
             pipelined,
             active: Vec::new(),
+            free_bufs: Vec::new(),
             swaps_started: 0,
             swaps_committed: 0,
             blocks_moved: 0,
             bytes_moved: 0,
             busy_ns: 0,
             conflict_stalls: 0,
+            bufs_recycled: 0,
         }
     }
 
@@ -149,8 +162,17 @@ impl DmaEngine {
             "page already migrating"
         );
         let nblocks = self.blocks_per_page() as usize;
-        let mut start = Vec::with_capacity(nblocks);
-        let mut done = Vec::with_capacity(nblocks);
+        // Reuse a committed swap's buffers when available (zero-alloc
+        // steady state); first launches allocate the arena entries.
+        let (mut start, mut done) = match self.free_bufs.pop() {
+            Some(bufs) => {
+                self.bufs_recycled += 1;
+                bufs
+            }
+            None => (Vec::with_capacity(nblocks), Vec::with_capacity(nblocks)),
+        };
+        start.clear();
+        done.clear();
         let base_a = map_a.frame as u64 * self.page_bytes;
         let base_b = map_b.frame as u64 * self.page_bytes;
 
@@ -224,17 +246,31 @@ impl DmaEngine {
     }
 
     /// Remove swaps fully committed by `now`, returning their page pairs
-    /// so the caller can swap the redirection-table entries.
+    /// so the caller can swap the redirection-table entries. Committed
+    /// swaps' block-window buffers go back to the free list. Called per
+    /// request: the no-active fast path returns an unallocated `Vec`.
     pub fn drain_committed(&mut self, now: Time) -> Vec<(u64, u64)> {
         let mut out = Vec::new();
-        self.active.retain(|s| {
-            if s.finished <= now {
+        if self.active.is_empty() {
+            return out;
+        }
+        // Index walk instead of `retain`: we need ownership of removed
+        // entries to recycle their buffers, and `remove` (not
+        // `swap_remove`) preserves the newest-swap-last order `route`
+        // relies on.
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].finished <= now {
+                let s = self.active.remove(i);
                 out.push((s.page_a, s.page_b));
-                false // remove
+                if self.free_bufs.len() < FREE_BUF_CAP {
+                    let ActiveSwap { start, done, .. } = s;
+                    self.free_bufs.push((start, done));
+                }
             } else {
-                true
+                i += 1;
             }
-        });
+        }
         self.swaps_committed += out.len() as u64;
         out
     }
@@ -354,6 +390,27 @@ mod tests {
             at + 10
         });
         assert_eq!(count, 8 * 4); // 8 blocks × (2 reads + 2 writes)
+    }
+
+    #[test]
+    fn swap_buffers_recycle_after_commit() {
+        let mut dma = DmaEngine::new(512, 4096, false);
+        let (ma, mb) = maps();
+        // First swap allocates; after its commit, subsequent swaps are
+        // served from the free list (steady state allocates nothing).
+        let done = dma.start_swap(10, ma, 20, mb, 0, &mut fixed_issue);
+        assert_eq!(dma.bufs_recycled, 0);
+        dma.drain_committed(done);
+        for k in 0..5u64 {
+            let t0 = (k + 1) * 10_000;
+            let d = dma.start_swap(30 + 2 * k, ma, 31 + 2 * k, mb, t0, &mut fixed_issue);
+            assert_eq!(dma.bufs_recycled, k + 1, "swap {k} must reuse a buffer");
+            dma.drain_committed(d);
+        }
+        // Recycled buffers carry full per-block windows for the new swap.
+        let d = dma.start_swap(50, ma, 60, mb, 100_000, &mut fixed_issue);
+        let (r, _) = dma.route(50, 7 * 512, d);
+        assert_eq!(r, DmaRoute::UseDestination);
     }
 
     #[test]

@@ -36,13 +36,20 @@ use crate::sim::{Clock, Time};
 /// FIFO occupancy model. §Perf: replaces a per-request `VecDeque` (which
 /// reallocated and bounds-checked on the hot path) with one boxed slice
 /// allocated at construction; push/pop are two or three arithmetic ops.
-/// Entries are pushed in release order (the tag matcher's in-order drain
-/// makes release times monotone), so the front is always the earliest.
+/// Entries drain in push order (hardware FIFO): [`Self::push_back`]
+/// clamps each release to be ≥ the previously pushed one, so the front is
+/// always the earliest. For the demand path the clamp is a no-op (the tag
+/// matcher's in-order drain already makes release times monotone); it
+/// matters when DMA migration traffic — whose completions are computed at
+/// the epoch boundary, ahead of later demand requests — shares the FIFO
+/// under `HmmuConfig::dma_hdr_occupancy`.
 #[derive(Clone, Debug)]
 struct ReleaseRing {
     buf: Box<[Time]>,
     head: usize,
     len: usize,
+    /// Most recently pushed (clamped) release.
+    last: Time,
 }
 
 impl ReleaseRing {
@@ -52,6 +59,7 @@ impl ReleaseRing {
             buf: vec![0; capacity].into_boxed_slice(),
             head: 0,
             len: 0,
+            last: 0,
         }
     }
 
@@ -82,6 +90,8 @@ impl ReleaseRing {
     #[inline]
     fn push_back(&mut self, t: Time) {
         debug_assert!(!self.is_full(), "HDR occupancy ring overflow");
+        let t = t.max(self.last);
+        self.last = t;
         let mut i = self.head + self.len;
         if i >= self.buf.len() {
             i -= self.buf.len();
@@ -363,6 +373,12 @@ impl Hmmu {
         };
         self.counters.policy_wall_ns += wall.elapsed().as_nanos() as u64;
 
+        // Fidelity (ROADMAP): migration block transfers share the HDR
+        // FIFO with demand traffic — each DMA device access claims a slot
+        // (stalling its issue when the FIFO is full) and holds it until
+        // the access completes. `dma_hdr_occupancy = false` restores the
+        // old bypass model.
+        let occupy = self.cfg.hmmu.dma_hdr_occupancy;
         for (nvm_page, dram_page) in pairs {
             let (Some(ma), Some(mb)) = (self.table.lookup(nvm_page), self.table.lookup(dram_page))
             else {
@@ -375,9 +391,48 @@ impl Hmmu {
             }
             let dram_mc = &mut self.dram_mc;
             let nvm_mc = &mut self.nvm_mc;
-            let mut issue = |dev: Device, a: u64, k: AccessKind, b: u64, at: Time| match dev {
-                Device::Dram => dram_mc.issue(a, k, b, at),
-                Device::Nvm => nvm_mc.issue(a, k, b, at),
+            let hdr = &mut self.hdr_occupancy;
+            let counters = &mut self.counters;
+            let mut issue = |dev: Device, a: u64, k: AccessKind, b: u64, at: Time| {
+                let mut at = at;
+                if occupy {
+                    // Free slots whose responses left by `at`; stall the
+                    // transfer on a full FIFO until the head drains.
+                    // Time-base note: every ring entry's stored release is
+                    // ≤ the epoch time `now` (demand releases are monotone
+                    // and the epoch fires at the newest one; earlier DMA
+                    // pushes were clamped monotone) or is a DMA completion
+                    // from this epoch, and `at >= now` — so these pops
+                    // never free a slot before its modeled drain time.
+                    while let Some(front) = hdr.front() {
+                        if front <= at {
+                            hdr.pop_front();
+                        } else {
+                            break;
+                        }
+                    }
+                    if hdr.is_full() {
+                        counters.dma_hdr_stalls += 1;
+                        at = hdr.front().unwrap();
+                        hdr.pop_front();
+                        while let Some(front) = hdr.front() {
+                            if front <= at {
+                                hdr.pop_front();
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                }
+                let done = match dev {
+                    Device::Dram => dram_mc.issue(a, k, b, at),
+                    Device::Nvm => nvm_mc.issue(a, k, b, at),
+                };
+                if occupy {
+                    counters.dma_hdr_slots += 1;
+                    hdr.push_back(done);
+                }
+                done
             };
             self.dma
                 .start_swap(nvm_page, ma, dram_page, mb, now, &mut issue);
@@ -565,6 +620,55 @@ mod tests {
         assert!(mapped > 0);
         let expect = h.table.dram_resident_pages() as f64 / mapped as f64;
         assert!((h.dram_residency() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dma_traffic_consumes_hdr_fifo_slots() {
+        // Default fidelity model: every migrated 512B block costs exactly
+        // 4 HDR slots (2 reads + 2 cross-writes) — pinned against the DMA
+        // engine's own block counter.
+        let mut h = hmmu(PolicyKind::Hotness);
+        let page_bytes = h.config().hmmu.page_bytes;
+        let dram_pages = h.config().dram_pages();
+        let mut t = 0;
+        for p in 0..(dram_pages + 50) {
+            for _ in 0..30 {
+                t = h.access(p * page_bytes, AccessKind::Read, 64, t + 20);
+            }
+        }
+        h.drain(t + 100_000_000);
+        assert!(h.counters.migrations > 0, "scenario must migrate");
+        assert!(h.dma.blocks_moved > 0);
+        assert_eq!(
+            h.counters.dma_hdr_slots,
+            4 * h.dma.blocks_moved,
+            "each DMA block claims 4 HDR slots"
+        );
+        h.table.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dma_hdr_occupancy_flag_off_restores_bypass() {
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = 1000;
+        cfg.hmmu.dma_hdr_occupancy = false;
+        let mut h = Hmmu::new(cfg, None);
+        let page_bytes = h.config().hmmu.page_bytes;
+        let dram_pages = h.config().dram_pages();
+        let mut t = 0;
+        for p in 0..(dram_pages + 50) {
+            for _ in 0..30 {
+                t = h.access(p * page_bytes, AccessKind::Read, 64, t + 20);
+            }
+        }
+        h.drain(t + 100_000_000);
+        assert!(h.counters.migrations > 0);
+        assert_eq!(
+            h.counters.dma_hdr_slots, 0,
+            "bypass mode must not touch the occupancy model"
+        );
+        assert_eq!(h.counters.dma_hdr_stalls, 0);
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub use first_touch::FirstTouchPolicy;
 pub use hints_policy::HintsPolicy;
 pub use hotness::{
     HotnessEngine, HotnessPolicy, NativeHotnessEngine, PolicyStepOutput, HOTNESS_DECAY,
-    NEG_INF, WRITE_WEIGHT,
+    HOTNESS_TILE, NEG_INF, WRITE_WEIGHT,
 };
 pub use static_split::StaticPolicy;
 pub use wear_aware::{WearAwarePolicy, WEAR_BIAS};

@@ -144,6 +144,24 @@ fn cmd_sweep(args: &Args) -> i32 {
         }
         scenarios = Scenario::stall_grid(&scenarios, &points);
     }
+    // Optional core-count axis: `--cores 1,4` (rate-style multicore runs
+    // share one HMMU; 1 keeps the single-core platform + native pass).
+    if let Some(list) = args.get("cores") {
+        let mut counts = Vec::new();
+        for tok in list.split(',') {
+            match tok.trim().parse::<usize>() {
+                Ok(n) if (1..=cfg.cpu.cores as usize).contains(&n) => counts.push(n),
+                _ => {
+                    eprintln!(
+                        "bad --cores entry {tok:?}; want 1..={} per point",
+                        cfg.cpu.cores
+                    );
+                    return 1;
+                }
+            }
+        }
+        scenarios = Scenario::cores_grid(&scenarios, &counts);
+    }
 
     println!(
         "# sweep: {} scenarios ({} workloads x {} policies) scale=1/{} ops={ops} threads={threads}",
@@ -443,9 +461,10 @@ COMMANDS:
                   [--ops N] [--scale N] [--tech 3dxpoint|stt-ram|...] [--flush]
                   [--native-engine]
   sweep           parallel scenario sweep: 12 workloads [x --policies a,b,..]
-                  [x --nvm-stalls rd:wr,rd:wr,..] on --threads N OS threads
-                  (default: all cores; bit-identical to serial), writes
-                  --json <path> (default BENCH_sweep.json) [--ops N]
+                  [x --nvm-stalls rd:wr,rd:wr,..] [x --cores 1,4,..] on
+                  --threads N OS threads (default: all cores; bit-identical
+                  to serial), writes --json <path> (default BENCH_sweep.json)
+                  [--ops N]
   fig7            full comparison vs gem5-like and champsim-like
                   [--ops N] [--baseline-instructions N]
   fig8            memory request bytes per workload [--ops N]

@@ -25,7 +25,7 @@ use crate::hmmu::{Hmmu, HotnessEngine};
 use crate::mem::AccessKind;
 use crate::pcie::PcieLink;
 use crate::sim::Time;
-use crate::workload::{TraceGenerator, Workload};
+use crate::workload::{TraceBlock, TraceGenerator, Workload};
 use crate::util::error::Result;
 
 /// Run-size options.
@@ -142,6 +142,11 @@ impl Platform {
         let seed = cfg.seed;
 
         // --- native pass (same trace, local DRAM) ---
+        // §Perf: both passes pull whole [`TraceBlock`]s through the core
+        // (`fill_block` + `step_block`) instead of one op at a time; the
+        // block is allocated once per pass and recycled, so the steady-
+        // state loop performs no heap allocation. Bit-identical to the
+        // per-op loop (pinned by `tests/batch_equivalence.rs`).
         let native_cfg = cfg.clone();
         let native_wl = *wl;
         let native_pass = move || {
@@ -149,9 +154,11 @@ impl Platform {
             let mut nat_backend = native::NativeBackend::new(&native_cfg);
             let mut nat_core = CoreModel::new(native_cfg.cpu);
             let mut nat_hier = CacheHierarchy::new(&native_cfg);
-            let gen = TraceGenerator::new(native_wl, native_cfg.scale, seed).take_ops(opts.ops);
-            for op in gen {
-                nat_core.step(&op, &mut nat_hier, &mut nat_backend);
+            let mut gen =
+                TraceGenerator::new(native_wl, native_cfg.scale, seed).take_ops(opts.ops);
+            let mut block = TraceBlock::new();
+            while gen.fill_block(&mut block) > 0 {
+                nat_core.step_block(&block, &mut nat_hier, &mut nat_backend);
             }
             let native_time_ns = nat_core.finish();
             (native_time_ns, wall1.elapsed().as_nanos() as u64)
@@ -164,9 +171,10 @@ impl Platform {
             let mut backend = HmmuBackend::new(cfg.clone(), engine);
             let mut core = CoreModel::new(cfg.cpu);
             let mut hier = CacheHierarchy::new(&cfg);
-            let gen = TraceGenerator::new(*wl, cfg.scale, seed).take_ops(opts.ops);
-            for op in gen {
-                core.step(&op, &mut hier, &mut backend);
+            let mut gen = TraceGenerator::new(*wl, cfg.scale, seed).take_ops(opts.ops);
+            let mut block = TraceBlock::new();
+            while gen.fill_block(&mut block) > 0 {
+                core.step_block(&block, &mut hier, &mut backend);
             }
             if opts.flush_at_end {
                 let now = core.now();

@@ -15,10 +15,10 @@
 use super::{HmmuBackend, RunOpts};
 use crate::config::SystemConfig;
 use crate::cpu::{CacheHierarchy, CoreModel, MemBackend};
-use crate::hmmu::HotnessEngine;
+use crate::hmmu::{HmmuCounters, HotnessEngine};
 use crate::mem::AccessKind;
 use crate::sim::Time;
-use crate::workload::{TraceGenerator, Workload};
+use crate::workload::{TraceBlock, TraceGenerator, Workload};
 use crate::bail;
 use crate::util::error::Result;
 
@@ -45,6 +45,13 @@ pub struct MulticoreReport {
     pub fifo_full_stalls: u64,
     /// Aggregate modeled MIPS across cores.
     pub aggregate_mips: f64,
+    /// Full HMMU counter block (one HMMU shared by all cores) — lets the
+    /// sweep engine report multicore scenarios with the same columns as
+    /// single-core runs.
+    pub counters: HmmuCounters,
+    /// DRAM residency of mapped pages at end of run.
+    pub dram_residency: f64,
+    pub nvm_max_wear: u64,
 }
 
 impl MulticoreReport {
@@ -107,8 +114,37 @@ pub fn run_multicore(
         core: CoreModel,
         hier: CacheHierarchy,
         gen: TraceGenerator,
+        /// Current trace block (§Perf: the generator refills this whole
+        /// blocks at a time; the scheduler consumes it through `cursor`).
+        /// Allocated once per core and recycled — no steady-state
+        /// allocation.
+        block: TraceBlock,
+        cursor: usize,
         stripe: u64,
         workload: String,
+    }
+
+    impl CoreState {
+        /// Next op for this core, refilling the block when it is drained.
+        /// The op sequence is bit-identical to pulling the generator
+        /// directly, so the time-ordered interleaving (and therefore all
+        /// shared-resource contention) is unchanged by batching.
+        #[inline]
+        fn next_op(&mut self) -> Option<crate::workload::TraceOp> {
+            if self.cursor == self.block.len() {
+                // Reset before the refill: `fill_block` clears the block,
+                // so on exhaustion (0 ops) the cursor must match the now-
+                // empty block — a further call then retries the (empty)
+                // refill instead of indexing past the end.
+                self.cursor = 0;
+                if self.gen.fill_block(&mut self.block) == 0 {
+                    return None;
+                }
+            }
+            let op = self.block.get(self.cursor);
+            self.cursor += 1;
+            Some(op)
+        }
     }
 
     let mut cores: Vec<CoreState> = workloads
@@ -119,6 +155,8 @@ pub fn run_multicore(
             hier: CacheHierarchy::new(&core_cfg),
             gen: TraceGenerator::new(*wl, wl_cfg.scale, cfg.seed ^ (i as u64) << 32)
                 .take_ops(opts.ops),
+            block: TraceBlock::new(),
+            cursor: 0,
             stripe: core_stripe(&cfg, i, n),
             workload: wl.name.to_string(),
         })
@@ -151,7 +189,7 @@ pub fn run_multicore(
         .collect();
     while let Some(Reverse((_, idx))) = ready.pop() {
         let c = &mut cores[idx];
-        match c.gen.next() {
+        match c.next_op() {
             Some(op) => {
                 let mut shim = StripedBackend {
                     inner: &mut backend,
@@ -187,6 +225,9 @@ pub fn run_multicore(
         hmmu_requests: backend.hmmu.counters.total_host_requests(),
         pcie_credit_stalls: backend.link.credit_stalls,
         fifo_full_stalls: backend.hmmu.counters.fifo_full_stalls,
+        dram_residency: backend.hmmu.dram_residency(),
+        nvm_max_wear: backend.hmmu.nvm_device().max_wear(),
+        counters: backend.hmmu.counters.clone(),
         cores: reports,
         makespan_ns: makespan,
     })

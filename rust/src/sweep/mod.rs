@@ -29,7 +29,7 @@ pub mod report;
 pub use report::{ScenarioResult, SweepReport};
 
 use crate::config::{PolicyKind, SystemConfig};
-use crate::platform::{Platform, RunOpts};
+use crate::platform::{run_multicore, Platform, RunOpts};
 use crate::util::error::Result;
 use crate::util::rng::splitmix64;
 use crate::workload::Workload;
@@ -46,10 +46,15 @@ pub struct Scenario {
     pub name: String,
     pub workload: Workload,
     pub cfg: SystemConfig,
-    /// Memory operations to simulate.
+    /// Memory operations to simulate (per core when `cores > 1`).
     pub ops: u64,
     /// Flush caches at the end (write-back volume, Fig 8 style).
     pub flush_at_end: bool,
+    /// Core count axis: `1` runs the single-core platform (with its
+    /// native reference pass); `> 1` runs a rate-style multicore scenario
+    /// (`run_multicore`: that many copies of the workload, private
+    /// L1/L2s, one shared link + HMMU) through the same batched pipeline.
+    pub cores: usize,
 }
 
 impl Scenario {
@@ -60,7 +65,15 @@ impl Scenario {
             cfg,
             ops,
             flush_at_end: false,
+            cores: 1,
         }
+    }
+
+    /// Run this scenario as a rate-style multicore run on `cores` cores.
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        assert!(cores >= 1);
+        self.cores = cores;
+        self
     }
 
     /// Override the emulated NVM stall point (§III-F "arbitrary latency
@@ -102,6 +115,23 @@ impl Scenario {
             for &(rd, wr) in stall_points {
                 let mut s = sc.clone().with_nvm_stalls(rd, wr);
                 s.name = format!("{}@{rd}:{wr}", sc.name);
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    /// Expand scenarios across a core-count axis, suffixing names with
+    /// `x<cores>` (e.g. `505.mcf/hotness x4` → `"505.mcf/hotnessx4"`).
+    /// Entries with `1` keep the single-core platform path unsuffixed.
+    pub fn cores_grid(scenarios: &[Scenario], cores: &[usize]) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(scenarios.len() * cores.len());
+        for sc in scenarios {
+            for &n in cores {
+                let mut s = sc.clone().with_cores(n);
+                if n > 1 {
+                    s.name = format!("{}x{n}", sc.name);
+                }
                 out.push(s);
             }
         }
@@ -153,13 +183,25 @@ pub fn derive_seed(base: u64, index: u64) -> u64 {
 fn run_scenario(sc: &Scenario) -> Result<ScenarioResult> {
     let wall = Instant::now();
     let seed = sc.cfg.seed;
-    let report = Platform::new(sc.cfg.clone()).run_opts_serial(
-        &sc.workload,
-        RunOpts {
-            ops: sc.ops,
-            flush_at_end: sc.flush_at_end,
-        },
-    )?;
+    let opts = RunOpts {
+        ops: sc.ops,
+        flush_at_end: sc.flush_at_end,
+    };
+    if sc.cores > 1 {
+        // Rate-style multicore point: `cores` copies of the workload
+        // sharing one HMMU. No native reference pass exists for this
+        // shape, so the slowdown columns report 0 (the throughput metric
+        // is the makespan / aggregate MIPS).
+        let wls = vec![sc.workload; sc.cores];
+        let report = run_multicore(sc.cfg.clone(), &wls, opts, None)?;
+        return Ok(ScenarioResult::from_multicore(
+            sc,
+            seed,
+            &report,
+            wall.elapsed().as_nanos() as u64,
+        ));
+    }
+    let report = Platform::new(sc.cfg.clone()).run_opts_serial(&sc.workload, opts)?;
     Ok(ScenarioResult::new(sc, seed, &report, wall.elapsed().as_nanos() as u64))
 }
 
@@ -239,6 +281,38 @@ mod tests {
         assert_eq!(grid[0].name, "mcf/static@50:225");
         assert_eq!(grid[1].cfg.nvm.read_stall_ns, 200);
         assert_eq!(grid[1].cfg.nvm.write_stall_ns, 900);
+    }
+
+    #[test]
+    fn cores_grid_expands_and_suffixes() {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let base = vec![Scenario::new("mcf/static", wl, small_cfg(), 1000)];
+        let grid = Scenario::cores_grid(&base, &[1, 4]);
+        assert_eq!(grid.len(), 2);
+        assert_eq!(grid[0].name, "mcf/static");
+        assert_eq!(grid[0].cores, 1);
+        assert_eq!(grid[1].name, "mcf/staticx4");
+        assert_eq!(grid[1].cores, 4);
+    }
+
+    #[test]
+    fn multicore_scenario_runs_through_sweep() {
+        let wl = spec::by_name("541.leela").unwrap();
+        let scenarios = vec![
+            Scenario::new("leela", wl, small_cfg(), 3_000),
+            Scenario::new("leelax2", wl, small_cfg(), 3_000).with_cores(2),
+        ];
+        let r = run_sweep(&scenarios, 2).unwrap();
+        assert_eq!(r.scenarios.len(), 2);
+        // Single-core row has a native reference; the multicore row
+        // reports makespan with zeroed native columns.
+        assert!(r.scenarios[0].slowdown > 1.0);
+        assert_eq!(r.scenarios[1].cores, 2);
+        assert_eq!(r.scenarios[1].slowdown, 0.0);
+        assert!(r.scenarios[1].platform_time_ns > 0);
+        assert!(r.scenarios[1].host_read_bytes > 0);
+        // Geomean skips the slowdown-less multicore rows.
+        assert!((r.geomean_slowdown - r.scenarios[0].slowdown).abs() < 1e-9);
     }
 
     #[test]

@@ -20,6 +20,10 @@ pub struct ScenarioResult {
     pub policy: String,
     pub seed: u64,
     pub ops: u64,
+    /// Core count (1 = single-core platform run; >1 = rate-style
+    /// multicore run, where `platform_time_ns` is the makespan and the
+    /// native/slowdown columns are 0 — no native reference exists).
+    pub cores: usize,
     pub platform_time_ns: u64,
     pub native_time_ns: u64,
     pub slowdown: f64,
@@ -56,10 +60,56 @@ impl ScenarioResult {
             policy: r.policy.clone(),
             seed,
             ops: sc.ops,
+            cores: sc.cores,
             platform_time_ns: r.platform_time_ns,
             native_time_ns: r.native_time_ns,
             slowdown: r.slowdown(),
             l2_miss_rate: r.l2_miss_rate,
+            dram_service_ratio: r.counters.dram_service_ratio(),
+            dram_residency: r.dram_residency,
+            migrations: r.counters.migrations,
+            epochs: r.counters.epochs,
+            dram_reads: r.counters.dram_reads,
+            dram_writes: r.counters.dram_writes,
+            nvm_reads: r.counters.nvm_reads,
+            nvm_writes: r.counters.nvm_writes,
+            host_read_bytes: r.counters.host_read_bytes,
+            host_write_bytes: r.counters.host_write_bytes,
+            fifo_full_stalls: r.counters.fifo_full_stalls,
+            reorder_wait_ns: r.counters.reorder_wait_ns,
+            dma_conflict_stalls: r.counters.dma_conflict_stalls,
+            nvm_max_wear: r.nvm_max_wear,
+            energy_mj: r.counters.energy_estimate_mj(),
+            latency_mean_ns: r.counters.latency.mean(),
+            latency_p50_ns: r.counters.latency.percentile(50.0),
+            latency_p99_ns: r.counters.latency.percentile(99.0),
+            latency_max_ns: r.counters.latency.max(),
+            wall_ns,
+        }
+    }
+
+    /// A multicore scenario result (`Scenario::cores > 1`): the shared
+    /// HMMU's counters fill the same columns as a single-core run; the
+    /// native-reference columns (`native_time_ns`, `slowdown`) and the
+    /// per-hierarchy `l2_miss_rate` have no multicore equivalent and
+    /// report 0.
+    pub fn from_multicore(
+        sc: &Scenario,
+        seed: u64,
+        r: &crate::platform::MulticoreReport,
+        wall_ns: u64,
+    ) -> Self {
+        ScenarioResult {
+            name: sc.name.clone(),
+            workload: sc.workload.name.to_string(),
+            policy: sc.cfg.policy.name().to_string(),
+            seed,
+            ops: sc.ops,
+            cores: sc.cores,
+            platform_time_ns: r.makespan_ns,
+            native_time_ns: 0,
+            slowdown: 0.0,
+            l2_miss_rate: 0.0,
             dram_service_ratio: r.counters.dram_service_ratio(),
             dram_residency: r.dram_residency,
             migrations: r.counters.migrations,
@@ -105,7 +155,7 @@ impl ScenarioResult {
         let mut s = String::new();
         let _ = write!(
             s,
-            "{}|{}|{}|seed={:#x}|ops={}|plat={}|native={}|slow={:?}|l2={:?}|serv={:?}|resid={:?}\
+            "{}|{}|{}|seed={:#x}|ops={}|cores={}|plat={}|native={}|slow={:?}|l2={:?}|serv={:?}|resid={:?}\
              |mig={}|epochs={}|dr={}|dw={}|nr={}|nw={}|hrb={}|hwb={}|fifo={}|reorder={}|dma={}\
              |wear={}|mj={:?}|lat=({:?},{},{},{})",
             self.name,
@@ -113,6 +163,7 @@ impl ScenarioResult {
             self.policy,
             self.seed,
             self.ops,
+            self.cores,
             self.platform_time_ns,
             self.native_time_ns,
             self.slowdown,
@@ -147,6 +198,7 @@ impl ScenarioResult {
             .set("policy", self.policy.as_str())
             .set("seed", self.seed)
             .set("ops", self.ops)
+            .set("cores", self.cores as u64)
             .set("platform_time_ns", self.platform_time_ns)
             .set("native_time_ns", self.native_time_ns)
             .set("slowdown", self.slowdown)
@@ -197,7 +249,13 @@ pub struct SweepReport {
 
 impl SweepReport {
     pub fn new(threads: usize, wall_ns: u64, scenarios: Vec<ScenarioResult>) -> Self {
-        let slowdowns: Vec<f64> = scenarios.iter().map(|s| s.slowdown).collect();
+        // Multicore scenarios carry no native reference (slowdown 0);
+        // keep them out of the geomean instead of cratering it.
+        let slowdowns: Vec<f64> = scenarios
+            .iter()
+            .map(|s| s.slowdown)
+            .filter(|&x| x > 0.0)
+            .collect();
         SweepReport {
             threads,
             wall_ns,

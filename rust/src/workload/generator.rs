@@ -6,7 +6,7 @@
 //! from an explicit seed; traces are reproducible.
 
 use super::spec::Workload;
-use super::trace::TraceOp;
+use super::trace::{TraceBlock, TraceOp};
 use crate::util::rng::Xoshiro256;
 
 const LINE: u64 = 64;
@@ -128,6 +128,49 @@ impl TraceGenerator {
         &self.wl
     }
 
+    /// Generate one op, honoring the `take_ops` bound. Shared by the
+    /// per-op [`Iterator`] impl and [`Self::fill_block`], so the two
+    /// paths emit bit-identical sequences by construction.
+    #[inline]
+    fn gen_op(&mut self) -> Option<TraceOp> {
+        if let Some(rem) = &mut self.remaining {
+            if *rem == 0 {
+                return None;
+            }
+            *rem -= 1;
+        }
+        // Geometric gap with the workload's mean.
+        let gap = self.rng.burst(self.wl.mean_gap, 4096).saturating_sub(1) as u32;
+        let (addr, dependent, writeable, pattern) = self.next_addr();
+        let is_write = writeable && self.rng.chance(self.wl.write_frac);
+        self.instructions += gap as u64 + 1;
+        self.ops += 1;
+        Some(TraceOp {
+            gap,
+            addr,
+            is_write,
+            dependent,
+            pattern,
+        })
+    }
+
+    /// Batched generation (§Perf): clear `block` and refill it up to its
+    /// capacity (or until the `take_ops` bound runs out), returning the
+    /// number of ops produced. The block's buffers are reused across
+    /// calls — steady-state generation allocates nothing — and the op
+    /// sequence is bit-identical to draining the same generator through
+    /// `Iterator::next`.
+    pub fn fill_block(&mut self, block: &mut TraceBlock) -> usize {
+        block.clear();
+        while !block.is_full() {
+            match self.gen_op() {
+                Some(op) => block.push(op),
+                None => break,
+            }
+        }
+        block.len()
+    }
+
     #[inline]
     fn next_addr(&mut self) -> (u64, bool /*dependent*/, bool /*writeable*/, u8 /*pattern*/) {
         let u = self.rng.f64();
@@ -192,25 +235,7 @@ impl Iterator for TraceGenerator {
     type Item = TraceOp;
 
     fn next(&mut self) -> Option<TraceOp> {
-        if let Some(rem) = &mut self.remaining {
-            if *rem == 0 {
-                return None;
-            }
-            *rem -= 1;
-        }
-        // Geometric gap with the workload's mean.
-        let gap = self.rng.burst(self.wl.mean_gap, 4096).saturating_sub(1) as u32;
-        let (addr, dependent, writeable, pattern) = self.next_addr();
-        let is_write = writeable && self.rng.chance(self.wl.write_frac);
-        self.instructions += gap as u64 + 1;
-        self.ops += 1;
-        Some(TraceOp {
-            gap,
-            addr,
-            is_write,
-            dependent,
-            pattern,
-        })
+        self.gen_op()
     }
 }
 
@@ -295,6 +320,49 @@ mod tests {
             seen[cur as usize] = true;
         }
         assert_eq!(cur, 0);
+    }
+
+    #[test]
+    fn fill_block_bit_identical_to_iterator() {
+        // Same seed, two drain styles: the block path must reproduce the
+        // per-op stream exactly, including the take_ops tail.
+        for name in ["505.mcf", "538.imagick", "519.lbm"] {
+            let per_op: Vec<TraceOp> = TraceGenerator::new(by_name(name).unwrap(), 16, 42)
+                .take_ops(10_000)
+                .collect();
+            let mut gen = TraceGenerator::new(by_name(name).unwrap(), 16, 42).take_ops(10_000);
+            let mut block = TraceBlock::with_capacity(4096);
+            let mut batched = Vec::new();
+            while gen.fill_block(&mut block) > 0 {
+                batched.extend(block.iter());
+            }
+            assert_eq!(per_op, batched, "{name}: block path diverged");
+            // 10_000 is not a multiple of 4096: the tail block is short.
+            assert_eq!(batched.len(), 10_000);
+        }
+    }
+
+    #[test]
+    fn fill_block_counts_ops_and_instructions() {
+        let mut a = TraceGenerator::new(by_name("557.xz").unwrap(), 16, 7).take_ops(5000);
+        let mut block = TraceBlock::new();
+        let mut total = 0;
+        while a.fill_block(&mut block) > 0 {
+            total += block.len();
+        }
+        assert_eq!(total, 5000);
+        assert_eq!(a.ops, 5000);
+        let b: Vec<TraceOp> = TraceGenerator::new(by_name("557.xz").unwrap(), 16, 7)
+            .take_ops(5000)
+            .collect();
+        assert_eq!(
+            a.instructions,
+            b.iter().map(|o| o.instructions()).sum::<u64>()
+        );
+        // Exhausted generator: fill_block returns 0 and leaves the block
+        // empty (not stale data from the previous refill).
+        assert_eq!(a.fill_block(&mut block), 0);
+        assert!(block.is_empty());
     }
 
     #[test]

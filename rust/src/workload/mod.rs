@@ -21,5 +21,5 @@ pub mod tracefile;
 
 pub use generator::TraceGenerator;
 pub use spec::{by_name, proportional_ops, Workload, WORKLOADS};
-pub use trace::TraceOp;
+pub use trace::{TraceBlock, TraceOp, TRACE_BLOCK_OPS};
 pub use tracefile::{dump as dump_trace, TraceReader};

@@ -1,4 +1,5 @@
-//! Trace record types.
+//! Trace record types: the per-op [`TraceOp`] record and the batched
+//! struct-of-arrays [`TraceBlock`] the §Perf pipeline moves ops in.
 
 /// One memory operation in a workload trace, with the number of
 /// non-memory instructions preceding it.
@@ -61,6 +62,140 @@ impl TraceOp {
     }
 }
 
+/// Default capacity (in ops) of a [`TraceBlock`]: big enough to amortize
+/// per-op call overhead across the pipeline, small enough that the three
+/// arrays (4096 × (4 + 8 + 1) B ≈ 52 KiB) stay cache-resident while a
+/// block is in flight.
+pub const TRACE_BLOCK_OPS: usize = 4096;
+
+/// A chunk of trace in struct-of-arrays layout — the unit the batched
+/// pipeline moves between the generator, the core model and the cache
+/// hierarchy (§Perf). The three parallel arrays (`gaps`, `addrs`, packed
+/// `flags`) are fixed-capacity buffers reused across refills, so the
+/// steady-state inner loop performs **zero heap allocation**: one block
+/// is allocated per run and recycled by [`clear`](Self::clear) /
+/// `TraceGenerator::fill_block`.
+#[derive(Clone, Debug)]
+pub struct TraceBlock {
+    gaps: Vec<u32>,
+    addrs: Vec<u64>,
+    /// Packed per-op flags: [`Self::FLAG_WRITE`] | [`Self::FLAG_DEPENDENT`]
+    /// | (pattern << [`Self::PATTERN_SHIFT`]).
+    flags: Vec<u8>,
+    capacity: usize,
+}
+
+impl Default for TraceBlock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceBlock {
+    /// `is_write` bit in the packed flags byte.
+    pub const FLAG_WRITE: u8 = 1 << 0;
+    /// `dependent` bit in the packed flags byte.
+    pub const FLAG_DEPENDENT: u8 = 1 << 1;
+    /// Pattern (`TraceOp::PAT_*`) field shift in the packed flags byte.
+    pub const PATTERN_SHIFT: u8 = 2;
+
+    /// A block with the default [`TRACE_BLOCK_OPS`] capacity.
+    pub fn new() -> Self {
+        Self::with_capacity(TRACE_BLOCK_OPS)
+    }
+
+    /// A block holding up to `capacity` ops. The arrays are allocated
+    /// once, here; refills reuse them.
+    pub fn with_capacity(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        TraceBlock {
+            gaps: Vec::with_capacity(capacity),
+            addrs: Vec::with_capacity(capacity),
+            flags: Vec::with_capacity(capacity),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.addrs.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len() == self.capacity
+    }
+
+    /// Drop all ops, keeping the allocations for the next refill.
+    pub fn clear(&mut self) {
+        self.gaps.clear();
+        self.addrs.clear();
+        self.flags.clear();
+    }
+
+    /// Pack one flags byte.
+    #[inline]
+    pub fn pack_flags(is_write: bool, dependent: bool, pattern: u8) -> u8 {
+        (is_write as u8) | ((dependent as u8) << 1) | (pattern << Self::PATTERN_SHIFT)
+    }
+
+    /// Append one op. Caller keeps `len() <= capacity()` (the block is a
+    /// fixed-size buffer, not a growable vec).
+    #[inline]
+    pub fn push(&mut self, op: TraceOp) {
+        debug_assert!(!self.is_full(), "TraceBlock overflow");
+        self.gaps.push(op.gap);
+        self.addrs.push(op.addr);
+        self.flags
+            .push(Self::pack_flags(op.is_write, op.dependent, op.pattern));
+    }
+
+    /// Reconstruct op `i` (bit-identical to the op that was pushed).
+    #[inline]
+    pub fn get(&self, i: usize) -> TraceOp {
+        let f = self.flags[i];
+        TraceOp {
+            gap: self.gaps[i],
+            addr: self.addrs[i],
+            is_write: f & Self::FLAG_WRITE != 0,
+            dependent: f & Self::FLAG_DEPENDENT != 0,
+            pattern: f >> Self::PATTERN_SHIFT,
+        }
+    }
+
+    /// The gap column (len() entries).
+    pub fn gaps(&self) -> &[u32] {
+        &self.gaps
+    }
+
+    /// The address column.
+    pub fn addrs(&self) -> &[u64] {
+        &self.addrs
+    }
+
+    /// The packed-flags column.
+    pub fn flags(&self) -> &[u8] {
+        &self.flags
+    }
+
+    /// Iterate the block as [`TraceOp`]s (reconstructed; for tests and
+    /// non-hot-path consumers — the hot path reads the columns directly).
+    pub fn iter(&self) -> impl Iterator<Item = TraceOp> + '_ {
+        (0..self.len()).map(|i| self.get(i))
+    }
+
+    /// Total instructions the block accounts for (gaps + ops).
+    pub fn instructions(&self) -> u64 {
+        self.gaps.iter().map(|&g| g as u64).sum::<u64>() + self.len() as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,5 +206,64 @@ mod tests {
         assert!(TraceOp::store(3, 0x10).is_write);
         assert!(TraceOp::chained_load(0, 0x10).dependent);
         assert_eq!(TraceOp::load(3, 0x10).instructions(), 4);
+    }
+
+    #[test]
+    fn block_round_trips_every_field() {
+        let ops = [
+            TraceOp::load(3, 0x40),
+            TraceOp::store(0, 0x1000),
+            TraceOp::chained_load(7, 0xdead_c0),
+            TraceOp {
+                gap: 11,
+                addr: 0xffff_ffff_ffc0,
+                is_write: true,
+                dependent: true,
+                pattern: TraceOp::PAT_STRIDE,
+            },
+        ];
+        let mut b = TraceBlock::with_capacity(8);
+        for op in &ops {
+            b.push(*op);
+        }
+        assert_eq!(b.len(), 4);
+        assert!(!b.is_full());
+        for (i, op) in ops.iter().enumerate() {
+            assert_eq!(b.get(i), *op, "op {i} must round-trip bit-identically");
+        }
+        let collected: Vec<TraceOp> = b.iter().collect();
+        assert_eq!(collected, ops);
+        assert_eq!(
+            b.instructions(),
+            ops.iter().map(|o| o.instructions()).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn block_clear_keeps_capacity() {
+        let mut b = TraceBlock::with_capacity(2);
+        b.push(TraceOp::load(0, 0));
+        b.push(TraceOp::load(0, 64));
+        assert!(b.is_full());
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.capacity(), 2);
+    }
+
+    #[test]
+    fn default_block_capacity() {
+        assert_eq!(TraceBlock::new().capacity(), TRACE_BLOCK_OPS);
+    }
+
+    #[test]
+    fn columns_expose_packed_layout() {
+        let mut b = TraceBlock::new();
+        b.push(TraceOp::store(5, 0x80));
+        assert_eq!(b.gaps(), &[5]);
+        assert_eq!(b.addrs(), &[0x80]);
+        assert_eq!(
+            b.flags(),
+            &[TraceBlock::FLAG_WRITE | (TraceOp::PAT_RANDOM << TraceBlock::PATTERN_SHIFT)]
+        );
     }
 }
