@@ -4,12 +4,13 @@
 //! bottleneck.
 
 use hymem::config::{PolicyKind, SystemConfig};
-use hymem::cpu::{CacheHierarchy, CoreModel};
+use hymem::cpu::{BlockOutcomes, CacheHierarchy, CoreModel, MemBackend};
 use hymem::hmmu::policy::{HotnessEngine, HotnessPolicy, NativeHotnessEngine, PlacementPolicy};
 use hymem::hmmu::{build_policy, Hmmu, TagMatcher};
 use hymem::mem::AccessKind;
 use hymem::pcie::PcieLink;
 use hymem::platform::HmmuBackend;
+use hymem::sim::Time;
 use hymem::util::bench::BenchSuite;
 use hymem::util::rng::Xoshiro256;
 use hymem::workload::{spec, TraceBlock, TraceGenerator, TRACE_BLOCK_OPS};
@@ -157,6 +158,65 @@ fn main() {
         suite.bench_items("platform_step/block (batch 4096)", ops, || {
             let n = gen.fill_block(&mut block) as u64;
             core.step_block(&block, &mut hier, &mut backend);
+            n
+        });
+    }
+
+    // Per-op vs block: the cache filter alone (TLB + L1 + L2 in front of
+    // a fixed-latency backend, isolating the hierarchy's tag probes from
+    // HMMU/PCIe modeling). `hierarchy_access/block` runs the multi-probe
+    // `access_block` and drains the recorded backend traffic exactly as
+    // `CoreModel::step_block` does, so both rows do identical modeling
+    // work on identical op streams; the items/s ratio is the block-lookup
+    // speedup. CI fails if the block row is slower than per-op
+    // (scripts/check_bench_gate.py).
+    {
+        struct FixedBackend {
+            latency: u64,
+        }
+        impl MemBackend for FixedBackend {
+            fn access(&mut self, _a: u64, _k: AccessKind, _b: u64, now: Time) -> Time {
+                now + self.latency
+            }
+        }
+
+        let wl = spec::by_name("505.mcf").unwrap();
+        let cfg = SystemConfig::default_scaled(16);
+        let ops = TRACE_BLOCK_OPS as u64;
+
+        let mut hier = CacheHierarchy::new(&cfg);
+        let mut backend = FixedBackend { latency: 300 };
+        let mut gen = TraceGenerator::new(wl, cfg.scale, 42);
+        let mut block = TraceBlock::new();
+        suite.bench_items("hierarchy_access/per-op (batch 4096)", ops, || {
+            let n = gen.fill_block(&mut block) as u64;
+            let mut t = 0u64;
+            for op in block.iter() {
+                let out = hier.access(op.addr, op.is_write, t, &mut backend);
+                t += 20 + out.latency_ns / 8;
+            }
+            n
+        });
+
+        let mut hier = CacheHierarchy::new(&cfg);
+        let mut backend = FixedBackend { latency: 300 };
+        let mut gen = TraceGenerator::new(wl, cfg.scale, 42);
+        let mut outcomes = BlockOutcomes::new();
+        suite.bench_items("hierarchy_access/block (batch 4096)", ops, || {
+            let n = gen.fill_block(&mut block) as u64;
+            hier.access_block(&block, &mut outcomes);
+            // Drain the recorded traffic through the same `issue` replay
+            // `step_block` uses.
+            let mut t = 0u64;
+            let mut wr = 0usize;
+            let mut rd = 0usize;
+            for i in 0..outcomes.len() {
+                let mut latency = outcomes.latency_ns(i);
+                if let Some(done) = outcomes.issue(i, &mut wr, &mut rd, &mut backend, t) {
+                    latency += done - t;
+                }
+                t += 20 + latency / 8;
+            }
             n
         });
     }

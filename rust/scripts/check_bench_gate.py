@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Perf gate over BENCH_hot_path.json: the block-batched paths must not be
+slower than their per-op counterparts.
+
+Usage: check_bench_gate.py [BENCH_hot_path.json]
+
+Compares the throughput of each (per-op, block) row pair and fails (exit 1)
+if a block row falls below the tolerance x the per-op row. The tolerance
+absorbs run-to-run noise — wider when the snapshot came from the quick CI
+smoke (short budgets, shared runners; the JSON records `"quick": true`) —
+while a real regression, the block path losing its amortization, shows up
+far below either bar. The trajectory itself is archived per run as a CI
+artifact.
+"""
+
+import json
+import sys
+
+TOLERANCE = 0.95
+QUICK_TOLERANCE = 0.85
+
+PAIRS = [
+    ("trace_gen/per-op (batch 4096)", "trace_gen/fill_block (batch 4096)"),
+    ("platform_step/per-op (batch 4096)", "platform_step/block (batch 4096)"),
+    ("hierarchy_access/per-op (batch 4096)", "hierarchy_access/block (batch 4096)"),
+]
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_hot_path.json"
+    with open(path) as f:
+        data = json.load(f)
+    rows = {r["name"]: r for r in data["results"]}
+    tolerance = QUICK_TOLERANCE if data.get("quick") else TOLERANCE
+
+    failed = False
+    for per_op_name, block_name in PAIRS:
+        missing = [n for n in (per_op_name, block_name) if n not in rows]
+        if missing:
+            print(f"FAIL: missing bench rows: {missing}")
+            failed = True
+            continue
+        per_op = rows[per_op_name].get("throughput_per_sec")
+        block = rows[block_name].get("throughput_per_sec")
+        if not per_op or not block:
+            print(f"FAIL: no throughput recorded for {per_op_name!r} / {block_name!r}")
+            failed = True
+            continue
+        ratio = block / per_op
+        verdict = "ok" if ratio >= tolerance else "REGRESSION"
+        print(
+            f"{verdict}: {block_name} {block:,.0f}/s vs "
+            f"{per_op_name} {per_op:,.0f}/s (block/per-op = {ratio:.2f}x)"
+        )
+        if ratio < tolerance:
+            failed = True
+
+    if failed:
+        print(f"bench gate failed: block path slower than per-op (tolerance {tolerance}x)")
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

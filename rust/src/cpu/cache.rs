@@ -12,6 +12,17 @@ pub struct CacheOutcome {
     pub writeback: Option<u64>,
 }
 
+/// One miss recorded by the multi-probe [`Cache::access_block`]: the
+/// position of the missing op within the probed columns plus the dirty
+/// victim (if any) its fill evicted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockMiss {
+    /// Index of the op within the probed column slice.
+    pub idx: u32,
+    /// Line-aligned address of the dirty victim evicted by the fill.
+    pub writeback: Option<u64>,
+}
+
 #[derive(Clone, Copy, Debug, Default)]
 struct Line {
     tag: u64,
@@ -62,34 +73,22 @@ impl Cache {
         ((line as usize) & (self.sets - 1), line >> self.sets.trailing_zeros())
     }
 
-    /// Access one line. On a miss the line is filled (write-allocate) and
-    /// the LRU victim may produce a write-back.
-    pub fn access(&mut self, addr: u64, is_write: bool) -> CacheOutcome {
-        self.tick += 1;
-        let (set, tag) = self.index(addr);
+    /// Install `tag` into `set` (an invalid way if present, else the LRU
+    /// victim — first minimum, invalid ways keyed 0), returning the
+    /// victim's line address when the eviction produces a write-back.
+    /// The **single** victim-selection/fill implementation, shared by
+    /// [`Self::access`], [`Self::access_block`] and
+    /// [`Self::fill_writeback`] so replacement behavior can never drift
+    /// between the per-op and block paths.
+    #[inline]
+    fn fill_line(&mut self, set: usize, tag: u64, dirty: bool, tick: u64) -> Option<u64> {
         let base = set * self.ways;
         let ways = &mut self.lines[base..base + self.ways];
-
-        // Hit path.
-        for line in ways.iter_mut() {
-            if line.valid && line.tag == tag {
-                line.lru = self.tick;
-                line.dirty |= is_write;
-                self.hits += 1;
-                return CacheOutcome {
-                    hit: true,
-                    writeback: None,
-                };
-            }
-        }
-
-        // Miss: pick invalid way or LRU victim.
-        self.misses += 1;
         let victim = ways
             .iter()
             .enumerate()
             .min_by_key(|(_, l)| if l.valid { l.lru } else { 0 })
-            .map(|(i, _)| i)
+            .map(|(w, _)| w)
             .unwrap();
         let v = &mut ways[victim];
         let writeback = if v.valid && v.dirty {
@@ -102,19 +101,135 @@ impl Cache {
         *v = Line {
             tag,
             valid: true,
-            dirty: is_write,
-            lru: self.tick,
+            dirty,
+            lru: tick,
         };
+        writeback
+    }
+
+    /// Access one line. On a miss the line is filled (write-allocate) and
+    /// the LRU victim may produce a write-back.
+    pub fn access(&mut self, addr: u64, is_write: bool) -> CacheOutcome {
+        self.tick += 1;
+        let tick = self.tick;
+        let (set, tag) = self.index(addr);
+        let base = set * self.ways;
+
+        // Hit path.
+        for line in &mut self.lines[base..base + self.ways] {
+            if line.valid && line.tag == tag {
+                line.lru = tick;
+                line.dirty |= is_write;
+                self.hits += 1;
+                return CacheOutcome {
+                    hit: true,
+                    writeback: None,
+                };
+            }
+        }
+
+        // Miss: fill, evicting the LRU victim.
+        self.misses += 1;
         CacheOutcome {
             hit: false,
-            writeback,
+            writeback: self.fill_line(set, tag, is_write, tick),
         }
     }
 
-    /// Invalidate everything (used between benchmark runs).
-    pub fn flush(&mut self) -> u64 {
-        let dirty = self.lines.iter().filter(|l| l.valid && l.dirty).count() as u64;
-        for l in &mut self.lines {
+    /// Multi-probe access (§Perf): run a whole column of demand accesses
+    /// through the cache in one call, appending one [`BlockMiss`] per
+    /// missing op to `misses` (which the caller clears and recycles).
+    ///
+    /// Per-op state transitions are exactly those of [`Self::access`] in
+    /// the same order — hit/miss classification, LRU updates, fills and
+    /// victim write-backs are bit-identical. What the batching buys is
+    /// the per-call bookkeeping: the tick counter, the geometry constants
+    /// (line shift, set mask/shift, way count) and the hit/miss totals
+    /// live in registers across the block and are flushed back once, and
+    /// the hot hit path runs branch-predictably over the struct-of-arrays
+    /// columns instead of re-entering through a call per op.
+    ///
+    /// `flags` is any per-op byte column where `flags[i] & write_mask != 0`
+    /// marks op `i` as a store (the caller passes `TraceBlock`'s packed
+    /// flags and `FLAG_WRITE`).
+    pub fn access_block(
+        &mut self,
+        addrs: &[u64],
+        flags: &[u8],
+        write_mask: u8,
+        misses: &mut Vec<BlockMiss>,
+    ) {
+        debug_assert_eq!(addrs.len(), flags.len());
+        let mut tick = self.tick;
+        let mut hits = 0u64;
+        let misses_before = misses.len();
+        let line_shift = self.line_shift;
+        let set_mask = self.sets - 1;
+        let set_shift = self.sets.trailing_zeros();
+        let n_ways = self.ways;
+        'ops: for (i, (&addr, &f)) in addrs.iter().zip(flags).enumerate() {
+            tick += 1;
+            let is_write = f & write_mask != 0;
+            let line = addr >> line_shift;
+            let set = (line as usize) & set_mask;
+            let tag = line >> set_shift;
+            let base = set * n_ways;
+
+            // Hit path.
+            for l in &mut self.lines[base..base + n_ways] {
+                if l.valid && l.tag == tag {
+                    l.lru = tick;
+                    l.dirty |= is_write;
+                    hits += 1;
+                    continue 'ops;
+                }
+            }
+
+            // Miss: the shared victim-select + fill.
+            misses.push(BlockMiss {
+                idx: i as u32,
+                writeback: self.fill_line(set, tag, is_write, tick),
+            });
+        }
+        self.tick = tick;
+        self.hits += hits;
+        self.misses += (misses.len() - misses_before) as u64;
+    }
+
+    /// Install a write-back arriving from the level above (an evicted
+    /// dirty victim). Unlike [`Self::access`] this is **not** demand
+    /// traffic: it touches neither `hits` nor `misses`, so `miss_rate()`
+    /// keeps measuring demand accesses only. If the line is present it is
+    /// marked dirty (LRU refreshed — the write-back touches the line);
+    /// otherwise it is allocated, and the dirty victim that eviction
+    /// produces (if any) is returned for the next level.
+    pub fn fill_writeback(&mut self, addr: u64) -> Option<u64> {
+        self.tick += 1;
+        let tick = self.tick;
+        let (set, tag) = self.index(addr);
+        let base = set * self.ways;
+        for line in &mut self.lines[base..base + self.ways] {
+            if line.valid && line.tag == tag {
+                line.lru = tick;
+                line.dirty = true;
+                return None;
+            }
+        }
+        self.fill_line(set, tag, true, tick)
+    }
+
+    /// Invalidate everything (used between benchmark runs / end-of-run
+    /// write-back accounting), returning the **real addresses** of the
+    /// dirty lines that must be written back, in set-major way order.
+    pub fn flush(&mut self) -> Vec<u64> {
+        let set_shift = self.sets.trailing_zeros();
+        let mut dirty = Vec::new();
+        for (i, l) in self.lines.iter_mut().enumerate() {
+            if l.valid && l.dirty {
+                let set = (i / self.ways) as u64;
+                let line = (l.tag << set_shift) | set;
+                dirty.push(line << self.line_shift);
+            }
             *l = Line::default();
         }
         dirty
@@ -200,12 +315,78 @@ mod tests {
     }
 
     #[test]
-    fn flush_counts_dirty() {
+    fn flush_returns_real_dirty_addresses() {
         let mut c = small();
         c.access(0, true);
         c.access(64, false);
-        assert_eq!(c.flush(), 1);
+        c.access(1024 + 128, true); // distinct set, dirty
+        let mut dirty = c.flush();
+        dirty.sort_unstable();
+        assert_eq!(dirty, vec![0, 1024 + 128]);
         assert!(!c.access(0, false).hit);
+        // Everything is clean after a flush.
+        assert_eq!(c.flush(), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn fill_writeback_skips_demand_stats() {
+        let mut c = small();
+        c.access(0, false); // 1 demand miss
+        let (hits, misses) = (c.hits, c.misses);
+        // Present line: marked dirty, no stat movement.
+        assert_eq!(c.fill_writeback(0), None);
+        assert_eq!((c.hits, c.misses), (hits, misses));
+        let dirty = c.flush();
+        assert_eq!(dirty, vec![0], "write-back fill must mark the line dirty");
+        // Absent line: allocated dirty, still no stat movement.
+        assert_eq!(c.fill_writeback(256), None);
+        assert_eq!((c.hits, c.misses), (hits, misses));
+        assert_eq!(c.flush(), vec![256]);
+    }
+
+    #[test]
+    fn fill_writeback_evicts_dirty_victim() {
+        let mut c = small();
+        // Fill set 0 (2 ways) with dirty lines, then write back a third
+        // conflicting line: the LRU dirty victim must surface.
+        c.access(0, true);
+        c.access(256, true);
+        let wb = c.fill_writeback(512);
+        assert_eq!(wb, Some(0));
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn access_block_matches_per_op_access() {
+        // Same mixed address stream through `access` and `access_block`:
+        // identical stats, identical miss/victim records, identical end
+        // state (probed via flush addresses).
+        let addrs: Vec<u64> = (0..64u64)
+            .map(|i| (i.wrapping_mul(0x9E3779B97F4A7C15) % 32) * 64)
+            .collect();
+        let flags: Vec<u8> = (0..64u8).map(|i| (i % 3 == 0) as u8).collect();
+
+        let mut per_op = small();
+        let mut expected = Vec::new();
+        for (i, (&a, &f)) in addrs.iter().zip(&flags).enumerate() {
+            let out = per_op.access(a, f & 1 != 0);
+            if !out.hit {
+                expected.push(BlockMiss {
+                    idx: i as u32,
+                    writeback: out.writeback,
+                });
+            }
+        }
+
+        let mut blocked = small();
+        let mut misses = Vec::new();
+        blocked.access_block(&addrs, &flags, 1, &mut misses);
+
+        assert_eq!(misses, expected);
+        assert_eq!(blocked.hits, per_op.hits);
+        assert_eq!(blocked.misses, per_op.misses);
+        assert_eq!(blocked.writebacks, per_op.writebacks);
+        assert_eq!(blocked.flush(), per_op.flush(), "end state diverged");
     }
 
     #[test]

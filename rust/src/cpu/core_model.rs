@@ -11,7 +11,7 @@
 //!    serialize on memory latency, which is why 505.mcf suffers 15.36×
 //!    on the paper's platform while 538.imagick barely notices (1.17×).
 
-use super::hierarchy::{CacheHierarchy, MemBackend};
+use super::hierarchy::{BlockOutcomes, CacheHierarchy, MemBackend};
 use crate::config::CpuConfig;
 use crate::sim::Time;
 use crate::workload::{TraceBlock, TraceOp};
@@ -46,6 +46,8 @@ pub struct CoreModel {
     now_f: f64,
     /// Outstanding independent-miss completion times (MSHR window).
     window: Vec<Time>,
+    /// Reusable SoA buffer the cache filter fills per block (§Perf).
+    outcomes: BlockOutcomes,
     pub stats: CoreStats,
 }
 
@@ -56,6 +58,7 @@ impl CoreModel {
             cfg,
             now_f: 0.0,
             window: Vec::new(),
+            outcomes: BlockOutcomes::new(),
             stats: CoreStats::default(),
         }
     }
@@ -78,37 +81,64 @@ impl CoreModel {
     }
 
     /// Execute a whole [`TraceBlock`] through the hierarchy (§Perf: the
-    /// batched pipeline's inner loop). One call per ~4096 ops replaces
-    /// one call per op; the loop reads the block's struct-of-arrays
-    /// columns directly (no per-op `TraceOp` materialization, no bounds
-    /// checks — the three columns are zipped). Timing, stats and backend
-    /// traffic are bit-identical to stepping the same ops one at a time:
-    /// both paths run the same [`Self::step_raw`] body.
+    /// batched pipeline's inner loop). The cache filter runs over the
+    /// whole block first (`CacheHierarchy::access_block` — one TLB pass,
+    /// one L1 multi-probe, one L2 pass over the compacted misses) into
+    /// the core-owned SoA outcome buffer; this loop then drains the
+    /// buffer, folding the hit path into a branch-light scan of the
+    /// latency column while memory ops issue their recorded backend
+    /// traffic at the correct core time through the same miss body
+    /// ([`Self::note_memory_access`]) the per-op path uses. Timing, stats
+    /// and backend traffic are bit-identical to stepping the same ops one
+    /// at a time (pinned by `tests/batch_equivalence.rs`).
     pub fn step_block<B: MemBackend>(
         &mut self,
         block: &TraceBlock,
         hierarchy: &mut CacheHierarchy,
         backend: &mut B,
     ) {
-        for ((&gap, &addr), &flags) in block
-            .gaps()
-            .iter()
-            .zip(block.addrs())
-            .zip(block.flags())
-        {
-            self.step_raw(
-                gap,
-                addr,
-                flags & TraceBlock::FLAG_WRITE != 0,
-                flags & TraceBlock::FLAG_DEPENDENT != 0,
-                hierarchy,
-                backend,
-            );
+        let mut out = std::mem::take(&mut self.outcomes);
+        hierarchy.access_block(block, &mut out);
+        let flags = block.flags();
+        let mut wr = 0usize; // cursor into out.writes()
+        let mut rd = 0usize; // cursor into out.fills()
+        for (i, &gap) in block.gaps().iter().enumerate() {
+            // Compute phase: gap instructions at base IPC.
+            self.now_f += gap as f64 * self.ns_per_instr + self.ns_per_instr;
+            self.stats.instructions += gap as u64 + 1;
+            self.stats.mem_ops += 1;
+
+            if !out.is_mem_access(i) && !out.has_writes_for(i, wr) {
+                // Pure cache hit: no backend traffic, no window activity
+                // (retiring completed MSHR entries can be deferred to the
+                // next memory op — the window is only observed there).
+                self.now_f += out.latency_ns(i) as f64 * 0.5;
+                continue;
+            }
+
+            // Retire completed window entries.
+            let now = self.now_f as Time;
+            self.window.retain(|&t| t > now);
+
+            // Recorded traffic: posted victim write-backs, then the fill.
+            match out.issue(i, &mut wr, &mut rd, backend, now) {
+                None => {
+                    // L2 hit whose L1 victim write-back spilled a dirty
+                    // line: writes posted, the core still sees a hit.
+                    self.now_f += out.latency_ns(i) as f64 * 0.5;
+                }
+                Some(done) => self.note_memory_access(
+                    now,
+                    out.latency_ns(i) + (done - now),
+                    flags[i] & TraceBlock::FLAG_DEPENDENT != 0,
+                ),
+            }
         }
+        self.outcomes = out;
     }
 
-    /// The per-op step body, shared by [`Self::step`] and
-    /// [`Self::step_block`].
+    /// The per-op step body, shared by [`Self::step`] and the per-op
+    /// reference path.
     #[inline]
     fn step_raw<B: MemBackend>(
         &mut self,
@@ -137,8 +167,17 @@ impl CoreModel {
             return;
         }
 
+        self.note_memory_access(now, out.latency_ns, dependent);
+    }
+
+    /// The miss body — MSHR window occupancy, full-window stalls and
+    /// dependent-load serialization — shared by the per-op path
+    /// ([`Self::step_raw`]) and the block path ([`Self::step_block`]) so
+    /// the two stay bit-identical by construction.
+    #[inline]
+    fn note_memory_access(&mut self, now: Time, latency_ns: u64, dependent: bool) {
         self.stats.memory_accesses += 1;
-        let completion = now + out.latency_ns;
+        let completion = now + latency_ns;
 
         if dependent {
             // Serialized: the next op cannot start before the data is back.

@@ -7,11 +7,12 @@
 //! same hierarchy drives both the emulation platform and the native
 //! reference.
 
-use super::cache::Cache;
+use super::cache::{BlockMiss, Cache};
 use super::tlb::Tlb;
 use crate::config::SystemConfig;
 use crate::mem::AccessKind;
 use crate::sim::Time;
+use crate::workload::TraceBlock;
 
 /// Anything that can serve a line-sized memory access at a point in time.
 pub trait MemBackend {
@@ -30,6 +31,117 @@ pub struct HierarchyOutcome {
     pub latency_ns: u64,
     /// Did the access go to main memory?
     pub memory_access: bool,
+}
+
+/// Reusable struct-of-arrays outcome buffer for
+/// [`CacheHierarchy::access_block`] (§Perf): per-op latencies and
+/// memory-access bits, plus the backend traffic the block generates —
+/// recorded here and issued later by `CoreModel::step_block` at each
+/// op's core time. Allocated once (the `CoreModel` owns one) and
+/// recycled across blocks; steady state allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct BlockOutcomes {
+    /// Per-op latency seen by the core, **excluding** memory time: for
+    /// ops whose fill goes to memory the core adds `done - now` when it
+    /// issues the fill.
+    pub(crate) latency_ns: Vec<u32>,
+    /// Per-op: does the demand fill go to main memory?
+    pub(crate) mem_access: Vec<bool>,
+    /// Posted dirty-victim write-backs toward memory as
+    /// `(op_idx, line_addr)`, in issue order.
+    pub(crate) writes: Vec<(u32, u64)>,
+    /// Demand-fill line addresses, one per set `mem_access` bit, in op
+    /// order.
+    pub(crate) fills: Vec<u64>,
+    /// Line size (bytes) the fills and write-backs move.
+    pub(crate) line_bytes: u64,
+    /// Scratch: L1 miss records between the L1 and L2 probe passes.
+    l1_misses: Vec<BlockMiss>,
+}
+
+impl BlockOutcomes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn clear(&mut self, line_bytes: u64) {
+        self.latency_ns.clear();
+        self.mem_access.clear();
+        self.writes.clear();
+        self.fills.clear();
+        self.l1_misses.clear();
+        self.line_bytes = line_bytes;
+    }
+
+    /// Ops recorded by the last `access_block` call.
+    pub fn len(&self) -> usize {
+        self.latency_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.latency_ns.is_empty()
+    }
+
+    /// Core-visible latency of op `i` (memory time excluded — see field).
+    #[inline]
+    pub fn latency_ns(&self, i: usize) -> u64 {
+        self.latency_ns[i] as u64
+    }
+
+    /// Does op `i`'s fill go to main memory?
+    #[inline]
+    pub fn is_mem_access(&self, i: usize) -> bool {
+        self.mem_access[i]
+    }
+
+    /// Posted write-backs `(op_idx, line_addr)` in issue order.
+    pub fn writes(&self) -> &[(u32, u64)] {
+        &self.writes
+    }
+
+    /// Demand-fill line addresses (one per set memory-access bit).
+    pub fn fills(&self) -> &[u64] {
+        &self.fills
+    }
+
+    /// Line size (bytes) the recorded fills and write-backs move.
+    pub fn line_bytes(&self) -> u64 {
+        self.line_bytes
+    }
+
+    /// Are posted write-backs recorded for op `i` at write cursor `wr`?
+    #[inline]
+    pub fn has_writes_for(&self, i: usize, wr: usize) -> bool {
+        wr < self.writes.len() && self.writes[wr].0 as usize == i
+    }
+
+    /// Issue op `i`'s recorded backend traffic at time `now` — posted
+    /// victim write-backs first, then the demand fill — advancing the
+    /// caller's write/fill cursors. Returns the fill's completion time
+    /// when op `i` reads memory, `None` otherwise. This is the **single**
+    /// replay implementation, shared by `CoreModel::step_block`, the
+    /// `hierarchy_access/block` bench row and the equivalence tests, so
+    /// measured/tested replays can never drift from the production drain.
+    #[inline]
+    pub fn issue<B: MemBackend>(
+        &self,
+        i: usize,
+        wr: &mut usize,
+        rd: &mut usize,
+        backend: &mut B,
+        now: Time,
+    ) -> Option<Time> {
+        while self.has_writes_for(i, *wr) {
+            backend.access(self.writes[*wr].1, AccessKind::Write, self.line_bytes, now);
+            *wr += 1;
+        }
+        if !self.mem_access[i] {
+            return None;
+        }
+        let fill = self.fills[*rd];
+        *rd += 1;
+        Some(backend.access(fill, AccessKind::Read, self.line_bytes, now))
+    }
 }
 
 /// L1D + L2 + TLB in front of a [`MemBackend`].
@@ -67,8 +179,9 @@ impl CacheHierarchy {
 
     /// One data access at time `now`; misses go to `backend`.
     /// `#[inline]`: monomorphized per backend and called from
-    /// `CoreModel::step_block`'s tight loop — inlining it there lets the
-    /// TLB/L1 hit path fold into the block loop without a call.
+    /// `CoreModel::step`'s per-op loop (the multicore scheduler's path) —
+    /// inlining lets the TLB/L1 hit path fold into the caller. The block
+    /// pipeline uses [`Self::access_block`] instead.
     #[inline]
     pub fn access<B: MemBackend>(
         &mut self,
@@ -94,27 +207,31 @@ impl CacheHierarchy {
                 memory_access: false,
             };
         }
-        // L1 victim write-back goes to L2.
-        if let Some(wb) = l1.writeback {
-            let l2wb = self.l2.access(wb, true);
-            if let Some(wb2) = l2wb.writeback {
+
+        // L2 demand lookup happens **before** the L1 victim write-back is
+        // installed: a same-set write-back must not evict the very line
+        // this access is about to probe. The write-back then goes through
+        // `fill_writeback`, which keeps it out of the L2 hit/miss demand
+        // statistics (it is traffic, not a demand access).
+        let l2 = self.l2.access(line_addr, is_write);
+        if !l2.hit {
+            if let Some(wb2) = l2.writeback {
                 // L2 dirty victim → memory write (posted; doesn't stall core).
                 self.mem_writes += 1;
                 backend.access(wb2, AccessKind::Write, self.line_bytes, now);
             }
         }
-
-        // L2.
-        let l2 = self.l2.access(line_addr, is_write);
+        if let Some(wb) = l1.writeback {
+            if let Some(wb2) = self.l2.fill_writeback(wb) {
+                self.mem_writes += 1;
+                backend.access(wb2, AccessKind::Write, self.line_bytes, now);
+            }
+        }
         if l2.hit {
             return HierarchyOutcome {
                 latency_ns: tlb_ns + self.l1_hit_ns + self.l2_hit_ns,
                 memory_access: false,
             };
-        }
-        if let Some(wb2) = l2.writeback {
-            self.mem_writes += 1;
-            backend.access(wb2, AccessKind::Write, self.line_bytes, now);
         }
 
         // Memory fill (read the line; write-allocate means even stores
@@ -127,21 +244,88 @@ impl CacheHierarchy {
         }
     }
 
-    /// Flush both caches, returning dirty lines as memory writes.
+    /// Block-batched lookup (§Perf): run every op of `block` through
+    /// TLB + L1 + L2 in one call, leaving the per-op outcomes in `out`
+    /// (recycled across calls — steady state allocates nothing).
     ///
-    /// The hierarchy is inclusive and store-allocates mark both levels
-    /// dirty, so the L2 dirty set covers (to within the rare
-    /// store-hit-on-clean-L1-line case) everything that must reach
-    /// memory; L1 dirty lines drain into L2, not past it.
+    /// The cache filter is time-independent — only the memory backend
+    /// cares *when* a request is issued — so the whole block's tag probes
+    /// can run ahead of the core clock: a TLB pass over the address
+    /// column, one multi-probe [`Cache::access_block`] over the block for
+    /// L1, and an L2 pass over the compacted L1-miss list. Backend
+    /// traffic (posted victim write-backs, demand fills) is *recorded*,
+    /// not issued; `CoreModel::step_block` drains it op by op at each
+    /// op's core time, so the request stream the backend sees — order,
+    /// addresses and timestamps — is bit-identical to calling
+    /// [`Self::access`] per op.
+    pub fn access_block(&mut self, block: &TraceBlock, out: &mut BlockOutcomes) {
+        let addrs = block.addrs();
+        let flags = block.flags();
+        out.clear(self.line_bytes);
+
+        // TLB pass + optimistic L1-hit latency (fixed up below for ops
+        // that fall through to L2/memory).
+        for &addr in addrs {
+            let tlb_ns = match self.tlb.access(addr) {
+                0 => 0,
+                1 => self.tlb_l2_ns,
+                _ => self.tlb_walk_ns,
+            };
+            out.latency_ns.push((tlb_ns + self.l1_hit_ns) as u32);
+        }
+        out.mem_access.resize(addrs.len(), false);
+
+        // L1 multi-probe over the whole block.
+        self.l1d.access_block(addrs, flags, TraceBlock::FLAG_WRITE, &mut out.l1_misses);
+
+        // L2 pass over the compacted miss list — same per-op order as
+        // `access`: demand lookup, then the L1 victim write-back fill,
+        // with posted writes recorded before the demand fill.
+        let l1_misses = std::mem::take(&mut out.l1_misses);
+        for m in &l1_misses {
+            let i = m.idx as usize;
+            let line_addr = addrs[i] & !(self.line_bytes - 1);
+            let is_write = flags[i] & TraceBlock::FLAG_WRITE != 0;
+            let l2 = self.l2.access(line_addr, is_write);
+            if !l2.hit {
+                if let Some(wb2) = l2.writeback {
+                    self.mem_writes += 1;
+                    out.writes.push((m.idx, wb2));
+                }
+            }
+            if let Some(wb) = m.writeback {
+                if let Some(wb2) = self.l2.fill_writeback(wb) {
+                    self.mem_writes += 1;
+                    out.writes.push((m.idx, wb2));
+                }
+            }
+            out.latency_ns[i] += self.l2_hit_ns as u32;
+            if !l2.hit {
+                self.mem_reads += 1;
+                out.mem_access[i] = true;
+                out.fills.push(line_addr);
+            }
+        }
+        out.l1_misses = l1_misses;
+    }
+
+    /// Flush both caches, writing dirty lines back to memory **at their
+    /// real addresses**: L1 dirty lines drain into L2 (write-back fills,
+    /// whose own dirty victims go to memory), then every L2 dirty line is
+    /// written back. Backends that key state by address (the HMMU's
+    /// redirection table and hotness counters) therefore see the pages
+    /// the workload actually dirtied, not a synthetic `0, 64, 128, …`
+    /// sequence that would perturb end-of-run residency and wear stats.
     pub fn flush<B: MemBackend>(&mut self, now: Time, backend: &mut B) {
-        let _d1 = self.l1d.flush();
-        let d2 = self.l2.flush();
-        // Charge the dirty write-backs to the backend (addresses are gone
-        // after flush; we model the volume with sequential addresses —
-        // only counters matter post-run).
-        for i in 0..d2 {
+        for wb in self.l1d.flush() {
+            if let Some(wb2) = self.l2.fill_writeback(wb) {
+                self.mem_writes += 1;
+                backend.access(wb2, AccessKind::Write, self.line_bytes, now);
+            }
+        }
+        for addr in self.l2.flush() {
             self.mem_writes += 1;
-            backend.access(i * self.line_bytes, AccessKind::Write, self.line_bytes, now);
+            backend.access(addr, AccessKind::Write, self.line_bytes, now);
         }
     }
 }
@@ -214,11 +398,13 @@ mod tests {
         let cfg = SystemConfig::default_scaled(16);
         // Dirty a line, then force it out of both L1 and L2. The L1
         // eviction of line 0 (at the second conflicting access) writes it
-        // back into L2 and *refreshes* its L2 LRU position, so evicting
-        // it from L2 takes ways+1 conflicting fills.
+        // back into L2 and *refreshes* its L2 LRU position — after that
+        // access's own demand fill, since demand lookups precede the
+        // write-back install — so evicting it from L2 takes ways+2
+        // conflicting fills.
         h.access(0, true, 0, &mut b);
         let l2_stride = cfg.l2.sets() * cfg.l2.line_bytes as u64;
-        for w in 1..=(cfg.l2.ways as u64 + 1) {
+        for w in 1..=(cfg.l2.ways as u64 + 2) {
             h.access(w * l2_stride, false, 0, &mut b);
         }
         let writes: Vec<_> = b.log.iter().filter(|(_, k)| k.is_write()).collect();
@@ -228,14 +414,148 @@ mod tests {
     }
 
     #[test]
-    fn flush_writes_dirty_lines() {
+    fn flush_writes_dirty_lines_at_real_addresses() {
         let (mut h, mut b) = setup();
         h.access(0, true, 0, &mut b);
         h.access(4096, true, 0, &mut b);
         let before = b.log.len();
         h.flush(100, &mut b);
-        let wbs = b.log[before..].iter().filter(|(_, k)| k.is_write()).count();
-        assert_eq!(wbs, 2);
+        let mut wbs: Vec<u64> = b.log[before..]
+            .iter()
+            .filter(|(_, k)| k.is_write())
+            .map(|(a, _)| *a)
+            .collect();
+        wbs.sort_unstable();
+        // The dirtied lines come back at their own addresses — not at a
+        // synthetic 0, 64, … sequence that would feed fake pages into an
+        // address-keyed backend (HMMU redirection table / hotness stats).
+        assert_eq!(wbs, vec![0, 4096]);
+        assert_eq!(h.mem_writes, 2);
+    }
+
+    #[test]
+    fn writeback_traffic_excluded_from_l2_demand_stats() {
+        // Regression: L1 victim write-backs used to be routed through
+        // `Cache::access`, inflating L2 hits/misses so `miss_rate()`
+        // counted write-back traffic as demand accesses. Every L1 miss
+        // issues exactly one L2 demand lookup — no more, no less —
+        // regardless of how many write-backs travel alongside.
+        let (mut h, mut b) = setup();
+        // Dirty streaming well past L1 capacity: plenty of dirty victims.
+        for a in (0..(256 << 10)).step_by(64) {
+            h.access(a, true, 0, &mut b);
+        }
+        assert!(h.l1d.writebacks > 0, "scenario must generate write-backs");
+        assert_eq!(
+            h.l2.hits + h.l2.misses,
+            h.l1d.misses,
+            "L2 demand accesses must equal L1 misses"
+        );
+    }
+
+    #[test]
+    fn same_set_writeback_cannot_evict_probed_demand_line() {
+        // Regression: the L1 victim write-back used to be installed into
+        // L2 *before* the demand lookup, so a same-set write-back could
+        // evict the very line the access was about to probe, turning an
+        // L2 hit into a spurious memory fill. Tiny geometry: L1 = 1 set ×
+        // 2 ways, L2 = 2 sets × 2 ways, 64 B lines.
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.l1d.size_bytes = 128;
+        cfg.l1d.ways = 2;
+        cfg.l2.size_bytes = 256;
+        cfg.l2.ways = 2;
+        let mut h = CacheHierarchy::new(&cfg);
+        let mut b = TestBackend {
+            latency: 100,
+            log: Vec::new(),
+        };
+        h.access(0, true, 0, &mut b); // store V: dirty in L1+L2 set 0
+        h.access(128, true, 0, &mut b); // store X: dirty in L1+L2 set 0
+        // Load Y (same L2 set): evicts V from L1 (write-back) and from L2
+        // (demand fill); the write-back then re-installs V, evicting X.
+        h.access(256, false, 0, &mut b);
+        // Store V again: the L1 victim X writes back into L2 set 0 — the
+        // same set as V, which is present in L2. The demand lookup must
+        // win: V hits, X's write-back installs afterwards.
+        let out = h.access(0, true, 0, &mut b);
+        assert!(
+            !out.memory_access,
+            "demand line evicted by its own victim write-back"
+        );
+        assert_eq!(h.mem_reads, 3, "only V, X, Y cold fills read memory");
+        assert_eq!(
+            h.l2.hits + h.l2.misses,
+            4,
+            "4 demand lookups; write-backs are not demand traffic"
+        );
+        assert_eq!(h.l2.hits, 1);
+    }
+
+    #[test]
+    fn access_block_bit_identical_to_per_op_access() {
+        // The same mixed stream through the per-op path and the block
+        // path: identical latencies, memory-access bits, backend traffic
+        // (addresses, kinds, order) and cache/TLB counters.
+        let cfg = SystemConfig::default_scaled(16);
+        let mut per_op = CacheHierarchy::new(&cfg);
+        let mut blocked = CacheHierarchy::new(&cfg);
+        let mut b_ref = TestBackend {
+            latency: 100,
+            log: Vec::new(),
+        };
+        let mut b_blk = TestBackend {
+            latency: 100,
+            log: Vec::new(),
+        };
+
+        // Hits, conflict misses, stores and page-crossing strides.
+        let mut block = crate::workload::TraceBlock::with_capacity(512);
+        for i in 0..512u64 {
+            let addr = match i % 4 {
+                0 => (i % 7) * 64,
+                1 => i * 4096,
+                2 => (i % 3) * 8192 + 64,
+                _ => i * 64 * 33,
+            };
+            block.push(crate::workload::TraceOp {
+                gap: 0,
+                addr,
+                is_write: i % 5 == 0,
+                dependent: false,
+                pattern: 0,
+            });
+        }
+
+        let mut ref_outcomes = Vec::new();
+        for op in block.iter() {
+            ref_outcomes.push(per_op.access(op.addr, op.is_write, 1000, &mut b_ref));
+        }
+
+        let mut out = BlockOutcomes::new();
+        blocked.access_block(&block, &mut out);
+        assert_eq!(out.len(), block.len());
+        // Replay the recorded traffic through the shared `issue` drain.
+        let mut wr = 0usize;
+        let mut rd = 0usize;
+        for (i, r) in ref_outcomes.iter().enumerate() {
+            assert_eq!(out.is_mem_access(i), r.memory_access, "op {i}");
+            match out.issue(i, &mut wr, &mut rd, &mut b_blk, 1000) {
+                Some(done) => assert_eq!(out.latency_ns(i) + (done - 1000), r.latency_ns, "op {i}"),
+                None => assert_eq!(out.latency_ns(i), r.latency_ns, "op {i}"),
+            }
+        }
+        assert_eq!(wr, out.writes().len());
+        assert_eq!(rd, out.fills().len());
+        assert_eq!(b_blk.log, b_ref.log, "backend traffic diverged");
+        assert_eq!(blocked.l1d.hits, per_op.l1d.hits);
+        assert_eq!(blocked.l1d.misses, per_op.l1d.misses);
+        assert_eq!(blocked.l2.hits, per_op.l2.hits);
+        assert_eq!(blocked.l2.misses, per_op.l2.misses);
+        assert_eq!(blocked.l2.writebacks, per_op.l2.writebacks);
+        assert_eq!(blocked.tlb.walks, per_op.tlb.walks);
+        assert_eq!(blocked.mem_reads, per_op.mem_reads);
+        assert_eq!(blocked.mem_writes, per_op.mem_writes);
     }
 
     #[test]

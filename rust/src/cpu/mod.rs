@@ -12,7 +12,7 @@ pub mod core_model;
 pub mod hierarchy;
 pub mod tlb;
 
-pub use cache::{Cache, CacheOutcome};
+pub use cache::{BlockMiss, Cache, CacheOutcome};
 pub use core_model::CoreModel;
-pub use hierarchy::{CacheHierarchy, HierarchyOutcome, MemBackend};
+pub use hierarchy::{BlockOutcomes, CacheHierarchy, HierarchyOutcome, MemBackend};
 pub use tlb::Tlb;

@@ -143,10 +143,14 @@ impl Platform {
 
         // --- native pass (same trace, local DRAM) ---
         // §Perf: both passes pull whole [`TraceBlock`]s through the core
-        // (`fill_block` + `step_block`) instead of one op at a time; the
-        // block is allocated once per pass and recycled, so the steady-
-        // state loop performs no heap allocation. Bit-identical to the
-        // per-op loop (pinned by `tests/batch_equivalence.rs`).
+        // (`fill_block` + `step_block`) instead of one op at a time, and
+        // `step_block` runs the cache filter block-batched
+        // (`CacheHierarchy::access_block`: one TLB pass, one L1
+        // multi-probe, one L2 pass over the compacted misses, outcomes in
+        // the core's recycled SoA buffer). The block is allocated once
+        // per pass and recycled, so the steady-state loop performs no
+        // heap allocation. Bit-identical to the per-op loop (pinned by
+        // `tests/batch_equivalence.rs`).
         let native_cfg = cfg.clone();
         let native_wl = *wl;
         let native_pass = move || {

@@ -12,6 +12,8 @@
 //! the core with the smallest local clock steps next, so cross-core
 //! contention at the link and memory controllers is ordered correctly.
 
+use std::sync::mpsc;
+
 use super::{HmmuBackend, RunOpts};
 use crate::config::SystemConfig;
 use crate::cpu::{CacheHierarchy, CoreModel, MemBackend};
@@ -113,54 +115,49 @@ pub fn run_multicore(
     struct CoreState {
         core: CoreModel,
         hier: CacheHierarchy,
-        gen: TraceGenerator,
-        /// Current trace block (§Perf: the generator refills this whole
-        /// blocks at a time; the scheduler consumes it through `cursor`).
-        /// Allocated once per core and recycled — no steady-state
-        /// allocation.
+        /// Current trace block (§Perf: a dedicated producer thread
+        /// refills blocks for this core; the scheduler consumes the
+        /// current one through `cursor`). Two blocks per core circulate
+        /// through the channels — no steady-state allocation.
         block: TraceBlock,
         cursor: usize,
+        /// Filled blocks arriving from this core's producer thread.
+        rx: mpsc::Receiver<TraceBlock>,
+        /// Drained blocks returned to the producer for refilling.
+        recycle: mpsc::Sender<TraceBlock>,
         stripe: u64,
         workload: String,
     }
 
     impl CoreState {
-        /// Next op for this core, refilling the block when it is drained.
-        /// The op sequence is bit-identical to pulling the generator
-        /// directly, so the time-ordered interleaving (and therefore all
-        /// shared-resource contention) is unchanged by batching.
+        /// Next op for this core, swapping in the next produced block
+        /// when the current one is drained. The op sequence is
+        /// bit-identical to pulling the generator directly (per-core
+        /// seeds and streams are untouched by where the generator runs),
+        /// so the time-ordered interleaving — and therefore all
+        /// shared-resource contention — is unchanged by the parallel
+        /// generation.
         #[inline]
         fn next_op(&mut self) -> Option<crate::workload::TraceOp> {
             if self.cursor == self.block.len() {
-                // Reset before the refill: `fill_block` clears the block,
-                // so on exhaustion (0 ops) the cursor must match the now-
-                // empty block — a further call then retries the (empty)
-                // refill instead of indexing past the end.
+                // Producer hung up == trace exhausted. Leaving the
+                // drained block in place keeps `cursor == len()`, so a
+                // further call re-lands here and returns None again.
+                let next = match self.rx.recv() {
+                    Ok(b) => b,
+                    Err(_) => return None,
+                };
+                let drained = std::mem::replace(&mut self.block, next);
+                // The producer may already have exited; then the drained
+                // block is simply dropped.
+                let _ = self.recycle.send(drained);
                 self.cursor = 0;
-                if self.gen.fill_block(&mut self.block) == 0 {
-                    return None;
-                }
             }
             let op = self.block.get(self.cursor);
             self.cursor += 1;
             Some(op)
         }
     }
-
-    let mut cores: Vec<CoreState> = workloads
-        .iter()
-        .enumerate()
-        .map(|(i, wl)| CoreState {
-            core: CoreModel::new(cfg.cpu),
-            hier: CacheHierarchy::new(&core_cfg),
-            gen: TraceGenerator::new(*wl, wl_cfg.scale, cfg.seed ^ (i as u64) << 32)
-                .take_ops(opts.ops),
-            block: TraceBlock::new(),
-            cursor: 0,
-            stripe: core_stripe(&cfg, i, n),
-            workload: wl.name.to_string(),
-        })
-        .collect();
 
     /// Shim that offsets addresses into the core's stripe.
     struct StripedBackend<'a> {
@@ -173,63 +170,112 @@ pub fn run_multicore(
         }
     }
 
-    // Time-ordered round-robin: always step the core with the earliest
-    // local clock so shared-resource contention is causally ordered.
-    // §Perf: an indexed min-heap replaces the old O(cores) min-scan per
-    // step; ties break on core index (lexicographic `(time, idx)`),
-    // matching the old first-minimum selection exactly, so timelines are
-    // bit-identical. Each live core has exactly one heap entry; a core's
-    // clock only changes when it is stepped, so entries are never stale.
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
-    let mut ready: BinaryHeap<Reverse<(Time, usize)>> = cores
-        .iter()
-        .enumerate()
-        .map(|(i, c)| Reverse((c.core.now(), i)))
-        .collect();
-    while let Some(Reverse((_, idx))) = ready.pop() {
-        let c = &mut cores[idx];
-        match c.next_op() {
-            Some(op) => {
-                let mut shim = StripedBackend {
-                    inner: &mut backend,
-                    stripe: c.stripe,
-                };
-                c.core.step(&op, &mut c.hier, &mut shim);
-                ready.push(Reverse((c.core.now(), idx)));
-            }
-            None => {
-                c.core.finish();
+    // §Perf: per-core trace generation runs on scoped producer threads,
+    // overlapping block refills with the (serial, time-ordered)
+    // scheduling loop. Each producer owns its core's generator — same
+    // per-core seed as before — and trades blocks with the scheduler
+    // over a bounded channel pair: one block being consumed, one in
+    // flight, recycled in both directions, so the steady state allocates
+    // nothing and each core's op stream is bit-identical to serial
+    // generation.
+    std::thread::scope(|s| {
+        let mut cores: Vec<CoreState> = workloads
+            .iter()
+            .enumerate()
+            .map(|(i, wl)| {
+                let (block_tx, block_rx) = mpsc::sync_channel::<TraceBlock>(1);
+                let (recycle_tx, recycle_rx) = mpsc::channel::<TraceBlock>();
+                // Two full-capacity blocks circulate per core: one seeded
+                // on the producer's side, one starting (empty) as the
+                // scheduler's current block below.
+                recycle_tx.send(TraceBlock::new()).expect("fresh channel");
+                let mut gen = TraceGenerator::new(*wl, wl_cfg.scale, cfg.seed ^ (i as u64) << 32)
+                    .take_ops(opts.ops);
+                s.spawn(move || {
+                    while let Ok(mut block) = recycle_rx.recv() {
+                        if gen.fill_block(&mut block) == 0 {
+                            // Dropping `block_tx` signals exhaustion.
+                            break;
+                        }
+                        if block_tx.send(block).is_err() {
+                            break;
+                        }
+                    }
+                });
+                CoreState {
+                    core: CoreModel::new(cfg.cpu),
+                    hier: CacheHierarchy::new(&core_cfg),
+                    // Starts empty: `cursor == len() == 0`, so the first
+                    // `next_op()` receives the first filled block and
+                    // hands this one to the producer for refilling.
+                    block: TraceBlock::new(),
+                    cursor: 0,
+                    rx: block_rx,
+                    recycle: recycle_tx,
+                    stripe: core_stripe(&cfg, i, n),
+                    workload: wl.name.to_string(),
+                }
+            })
+            .collect();
+
+        // Time-ordered round-robin: always step the core with the earliest
+        // local clock so shared-resource contention is causally ordered.
+        // §Perf: an indexed min-heap replaces the old O(cores) min-scan per
+        // step; ties break on core index (lexicographic `(time, idx)`),
+        // matching the old first-minimum selection exactly, so timelines are
+        // bit-identical. Each live core has exactly one heap entry; a core's
+        // clock only changes when it is stepped, so entries are never stale.
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let mut ready: BinaryHeap<Reverse<(Time, usize)>> = cores
+            .iter()
+            .enumerate()
+            .map(|(i, c)| Reverse((c.core.now(), i)))
+            .collect();
+        while let Some(Reverse((_, idx))) = ready.pop() {
+            let c = &mut cores[idx];
+            match c.next_op() {
+                Some(op) => {
+                    let mut shim = StripedBackend {
+                        inner: &mut backend,
+                        stripe: c.stripe,
+                    };
+                    c.core.step(&op, &mut c.hier, &mut shim);
+                    ready.push(Reverse((c.core.now(), idx)));
+                }
+                None => {
+                    c.core.finish();
+                }
             }
         }
-    }
 
-    let makespan = cores.iter().map(|c| c.core.stats.time_ns).max().unwrap_or(0);
-    backend.drain(makespan);
+        let makespan = cores.iter().map(|c| c.core.stats.time_ns).max().unwrap_or(0);
+        backend.drain(makespan);
 
-    let reports: Vec<CoreReport> = cores
-        .iter()
-        .enumerate()
-        .map(|(i, c)| CoreReport {
-            core: i,
-            workload: c.workload.clone(),
-            instructions: c.core.stats.instructions,
-            mem_ops: c.core.stats.mem_ops,
-            memory_accesses: c.core.stats.memory_accesses,
-            time_ns: c.core.stats.time_ns,
+        let reports: Vec<CoreReport> = cores
+            .iter()
+            .enumerate()
+            .map(|(i, c)| CoreReport {
+                core: i,
+                workload: c.workload.clone(),
+                instructions: c.core.stats.instructions,
+                mem_ops: c.core.stats.mem_ops,
+                memory_accesses: c.core.stats.memory_accesses,
+                time_ns: c.core.stats.time_ns,
+            })
+            .collect();
+        let total_instr: u64 = reports.iter().map(|r| r.instructions).sum();
+        Ok(MulticoreReport {
+            aggregate_mips: total_instr as f64 / (makespan.max(1) as f64 / 1000.0),
+            hmmu_requests: backend.hmmu.counters.total_host_requests(),
+            pcie_credit_stalls: backend.link.credit_stalls,
+            fifo_full_stalls: backend.hmmu.counters.fifo_full_stalls,
+            dram_residency: backend.hmmu.dram_residency(),
+            nvm_max_wear: backend.hmmu.nvm_device().max_wear(),
+            counters: backend.hmmu.counters.clone(),
+            cores: reports,
+            makespan_ns: makespan,
         })
-        .collect();
-    let total_instr: u64 = reports.iter().map(|r| r.instructions).sum();
-    Ok(MulticoreReport {
-        aggregate_mips: total_instr as f64 / (makespan.max(1) as f64 / 1000.0),
-        hmmu_requests: backend.hmmu.counters.total_host_requests(),
-        pcie_credit_stalls: backend.link.credit_stalls,
-        fifo_full_stalls: backend.hmmu.counters.fifo_full_stalls,
-        dram_residency: backend.hmmu.dram_residency(),
-        nvm_max_wear: backend.hmmu.nvm_device().max_wear(),
-        counters: backend.hmmu.counters.clone(),
-        cores: reports,
-        makespan_ns: makespan,
     })
 }
 

@@ -145,11 +145,13 @@ impl TraceBlock {
         (is_write as u8) | ((dependent as u8) << 1) | (pattern << Self::PATTERN_SHIFT)
     }
 
-    /// Append one op. Caller keeps `len() <= capacity()` (the block is a
-    /// fixed-size buffer, not a growable vec).
+    /// Append one op. Panics when the block is already full: the block
+    /// is a fixed-size buffer, not a growable vec — silently growing the
+    /// arrays in release builds would break the zero-alloc/fixed-capacity
+    /// contract the batched pipeline is built on.
     #[inline]
     pub fn push(&mut self, op: TraceOp) {
-        debug_assert!(!self.is_full(), "TraceBlock overflow");
+        assert!(!self.is_full(), "TraceBlock overflow");
         self.gaps.push(op.gap);
         self.addrs.push(op.addr);
         self.flags
@@ -253,6 +255,17 @@ mod tests {
     #[test]
     fn default_block_capacity() {
         assert_eq!(TraceBlock::new().capacity(), TRACE_BLOCK_OPS);
+    }
+
+    #[test]
+    #[should_panic(expected = "TraceBlock overflow")]
+    fn push_past_capacity_panics_in_release_too() {
+        // A hard assert, not debug_assert: release builds must not let an
+        // over-filled block silently grow its arrays.
+        let mut b = TraceBlock::with_capacity(2);
+        b.push(TraceOp::load(0, 0));
+        b.push(TraceOp::load(0, 64));
+        b.push(TraceOp::load(0, 128));
     }
 
     #[test]

@@ -21,15 +21,20 @@ fn cfg_for(policy: PolicyKind) -> SystemConfig {
 }
 
 /// Reference per-op platform pass: the exact pre-batching inner loop
-/// (iterator-driven `CoreModel::step`), kept here as the ground truth the
-/// block pipeline is pinned against.
-fn run_per_op(cfg: &SystemConfig, wl: &Workload, ops: u64) -> (u64, String, f64) {
+/// (iterator-driven `CoreModel::step`, per-op `CacheHierarchy::access`),
+/// kept here as the ground truth the block pipeline — including the
+/// block-batched hierarchy lookup — is pinned against.
+fn run_per_op(cfg: &SystemConfig, wl: &Workload, ops: u64, flush: bool) -> (u64, String, f64) {
     let mut backend = HmmuBackend::new(cfg.clone(), None);
     let mut core = CoreModel::new(cfg.cpu);
     let mut hier = CacheHierarchy::new(cfg);
     let gen = TraceGenerator::new(*wl, cfg.scale, cfg.seed).take_ops(ops);
     for op in gen {
         core.step(&op, &mut hier, &mut backend);
+    }
+    if flush {
+        let now = core.now();
+        hier.flush(now, &mut backend);
     }
     let platform_time_ns = core.finish();
     backend.drain(platform_time_ns);
@@ -50,7 +55,7 @@ fn batched_platform_bit_identical_to_per_op() {
         for policy in policies {
             let cfg = cfg_for(policy);
             let wl = spec::by_name(wl_name).unwrap();
-            let (ref_time, ref_counters, ref_residency) = run_per_op(&cfg, &wl, OPS);
+            let (ref_time, ref_counters, ref_residency) = run_per_op(&cfg, &wl, OPS, false);
 
             // The production path (Platform::run_opts_serial) drives the
             // block pipeline.
@@ -108,7 +113,7 @@ fn per_op_reference_matches_concurrent_runner_too() {
     // pipeline; both must match the per-op reference.
     let cfg = cfg_for(PolicyKind::Hotness);
     let wl = spec::by_name("505.mcf").unwrap();
-    let (ref_time, ref_counters, _) = run_per_op(&cfg, &wl, OPS);
+    let (ref_time, ref_counters, _) = run_per_op(&cfg, &wl, OPS, false);
     let r = Platform::new(cfg)
         .run_opts(
             &wl,
@@ -174,6 +179,134 @@ fn multicore_sweep_scenarios_deterministic_across_thread_counts() {
         assert_eq!(
             fp_serial, fp,
             "multicore sweep diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn flush_at_end_bit_identical_to_per_op() {
+    // The end-of-run flush now writes dirty lines back at their real
+    // addresses; both paths must feed the HMMU the same write stream.
+    for policy in [PolicyKind::Static, PolicyKind::Hotness] {
+        let cfg = cfg_for(policy);
+        let wl = spec::by_name("519.lbm").unwrap(); // write-heavy: big dirty set
+        let (ref_time, ref_counters, ref_residency) = run_per_op(&cfg, &wl, OPS, true);
+        let r = Platform::new(cfg)
+            .run_opts_serial(
+                &wl,
+                RunOpts {
+                    ops: OPS,
+                    flush_at_end: true,
+                },
+            )
+            .unwrap();
+        let label = format!("lbm+flush/{}", policy.name());
+        assert_eq!(r.platform_time_ns, ref_time, "{label}: time diverged");
+        assert_eq!(
+            format!("{:?}", r.counters),
+            ref_counters,
+            "{label}: counters diverged"
+        );
+        assert!(
+            (r.dram_residency - ref_residency).abs() < f64::EPSILON,
+            "{label}: residency diverged"
+        );
+    }
+}
+
+#[test]
+fn hierarchy_block_lookup_bit_identical_through_hmmu() {
+    // The access_block contract at the full-counter level: the same
+    // handcrafted mix as `step_block_bit_identical_to_per_op` (hits,
+    // independent misses, dependent chains, stores), driven through the
+    // real PCIe+HMMU backend per-op and block-batched, compared on core
+    // stats, hierarchy stats and the whole HMMU counter block.
+    use hymem::workload::TraceOp;
+    let mut ops = Vec::new();
+    for i in 0..2_000u64 {
+        ops.push(TraceOp::load(3, (i % 7) * 64));
+        ops.push(TraceOp::load(0, i * 4096));
+        if i % 3 == 0 {
+            ops.push(TraceOp::chained_load(1, i * 8192));
+        }
+        if i % 4 == 0 {
+            ops.push(TraceOp::store(2, i * 4096 + 64));
+        }
+    }
+
+    let cfg = cfg_for(PolicyKind::Hotness);
+
+    let mut ref_backend = HmmuBackend::new(cfg.clone(), None);
+    let mut ref_core = CoreModel::new(cfg.cpu);
+    let mut ref_hier = CacheHierarchy::new(&cfg);
+    for op in &ops {
+        ref_core.step(op, &mut ref_hier, &mut ref_backend);
+    }
+    let ref_time = ref_core.finish();
+    ref_backend.drain(ref_time);
+
+    let mut backend = HmmuBackend::new(cfg.clone(), None);
+    let mut core = CoreModel::new(cfg.cpu);
+    let mut hier = CacheHierarchy::new(&cfg);
+    // 384 is not a divisor of the op count: exercises the short tail.
+    let mut block = TraceBlock::with_capacity(384);
+    for chunk in ops.chunks(384) {
+        block.clear();
+        for op in chunk {
+            block.push(*op);
+        }
+        core.step_block(&block, &mut hier, &mut backend);
+    }
+    let time = core.finish();
+    backend.drain(time);
+
+    assert_eq!(time, ref_time);
+    assert_eq!(format!("{:?}", core.stats), format!("{:?}", ref_core.stats));
+    assert_eq!(hier.l1d.hits, ref_hier.l1d.hits);
+    assert_eq!(hier.l1d.misses, ref_hier.l1d.misses);
+    assert_eq!(hier.l2.hits, ref_hier.l2.hits);
+    assert_eq!(hier.l2.misses, ref_hier.l2.misses);
+    assert_eq!(hier.l2.writebacks, ref_hier.l2.writebacks);
+    assert_eq!(hier.mem_reads, ref_hier.mem_reads);
+    assert_eq!(hier.mem_writes, ref_hier.mem_writes);
+    assert_eq!(
+        format!("{:?}", backend.hmmu.counters),
+        format!("{:?}", ref_backend.hmmu.counters),
+        "HMMU counters diverged between per-op and block hierarchy lookup"
+    );
+    assert!(
+        backend.hmmu.counters.host_writes > 0,
+        "mix must exercise posted write-backs"
+    );
+}
+
+#[test]
+fn multicore_parallel_generation_preserves_per_core_streams() {
+    // The per-core producer threads must feed each core exactly the
+    // stream a serial generator would: pin instruction counts against a
+    // direct drain of the same-seed generator.
+    let cfg = cfg_for(PolicyKind::Static);
+    let wls = [
+        spec::by_name("505.mcf").unwrap(),
+        spec::by_name("519.lbm").unwrap(),
+        spec::by_name("557.xz").unwrap(),
+    ];
+    let opts = RunOpts {
+        ops: 9_000,
+        flush_at_end: false,
+    };
+    let r = hymem::platform::run_multicore(cfg.clone(), &wls, opts, None).unwrap();
+    for (i, wl) in wls.iter().enumerate() {
+        // Same scale and seed derivation as `run_multicore`.
+        let scale = cfg.scale * wls.len() as u64;
+        let expected: u64 = TraceGenerator::new(*wl, scale, cfg.seed ^ (i as u64) << 32)
+            .take_ops(opts.ops)
+            .map(|op| op.instructions())
+            .sum();
+        assert_eq!(r.cores[i].mem_ops, opts.ops);
+        assert_eq!(
+            r.cores[i].instructions, expected,
+            "core {i} stream diverged from serial generation"
         );
     }
 }
