@@ -8,7 +8,7 @@ use hymem::cpu::{BlockOutcomes, CacheHierarchy, CoreModel, MemBackend};
 use hymem::hmmu::policy::{HotnessEngine, HotnessPolicy, NativeHotnessEngine, PlacementPolicy};
 use hymem::hmmu::{build_policy, Hmmu, TagMatcher};
 use hymem::mem::AccessKind;
-use hymem::pcie::PcieLink;
+use hymem::pcie::{PcieLink, TlpColumn, TlpKind};
 use hymem::platform::HmmuBackend;
 use hymem::sim::Time;
 use hymem::util::bench::BenchSuite;
@@ -93,6 +93,62 @@ fn main() {
                 link.hold_credit_until(b);
             }
             10_000
+        });
+    }
+
+    // Per-op vs block: the PCIe link crossing. Both rows push the same
+    // recorded traffic mix (60% MRd round trips, 40% posted MWr, monotone
+    // issue times, fixed device service) through the link; the block row
+    // crosses the whole column in one `send_block_to_device` pass
+    // (coalescing off, so the work is bit-identical — the ratio isolates
+    // the batching: one call per column, memoized serialization, heap
+    // credit gate drained per batch). CI gates block ≥ per-op
+    // (scripts/check_bench_gate.py).
+    {
+        let cfg = SystemConfig::default_scaled(16);
+        let ops = TRACE_BLOCK_OPS as u64;
+        let mut rng = Xoshiro256::new(6);
+        let mut entries = Vec::with_capacity(TRACE_BLOCK_OPS);
+        let mut col = TlpColumn::new();
+        let mut t = 0u64;
+        for _ in 0..TRACE_BLOCK_OPS {
+            t += 20;
+            let addr = rng.below(1 << 30) & !63;
+            let kind = if rng.chance(0.6) {
+                TlpKind::MRd
+            } else {
+                TlpKind::MWr
+            };
+            entries.push((kind, t));
+            col.push(kind, addr, 64, t);
+        }
+
+        let mut link = PcieLink::new(cfg.pcie);
+        suite.bench_items("pcie_link/per-op (batch 4096)", ops, || {
+            for &(kind, at) in &entries {
+                if kind == TlpKind::MRd {
+                    let a = link.send_to_device(0, at);
+                    let b = link.send_to_host(64, a + 180);
+                    link.hold_credit_until(b);
+                } else {
+                    let a = link.send_to_device(64, at);
+                    link.hold_credit_until(a + 120);
+                }
+            }
+            ops
+        });
+
+        let mut link = PcieLink::new(cfg.pcie);
+        let mut completions = Vec::new();
+        suite.bench_items("pcie_link/block (batch 4096)", ops, || {
+            link.send_block_to_device(
+                &col,
+                &mut |_l, j, arrive| {
+                    arrive + if col.kind(j) == TlpKind::MRd { 180 } else { 120 }
+                },
+                &mut completions,
+            );
+            ops
         });
     }
 

@@ -23,6 +23,7 @@ PAIRS = [
     ("trace_gen/per-op (batch 4096)", "trace_gen/fill_block (batch 4096)"),
     ("platform_step/per-op (batch 4096)", "platform_step/block (batch 4096)"),
     ("hierarchy_access/per-op (batch 4096)", "hierarchy_access/block (batch 4096)"),
+    ("pcie_link/per-op (batch 4096)", "pcie_link/block (batch 4096)"),
 ]
 
 

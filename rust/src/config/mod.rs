@@ -51,6 +51,13 @@ pub struct PcieConfig {
     pub max_payload_bytes: u32,
     /// Flow-control credit count (outstanding TLPs each direction).
     pub credits: u32,
+    /// Write-combining on the block-batched link crossing: adjacent posted
+    /// MWr TLPs issued at the same time into the same 4 KiB-aligned window
+    /// are merged into one TLP of up to `max_payload_bytes` payload. Off
+    /// (the default) keeps the block path bit-identical to the per-op
+    /// path; on changes only wire time / TLP counts, never redirection or
+    /// residency state (`tests/pcie_props.rs` pins both).
+    pub coalesce_writes: bool,
 }
 
 impl PcieConfig {
@@ -115,6 +122,13 @@ pub struct HmmuConfig {
     /// restores the pre-PR-2 model where migration traffic bypassed the
     /// occupancy model entirely.
     pub dma_hdr_occupancy: bool,
+    /// Fidelity scenario: a *host-managed* HMMU design, where migration
+    /// DMA is performed by the host and every migrated block crosses the
+    /// PCIe link (contending with demand traffic for wire time and flow
+    /// control credits; `pcie_dma_bytes` / `dma_link_stalls` count it).
+    /// Off by default — the paper's HMMU owns both memory controllers, so
+    /// its device-side DMA never touches PCIe.
+    pub host_managed_dma: bool,
 }
 
 /// Placement/migration policy selection.
@@ -211,6 +225,7 @@ impl SystemConfig {
                 tlp_header_bytes: 16,
                 max_payload_bytes: 256,
                 credits: 64,
+                coalesce_writes: false,
             },
             dram: DramConfig {
                 size_bytes: 128 << 20,
@@ -240,6 +255,7 @@ impl SystemConfig {
                 epoch_requests: 100_000,
                 migrations_per_epoch: 32,
                 dma_hdr_occupancy: true,
+                host_managed_dma: false,
             },
             policy: PolicyKind::Hotness,
             scale: 1,

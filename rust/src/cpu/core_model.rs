@@ -120,8 +120,11 @@ impl CoreModel {
             let now = self.now_f as Time;
             self.window.retain(|&t| t > now);
 
-            // Recorded traffic: posted victim write-backs, then the fill.
-            match out.issue(i, &mut wr, &mut rd, backend, now) {
+            // Recorded traffic: posted victim write-backs, then the fill
+            // — through the backend's column crossing (the PCIe+HMMU
+            // backend batches the whole op column over the link; the
+            // default is the shared per-op replay).
+            match backend.issue_block_op(&out, i, &mut wr, &mut rd, now) {
                 None => {
                     // L2 hit whose L1 victim write-back spilled a dirty
                     // line: writes posted, the core still sees a hit.

@@ -22,6 +22,29 @@ pub trait MemBackend {
     /// Called at epoch boundaries / end-of-run to let the backend flush
     /// (e.g., HMMU migration bookkeeping). Default: nothing.
     fn drain(&mut self, _now: Time) {}
+
+    /// Issue op `i`'s recorded block traffic — posted victim write-backs,
+    /// then the demand fill — at time `now`, advancing the caller's
+    /// write/fill cursors; returns the fill's completion when op `i`
+    /// reads memory. The default replays per op through
+    /// [`BlockOutcomes::issue`]; backends that can cross an op's whole
+    /// traffic column at once (the PCIe+HMMU backend batches the link
+    /// crossing) override it — and must stay bit-identical to the
+    /// default (`tests/batch_equivalence.rs`).
+    #[inline]
+    fn issue_block_op(
+        &mut self,
+        out: &BlockOutcomes,
+        i: usize,
+        wr: &mut usize,
+        rd: &mut usize,
+        now: Time,
+    ) -> Option<Time>
+    where
+        Self: Sized,
+    {
+        out.issue(i, wr, rd, self, now)
+    }
 }
 
 /// Outcome of one data access through the hierarchy.

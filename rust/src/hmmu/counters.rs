@@ -10,7 +10,13 @@
 use crate::util::stats::LatencyHistogram;
 
 /// Aggregated HMMU counters for one run.
-#[derive(Clone, Debug, Default)]
+///
+/// `Debug` is implemented manually (not derived) so it renders **only
+/// deterministic, simulated-time fields**: the equivalence tests and the
+/// golden counter snapshots compare the Debug rendering verbatim, and the
+/// host-wall-clock `policy_wall_ns` field would make byte-identical runs
+/// render differently.
+#[derive(Clone, Default)]
 pub struct HmmuCounters {
     /// Requests received from the host (post cache filter).
     pub host_reads: u64,
@@ -49,6 +55,72 @@ pub struct HmmuCounters {
     /// demand-pipeline stalls, so that series stays comparable across
     /// configurations and PRs).
     pub dma_hdr_stalls: u64,
+    /// Payload bytes of migration traffic that crossed the PCIe link
+    /// (only under `HmmuConfig::host_managed_dma`; the paper's
+    /// device-side DMA never touches the link and keeps this 0).
+    pub pcie_dma_bytes: u64,
+    /// PCIe credit stalls incurred by host-managed DMA transfers (a
+    /// subset of the link's total `credit_stalls`, attributed so demand
+    /// vs migration link pressure can be separated).
+    pub dma_link_stalls: u64,
+}
+
+impl std::fmt::Debug for HmmuCounters {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Every simulated-time field, in declaration order;
+        // `policy_wall_ns` (host wall clock, nondeterministic) is
+        // deliberately excluded from the equality surface. The exhaustive
+        // destructure makes adding a counter without deciding its Debug
+        // fate a compile error — a silently-missing field here would be
+        // invisible to every Debug-equality test and golden snapshot.
+        let HmmuCounters {
+            host_reads,
+            host_writes,
+            host_read_bytes,
+            host_write_bytes,
+            dram_reads,
+            dram_writes,
+            nvm_reads,
+            nvm_writes,
+            pages_placed_dram,
+            pages_placed_nvm,
+            migrations,
+            migration_bytes,
+            epochs,
+            policy_wall_ns: _,
+            latency,
+            reorder_wait_ns,
+            fifo_full_stalls,
+            dma_conflict_stalls,
+            dma_hdr_slots,
+            dma_hdr_stalls,
+            pcie_dma_bytes,
+            dma_link_stalls,
+        } = self;
+        f.debug_struct("HmmuCounters")
+            .field("host_reads", host_reads)
+            .field("host_writes", host_writes)
+            .field("host_read_bytes", host_read_bytes)
+            .field("host_write_bytes", host_write_bytes)
+            .field("dram_reads", dram_reads)
+            .field("dram_writes", dram_writes)
+            .field("nvm_reads", nvm_reads)
+            .field("nvm_writes", nvm_writes)
+            .field("pages_placed_dram", pages_placed_dram)
+            .field("pages_placed_nvm", pages_placed_nvm)
+            .field("migrations", migrations)
+            .field("migration_bytes", migration_bytes)
+            .field("epochs", epochs)
+            .field("latency", latency)
+            .field("reorder_wait_ns", reorder_wait_ns)
+            .field("fifo_full_stalls", fifo_full_stalls)
+            .field("dma_conflict_stalls", dma_conflict_stalls)
+            .field("dma_hdr_slots", dma_hdr_slots)
+            .field("dma_hdr_stalls", dma_hdr_stalls)
+            .field("pcie_dma_bytes", pcie_dma_bytes)
+            .field("dma_link_stalls", dma_link_stalls)
+            .finish_non_exhaustive()
+    }
 }
 
 impl HmmuCounters {

@@ -15,6 +15,14 @@
 //! The paper: "We spent considerable time to design and verify the logic
 //! design to ensure all possible cases are covered" — the property tests
 //! in `rust/tests/` sweep the interleavings.
+//!
+//! The engine itself is transport-agnostic: per-block timing comes from
+//! the HMMU's `issue` callback, which charges each access at the memory
+//! controllers (the paper's device-side DMA) — or, under
+//! `HmmuConfig::host_managed_dma`, additionally at the PCIe link, so
+//! migration bandwidth contends with demand traffic
+//! (`HmmuCounters::pcie_dma_bytes` / `dma_link_stalls`). Nothing here
+//! changes between the two modes; only the callback's cost model does.
 
 use super::redirection::{Device, Mapping};
 use crate::mem::AccessKind;

@@ -11,9 +11,16 @@
 //! plus the DMA engine migrating pages between the devices under the
 //! control of the epoch policy, and performance counters on everything.
 //!
-//! The HMMU is deliberately independent of the PCIe link: it consumes
-//! requests with arrival timestamps and produces completion timestamps.
-//! The platform wraps it with the link model.
+//! The HMMU is deliberately independent of the PCIe link for **demand
+//! traffic**: it consumes requests with arrival timestamps and produces
+//! completion timestamps, and the platform wraps it with the link model.
+//! The one exception is the *host-managed* fidelity scenario
+//! (`HmmuConfig::host_managed_dma`): there, migration DMA is performed by
+//! the host, so [`Hmmu::access_linked`] threads an optional [`PcieLink`]
+//! handle down to the epoch path and every migrated block crosses the
+//! link — contending with demand traffic for wire time and credits
+//! (`pcie_dma_bytes` / `dma_link_stalls` count it). The paper's
+//! device-side DMA (the default) never touches the link.
 
 pub mod counters;
 pub mod dma;
@@ -30,6 +37,7 @@ pub use tags::TagMatcher;
 use crate::alloc::HintStore;
 use crate::config::SystemConfig;
 use crate::mem::{AccessKind, DramDevice, MemDevice, MemoryController, NvmDevice};
+use crate::pcie::PcieLink;
 use crate::sim::{Clock, Time};
 
 /// Fixed-capacity ring of outstanding-response release times — the HDR
@@ -101,6 +109,17 @@ impl ReleaseRing {
     }
 }
 
+/// Scratch columns for the host-managed DMA completion stream (one
+/// migrated block's max_payload chunks crossed device→host as a single
+/// [`PcieLink::send_block_to_host`] column). Recycled across transfers —
+/// steady state allocates nothing.
+#[derive(Default)]
+struct CplScratch {
+    payloads: Vec<u32>,
+    times: Vec<Time>,
+    arrivals: Vec<Time>,
+}
+
 /// The HMMU model.
 pub struct Hmmu {
     cfg: SystemConfig,
@@ -118,6 +137,8 @@ pub struct Hmmu {
     pipeline_ns: u64,
     /// Release times of outstanding HDR FIFO entries (occupancy model).
     hdr_occupancy: ReleaseRing,
+    /// Host-managed DMA completion-column scratch (see [`CplScratch`]).
+    dma_cpl: CplScratch,
     requests_since_epoch: u64,
     /// Simulated time of the last processed request (drives epoch DMA).
     last_now: Time,
@@ -169,6 +190,7 @@ impl Hmmu {
             hints: HintStore::new(),
             pipeline_ns,
             hdr_occupancy: ReleaseRing::new(cfg.hmmu.hdr_fifo_depth as usize),
+            dma_cpl: CplScratch::default(),
             requests_since_epoch: 0,
             last_now: 0,
             cfg,
@@ -211,6 +233,22 @@ impl Hmmu {
     /// for writes: commit time at the device — posted, the host does not
     /// wait for it).
     pub fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> Time {
+        self.access_linked(addr, kind, bytes, now, None)
+    }
+
+    /// [`Self::access`] with a PCIe link handle for the epoch path: under
+    /// `HmmuConfig::host_managed_dma` any migration launched at this
+    /// request's epoch boundary charges its block transfers at the link.
+    /// With the flag off (the default) the handle is ignored and this is
+    /// exactly [`Self::access`].
+    pub fn access_linked(
+        &mut self,
+        addr: u64,
+        kind: AccessKind,
+        bytes: u64,
+        now: Time,
+        link: Option<&mut PcieLink>,
+    ) -> Time {
         self.last_now = now;
         // --- counters: host side ---
         match kind {
@@ -339,7 +377,7 @@ impl Hmmu {
         self.requests_since_epoch += 1;
         if self.requests_since_epoch >= self.cfg.hmmu.epoch_requests {
             self.requests_since_epoch = 0;
-            self.run_epoch(release);
+            self.run_epoch(release, link);
         }
 
         release
@@ -358,7 +396,7 @@ impl Hmmu {
     /// engine. The policy math itself executes off the request path (the
     /// paper's control logic is pipelined in fabric); we account its host
     /// wall time in the counters for the §Perf report.
-    fn run_epoch(&mut self, now: Time) {
+    fn run_epoch(&mut self, now: Time, mut link: Option<&mut PcieLink>) {
         self.counters.epochs += 1;
         let wall = std::time::Instant::now();
         let dma_ref = &self.dma;
@@ -369,6 +407,8 @@ impl Hmmu {
                 migrating: &migrating,
                 max_migrations: self.cfg.hmmu.migrations_per_epoch,
             };
+            // Borrows the policy's recycled pair buffer (§Perf: no
+            // per-epoch allocation).
             self.policy.epoch(&view)
         };
         self.counters.policy_wall_ns += wall.elapsed().as_nanos() as u64;
@@ -379,7 +419,16 @@ impl Hmmu {
         // the access completes. `dma_hdr_occupancy = false` restores the
         // old bypass model.
         let occupy = self.cfg.hmmu.dma_hdr_occupancy;
-        for (nvm_page, dram_page) in pairs {
+        // Fidelity (ROADMAP): under a *host-managed* design the migration
+        // engine lives on the host side of the link, so every block
+        // transfer crosses PCIe — reads come back as completion data,
+        // writes go out as posted-payload TLPs, both split at the link's
+        // max payload — and contends with demand traffic for wire time
+        // and credits. Requires a link handle (the platform backends pass
+        // one); a bare `Hmmu::access` keeps device-side DMA.
+        let host_managed = self.cfg.hmmu.host_managed_dma;
+        let max_payload = self.cfg.pcie.max_payload_bytes as u64;
+        for &(nvm_page, dram_page) in pairs {
             let (Some(ma), Some(mb)) = (self.table.lookup(nvm_page), self.table.lookup(dram_page))
             else {
                 continue;
@@ -393,6 +442,8 @@ impl Hmmu {
             let nvm_mc = &mut self.nvm_mc;
             let hdr = &mut self.hdr_occupancy;
             let counters = &mut self.counters;
+            let link_ref = &mut link;
+            let cpl = &mut self.dma_cpl;
             let mut issue = |dev: Device, a: u64, k: AccessKind, b: u64, at: Time| {
                 let mut at = at;
                 if occupy {
@@ -424,9 +475,68 @@ impl Hmmu {
                         }
                     }
                 }
-                let done = match dev {
-                    Device::Dram => dram_mc.issue(a, k, b, at),
-                    Device::Nvm => nvm_mc.issue(a, k, b, at),
+                let done = match (host_managed, link_ref.as_deref_mut()) {
+                    (true, Some(l)) => {
+                        let stalls_before = l.credit_stalls;
+                        let done = match k {
+                            AccessKind::Read => {
+                                // Host reads the block: MRd request out
+                                // (header only), device access, then the
+                                // data rides completion TLPs back —
+                                // split at the link's max payload and
+                                // serialized back-to-back on the RX wire
+                                // as one column.
+                                let arrive = l.send_to_device(0, at);
+                                let ready = match dev {
+                                    Device::Dram => dram_mc.issue(a, k, b, arrive),
+                                    Device::Nvm => nvm_mc.issue(a, k, b, arrive),
+                                };
+                                cpl.payloads.clear();
+                                cpl.times.clear();
+                                let mut remaining = b;
+                                while remaining > 0 {
+                                    let chunk = remaining.min(max_payload);
+                                    cpl.payloads.push(chunk as u32);
+                                    cpl.times.push(ready);
+                                    remaining -= chunk;
+                                }
+                                l.send_block_to_host(&cpl.payloads, &cpl.times, &mut cpl.arrivals);
+                                let done = *cpl.arrivals.last().unwrap();
+                                l.hold_credit_until(done);
+                                done
+                            }
+                            AccessKind::Write => {
+                                // Host writes the block: posted MWr TLPs
+                                // carry the payload out in max_payload
+                                // chunks. Each chunk's flow-control
+                                // credit is recorded as it is sent
+                                // (posted writes free their credit once
+                                // the device RX buffer accepts them), so
+                                // the pool never exceeds `cfg.credits`
+                                // mid-burst; the device commit happens
+                                // once the last chunk has arrived.
+                                let mut arrive = at;
+                                let mut remaining = b;
+                                while remaining > 0 {
+                                    let chunk = remaining.min(max_payload);
+                                    arrive = l.send_to_device(chunk as u32, at);
+                                    l.hold_credit_until(arrive);
+                                    remaining -= chunk;
+                                }
+                                match dev {
+                                    Device::Dram => dram_mc.issue(a, k, b, arrive),
+                                    Device::Nvm => nvm_mc.issue(a, k, b, arrive),
+                                }
+                            }
+                        };
+                        counters.pcie_dma_bytes += b;
+                        counters.dma_link_stalls += l.credit_stalls - stalls_before;
+                        done
+                    }
+                    _ => match dev {
+                        Device::Dram => dram_mc.issue(a, k, b, at),
+                        Device::Nvm => nvm_mc.issue(a, k, b, at),
+                    },
                 };
                 if occupy {
                     counters.dma_hdr_slots += 1;
@@ -669,6 +779,44 @@ mod tests {
             "bypass mode must not touch the occupancy model"
         );
         assert_eq!(h.counters.dma_hdr_stalls, 0);
+    }
+
+    #[test]
+    fn host_managed_dma_respects_link_credit_pool() {
+        // Regression: the chunked posted-write burst used to defer every
+        // chunk's credit hold past the burst, so the pool could exceed
+        // `cfg.credits`. Drive a migrating scenario through a tight pool
+        // and assert the invariant after every request (only DMA charges
+        // this link — demand traffic here bypasses it, which isolates
+        // the burst accounting).
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = 1000;
+        cfg.hmmu.host_managed_dma = true;
+        cfg.pcie.credits = 4;
+        let mut h = Hmmu::new(cfg.clone(), None);
+        let mut link = crate::pcie::PcieLink::new(cfg.pcie);
+        let page_bytes = cfg.hmmu.page_bytes;
+        let dram_pages = cfg.dram.size_bytes / page_bytes;
+        let mut t = 0;
+        for p in 0..(dram_pages + 50) {
+            for _ in 0..30 {
+                t = h.access_linked(p * page_bytes, AccessKind::Read, 64, t + 20, Some(&mut link));
+                assert!(
+                    link.outstanding_credits() <= cfg.pcie.credits as usize,
+                    "credit pool exceeded {} after request",
+                    cfg.pcie.credits
+                );
+            }
+        }
+        h.drain(t + 100_000_000);
+        assert!(h.counters.migrations > 0, "scenario must migrate");
+        assert!(h.counters.pcie_dma_bytes > 0, "DMA must charge the link");
+        assert_eq!(
+            h.counters.pcie_dma_bytes,
+            2 * h.counters.migration_bytes,
+            "each migrated byte crosses the link once per direction"
+        );
     }
 
     #[test]

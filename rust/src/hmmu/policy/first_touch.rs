@@ -26,8 +26,8 @@ impl PlacementPolicy for FirstTouchPolicy {
 
     fn record_access(&mut self, _page: u64, _is_write: bool) {}
 
-    fn epoch(&mut self, _view: &PolicyView) -> Vec<(u64, u64)> {
-        Vec::new()
+    fn epoch(&mut self, _view: &PolicyView) -> &[(u64, u64)] {
+        &[]
     }
 }
 

@@ -133,6 +133,11 @@ pub struct HotnessPolicy {
     /// Residency bitmap scratch, reused across epochs (§Perf: avoids a
     /// page-count allocation per epoch).
     in_dram: Vec<f32>,
+    /// Selected migration pairs, reused across epochs (§Perf, ROADMAP
+    /// item: `epoch` used to allocate a fresh `Vec` per epoch; the buffer
+    /// now reaches steady-state capacity — at most `max_migrations`
+    /// entries — and never grows again).
+    pairs: Vec<(u64, u64)>,
     engine: Box<dyn HotnessEngine>,
     /// Epochs run (for reports).
     pub epochs: u64,
@@ -147,9 +152,16 @@ impl HotnessPolicy {
             writes: vec![0.0; pages],
             hotness: vec![0.0; pages],
             in_dram: vec![0.0; pages],
+            pairs: Vec::new(),
             engine,
             epochs: 0,
         }
+    }
+
+    /// Capacity of the recycled migration-pair buffer (tests pin that it
+    /// stops growing once warm).
+    pub fn pairs_capacity(&self) -> usize {
+        self.pairs.capacity()
     }
 
     pub fn engine_label(&self) -> &'static str {
@@ -170,6 +182,20 @@ impl HotnessPolicy {
         hysteresis: f32,
         skip: &dyn Fn(u64) -> bool,
     ) -> Vec<(u64, u64)> {
+        let mut pairs = Vec::new();
+        Self::select_migrations_into(out, k, hysteresis, skip, &mut pairs);
+        pairs
+    }
+
+    /// [`Self::select_migrations`] into a caller-provided buffer
+    /// (cleared first) — the allocation-free epoch path.
+    pub fn select_migrations_into(
+        out: &PolicyStepOutput,
+        k: usize,
+        hysteresis: f32,
+        skip: &dyn Fn(u64) -> bool,
+        pairs: &mut Vec<(u64, u64)>,
+    ) {
         use std::cmp::Reverse;
         use std::collections::BinaryHeap;
 
@@ -192,8 +218,9 @@ impl HotnessPolicy {
             }
         }
 
+        pairs.clear();
         if k == 0 {
-            return Vec::new();
+            return;
         }
         let mut promote: BinaryHeap<Reverse<Cand>> = BinaryHeap::with_capacity(k + 1);
         let mut demote: BinaryHeap<Reverse<Cand>> = BinaryHeap::with_capacity(k + 1);
@@ -226,7 +253,6 @@ impl HotnessPolicy {
         let promote: Vec<u32> = promote.into_sorted_vec().into_iter().map(|Reverse(c)| c.1).collect();
         let demote: Vec<u32> = demote.into_sorted_vec().into_iter().map(|Reverse(c)| c.1).collect();
 
-        let mut pairs = Vec::new();
         for (p, d) in promote.iter().zip(demote.iter()).take(k) {
             let hot_p = out.hotness[*p as usize];
             let hot_d = out.hotness[*d as usize];
@@ -237,7 +263,6 @@ impl HotnessPolicy {
                 break; // candidates are sorted; later pairs are worse
             }
         }
-        pairs
     }
 }
 
@@ -263,7 +288,7 @@ impl PlacementPolicy for HotnessPolicy {
         }
     }
 
-    fn epoch(&mut self, view: &PolicyView) -> Vec<(u64, u64)> {
+    fn epoch(&mut self, view: &PolicyView) -> &[(u64, u64)] {
         self.epochs += 1;
         // Residency bitmap from the table (scratch buffer reused; the
         // clears compile to tile-width memsets — same contiguous-chunk
@@ -281,14 +306,15 @@ impl PlacementPolicy for HotnessPolicy {
         self.reads.fill(0.0);
         self.writes.fill(0.0);
 
-        let pairs = Self::select_migrations(
+        Self::select_migrations_into(
             &out,
             view.max_migrations as usize,
             HYSTERESIS,
             view.migrating,
+            &mut self.pairs,
         );
         self.hotness = out.hotness; // move, not clone (§Perf)
-        pairs
+        &self.pairs
     }
 }
 
@@ -423,6 +449,68 @@ mod tests {
         let out = e.step(&[10.0, 0.0], &[0.0, 6.0], &[0.0, 0.0], &[0.0, 0.0]);
         // 6 writes (×2) > 10 reads? No: 12 > 10 — write-hot page wins.
         assert!(out.promote_score[1] > out.promote_score[0]);
+    }
+
+    #[test]
+    fn select_into_recycles_buffer_with_identical_decisions() {
+        // A dirty, reused buffer must yield exactly what a fresh
+        // allocation yields, every epoch, and must stop growing once it
+        // has seen a full-k selection.
+        let mut rng = crate::util::rng::Xoshiro256::new(2024);
+        let mut e = NativeHotnessEngine;
+        let mut buf: Vec<(u64, u64)> = vec![(999, 999); 3]; // pre-polluted
+        let mut warm_cap = 0usize;
+        for iter in 0..50 {
+            let n = 512usize;
+            let reads: Vec<f32> = (0..n).map(|_| rng.below(100) as f32).collect();
+            let writes: Vec<f32> = (0..n).map(|_| rng.below(30) as f32).collect();
+            let prev: Vec<f32> = (0..n).map(|_| rng.below(200) as f32).collect();
+            let in_dram: Vec<f32> = (0..n).map(|_| rng.below(2) as f32).collect();
+            let out = e.step(&reads, &writes, &prev, &in_dram);
+            let reference = HotnessPolicy::select_migrations(&out, 8, HYSTERESIS, &|_| false);
+            HotnessPolicy::select_migrations_into(&out, 8, HYSTERESIS, &|_| false, &mut buf);
+            assert_eq!(buf, reference, "iter {iter}: decisions diverged");
+            if iter == 4 {
+                warm_cap = buf.capacity();
+            } else if iter > 4 {
+                assert!(
+                    buf.capacity() <= warm_cap.max(8),
+                    "iter {iter}: steady-state buffer growth ({} > {warm_cap})",
+                    buf.capacity()
+                );
+            }
+        }
+        assert!(warm_cap <= 8, "capacity bounded by k: {warm_cap}");
+    }
+
+    #[test]
+    fn epoch_pair_buffer_reaches_steady_state() {
+        // Hammer the policy so every epoch selects the full migration cap:
+        // the recycled pair buffer must reach k capacity once and never
+        // grow again (zero steady-state allocation, ROADMAP item).
+        let mut t = RedirectionTable::new(64, 32, 32, 4096);
+        t.identity_map(); // 0-31 DRAM, 32-63 NVM
+        let mut p = policy(64);
+        let mut warm = 0usize;
+        for epoch in 0..30 {
+            for page in 32..64u64 {
+                for _ in 0..50 {
+                    p.record_access(page, false);
+                }
+            }
+            let n_pairs = p.epoch(&view(&t)).len();
+            assert_eq!(n_pairs, 8, "epoch {epoch}: full-k selection expected");
+            if epoch == 0 {
+                warm = p.pairs_capacity();
+            } else {
+                assert_eq!(
+                    p.pairs_capacity(),
+                    warm,
+                    "epoch {epoch}: pair buffer grew after warmup"
+                );
+            }
+        }
+        assert!(warm <= 8, "capacity bounded by k: {warm}");
     }
 
     #[test]

@@ -44,10 +44,14 @@ pub trait PlacementPolicy {
     /// Account one (post-cache-filter) request to `page`.
     fn record_access(&mut self, page: u64, is_write: bool);
 
-    /// Epoch boundary: return up to `view.max_migrations` page pairs
+    /// Epoch boundary: select up to `view.max_migrations` page pairs
     /// `(nvm_page, dram_page)` to swap (promote the first, demote the
-    /// second).
-    fn epoch(&mut self, view: &PolicyView) -> Vec<(u64, u64)>;
+    /// second). The returned slice borrows a policy-owned buffer that is
+    /// **recycled across epochs** (§Perf, ROADMAP item: the per-epoch
+    /// migration pair vectors used to be freshly allocated every epoch;
+    /// steady state now allocates nothing — pinned by capacity-snapshot
+    /// tests in `hotness.rs`/`wear_aware.rs`).
+    fn epoch(&mut self, view: &PolicyView) -> &[(u64, u64)];
 }
 
 /// Enum-dispatched policy — the HMMU's request hot path calls
@@ -103,7 +107,8 @@ impl PolicyImpl {
     }
 
     /// Epoch boundary: migration pair selection (off the request path).
-    pub fn epoch(&mut self, view: &PolicyView) -> Vec<(u64, u64)> {
+    /// Returns a slice of the policy's recycled pair buffer.
+    pub fn epoch(&mut self, view: &PolicyView) -> &[(u64, u64)] {
         match self {
             PolicyImpl::Static(p) => p.epoch(view),
             PolicyImpl::FirstTouch(p) => p.epoch(view),

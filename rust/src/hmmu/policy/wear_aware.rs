@@ -29,6 +29,11 @@ pub struct WearAwarePolicy {
     /// Lifetime write counts (never reset — proxies frame wear).
     lifetime_writes: Vec<f32>,
     hotness: Vec<f32>,
+    /// Residency bitmap scratch, reused across epochs (§Perf).
+    in_dram: Vec<f32>,
+    /// Selected migration pairs, reused across epochs (§Perf, ROADMAP
+    /// item — see [`HotnessPolicy`]).
+    pairs: Vec<(u64, u64)>,
     engine: Box<dyn HotnessEngine>,
     pub epochs: u64,
 }
@@ -42,9 +47,17 @@ impl WearAwarePolicy {
             writes: vec![0.0; pages],
             lifetime_writes: vec![0.0; pages],
             hotness: vec![0.0; pages],
+            in_dram: vec![0.0; pages],
+            pairs: Vec::new(),
             engine: Box::new(NativeHotnessEngine),
             epochs: 0,
         }
+    }
+
+    /// Capacity of the recycled migration-pair buffer (tests pin that it
+    /// stops growing once warm).
+    pub fn pairs_capacity(&self) -> usize {
+        self.pairs.capacity()
     }
 }
 
@@ -70,17 +83,17 @@ impl PlacementPolicy for WearAwarePolicy {
         }
     }
 
-    fn epoch(&mut self, view: &PolicyView) -> Vec<(u64, u64)> {
+    fn epoch(&mut self, view: &PolicyView) -> &[(u64, u64)] {
         self.epochs += 1;
-        let mut in_dram = vec![0f32; self.pages];
+        self.in_dram.fill(0.0);
         for (page, m) in view.table.iter_mapped() {
             if m.device == Device::Dram {
-                in_dram[page as usize] = 1.0;
+                self.in_dram[page as usize] = 1.0;
             }
         }
         let mut out = self
             .engine
-            .step(&self.reads, &self.writes, &self.hotness, &in_dram);
+            .step(&self.reads, &self.writes, &self.hotness, &self.in_dram);
 
         // Wear adjustment on top of the base scores.
         for i in 0..self.pages {
@@ -93,16 +106,18 @@ impl PlacementPolicy for WearAwarePolicy {
             }
         }
 
-        self.hotness = out.hotness.clone();
         self.reads.iter_mut().for_each(|x| *x = 0.0);
         self.writes.iter_mut().for_each(|x| *x = 0.0);
 
-        HotnessPolicy::select_migrations(
+        HotnessPolicy::select_migrations_into(
             &out,
             view.max_migrations as usize,
             super::hotness::HYSTERESIS,
             view.migrating,
-        )
+            &mut self.pairs,
+        );
+        self.hotness = out.hotness; // move, not clone (§Perf)
+        &self.pairs
     }
 }
 
@@ -156,9 +171,38 @@ mod tests {
         }
         let pairs = p.epoch(&view(&t));
         assert!(!pairs.is_empty());
-        for &(_, victim) in &pairs {
+        for &(_, victim) in pairs {
             assert_ne!(victim, 0, "write-hot DRAM page demoted: {pairs:?}");
         }
+    }
+
+    #[test]
+    fn epoch_pair_buffer_reaches_steady_state() {
+        // Same zero-steady-state-growth contract as HotnessPolicy: the
+        // recycled pair buffer caps at k and never grows after warmup.
+        let mut t = RedirectionTable::new(64, 32, 32, 4096);
+        t.identity_map();
+        let mut p = WearAwarePolicy::new(64);
+        let v = PolicyView {
+            table: &t,
+            migrating: &|_| false,
+            max_migrations: 4,
+        };
+        let mut warm = 0usize;
+        for epoch in 0..20 {
+            for page in 32..64u64 {
+                for _ in 0..50 {
+                    p.record_access(page, false);
+                }
+            }
+            assert_eq!(p.epoch(&v).len(), 4, "epoch {epoch}");
+            if epoch == 0 {
+                warm = p.pairs_capacity();
+            } else {
+                assert_eq!(p.pairs_capacity(), warm, "epoch {epoch}: buffer grew");
+            }
+        }
+        assert!(warm <= 4, "capacity bounded by k: {warm}");
     }
 
     #[test]

@@ -58,6 +58,14 @@ fn config_from(args: &Args) -> SystemConfig {
     if let Some(e) = args.get("epoch") {
         cfg.hmmu.epoch_requests = e.parse().unwrap_or(cfg.hmmu.epoch_requests);
     }
+    // Link-model axes: host-managed migration DMA (charges page moves at
+    // the PCIe link) and MWr write-combining on the block crossing.
+    if args.flag("host-managed-dma") {
+        cfg.hmmu.host_managed_dma = true;
+    }
+    if args.flag("coalesce-writes") {
+        cfg.pcie.coalesce_writes = true;
+    }
     cfg
 }
 
@@ -459,12 +467,12 @@ USAGE: hymem <command> [--options]
 COMMANDS:
   run             --workload <name> [--policy static|first-touch|hotness|hints|wear-aware]
                   [--ops N] [--scale N] [--tech 3dxpoint|stt-ram|...] [--flush]
-                  [--native-engine]
+                  [--native-engine] [--host-managed-dma] [--coalesce-writes]
   sweep           parallel scenario sweep: 12 workloads [x --policies a,b,..]
                   [x --nvm-stalls rd:wr,rd:wr,..] [x --cores 1,4,..] on
                   --threads N OS threads (default: all cores; bit-identical
                   to serial), writes --json <path> (default BENCH_sweep.json)
-                  [--ops N]
+                  [--ops N] [--host-managed-dma] [--coalesce-writes]
   fig7            full comparison vs gem5-like and champsim-like
                   [--ops N] [--baseline-instructions N]
   fig8            memory request bytes per workload [--ops N]

@@ -6,6 +6,22 @@
 //! Modeled at TLP granularity: serialization time from payload size and
 //! the 128b/130b-encoded lane rate, a fixed propagation/PHY latency each
 //! way, and credit-based flow control bounding outstanding TLPs.
+//!
+//! Two ways to cross the link:
+//!
+//! - the **per-op** path ([`PcieLink::send_to_device`] /
+//!   [`PcieLink::send_to_host`] / [`PcieLink::hold_credit_until`]), one
+//!   call per TLP — the reference semantics;
+//! - the **block** path ([`PcieLink::send_block_to_device`] /
+//!   [`PcieLink::send_block_to_host`]), which takes a recorded traffic
+//!   column ([`TlpColumn`]) and processes it in one pass: the credit gate
+//!   drains against a sorted release horizon (a min-heap, shared with the
+//!   per-op path), serialization times are memoized per payload size, and
+//!   — when [`crate::config::PcieConfig::coalesce_writes`] is on —
+//!   adjacent same-page posted MWr TLPs are write-combined up to
+//!   `max_payload_bytes`. With coalescing off the block path is
+//!   **bit-identical** to the per-op path (`tests/pcie_props.rs` pins it);
+//!   with coalescing on only wire time and TLP counts change.
 
 pub mod tlp;
 
@@ -13,6 +29,14 @@ pub use tlp::{Tlp, TlpKind};
 
 use crate::config::PcieConfig;
 use crate::sim::Time;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// PCIe requests must not cross a 4 KiB boundary (PCIe Base Spec §2.2.7);
+/// write-combining therefore never merges MWr TLPs from different
+/// 4 KiB-aligned windows. This is the spec constant, independent of the
+/// HMMU's managed page size.
+const PCIE_PAGE_SHIFT: u64 = 12;
 
 /// One direction of the link (host→device or device→host).
 #[derive(Clone, Debug)]
@@ -23,16 +47,94 @@ pub struct LinkDirection {
     tlps_sent: u64,
 }
 
+/// Recorded host→device traffic for one block crossing, in issue order
+/// (struct-of-arrays, recycled across crossings — steady state allocates
+/// nothing). MWr entries carry their wire payload; MRd entries carry the
+/// payload of the completion that will come back.
+#[derive(Clone, Debug, Default)]
+pub struct TlpColumn {
+    kinds: Vec<TlpKind>,
+    addrs: Vec<u64>,
+    payloads: Vec<u32>,
+    issue_at: Vec<Time>,
+}
+
+impl TlpColumn {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop all entries, keeping the allocations for the next crossing.
+    pub fn clear(&mut self) {
+        self.kinds.clear();
+        self.addrs.clear();
+        self.payloads.clear();
+        self.issue_at.clear();
+    }
+
+    /// Append one request. `payload` is the data the transaction moves:
+    /// outbound for MWr, inbound (completion) for MRd.
+    ///
+    /// Panics on CplD in release builds too: a completion silently
+    /// crossing host→device would be modeled as a posted write (and even
+    /// write-combined), corrupting wire accounting — same
+    /// hard-error-over-silent-corruption stance as `TraceBlock::push`.
+    #[inline]
+    pub fn push(&mut self, kind: TlpKind, addr: u64, payload: u32, issue_at: Time) {
+        assert_ne!(kind, TlpKind::CplD, "host→device column carries requests");
+        self.kinds.push(kind);
+        self.addrs.push(addr);
+        self.payloads.push(payload);
+        self.issue_at.push(issue_at);
+    }
+
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    #[inline]
+    pub fn kind(&self, i: usize) -> TlpKind {
+        self.kinds[i]
+    }
+
+    #[inline]
+    pub fn addr(&self, i: usize) -> u64 {
+        self.addrs[i]
+    }
+
+    #[inline]
+    pub fn payload(&self, i: usize) -> u32 {
+        self.payloads[i]
+    }
+
+    #[inline]
+    pub fn issue_time(&self, i: usize) -> Time {
+        self.issue_at[i]
+    }
+}
+
 /// Full-duplex PCIe link with credit flow control.
 #[derive(Clone, Debug)]
 pub struct PcieLink {
     cfg: PcieConfig,
     pub tx: LinkDirection, // host -> HMMU
     pub rx: LinkDirection, // HMMU -> host
-    /// Completion times of TLPs holding a TX credit.
-    credit_release: Vec<Time>,
+    /// Completion times of TLPs holding a TX credit — the sorted release
+    /// horizon. §Perf: a min-heap replaces the old unsorted `Vec` whose
+    /// `retain` scans cost O(credits) per TLP under pressure; draining
+    /// released credits is now O(log credits) per release, and the batch
+    /// path pops the horizon once per gate instead of rescanning.
+    credit_release: BinaryHeap<Reverse<Time>>,
     pub credit_stalls: u64,
     pub credit_wait_ns: u64,
+    /// MWr TLPs merged away by write-combining (block path, coalescing
+    /// on): `tlps_sent` counts wire TLPs, this counts the requests that
+    /// rode along in a combined one.
+    pub coalesced_writes: u64,
 }
 
 impl PcieLink {
@@ -49,9 +151,10 @@ impl PcieLink {
                 bytes_sent: 0,
                 tlps_sent: 0,
             },
-            credit_release: Vec::new(),
+            credit_release: BinaryHeap::new(),
             credit_stalls: 0,
             credit_wait_ns: 0,
+            coalesced_writes: 0,
         }
     }
 
@@ -67,25 +170,43 @@ impl PcieLink {
         (total / self.cfg.bandwidth_bytes_per_ns()).ceil().max(1.0) as u64
     }
 
-    /// Transmit host→HMMU at `now`; returns arrival time at the HMMU RX.
-    /// Acquires a flow-control credit; the credit is released when the
-    /// transaction completes (`release` from [`Self::complete`]).
-    pub fn send_to_device(&mut self, payload_bytes: u32, now: Time) -> Time {
-        // Credit gate. §Perf: drain released credits lazily — only when
-        // the pool looks exhausted (amortized O(1) per TLP).
-        let mut start = now;
+    /// Credit gate: the time a TLP wanting to start at `now` may actually
+    /// start, draining the release horizon and counting stalls. Released
+    /// credits are drained lazily — only when the pool looks exhausted —
+    /// exactly as the pre-heap `retain` gate did (same multiset, same
+    /// decisions), so per-op and block crossings share one semantics.
+    #[inline]
+    fn credit_gate(&mut self, now: Time) -> Time {
         if self.credit_release.len() >= self.cfg.credits as usize {
-            self.credit_release.retain(|&t| t > now);
+            while let Some(&Reverse(t)) = self.credit_release.peek() {
+                if t <= now {
+                    self.credit_release.pop();
+                } else {
+                    break;
+                }
+            }
         }
         if self.credit_release.len() >= self.cfg.credits as usize {
-            let earliest = self.credit_release.iter().copied().min().unwrap();
+            let Reverse(earliest) = *self.credit_release.peek().unwrap();
             self.credit_stalls += 1;
             self.credit_wait_ns += earliest.saturating_sub(now);
-            start = earliest;
-            let e = earliest;
-            self.credit_release.retain(|&t| t > e);
+            while let Some(&Reverse(t)) = self.credit_release.peek() {
+                if t <= earliest {
+                    self.credit_release.pop();
+                } else {
+                    break;
+                }
+            }
+            earliest
+        } else {
+            now
         }
-        let ser = self.serialize_ns(payload_bytes);
+    }
+
+    /// Put a pre-serialized TLP on the TX wire at `start`; returns its
+    /// arrival at the device.
+    #[inline]
+    fn tx_push(&mut self, ser: u64, payload_bytes: u32, start: Time) -> Time {
         let wire_start = start.max(self.tx.wire_free);
         self.tx.wire_free = wire_start + ser;
         self.tx.bytes_sent += (self.cfg.tlp_header_bytes + payload_bytes) as u64;
@@ -93,21 +214,178 @@ impl PcieLink {
         wire_start + ser + self.cfg.propagation_ns
     }
 
+    /// Put a pre-serialized TLP on the RX wire at `now`; returns its
+    /// arrival at the host.
+    #[inline]
+    fn rx_push(&mut self, ser: u64, payload_bytes: u32, now: Time) -> Time {
+        let wire_start = now.max(self.rx.wire_free);
+        self.rx.wire_free = wire_start + ser;
+        self.rx.bytes_sent += (self.cfg.tlp_header_bytes + payload_bytes) as u64;
+        self.rx.tlps_sent += 1;
+        wire_start + ser + self.cfg.propagation_ns
+    }
+
+    /// Transmit host→HMMU at `now`; returns arrival time at the HMMU RX.
+    /// Acquires a flow-control credit; the credit is released when the
+    /// transaction completes (`release` from [`Self::hold_credit_until`]).
+    pub fn send_to_device(&mut self, payload_bytes: u32, now: Time) -> Time {
+        let start = self.credit_gate(now);
+        let ser = self.serialize_ns(payload_bytes);
+        self.tx_push(ser, payload_bytes, start)
+    }
+
     /// Register the completion time of a transaction so its TX credit is
     /// released then.
     pub fn hold_credit_until(&mut self, release_at: Time) {
-        self.credit_release.push(release_at);
+        self.credit_release.push(Reverse(release_at));
     }
 
     /// Transmit HMMU→host (completion TLP) at `now`; returns arrival time
     /// at the host.
     pub fn send_to_host(&mut self, payload_bytes: u32, now: Time) -> Time {
         let ser = self.serialize_ns(payload_bytes);
-        let wire_start = now.max(self.rx.wire_free);
-        self.rx.wire_free = wire_start + ser;
-        self.rx.bytes_sent += (self.cfg.tlp_header_bytes + payload_bytes) as u64;
-        self.rx.tlps_sent += 1;
-        wire_start + ser + self.cfg.propagation_ns
+        self.rx_push(ser, payload_bytes, now)
+    }
+
+    /// Cross a whole recorded traffic column host→device in one pass —
+    /// the block-batched link crossing (§Perf: one call per column,
+    /// serialization memoized per payload size, the credit horizon
+    /// drained once per gate).
+    ///
+    /// For each entry, in column order: the credit gate runs at its issue
+    /// time, the request TLP is serialized onto the TX wire, and
+    /// `service(link, i, arrive)` performs the device-side work (the
+    /// HMMU access), returning its completion. MWr entries hold their
+    /// credit until that commit; MRd entries additionally serialize the
+    /// completion-with-data back over RX and hold the credit until it
+    /// arrives. Per-entry completions (MWr: device commit; MRd: data
+    /// arrival at the host) are left in `completions`.
+    ///
+    /// `service` receives the link back as its first argument so
+    /// device-side work may itself cross the link (host-managed DMA at an
+    /// epoch boundary) at the correct sequence point — which is also why
+    /// wire state is *not* cached across service calls: both paths must
+    /// observe every interleaved send.
+    ///
+    /// With `coalesce_writes` off this is bit-identical to issuing the
+    /// same column through the per-op calls. With it on, adjacent
+    /// **address-contiguous** MWr entries issued at the same time inside
+    /// one 4 KiB-aligned window (the PCIe request-boundary rule) merge
+    /// into a single wire TLP of up to `max_payload_bytes` payload
+    /// (one header, one credit, one serialization); each constituent
+    /// write is still serviced individually at the combined TLP's arrival
+    /// time, so device-side state (redirection, residency, per-device
+    /// counters) is untouched — only wire time and TLP counts change.
+    pub fn send_block_to_device<F>(
+        &mut self,
+        col: &TlpColumn,
+        service: &mut F,
+        completions: &mut Vec<Time>,
+    ) where
+        F: FnMut(&mut PcieLink, usize, Time) -> Time,
+    {
+        completions.clear();
+        let n = col.len();
+        let coalesce = self.cfg.coalesce_writes;
+        let max_payload = self.cfg.max_payload_bytes;
+        // Serialization memo: a column carries very few distinct payload
+        // sizes (header-only reads + line-sized writes), so the f64
+        // division in `serialize_ns` is paid per size, not per TLP.
+        let ser_hdr = self.serialize_ns(0);
+        let mut memo_payload = 0u32;
+        let mut memo_ser = ser_hdr;
+        let mut i = 0usize;
+        while i < n {
+            let at = col.issue_at[i];
+            let payload = col.payloads[i];
+            match col.kinds[i] {
+                TlpKind::MRd => {
+                    // Request out is header-only; the data rides the
+                    // completion back.
+                    let start = self.credit_gate(at);
+                    let arrive = self.tx_push(ser_hdr, 0, start);
+                    let release = service(self, i, arrive);
+                    if payload != memo_payload {
+                        memo_payload = payload;
+                        memo_ser = self.serialize_ns(payload);
+                    }
+                    let back = self.rx_push(memo_ser, payload, release);
+                    self.hold_credit_until(back);
+                    completions.push(back);
+                    i += 1;
+                }
+                TlpKind::CplD => unreachable!("TlpColumn::push rejects completions"),
+                TlpKind::MWr => {
+                    // Write-combining: extend the run while the next entry
+                    // is another posted write at the same issue time whose
+                    // data is **address-contiguous** with the run so far
+                    // (an MWr TLP carries one address and one contiguous
+                    // payload), the run stays inside one PCIe 4 KiB page
+                    // (requests must not cross that boundary), and the
+                    // merged payload still fits one TLP.
+                    let mut end = i + 1;
+                    let mut combined = payload;
+                    if coalesce {
+                        while end < n
+                            && col.kinds[end] == TlpKind::MWr
+                            && col.issue_at[end] == at
+                            && col.addrs[end]
+                                == col.addrs[end - 1] + col.payloads[end - 1] as u64
+                            && col.addrs[end] >> PCIE_PAGE_SHIFT
+                                == col.addrs[i] >> PCIE_PAGE_SHIFT
+                            && combined.saturating_add(col.payloads[end]) <= max_payload
+                        {
+                            combined += col.payloads[end];
+                            end += 1;
+                        }
+                    }
+                    let start = self.credit_gate(at);
+                    if combined != memo_payload {
+                        memo_payload = combined;
+                        memo_ser = self.serialize_ns(combined);
+                    }
+                    let arrive = self.tx_push(memo_ser, combined, start);
+                    self.coalesced_writes += (end - i - 1) as u64;
+                    // Every constituent write is serviced individually at
+                    // the (shared) arrival time; the single credit is held
+                    // until the last of them commits.
+                    let mut release = 0;
+                    for j in i..end {
+                        let commit = service(self, j, arrive);
+                        release = release.max(commit);
+                        completions.push(commit);
+                    }
+                    self.hold_credit_until(release);
+                    i = end;
+                }
+            }
+        }
+    }
+
+    /// Cross a column of completion TLPs device→host in one pass with
+    /// serialization memoized per payload size; arrival times land in
+    /// `arrivals`. Used by the host-managed DMA path to ship a migrated
+    /// block's completion chunks back-to-back on the RX wire. Each entry
+    /// goes through the same [`Self::rx_push`] bookkeeping as
+    /// [`Self::send_to_host`] (single source of truth), so the column is
+    /// bit-identical to per-entry sends.
+    pub fn send_block_to_host(
+        &mut self,
+        payloads: &[u32],
+        issue_at: &[Time],
+        arrivals: &mut Vec<Time>,
+    ) {
+        assert_eq!(payloads.len(), issue_at.len());
+        arrivals.clear();
+        let mut memo_payload = u32::MAX;
+        let mut memo_ser = 0u64;
+        for (&p, &t) in payloads.iter().zip(issue_at) {
+            if p != memo_payload {
+                memo_payload = p;
+                memo_ser = self.serialize_ns(p);
+            }
+            arrivals.push(self.rx_push(memo_ser, p, t));
+        }
     }
 
     pub fn tx_bytes(&self) -> u64 {
@@ -118,8 +396,22 @@ impl PcieLink {
         self.rx.bytes_sent
     }
 
+    pub fn tx_tlps(&self) -> u64 {
+        self.tx.tlps_sent
+    }
+
+    pub fn rx_tlps(&self) -> u64 {
+        self.rx.tlps_sent
+    }
+
     pub fn tlps(&self) -> u64 {
         self.tx.tlps_sent + self.rx.tlps_sent
+    }
+
+    /// TX credits currently held by outstanding transactions (an upper
+    /// bound: released credits are reclaimed lazily, at the gate).
+    pub fn outstanding_credits(&self) -> usize {
+        self.credit_release.len()
     }
 
     /// Unloaded round-trip for a read of `bytes` (serialize request +
@@ -171,6 +463,7 @@ mod tests {
             let arr = l.send_to_device(0, 0);
             l.hold_credit_until(arr + 10_000); // transactions outstanding for a long time
         }
+        assert_eq!(l.outstanding_credits(), credits as usize);
         let before = l.credit_stalls;
         l.send_to_device(0, 0);
         assert_eq!(l.credit_stalls, before + 1);
@@ -202,5 +495,141 @@ mod tests {
         assert_eq!(l.tx_bytes(), 16 + 64);
         assert_eq!(l.rx_bytes(), 16);
         assert_eq!(l.tlps(), 2);
+        assert_eq!(l.tx_tlps(), 1);
+        assert_eq!(l.rx_tlps(), 1);
+    }
+
+    #[test]
+    fn block_crossing_matches_per_op_reads_and_writes() {
+        // A hand-sized column through both paths; the full randomized
+        // battery lives in tests/pcie_props.rs.
+        fn latency(i: usize) -> Time {
+            100 + 10 * i as Time
+        }
+
+        let mut per_op = link();
+        let mut ref_completions = Vec::new();
+        {
+            // write @ t=0, read @ t=50, write @ t=50
+            let a = per_op.send_to_device(64, 0);
+            per_op.hold_credit_until(a + latency(0));
+            ref_completions.push(a + latency(0));
+            let a = per_op.send_to_device(0, 50);
+            let b = per_op.send_to_host(64, a + latency(1));
+            per_op.hold_credit_until(b);
+            ref_completions.push(b);
+            let a = per_op.send_to_device(64, 50);
+            per_op.hold_credit_until(a + latency(2));
+            ref_completions.push(a + latency(2));
+        }
+
+        let mut blocked = link();
+        let mut col = TlpColumn::new();
+        col.push(TlpKind::MWr, 0x1000, 64, 0);
+        col.push(TlpKind::MRd, 0x2000, 64, 50);
+        col.push(TlpKind::MWr, 0x3040, 64, 50);
+        let mut completions = Vec::new();
+        blocked.send_block_to_device(
+            &col,
+            &mut |_l: &mut PcieLink, i, arrive| arrive + latency(i),
+            &mut completions,
+        );
+
+        assert_eq!(completions, ref_completions);
+        assert_eq!(blocked.tx_bytes(), per_op.tx_bytes());
+        assert_eq!(blocked.rx_bytes(), per_op.rx_bytes());
+        assert_eq!(blocked.tlps(), per_op.tlps());
+        assert_eq!(blocked.credit_stalls, per_op.credit_stalls);
+    }
+
+    #[test]
+    fn write_combining_merges_same_page_runs() {
+        let mut cfg = SystemConfig::paper().pcie;
+        cfg.coalesce_writes = true;
+        let mut l = PcieLink::new(cfg);
+        let mut col = TlpColumn::new();
+        // Three 64B writes in one 4K page at the same time: one TLP.
+        col.push(TlpKind::MWr, 0x1000, 64, 0);
+        col.push(TlpKind::MWr, 0x1040, 64, 0);
+        col.push(TlpKind::MWr, 0x1080, 64, 0);
+        // Different page: must not merge into the run.
+        col.push(TlpKind::MWr, 0x2000, 64, 0);
+        let mut serviced = 0u32;
+        let mut completions = Vec::new();
+        l.send_block_to_device(
+            &col,
+            &mut |_l, _i, arrive| {
+                serviced += 1;
+                arrive + 10
+            },
+            &mut completions,
+        );
+        assert_eq!(serviced, 4, "every constituent write is serviced");
+        assert_eq!(l.tx_tlps(), 2, "3 same-page writes combine into 1 TLP");
+        assert_eq!(l.coalesced_writes, 2);
+        // One header saved per merged TLP.
+        assert_eq!(l.tx_bytes(), 2 * 16 + 4 * 64);
+        assert_eq!(completions.len(), 4);
+    }
+
+    #[test]
+    fn write_combining_requires_contiguity() {
+        // Same 4 KiB page and same issue time is not enough: an MWr TLP
+        // carries one address and one contiguous payload, so an address
+        // gap breaks the run even inside one page.
+        let mut cfg = SystemConfig::paper().pcie;
+        cfg.coalesce_writes = true;
+        let mut l = PcieLink::new(cfg);
+        let mut col = TlpColumn::new();
+        col.push(TlpKind::MWr, 0x1000, 64, 0);
+        col.push(TlpKind::MWr, 0x1fc0, 64, 0); // same page, 4032B away
+        let mut completions = Vec::new();
+        l.send_block_to_device(&col, &mut |_l, _i, a| a + 10, &mut completions);
+        assert_eq!(l.tx_tlps(), 2, "non-contiguous writes must not merge");
+        assert_eq!(l.coalesced_writes, 0);
+    }
+
+    #[test]
+    fn write_combining_respects_max_payload() {
+        let mut cfg = SystemConfig::paper().pcie;
+        cfg.coalesce_writes = true;
+        cfg.max_payload_bytes = 128;
+        let mut l = PcieLink::new(cfg);
+        let mut col = TlpColumn::new();
+        for k in 0..4u64 {
+            col.push(TlpKind::MWr, 0x1000 + k * 64, 64, 0);
+        }
+        let mut completions = Vec::new();
+        l.send_block_to_device(&col, &mut |_l, _i, a| a + 10, &mut completions);
+        // 4 × 64B at max_payload 128 → two 128B TLPs.
+        assert_eq!(l.tx_tlps(), 2);
+        assert_eq!(l.coalesced_writes, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "host→device column carries requests")]
+    fn column_rejects_completions_in_release_too() {
+        // Hard assert, not debug_assert: a CplD in the host→device column
+        // would silently be modeled as a posted MWr.
+        let mut col = TlpColumn::new();
+        col.push(TlpKind::CplD, 0x1000, 64, 0);
+    }
+
+    #[test]
+    fn block_to_host_matches_per_entry() {
+        let mut a = link();
+        let mut b = link();
+        let payloads = [64u32, 64, 0, 256, 64];
+        let times = [10u64, 12, 400, 401, 900];
+        let mut got = Vec::new();
+        b.send_block_to_host(&payloads, &times, &mut got);
+        let want: Vec<Time> = payloads
+            .iter()
+            .zip(&times)
+            .map(|(&p, &t)| a.send_to_host(p, t))
+            .collect();
+        assert_eq!(got, want);
+        assert_eq!(a.rx_bytes(), b.rx_bytes());
+        assert_eq!(a.rx_tlps(), b.rx_tlps());
     }
 }

@@ -335,6 +335,32 @@ mod tests {
     }
 
     #[test]
+    fn host_managed_dma_works_under_multicore_sharing() {
+        // The shared HmmuBackend threads its link into every HMMU access,
+        // so host-managed migration charging composes with multicore
+        // interleaving: DMA link bytes appear (2× migration_bytes — see
+        // the platform test) and the run stays reproducible.
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = crate::config::PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = 2_000;
+        cfg.hmmu.host_managed_dma = true;
+        let wls = vec![
+            spec::by_name("505.mcf").unwrap(),
+            spec::by_name("520.omnetpp").unwrap(),
+        ];
+        let a = run_multicore(cfg.clone(), &wls, opts(40_000), None).unwrap();
+        assert!(a.counters.migrations > 0, "scenario must migrate");
+        assert_eq!(
+            a.counters.pcie_dma_bytes,
+            2 * a.counters.migration_bytes,
+            "host-managed DMA must charge the shared link"
+        );
+        let b = run_multicore(cfg, &wls, opts(40_000), None).unwrap();
+        assert_eq!(format!("{:?}", a.counters), format!("{:?}", b.counters));
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+    }
+
+    #[test]
     fn too_many_cores_rejected() {
         let cfg = SystemConfig::default_scaled(64);
         let wl = spec::by_name("541.leela").unwrap();

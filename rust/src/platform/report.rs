@@ -92,7 +92,7 @@ impl RunReport {
              HMMU traffic    R {} / W {}  (DRAM {}r+{}w, NVM {}r+{}w)\n\
              placement       {:.1}% DRAM-resident, {} migrations ({} moved)\n\
              consistency     reorder wait {}, fifo stalls {}, dma conflicts {}\n\
-             PCIe            TX {} RX {} creditStalls {}\n\
+             PCIe            TX {} RX {} creditStalls {} (dma {} / {} stalls)\n\
              NVM wear        max {} writes/page\n\
              energy est.     {:.2} mJ dynamic; {}\n\
              latency         mean {:.0}ns p50 {}ns p99 {}ns max {}ns\n\
@@ -124,6 +124,8 @@ impl RunReport {
             fmt_bytes(self.pcie_tx_bytes),
             fmt_bytes(self.pcie_rx_bytes),
             self.pcie_credit_stalls,
+            fmt_bytes(self.counters.pcie_dma_bytes),
+            self.counters.dma_link_stalls,
             self.nvm_max_wear,
             self.counters.energy_estimate_mj(),
             self.energy.summary(),

@@ -41,6 +41,11 @@ pub struct ScenarioResult {
     pub fifo_full_stalls: u64,
     pub reorder_wait_ns: u64,
     pub dma_conflict_stalls: u64,
+    /// Migration payload bytes that crossed the PCIe link (host-managed
+    /// DMA scenarios; 0 under the paper's device-side DMA).
+    pub pcie_dma_bytes: u64,
+    /// PCIe credit stalls attributed to host-managed DMA transfers.
+    pub dma_link_stalls: u64,
     pub nvm_max_wear: u64,
     pub energy_mj: f64,
     pub latency_mean_ns: f64,
@@ -78,6 +83,8 @@ impl ScenarioResult {
             fifo_full_stalls: r.counters.fifo_full_stalls,
             reorder_wait_ns: r.counters.reorder_wait_ns,
             dma_conflict_stalls: r.counters.dma_conflict_stalls,
+            pcie_dma_bytes: r.counters.pcie_dma_bytes,
+            dma_link_stalls: r.counters.dma_link_stalls,
             nvm_max_wear: r.nvm_max_wear,
             energy_mj: r.counters.energy_estimate_mj(),
             latency_mean_ns: r.counters.latency.mean(),
@@ -123,6 +130,8 @@ impl ScenarioResult {
             fifo_full_stalls: r.counters.fifo_full_stalls,
             reorder_wait_ns: r.counters.reorder_wait_ns,
             dma_conflict_stalls: r.counters.dma_conflict_stalls,
+            pcie_dma_bytes: r.counters.pcie_dma_bytes,
+            dma_link_stalls: r.counters.dma_link_stalls,
             nvm_max_wear: r.nvm_max_wear,
             energy_mj: r.counters.energy_estimate_mj(),
             latency_mean_ns: r.counters.latency.mean(),
@@ -157,7 +166,7 @@ impl ScenarioResult {
             s,
             "{}|{}|{}|seed={:#x}|ops={}|cores={}|plat={}|native={}|slow={:?}|l2={:?}|serv={:?}|resid={:?}\
              |mig={}|epochs={}|dr={}|dw={}|nr={}|nw={}|hrb={}|hwb={}|fifo={}|reorder={}|dma={}\
-             |wear={}|mj={:?}|lat=({:?},{},{},{})",
+             |dmaPcieB={}|dmaLinkStalls={}|wear={}|mj={:?}|lat=({:?},{},{},{})",
             self.name,
             self.workload,
             self.policy,
@@ -181,6 +190,8 @@ impl ScenarioResult {
             self.fifo_full_stalls,
             self.reorder_wait_ns,
             self.dma_conflict_stalls,
+            self.pcie_dma_bytes,
+            self.dma_link_stalls,
             self.nvm_max_wear,
             self.energy_mj,
             self.latency_mean_ns,
@@ -216,6 +227,8 @@ impl ScenarioResult {
             .set("fifo_full_stalls", self.fifo_full_stalls)
             .set("reorder_wait_ns", self.reorder_wait_ns)
             .set("dma_conflict_stalls", self.dma_conflict_stalls)
+            .set("pcie_dma_bytes", self.pcie_dma_bytes)
+            .set("dma_link_stalls", self.dma_link_stalls)
             .set("nvm_max_wear", self.nvm_max_wear)
             .set("energy_mj", self.energy_mj)
             .set("latency_mean_ns", self.latency_mean_ns)

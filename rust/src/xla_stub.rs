@@ -1,0 +1,108 @@
+//! API-compatible stand-in for the vendored `xla` crate, compiled only
+//! under the `xla` feature when the real crate is not vendored.
+//!
+//! The offline image does not carry the `xla` crate closure, which used
+//! to make `--features xla` an unconditional build error — so the feature
+//! path itself (the `runtime::pjrt` module, its call sites, the
+//! integration tests' skip logic) was never compiled or linted. This
+//! module restores that: it mirrors exactly the surface `runtime::pjrt`
+//! uses, every loader fails cleanly at runtime (so callers degrade to the
+//! bit-compatible native engine, and `tests/xla_integration.rs` skips),
+//! and CI builds + runs the full suite with the feature on.
+//!
+//! When the vendored crate lands (ROADMAP item), delete this module and
+//! the `use crate::xla_stub as xla;` alias in `runtime::pjrt`; nothing
+//! else changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the vendored crate's (only `Display` is used).
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "stub xla runtime: the vendored `xla` crate is not present in this \
+         build; vendor it (ROADMAP: XLA path) and run `make artifacts`"
+            .to_string(),
+    )
+}
+
+/// PJRT client stub; [`PjRtClient::cpu`] always fails, so no executable
+/// is ever constructed through this module.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module stub.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// XLA computation stub.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Loaded-executable stub (unreachable: the client cannot be built).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Device buffer stub.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Host literal stub.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_v: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable())
+    }
+}

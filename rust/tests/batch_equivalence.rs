@@ -128,6 +128,53 @@ fn per_op_reference_matches_concurrent_runner_too() {
 }
 
 #[test]
+fn host_managed_dma_block_path_bit_identical_to_per_op() {
+    // The new link-fidelity scenario: migration DMA crosses PCIe
+    // (`host_managed_dma`). The per-op reference and the block-batched
+    // link crossing must interleave the DMA's link charges at the same
+    // sequence points — every counter, including the new
+    // pcie_dma_bytes / dma_link_stalls, stays bit-identical.
+    let mut cfg = cfg_for(PolicyKind::Hotness);
+    cfg.hmmu.host_managed_dma = true;
+    let wl = spec::by_name("505.mcf").unwrap();
+    let (ref_time, ref_counters, ref_residency) = run_per_op(&cfg, &wl, OPS, false);
+    let r = Platform::new(cfg)
+        .run_opts_serial(
+            &wl,
+            RunOpts {
+                ops: OPS,
+                flush_at_end: false,
+            },
+        )
+        .unwrap();
+    assert_eq!(r.platform_time_ns, ref_time, "host-managed: time diverged");
+    assert_eq!(
+        format!("{:?}", r.counters),
+        ref_counters,
+        "host-managed: counters diverged"
+    );
+    assert!((r.dram_residency - ref_residency).abs() < f64::EPSILON);
+    assert!(r.counters.migrations > 0, "scenario must migrate");
+    assert!(
+        r.counters.pcie_dma_bytes > 0,
+        "host-managed migration traffic must cross the link"
+    );
+}
+
+#[test]
+fn block_link_crossing_is_bit_identical_with_coalescing_off() {
+    // Belt-and-braces at the platform level for the new PCIe block
+    // crossing: the default config ships coalescing off, and the whole
+    // per-op-vs-block battery above rides the block link path — this
+    // pins that the default really is the bit-identical mode.
+    let cfg = cfg_for(PolicyKind::Hotness);
+    assert!(
+        !cfg.pcie.coalesce_writes,
+        "coalescing must default off (bit-identity contract)"
+    );
+}
+
+#[test]
 fn multicore_block_path_is_reproducible() {
     // The multicore scheduler consumes per-core blocks through a cursor;
     // the interleaving (and so every counter) must be a pure function of

@@ -1,0 +1,165 @@
+//! Golden counter snapshots: two small fixed scenarios rendered — full
+//! `HmmuCounters` Debug plus the deterministic `RunReport` scalars —
+//! and compared verbatim against checked-in golden files, so any future
+//! fidelity drift (PR 3's write-back stat inflation is the motivating
+//! example) fails loudly with a readable first-divergence diff instead
+//! of silently shifting a figure.
+//!
+//! Blessing protocol: when a golden file is absent the test **seeds** it
+//! (writes the current rendering into `tests/golden/`) and passes with a
+//! note — commit the seeded file to pin the numbers. Set
+//! `HYMEM_GOLDEN_STRICT=1` to turn absence into failure; CI runs the
+//! suite a second time under that flag, so within one CI run the seeded
+//! snapshot must at minimum reproduce itself (catching nondeterminism),
+//! and once the files are committed any drift fails the first run.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use hymem::config::{PolicyKind, SystemConfig};
+use hymem::platform::{Platform, RunOpts, RunReport};
+use hymem::workload::spec;
+
+fn render(r: &RunReport) -> String {
+    let mut s = String::new();
+    // Only deterministic, simulated-time fields: host wall clocks
+    // (host_wall_ns / native_wall_ns) are excluded, and HmmuCounters'
+    // Debug impl itself excludes policy_wall_ns.
+    let _ = writeln!(s, "workload: {}", r.workload);
+    let _ = writeln!(s, "policy: {}", r.policy);
+    let _ = writeln!(s, "scale: {}", r.scale);
+    let _ = writeln!(s, "instructions: {}", r.instructions);
+    let _ = writeln!(s, "mem_ops: {}", r.mem_ops);
+    let _ = writeln!(s, "memory_accesses: {}", r.memory_accesses);
+    let _ = writeln!(s, "l1d_miss_rate: {:?}", r.l1d_miss_rate);
+    let _ = writeln!(s, "l2_miss_rate: {:?}", r.l2_miss_rate);
+    let _ = writeln!(s, "native_time_ns: {}", r.native_time_ns);
+    let _ = writeln!(s, "platform_time_ns: {}", r.platform_time_ns);
+    let _ = writeln!(s, "mem_stall_ns: {}", r.mem_stall_ns);
+    let _ = writeln!(s, "nvm_max_wear: {}", r.nvm_max_wear);
+    let _ = writeln!(s, "dram_residency: {:?}", r.dram_residency);
+    let _ = writeln!(s, "pcie_tx_bytes: {}", r.pcie_tx_bytes);
+    let _ = writeln!(s, "pcie_rx_bytes: {}", r.pcie_rx_bytes);
+    let _ = writeln!(s, "pcie_credit_stalls: {}", r.pcie_credit_stalls);
+    let _ = writeln!(s, "counters: {:#?}", r.counters);
+    s
+}
+
+fn check_golden(name: &str, rendered: &str) {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden");
+    let path = dir.join(format!("{name}.txt"));
+    match fs::read_to_string(&path) {
+        Ok(want) => {
+            if want == rendered {
+                return;
+            }
+            // Readable diff: first divergent line with context.
+            let (mut line_no, mut got_line, mut want_line) = (0usize, "", "<missing>");
+            for (i, pair) in rendered
+                .lines()
+                .map(Some)
+                .chain(std::iter::repeat(None))
+                .zip(want.lines().map(Some).chain(std::iter::repeat(None)))
+                .enumerate()
+            {
+                match pair {
+                    (None, None) => break,
+                    (g, w) if g != w => {
+                        line_no = i + 1;
+                        got_line = g.unwrap_or("<missing>");
+                        want_line = w.unwrap_or("<missing>");
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            panic!(
+                "golden counter snapshot {name:?} drifted at line {line_no}:\n  \
+                 golden: {want_line}\n  \
+                 got:    {got_line}\n\
+                 Full rendering:\n{rendered}\n\
+                 If the change is an intended fidelity shift, delete \
+                 {path:?} and re-run to re-seed (then commit it)."
+            );
+        }
+        Err(_) => {
+            // Strict only when explicitly =1 (so e.g. `=0` still seeds).
+            if std::env::var("HYMEM_GOLDEN_STRICT").is_ok_and(|v| v == "1") {
+                panic!(
+                    "golden file {path:?} missing under HYMEM_GOLDEN_STRICT=1 \
+                     (run the suite once without the flag to seed it, then \
+                     commit the file)"
+                );
+            }
+            fs::create_dir_all(&dir).expect("creating tests/golden");
+            fs::write(&path, rendered).expect("seeding golden file");
+            eprintln!(
+                "NOTE: seeded golden counter snapshot {path:?}; commit it so \
+                 future fidelity drift fails loudly"
+            );
+        }
+    }
+}
+
+/// Scenario A: hotness policy with migrations inside the run (the same
+/// shape `platform::tests::policies_execute_and_differ` pins as
+/// migrating).
+#[test]
+fn golden_hotness_omnetpp() {
+    let mut cfg = SystemConfig::default_scaled(64);
+    cfg.policy = PolicyKind::Hotness;
+    cfg.hmmu.epoch_requests = 2_000;
+    let wl = spec::by_name("520.omnetpp").unwrap();
+    let r = Platform::new(cfg)
+        .run_opts_serial(
+            &wl,
+            RunOpts {
+                ops: 60_000,
+                flush_at_end: false,
+            },
+        )
+        .unwrap();
+    assert!(r.counters.migrations > 0, "scenario must migrate");
+    check_golden("hotness_omnetpp", &render(&r));
+}
+
+/// Scenario B: first-touch policy, write-heavy workload, end-of-run
+/// flush (covers the write-back + flush counter surface).
+#[test]
+fn golden_first_touch_lbm_flush() {
+    let mut cfg = SystemConfig::default_scaled(64);
+    cfg.policy = PolicyKind::FirstTouch;
+    let wl = spec::by_name("519.lbm").unwrap();
+    let r = Platform::new(cfg)
+        .run_opts_serial(
+            &wl,
+            RunOpts {
+                ops: 20_000,
+                flush_at_end: true,
+            },
+        )
+        .unwrap();
+    assert!(r.counters.host_writes > 0, "scenario must write");
+    check_golden("first_touch_lbm_flush", &render(&r));
+}
+
+/// The snapshot rendering itself must be reproducible within a process —
+/// a second identical run renders byte-identically (this is what makes
+/// the golden comparison meaningful, and it catches wall-clock or
+/// iteration-order leaks into the counter surface immediately, without
+/// waiting for a committed golden file).
+#[test]
+fn golden_rendering_is_deterministic() {
+    let mut cfg = SystemConfig::default_scaled(64);
+    cfg.policy = PolicyKind::Hotness;
+    cfg.hmmu.epoch_requests = 2_000;
+    let wl = spec::by_name("505.mcf").unwrap();
+    let opts = RunOpts {
+        ops: 20_000,
+        flush_at_end: false,
+    };
+    let a = Platform::new(cfg.clone()).run_opts_serial(&wl, opts).unwrap();
+    let b = Platform::new(cfg).run_opts_serial(&wl, opts).unwrap();
+    assert_eq!(render(&a), render(&b), "rendering must be deterministic");
+}
