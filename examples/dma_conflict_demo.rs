@@ -29,7 +29,7 @@ fn main() {
             (Device::Dram, false) => 30,
             (Device::Dram, true) => 35,
             (Device::Nvm, false) => 80,
-            (Device::Nvm, true) => 260,
+            _ => 260,
         }
     });
     println!("swap(page 100 <-> page 3) started at t=0, completes at t={done}ns");

@@ -277,6 +277,168 @@ fn main() {
         });
     }
 
+    // SoA vs AoS tag layout (§Perf satellite): the multi-probe loop of
+    // `Cache::access_block` scans way-major contiguous tag columns; the
+    // AoS baseline below replicates the pre-SoA 24-byte line-struct
+    // layout with the identical loop structure, so the throughput delta
+    // isolates the layout. L2 geometry (16 ways) — the widest probe in
+    // the stack, where the flat tag slice matters most. Results are
+    // bit-identical by construction (same victim select, same order);
+    // the unit/equivalence tests pin it.
+    {
+        #[derive(Clone, Copy, Default)]
+        struct AosLine {
+            tag: u64,
+            valid: bool,
+            dirty: bool,
+            lru: u64,
+        }
+        struct AosCache {
+            sets: usize,
+            ways: usize,
+            line_shift: u32,
+            lines: Vec<AosLine>,
+            tick: u64,
+            hits: u64,
+            misses: u64,
+        }
+        impl AosCache {
+            fn access_block(&mut self, addrs: &[u64], flags: &[u8]) {
+                let mut tick = self.tick;
+                let mut hits = 0u64;
+                let mut misses = 0u64;
+                let set_mask = self.sets - 1;
+                let set_shift = self.sets.trailing_zeros();
+                'ops: for (&addr, &f) in addrs.iter().zip(flags) {
+                    tick += 1;
+                    let is_write = f & 1 != 0;
+                    let line = addr >> self.line_shift;
+                    let set = (line as usize) & set_mask;
+                    let tag = line >> set_shift;
+                    let base = set * self.ways;
+                    for l in &mut self.lines[base..base + self.ways] {
+                        if l.valid && l.tag == tag {
+                            l.lru = tick;
+                            l.dirty |= is_write;
+                            hits += 1;
+                            continue 'ops;
+                        }
+                    }
+                    misses += 1;
+                    let ways = &mut self.lines[base..base + self.ways];
+                    let victim = ways
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, l)| if l.valid { l.lru } else { 0 })
+                        .map(|(w, _)| w)
+                        .unwrap();
+                    ways[victim] = AosLine {
+                        tag,
+                        valid: true,
+                        dirty: is_write,
+                        lru: tick,
+                    };
+                }
+                self.tick = tick;
+                self.hits += hits;
+                self.misses += misses;
+            }
+        }
+
+        let cfg = SystemConfig::default_scaled(16);
+        let ops = TRACE_BLOCK_OPS as u64;
+        let wl = spec::by_name("505.mcf").unwrap();
+        let mut gen = TraceGenerator::new(wl, cfg.scale, 7);
+        let mut addrs = Vec::with_capacity(TRACE_BLOCK_OPS);
+        let mut flags = Vec::with_capacity(TRACE_BLOCK_OPS);
+        for i in 0..TRACE_BLOCK_OPS {
+            let op = gen.next().unwrap();
+            addrs.push(op.addr);
+            flags.push((i % 3 == 0) as u8);
+        }
+
+        let sets = cfg.l2.sets() as usize;
+        let mut aos = AosCache {
+            sets,
+            ways: cfg.l2.ways as usize,
+            line_shift: cfg.l2.line_bytes.trailing_zeros(),
+            lines: vec![AosLine::default(); sets * cfg.l2.ways as usize],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        };
+        suite.bench_items("cache_tags/aos (L2 probe, batch 4096)", ops, || {
+            aos.access_block(&addrs, &flags);
+            ops
+        });
+
+        let mut soa = hymem::cpu::cache::Cache::new(cfg.l2);
+        let mut misses = Vec::new();
+        suite.bench_items("cache_tags/soa (L2 probe, batch 4096)", ops, || {
+            misses.clear();
+            soa.access_block(&addrs, &flags, 1, &mut misses);
+            ops
+        });
+        // Keep the baseline observable (incl. the dirty bits) so the
+        // optimizer cannot discard its state updates.
+        assert!(aos.hits + aos.misses > 0);
+        assert!(aos.lines.iter().any(|l| l.dirty), "stores must dirty lines");
+    }
+
+    // End-of-run flush: per-op vs column-ized drain (§Perf satellite).
+    // Each iteration re-dirties 4096 L2 lines **directly** (cheap tag
+    // ops via `fill_writeback`, no backend traffic — so the timed work
+    // is dominated by the flush itself), then writes every dirty line
+    // back through the real PCIe+HMMU backend: the per-op row replays
+    // the pre-columnization flush loop, the block row is the production
+    // `CacheHierarchy::flush` (one `issue_block_op` column through the
+    // batched link crossing). CI gates block ≥ per-op
+    // (scripts/check_bench_gate.py).
+    {
+        let mut cfg = SystemConfig::default_scaled(16);
+        cfg.policy = PolicyKind::Static;
+        let ops = TRACE_BLOCK_OPS as u64;
+
+        fn dirty(hier: &mut CacheHierarchy) {
+            for i in 0..TRACE_BLOCK_OPS as u64 {
+                // 4096 distinct lines across 1024 pages; fits the 1 MiB
+                // L2 with no evictions.
+                let addr = (i * 4096) % (1 << 22) + (i % 4) * 64;
+                let _ = hier.l2.fill_writeback(addr);
+            }
+        }
+
+        let mut backend = HmmuBackend::new(cfg.clone(), None);
+        let mut hier = CacheHierarchy::new(&cfg);
+        let mut t = 0u64;
+        suite.bench_items("hierarchy_flush/per-op (batch 4096)", ops, || {
+            dirty(&mut hier);
+            t += 100_000;
+            // The pre-columnization per-op flush loop.
+            for wb in hier.l1d.flush() {
+                if let Some(wb2) = hier.l2.fill_writeback(wb) {
+                    hier.mem_writes += 1;
+                    backend.access(wb2, AccessKind::Write, 64, t);
+                }
+            }
+            for addr in hier.l2.flush() {
+                hier.mem_writes += 1;
+                backend.access(addr, AccessKind::Write, 64, t);
+            }
+            ops
+        });
+
+        let mut backend = HmmuBackend::new(cfg.clone(), None);
+        let mut hier = CacheHierarchy::new(&cfg);
+        let mut t = 0u64;
+        suite.bench_items("hierarchy_flush/block (batch 4096)", ops, || {
+            dirty(&mut hier);
+            t += 100_000;
+            hier.flush(t, &mut backend);
+            ops
+        });
+    }
+
     // Tiled hotness step (the epoch-boundary dense pass; HOTNESS_TILE
     // chunks, auto-vectorized inner loop).
     {

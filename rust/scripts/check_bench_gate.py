@@ -24,6 +24,7 @@ PAIRS = [
     ("platform_step/per-op (batch 4096)", "platform_step/block (batch 4096)"),
     ("hierarchy_access/per-op (batch 4096)", "hierarchy_access/block (batch 4096)"),
     ("pcie_link/per-op (batch 4096)", "pcie_link/block (batch 4096)"),
+    ("hierarchy_flush/per-op (batch 4096)", "hierarchy_flush/block (batch 4096)"),
 ]
 
 

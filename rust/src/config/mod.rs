@@ -1,10 +1,66 @@
 //! System configuration: Table II defaults, Table I technology presets,
-//! and a minimal TOML-subset loader for experiment configs.
+//! the tier-stack topology (N-tier memory substrate), and a minimal
+//! TOML-subset loader for experiment configs.
 
 pub mod presets;
 pub mod toml;
 
 pub use presets::{MemTech, TechPreset};
+
+use crate::bail;
+use crate::mem::energy::EnergyCoeffs;
+use crate::util::error::Result;
+
+/// Maximum tiers a stack may hold: the redirection table packs the tier
+/// rank into 3 bits of its 32-bit entries.
+pub const MAX_TIERS: usize = 8;
+
+/// Full specification of one memory tier: technology class, capacity,
+/// emulation timings (§III-F stall injection over the DRAM round trip),
+/// wear budget and energy coefficients. Tiers are **data**, not types —
+/// the whole stack is a rank-ordered `Vec<TierSpec>` (rank 0 = fastest).
+#[derive(Clone, Copy, Debug)]
+pub struct TierSpec {
+    pub tech: MemTech,
+    pub size_bytes: u64,
+    /// Extra read stall (ns) injected on top of the DRAM timing model.
+    pub read_stall_ns: u64,
+    /// Extra write stall (ns) injected on top of the DRAM timing model.
+    pub write_stall_ns: u64,
+    /// Write endurance budget per page (wear counters).
+    pub endurance: u64,
+    /// Energy coefficients for this tier's technology class.
+    pub energy: EnergyCoeffs,
+}
+
+impl TierSpec {
+    /// Build a tier from a technology-class preset: stalls scaled from
+    /// the measured DRAM round trip `dram_rt_ns` (§III-F), endurance and
+    /// energy coefficients from the class tables.
+    pub fn of(tech: MemTech, size_bytes: u64, dram_rt_ns: u64) -> Self {
+        let p = TechPreset::of(tech);
+        TierSpec {
+            tech,
+            size_bytes,
+            read_stall_ns: p.read_stall_ns(dram_rt_ns),
+            write_stall_ns: p.write_stall_ns(dram_rt_ns),
+            endurance: p.endurance,
+            energy: EnergyCoeffs::of(tech),
+        }
+    }
+
+    /// Is this tier wear-limited (finite endurance)?
+    pub fn wear_limited(&self) -> bool {
+        self.endurance != u64::MAX
+    }
+}
+
+/// Parse a tier-topology string like `dram+pcm+xpoint` into its class
+/// list (used by `hymem sweep --tiers` and `hymem run --tiers`).
+pub fn parse_topology(s: &str) -> Option<Vec<MemTech>> {
+    let classes: Option<Vec<MemTech>> = s.split('+').map(|t| MemTech::parse(t.trim())).collect();
+    classes.filter(|c| c.len() >= 2 && c.len() <= MAX_TIERS)
+}
 
 /// Cache geometry (one level).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -185,6 +241,12 @@ pub struct SystemConfig {
     pub scale: u64,
     /// RNG seed for the whole platform.
     pub seed: u64,
+    /// Technology class of the rank-1 tier (the `nvm` config's class);
+    /// selects its energy coefficients and the topology label.
+    pub nvm_tech: MemTech,
+    /// Tiers beyond the base DRAM/NVM pair (rank 2 and deeper). Empty =
+    /// the paper's two-tier topology; [`Self::with_tiers`] populates it.
+    pub extra_tiers: Vec<TierSpec>,
 }
 
 impl SystemConfig {
@@ -260,6 +322,8 @@ impl SystemConfig {
             policy: PolicyKind::Hotness,
             scale: 1,
             seed: 0x5EED,
+            nvm_tech: MemTech::Xpoint3D,
+            extra_tiers: Vec::new(),
         }
     }
 
@@ -276,9 +340,11 @@ impl SystemConfig {
         c
     }
 
-    /// Total hybrid capacity.
+    /// Total hybrid capacity across every tier of the stack.
     pub fn total_mem_bytes(&self) -> u64 {
-        self.dram.size_bytes + self.nvm.size_bytes
+        self.dram.size_bytes
+            + self.nvm.size_bytes
+            + self.extra_tiers.iter().map(|t| t.size_bytes).sum::<u64>()
     }
 
     /// Number of managed pages in the hybrid space.
@@ -290,18 +356,113 @@ impl SystemConfig {
         self.dram.size_bytes / self.hmmu.page_bytes
     }
 
+    /// Number of tiers in the stack (≥ 2: the DRAM/NVM pair is the base).
+    pub fn tier_count(&self) -> usize {
+        2 + self.extra_tiers.len()
+    }
+
+    /// Materialize the full tier stack, rank order: rank 0 from the
+    /// `dram` config (DDR4 class), rank 1 from the `nvm` config (class
+    /// `nvm_tech`, so the legacy stall/endurance knobs keep acting on
+    /// it), then `extra_tiers`.
+    pub fn tier_specs(&self) -> Vec<TierSpec> {
+        let mut v = Vec::with_capacity(self.tier_count());
+        v.push(TierSpec {
+            tech: MemTech::Dram,
+            size_bytes: self.dram.size_bytes,
+            read_stall_ns: 0,
+            write_stall_ns: 0,
+            endurance: u64::MAX,
+            energy: EnergyCoeffs::ddr4(),
+        });
+        v.push(TierSpec {
+            tech: self.nvm_tech,
+            size_bytes: self.nvm.size_bytes,
+            read_stall_ns: self.nvm.read_stall_ns,
+            write_stall_ns: self.nvm.write_stall_ns,
+            endurance: self.nvm.endurance,
+            energy: EnergyCoeffs::of(self.nvm_tech),
+        });
+        v.extend(self.extra_tiers.iter().copied());
+        v
+    }
+
+    /// Page frames per tier, rank order.
+    pub fn tier_pages(&self) -> Vec<u64> {
+        self.tier_specs()
+            .iter()
+            .map(|t| t.size_bytes / self.hmmu.page_bytes)
+            .collect()
+    }
+
+    /// The stack's topology label, e.g. `dram+xpoint` (default) or
+    /// `dram+pcm+xpoint` — the tier axis of scenario fingerprints.
+    pub fn topology_label(&self) -> String {
+        self.tier_specs()
+            .iter()
+            .map(|t| t.tech.label())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Reconfigure the tier stack from a topology of technology classes
+    /// (e.g. `[Dram, Pcm, Xpoint3D]`). Rank 0 must be DRAM-class (the
+    /// emulation substrate); rank 1 reconfigures the `nvm` config from
+    /// its class preset **only when the class changes**, so the default
+    /// `dram+xpoint` topology keeps the paper-calibrated stall point
+    /// bit-identical; ranks 2+ become `extra_tiers`, each twice the
+    /// capacity of the previous NVM rank (capacity grows down the
+    /// stack).
+    pub fn with_tiers(mut self, classes: &[MemTech]) -> Result<Self> {
+        if classes.len() < 2 || classes.len() > MAX_TIERS {
+            bail!("tier topology needs 2..={MAX_TIERS} classes, got {}", classes.len());
+        }
+        if classes[0] != MemTech::Dram {
+            bail!("tier rank 0 must be dram-class (the emulation substrate)");
+        }
+        let rt = self.dram.t_cas_ns + self.dram.t_rcd_ns;
+        if classes[1] != self.nvm_tech {
+            let p = TechPreset::of(classes[1]);
+            self.nvm.read_stall_ns = p.read_stall_ns(rt);
+            self.nvm.write_stall_ns = p.write_stall_ns(rt);
+            self.nvm.endurance = p.endurance;
+            self.nvm_tech = classes[1];
+        }
+        self.extra_tiers = classes[2..]
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| TierSpec::of(c, self.nvm.size_bytes << (k + 1), rt))
+            .collect();
+        Ok(self)
+    }
+
     /// Apply a Table I technology preset to the NVM emulation parameters.
     pub fn with_tech(mut self, tech: MemTech) -> Self {
         let p = TechPreset::of(tech);
         self.nvm.read_stall_ns = p.read_stall_ns(self.dram.t_cas_ns + self.dram.t_rcd_ns);
         self.nvm.write_stall_ns = p.write_stall_ns(self.dram.t_cas_ns + self.dram.t_rcd_ns);
         self.nvm.endurance = p.endurance;
+        self.nvm_tech = tech;
         self
     }
 
     /// Render the Table II block (used by `hymem config --show`).
     pub fn show(&self) -> String {
         use crate::util::units::fmt_bytes;
+        let mut extra = String::new();
+        if !self.extra_tiers.is_empty() {
+            extra.push_str(&format!("\nTopology       {}", self.topology_label()));
+            for (k, t) in self.extra_tiers.iter().enumerate() {
+                extra.push_str(&format!(
+                    "\nTier {}         {} {} (+{}ns rd / +{}ns wr stalls)",
+                    k + 2,
+                    fmt_bytes(t.size_bytes),
+                    t.tech.name(),
+                    t.read_stall_ns,
+                    t.write_stall_ns,
+                ));
+            }
+        }
         format!(
             "CPU            ARM Cortex-A57-like @ {:.1}GHz, {} cores (modeled)\n\
              L1 I-Cache     {} {}‑way\n\
@@ -311,7 +472,7 @@ impl SystemConfig {
              DRAM           {} (scale 1/{})\n\
              NVM            {} (DRAM + {}ns rd / {}ns wr stalls)\n\
              HMMU           {} MHz fabric, {}‑deep HDR FIFO, {}B DMA blocks\n\
-             Policy         {}",
+             Policy         {}{extra}",
             self.cpu.freq_ghz,
             self.cpu.cores,
             fmt_bytes(self.l1i.size_bytes),
@@ -404,5 +565,83 @@ mod tests {
         let base = SystemConfig::paper();
         let stt = base.clone().with_tech(MemTech::SttRam);
         assert!(stt.nvm.read_stall_ns < base.nvm.read_stall_ns);
+        assert_eq!(stt.nvm_tech, MemTech::SttRam);
+    }
+
+    #[test]
+    fn default_stack_is_the_paper_pair() {
+        let c = SystemConfig::paper();
+        assert_eq!(c.tier_count(), 2);
+        let specs = c.tier_specs();
+        assert_eq!(specs[0].tech, MemTech::Dram);
+        assert_eq!(specs[0].size_bytes, c.dram.size_bytes);
+        assert_eq!(specs[0].read_stall_ns, 0);
+        assert_eq!(specs[1].tech, MemTech::Xpoint3D);
+        assert_eq!(specs[1].read_stall_ns, c.nvm.read_stall_ns);
+        assert_eq!(specs[1].endurance, c.nvm.endurance);
+        assert_eq!(c.topology_label(), "dram+xpoint");
+        assert_eq!(c.tier_pages().len(), 2);
+    }
+
+    #[test]
+    fn with_tiers_default_pair_is_identity() {
+        // `dram+xpoint` must not perturb the paper-calibrated stall point
+        // (bit-identity contract of the two-tier default).
+        let base = SystemConfig::default_scaled(64);
+        let explicit = base
+            .clone()
+            .with_tiers(&[MemTech::Dram, MemTech::Xpoint3D])
+            .unwrap();
+        assert_eq!(explicit.nvm.read_stall_ns, base.nvm.read_stall_ns);
+        assert_eq!(explicit.nvm.write_stall_ns, base.nvm.write_stall_ns);
+        assert_eq!(explicit.nvm.endurance, base.nvm.endurance);
+        assert!(explicit.extra_tiers.is_empty());
+        assert_eq!(explicit.total_mem_bytes(), base.total_mem_bytes());
+    }
+
+    #[test]
+    fn three_tier_topology_extends_the_stack() {
+        let c = SystemConfig::default_scaled(64)
+            .with_tiers(&[MemTech::Dram, MemTech::Pcm, MemTech::Xpoint3D])
+            .unwrap();
+        assert_eq!(c.tier_count(), 3);
+        assert_eq!(c.nvm_tech, MemTech::Pcm);
+        assert_eq!(c.topology_label(), "dram+pcm+xpoint");
+        let specs = c.tier_specs();
+        // Rank-2 capacity doubles the rank-1 capacity.
+        assert_eq!(specs[2].size_bytes, 2 * c.nvm.size_bytes);
+        assert_eq!(specs[2].tech, MemTech::Xpoint3D);
+        // Total capacity and page count include every tier.
+        assert_eq!(
+            c.total_mem_bytes(),
+            c.dram.size_bytes + c.nvm.size_bytes + specs[2].size_bytes
+        );
+        assert_eq!(c.total_pages(), c.tier_pages().iter().sum::<u64>());
+        // PCM rank is wear-limited; its writes stall more than its reads.
+        assert!(specs[1].wear_limited());
+        assert!(specs[1].write_stall_ns > specs[1].read_stall_ns);
+    }
+
+    #[test]
+    fn topology_parsing() {
+        assert_eq!(
+            parse_topology("dram+pcm+xpoint"),
+            Some(vec![MemTech::Dram, MemTech::Pcm, MemTech::Xpoint3D])
+        );
+        assert_eq!(
+            parse_topology("dram+memristor"),
+            Some(vec![MemTech::Dram, MemTech::Memristor])
+        );
+        assert_eq!(parse_topology("dram"), None, "one tier is not a stack");
+        assert_eq!(parse_topology("dram+bogus"), None);
+    }
+
+    #[test]
+    fn with_tiers_rejects_bad_topologies() {
+        let c = SystemConfig::default_scaled(64);
+        assert!(c.clone().with_tiers(&[MemTech::Dram]).is_err());
+        let wrong_rank0 = c.clone().with_tiers(&[MemTech::Pcm, MemTech::Xpoint3D]);
+        assert!(wrong_rank0.is_err(), "rank 0 must be dram-class");
+        assert!(c.with_tiers(&[MemTech::Dram; 9]).is_err());
     }
 }

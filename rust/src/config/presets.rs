@@ -2,10 +2,14 @@
 //!
 //! The paper's §III-F emulates an NVM by measuring the DRAM round trip and
 //! scaling stall cycles by the Table I latency ratio. These presets encode
-//! Table I so any technology can be swapped in (`--tech stt-ram` etc.),
-//! which Fig/Table I experiments sweep.
+//! Table I — extended with the PCM and memristor (ReRAM) classes that the
+//! "Modeling and Simulating Emerging Memory Technologies" tutorial treats
+//! as first-order design points — so any technology can be swapped in
+//! (`--tech stt-ram`, `--tiers dram+pcm+xpoint`, …), which the Table I
+//! experiments and the tier-topology sweeps exercise.
 
-/// Memory technologies from Table I.
+/// Memory technology classes: Table I rows plus the tutorial-class PCM
+/// and memristor points used by the tier-topology axis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MemTech {
     Flash,
@@ -13,24 +17,34 @@ pub enum MemTech {
     Dram,
     SttRam,
     Mram,
+    /// Phase-change memory (tutorial-class: reads near DRAM, writes
+    /// 5-20x slower, endurance ~10^8-10^9).
+    Pcm,
+    /// Memristor / ReRAM class (fast reads, moderate writes, high
+    /// endurance relative to PCM).
+    Memristor,
 }
 
 impl MemTech {
-    pub const ALL: [MemTech; 5] = [
+    pub const ALL: [MemTech; 7] = [
         MemTech::Flash,
         MemTech::Xpoint3D,
         MemTech::Dram,
         MemTech::SttRam,
         MemTech::Mram,
+        MemTech::Pcm,
+        MemTech::Memristor,
     ];
 
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().replace(['-', '_'], "").as_str() {
             "flash" => Some(Self::Flash),
             "3dxpoint" | "xpoint" | "xpoint3d" | "optane" => Some(Self::Xpoint3D),
-            "dram" => Some(Self::Dram),
+            "dram" | "ddr4" => Some(Self::Dram),
             "sttram" | "stt" => Some(Self::SttRam),
             "mram" => Some(Self::Mram),
+            "pcm" | "pcram" | "phasechange" => Some(Self::Pcm),
+            "memristor" | "reram" | "rram" => Some(Self::Memristor),
             _ => None,
         }
     }
@@ -42,6 +56,22 @@ impl MemTech {
             Self::Dram => "DRAM",
             Self::SttRam => "STT-RAM",
             Self::Mram => "MRAM",
+            Self::Pcm => "PCM",
+            Self::Memristor => "Memristor",
+        }
+    }
+
+    /// Short lower-case label used in tier-topology strings
+    /// (`dram+pcm+xpoint`) and scenario fingerprints.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Flash => "flash",
+            Self::Xpoint3D => "xpoint",
+            Self::Dram => "dram",
+            Self::SttRam => "stt-ram",
+            Self::Mram => "mram",
+            Self::Pcm => "pcm",
+            Self::Memristor => "memristor",
         }
     }
 }
@@ -58,7 +88,8 @@ pub struct TechPreset {
 }
 
 impl TechPreset {
-    /// Table I values (midpoints of the published ranges).
+    /// Table I values (midpoints of the published ranges); PCM and
+    /// memristor rows use the tutorial-class midpoints.
     pub fn of(tech: MemTech) -> Self {
         match tech {
             MemTech::Flash => TechPreset {
@@ -96,6 +127,20 @@ impl TechPreset {
                 endurance: 1_000_000_000_000_000,
                 dollars_per_gb: f64::NAN,
             },
+            MemTech::Pcm => TechPreset {
+                tech,
+                read_ns: 75,   // 50-100ns class midpoint
+                write_ns: 500, // 150-1000ns class midpoint
+                endurance: 100_000_000, // ~10^8 writes/cell
+                dollars_per_gb: 3.0,
+            },
+            MemTech::Memristor => TechPreset {
+                tech,
+                read_ns: 30,
+                write_ns: 60,
+                endurance: 100_000_000_000, // ~10^11 class
+                dollars_per_gb: f64::NAN,
+            },
         }
     }
 
@@ -124,6 +169,9 @@ mod tests {
         assert_eq!(MemTech::parse("3d-xpoint"), Some(MemTech::Xpoint3D));
         assert_eq!(MemTech::parse("optane"), Some(MemTech::Xpoint3D));
         assert_eq!(MemTech::parse("STT_RAM"), Some(MemTech::SttRam));
+        assert_eq!(MemTech::parse("pcm"), Some(MemTech::Pcm));
+        assert_eq!(MemTech::parse("ReRAM"), Some(MemTech::Memristor));
+        assert_eq!(MemTech::parse("ddr4"), Some(MemTech::Dram));
         assert_eq!(MemTech::parse("nope"), None);
     }
 
@@ -153,7 +201,27 @@ mod tests {
     }
 
     #[test]
-    fn all_contains_five() {
-        assert_eq!(MemTech::ALL.len(), 5);
+    fn all_contains_every_class() {
+        assert_eq!(MemTech::ALL.len(), 7);
+        for t in MemTech::ALL {
+            assert_eq!(MemTech::parse(t.label()), Some(t), "{t:?} label round-trips");
+        }
+    }
+
+    #[test]
+    fn pcm_writes_dominate_reads() {
+        let p = TechPreset::of(MemTech::Pcm);
+        assert!(p.write_stall_ns(28) > 3 * p.read_stall_ns(28));
+        // PCM wears out before XPoint.
+        assert!(p.endurance < TechPreset::of(MemTech::Xpoint3D).endurance);
+    }
+
+    #[test]
+    fn memristor_between_dram_and_pcm() {
+        let m = TechPreset::of(MemTech::Memristor);
+        let pcm = TechPreset::of(MemTech::Pcm);
+        assert!(m.read_stall_ns(28) < pcm.read_stall_ns(28));
+        assert!(m.write_stall_ns(28) < pcm.write_stall_ns(28));
+        assert!(m.endurance > pcm.endurance);
     }
 }

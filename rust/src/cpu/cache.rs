@@ -23,22 +23,32 @@ pub struct BlockMiss {
     pub writeback: Option<u64>,
 }
 
-#[derive(Clone, Copy, Debug, Default)]
-struct Line {
-    tag: u64,
-    valid: bool,
-    dirty: bool,
-    lru: u64,
-}
+/// Per-line state bits (SoA column alongside `tags`/`lru`).
+const LINE_VALID: u8 = 1 << 0;
+const LINE_DIRTY: u8 = 1 << 1;
 
 /// A single cache level.
+///
+/// §Perf (SoA tag layout): line metadata is struct-of-arrays — `tags`,
+/// `lru` and `state` are parallel columns indexed `set * ways + way`, so
+/// the ways of one set are **way-major contiguous** in each column. The
+/// multi-probe hit loop of [`Self::access_block`] scans a flat 8-byte
+/// tag slice (LLVM vectorizes the compare) instead of striding over
+/// 24-byte line structs; replacement state (`lru`, `state`) is only
+/// touched on the hit/victim way. The `cache_tags/aos|soa` bench rows
+/// track the layout win; behavior is bit-identical to the AoS layout.
 #[derive(Clone, Debug)]
 pub struct Cache {
     cfg: CacheConfig,
     sets: usize,
     ways: usize,
     line_shift: u32,
-    lines: Vec<Line>,
+    /// Per-line tags, way-major contiguous per set.
+    tags: Vec<u64>,
+    /// Per-line LRU stamps.
+    lru: Vec<u64>,
+    /// Per-line `LINE_VALID` / `LINE_DIRTY` bits.
+    state: Vec<u8>,
     tick: u64,
     pub hits: u64,
     pub misses: u64,
@@ -54,7 +64,9 @@ impl Cache {
             sets,
             ways,
             line_shift: cfg.line_bytes.trailing_zeros(),
-            lines: vec![Line::default(); sets * ways],
+            tags: vec![0; sets * ways],
+            lru: vec![0; sets * ways],
+            state: vec![0; sets * ways],
             tick: 0,
             hits: 0,
             misses: 0,
@@ -83,27 +95,32 @@ impl Cache {
     #[inline]
     fn fill_line(&mut self, set: usize, tag: u64, dirty: bool, tick: u64) -> Option<u64> {
         let base = set * self.ways;
-        let ways = &mut self.lines[base..base + self.ways];
-        let victim = ways
+        // First-minimum victim select (invalid ways keyed 0), identical
+        // to the AoS `min_by_key` it replaces.
+        let mut victim = 0usize;
+        let mut best = u64::MAX;
+        for (w, (&st, &lru)) in self.state[base..base + self.ways]
             .iter()
+            .zip(&self.lru[base..base + self.ways])
             .enumerate()
-            .min_by_key(|(_, l)| if l.valid { l.lru } else { 0 })
-            .map(|(w, _)| w)
-            .unwrap();
-        let v = &mut ways[victim];
-        let writeback = if v.valid && v.dirty {
+        {
+            let key = if st & LINE_VALID != 0 { lru } else { 0 };
+            if key < best {
+                best = key;
+                victim = w;
+            }
+        }
+        let vi = base + victim;
+        let writeback = if self.state[vi] & (LINE_VALID | LINE_DIRTY) == LINE_VALID | LINE_DIRTY {
             self.writebacks += 1;
-            let victim_line = (v.tag << self.sets.trailing_zeros()) | set as u64;
+            let victim_line = (self.tags[vi] << self.sets.trailing_zeros()) | set as u64;
             Some(victim_line << self.line_shift)
         } else {
             None
         };
-        *v = Line {
-            tag,
-            valid: true,
-            dirty,
-            lru: tick,
-        };
+        self.tags[vi] = tag;
+        self.lru[vi] = tick;
+        self.state[vi] = LINE_VALID | if dirty { LINE_DIRTY } else { 0 };
         writeback
     }
 
@@ -115,11 +132,13 @@ impl Cache {
         let (set, tag) = self.index(addr);
         let base = set * self.ways;
 
-        // Hit path.
-        for line in &mut self.lines[base..base + self.ways] {
-            if line.valid && line.tag == tag {
-                line.lru = tick;
-                line.dirty |= is_write;
+        // Hit path: scan the set's contiguous tag slice; metadata is
+        // touched only on the hit way.
+        for w in 0..self.ways {
+            let i = base + w;
+            if self.state[i] & LINE_VALID != 0 && self.tags[i] == tag {
+                self.lru[i] = tick;
+                self.state[i] |= if is_write { LINE_DIRTY } else { 0 };
                 self.hits += 1;
                 return CacheOutcome {
                     hit: true,
@@ -175,11 +194,14 @@ impl Cache {
             let tag = line >> set_shift;
             let base = set * n_ways;
 
-            // Hit path.
-            for l in &mut self.lines[base..base + n_ways] {
-                if l.valid && l.tag == tag {
-                    l.lru = tick;
-                    l.dirty |= is_write;
+            // Hit path (§Perf, SoA): the probe compares a flat 8-byte
+            // tag slice — a branch-light vectorizable scan; validity and
+            // replacement state load only for the matching way.
+            let set_tags = &self.tags[base..base + n_ways];
+            for (w, &t) in set_tags.iter().enumerate() {
+                if t == tag && self.state[base + w] & LINE_VALID != 0 {
+                    self.lru[base + w] = tick;
+                    self.state[base + w] |= if is_write { LINE_DIRTY } else { 0 };
                     hits += 1;
                     continue 'ops;
                 }
@@ -208,10 +230,11 @@ impl Cache {
         let tick = self.tick;
         let (set, tag) = self.index(addr);
         let base = set * self.ways;
-        for line in &mut self.lines[base..base + self.ways] {
-            if line.valid && line.tag == tag {
-                line.lru = tick;
-                line.dirty = true;
+        for w in 0..self.ways {
+            let i = base + w;
+            if self.state[i] & LINE_VALID != 0 && self.tags[i] == tag {
+                self.lru[i] = tick;
+                self.state[i] |= LINE_DIRTY;
                 return None;
             }
         }
@@ -219,19 +242,29 @@ impl Cache {
     }
 
     /// Invalidate everything (used between benchmark runs / end-of-run
-    /// write-back accounting), returning the **real addresses** of the
-    /// dirty lines that must be written back, in set-major way order.
-    pub fn flush(&mut self) -> Vec<u64> {
+    /// write-back accounting), appending the **real addresses** of the
+    /// dirty lines that must be written back to `dirty`, in set-major
+    /// way order. The caller owns (and recycles) the buffer — the
+    /// column-ized [`crate::cpu::CacheHierarchy::flush`] drains both
+    /// levels through reused scratch.
+    pub fn flush_into(&mut self, dirty: &mut Vec<u64>) {
         let set_shift = self.sets.trailing_zeros();
-        let mut dirty = Vec::new();
-        for (i, l) in self.lines.iter_mut().enumerate() {
-            if l.valid && l.dirty {
+        for i in 0..self.tags.len() {
+            if self.state[i] & (LINE_VALID | LINE_DIRTY) == LINE_VALID | LINE_DIRTY {
                 let set = (i / self.ways) as u64;
-                let line = (l.tag << set_shift) | set;
+                let line = (self.tags[i] << set_shift) | set;
                 dirty.push(line << self.line_shift);
             }
-            *l = Line::default();
+            self.state[i] = 0;
+            self.tags[i] = 0;
+            self.lru[i] = 0;
         }
+    }
+
+    /// [`Self::flush_into`] with a fresh buffer (unit-test convenience).
+    pub fn flush(&mut self) -> Vec<u64> {
+        let mut dirty = Vec::new();
+        self.flush_into(&mut dirty);
         dirty
     }
 

@@ -181,6 +181,12 @@ pub struct CacheHierarchy {
     /// Memory accesses (fills + writebacks) forwarded to the backend.
     pub mem_reads: u64,
     pub mem_writes: u64,
+    /// Reusable write-back column for the end-of-run [`Self::flush`]
+    /// (§Perf: the flush drains through [`MemBackend::issue_block_op`],
+    /// so PCIe-backed runs take the block-batched link crossing).
+    flush_col: BlockOutcomes,
+    /// Reusable dirty-address scratch for the flush.
+    flush_scratch: Vec<u64>,
 }
 
 impl CacheHierarchy {
@@ -197,6 +203,8 @@ impl CacheHierarchy {
             tlb_walk_ns: (20.0 * cpu_cycle_ns).ceil() as u64,
             mem_reads: 0,
             mem_writes: 0,
+            flush_col: BlockOutcomes::new(),
+            flush_scratch: Vec::new(),
         }
     }
 
@@ -339,17 +347,44 @@ impl CacheHierarchy {
     /// redirection table and hotness counters) therefore see the pages
     /// the workload actually dirtied, not a synthetic `0, 64, 128, …`
     /// sequence that would perturb end-of-run residency and wear stats.
+    ///
+    /// §Perf (column-ized): the write-backs are collected — in exactly
+    /// the order the per-op loop issued them — into a reusable
+    /// [`BlockOutcomes`] column and drained through one
+    /// [`MemBackend::issue_block_op`] call, so the PCIe+HMMU backend
+    /// crosses the whole end-of-run flush as a single block-batched
+    /// link column (bit-identical to per-op issue with write coalescing
+    /// off; `tests/pcie_props.rs` pins the link contract, the
+    /// `flush_column_*` tests pin this drain).
     pub fn flush<B: MemBackend>(&mut self, now: Time, backend: &mut B) {
-        for wb in self.l1d.flush() {
+        let mut out = std::mem::take(&mut self.flush_col);
+        out.clear(self.line_bytes);
+        // One synthetic op (index 0, no demand fill) carries every
+        // write-back of the flush.
+        out.latency_ns.push(0);
+        out.mem_access.push(false);
+
+        let mut dirty = std::mem::take(&mut self.flush_scratch);
+        dirty.clear();
+        self.l1d.flush_into(&mut dirty);
+        for &wb in &dirty {
             if let Some(wb2) = self.l2.fill_writeback(wb) {
                 self.mem_writes += 1;
-                backend.access(wb2, AccessKind::Write, self.line_bytes, now);
+                out.writes.push((0, wb2));
             }
         }
-        for addr in self.l2.flush() {
+        dirty.clear();
+        self.l2.flush_into(&mut dirty);
+        for &addr in &dirty {
             self.mem_writes += 1;
-            backend.access(addr, AccessKind::Write, self.line_bytes, now);
+            out.writes.push((0, addr));
         }
+        self.flush_scratch = dirty;
+
+        let (mut wr, mut rd) = (0usize, 0usize);
+        backend.issue_block_op(&out, 0, &mut wr, &mut rd, now);
+        debug_assert_eq!(wr, out.writes.len());
+        self.flush_col = out;
     }
 }
 
@@ -579,6 +614,46 @@ mod tests {
         assert_eq!(blocked.tlb.walks, per_op.tlb.walks);
         assert_eq!(blocked.mem_reads, per_op.mem_reads);
         assert_eq!(blocked.mem_writes, per_op.mem_writes);
+    }
+
+    #[test]
+    fn flush_column_matches_per_op_reference() {
+        // Two identical hierarchies dirtied identically; one flushes
+        // through the column drain, the other replays the
+        // pre-columnization per-op loop (L1 dirty → L2 write-back fill →
+        // spill, then every L2 dirty line, one backend access each).
+        // Same backend traffic in the same order, same stats.
+        let cfg = SystemConfig::default_scaled(16);
+        let mut a = CacheHierarchy::new(&cfg);
+        let mut b = CacheHierarchy::new(&cfg);
+        let mut ba = TestBackend { latency: 100, log: Vec::new() };
+        let mut bb = TestBackend { latency: 100, log: Vec::new() };
+        for i in 0..4000u64 {
+            let addr = (i * 4096) % (1 << 22) + (i % 3) * 64;
+            let w = i % 2 == 0;
+            a.access(addr, w, 0, &mut ba);
+            b.access(addr, w, 0, &mut bb);
+        }
+        // Per-op reference flush on `b`.
+        for wb in b.l1d.flush() {
+            if let Some(wb2) = b.l2.fill_writeback(wb) {
+                b.mem_writes += 1;
+                bb.access(wb2, AccessKind::Write, 64, 999);
+            }
+        }
+        for addr in b.l2.flush() {
+            b.mem_writes += 1;
+            bb.access(addr, AccessKind::Write, 64, 999);
+        }
+        // Column-ized production flush on `a`.
+        a.flush(999, &mut ba);
+        assert!(ba.log.iter().any(|(_, k)| k.is_write()), "must write back");
+        assert_eq!(ba.log, bb.log, "flush traffic diverged");
+        assert_eq!(a.mem_writes, b.mem_writes);
+        // A second flush finds nothing dirty and issues nothing.
+        let n = ba.log.len();
+        a.flush(1999, &mut ba);
+        assert_eq!(ba.log.len(), n);
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! DMA engine for page migration (paper §III-D).
 //!
-//! Swaps pages between DRAM and NVM in **512-byte sub-blocks**, tracking
-//! the precise swap progress so that memory requests hitting an in-flight
-//! page are redirected correctly:
+//! Swaps pages between **any two tiers** of the stack in 512-byte
+//! sub-blocks (the engine is tier-agnostic: the mappings carry the tier,
+//! and the HMMU's `issue` callback routes each block access to the right
+//! memory controller), tracking the precise swap progress so that memory
+//! requests hitting an in-flight page are redirected correctly:
 //!
 //! - request behind the progress pointer (block already copied) → go to
 //!   the **destination** device;

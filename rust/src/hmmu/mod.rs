@@ -4,12 +4,15 @@
 //!
 //! ```text
 //! PCIe RX → HDR FIFO → control pipeline (decode → policy → route)
-//!        → { DRAM MC | NVM MC | DMA-conflict redirect }
+//!        → { tier-0 MC | tier-1 MC | … | DMA-conflict redirect }
 //!        → tag-matching in-order completion → PCIe TX
 //! ```
 //!
-//! plus the DMA engine migrating pages between the devices under the
+//! plus the DMA engine migrating pages between any two tiers under the
 //! control of the epoch policy, and performance counters on everything.
+//! The memory substrate is an N-tier stack ([`crate::config::TierSpec`]
+//! rank order, one `MemoryController<TierDevice>` per rank); the paper's
+//! DRAM/NVM pair is the two-tier default and stays bit-identical.
 //!
 //! The HMMU is deliberately independent of the PCIe link for **demand
 //! traffic**: it consumes requests with arrival timestamps and produces
@@ -31,12 +34,12 @@ pub mod tags;
 pub use counters::HmmuCounters;
 pub use dma::{DmaEngine, DmaRoute};
 pub use policy::{build_policy, HotnessEngine, PlacementPolicy, PolicyImpl, PolicyView};
-pub use redirection::{Device, Mapping, RedirectionTable};
+pub use redirection::{Device, Mapping, RedirectionTable, TierId};
 pub use tags::TagMatcher;
 
 use crate::alloc::HintStore;
-use crate::config::SystemConfig;
-use crate::mem::{AccessKind, DramDevice, MemDevice, MemoryController, NvmDevice};
+use crate::config::{SystemConfig, TierSpec};
+use crate::mem::{AccessKind, MemoryController, TierDevice};
 use crate::pcie::PcieLink;
 use crate::sim::{Clock, Time};
 
@@ -129,8 +132,10 @@ pub struct Hmmu {
     /// Enum-dispatched placement policy (§Perf: de-virtualized hot path;
     /// `dyn` survives only at the `HotnessEngine` boundary).
     policy: PolicyImpl,
-    dram_mc: MemoryController<DramDevice>,
-    nvm_mc: MemoryController<NvmDevice>,
+    /// The tier stack: one memory controller per rank (0 = fastest).
+    tiers: Vec<MemoryController<TierDevice>>,
+    /// The specs the stack was built from (energy/report surface).
+    specs: Vec<TierSpec>,
     pub counters: HmmuCounters,
     hints: HintStore,
     /// Pipeline latency (decode + policy + route stages) in ns.
@@ -148,32 +153,40 @@ impl Hmmu {
     pub fn new(cfg: SystemConfig, engine: Option<Box<dyn HotnessEngine>>) -> Self {
         let fpga = Clock::from_mhz(cfg.hmmu.fpga_freq_mhz);
         let page_bytes = cfg.hmmu.page_bytes;
-        let dram_frames = (cfg.dram.size_bytes / page_bytes) as u32;
-        let nvm_frames = (cfg.nvm.size_bytes / page_bytes) as u32;
+        let specs = cfg.tier_specs();
+        let frames: Vec<u32> = specs
+            .iter()
+            .map(|s| (s.size_bytes / page_bytes) as u32)
+            .collect();
         let host_pages = cfg.total_pages();
 
-        let mut table = RedirectionTable::new(host_pages, dram_frames, nvm_frames, page_bytes);
+        let mut table = RedirectionTable::new(host_pages, &frames, page_bytes);
         if cfg.policy == crate::config::PolicyKind::Static {
             table.identity_map();
         }
 
-        // Memory-controller clock: DDR4-1600-class command rate.
+        // Memory-controller clock: DDR4-1600-class command rate; every
+        // tier runs a Table II-class controller in front of its device.
         let mc_clock = Clock::from_mhz(1200.0);
-        let dram_mc = MemoryController::new(
-            DramDevice::new(cfg.dram),
-            mc_clock,
-            4,
-            cfg.dram.queue_depth,
-        );
-        let nvm_mc = MemoryController::new(
-            NvmDevice::new(cfg.nvm, cfg.dram, page_bytes),
-            mc_clock,
-            4,
-            cfg.dram.queue_depth,
-        );
+        let tiers: Vec<MemoryController<TierDevice>> = specs
+            .iter()
+            .map(|s| {
+                MemoryController::new(
+                    TierDevice::build(s, cfg.dram, page_bytes),
+                    mc_clock,
+                    4,
+                    cfg.dram.queue_depth,
+                )
+            })
+            .collect();
 
         let policy = build_policy(&cfg, engine);
         let pipeline_ns = fpga.cycles_to_ns(cfg.hmmu.pipeline_stages as u64);
+        let mut counters = HmmuCounters::with_tiers(specs.len());
+        counters.energy_nj = specs
+            .iter()
+            .map(|s| (s.energy.read_nj, s.energy.write_nj))
+            .collect();
 
         Hmmu {
             table,
@@ -184,9 +197,9 @@ impl Hmmu {
                 cfg.hmmu.dma_buffer_bytes as u64 >= 2 * cfg.hmmu.dma_block_bytes as u64,
             ),
             policy,
-            dram_mc,
-            nvm_mc,
-            counters: HmmuCounters::default(),
+            tiers,
+            specs,
+            counters,
             hints: HintStore::new(),
             pipeline_ns,
             hdr_occupancy: ReleaseRing::new(cfg.hmmu.hdr_fifo_depth as usize),
@@ -210,22 +223,67 @@ impl Hmmu {
         &self.cfg
     }
 
-    /// Dynamic-stall reconfiguration (Table I sweep: §III-F "arbitrary
-    /// latency cycles").
+    /// Dynamic-stall reconfiguration of the rank-1 tier (Table I sweep:
+    /// §III-F "arbitrary latency cycles").
     pub fn set_nvm_stalls(&mut self, read_ns: u64, write_ns: u64) {
-        self.nvm_mc.device_mut().set_stalls(read_ns, write_ns);
+        self.set_tier_stalls(TierId::Nvm, read_ns, write_ns);
+    }
+
+    /// Dynamic-stall reconfiguration of any tier (a no-op on bare DRAM
+    /// ranks).
+    pub fn set_tier_stalls(&mut self, tier: TierId, read_ns: u64, write_ns: u64) {
+        self.tiers[tier.index()].device_mut().set_stalls(read_ns, write_ns);
+    }
+
+    /// Number of tiers in the stack.
+    pub fn tier_count(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// The tier specs the stack was built from, rank order.
+    pub fn tier_specs(&self) -> &[TierSpec] {
+        &self.specs
+    }
+
+    /// Device counter snapshot of one tier.
+    pub fn tier_stats(&self, tier: TierId) -> &crate::mem::DeviceStats {
+        self.tiers[tier.index()].device().stats()
     }
 
     pub fn dram_stats(&self) -> &crate::mem::DeviceStats {
-        self.dram_mc.device().stats()
+        self.tier_stats(TierId::Dram)
     }
 
     pub fn nvm_stats(&self) -> &crate::mem::DeviceStats {
-        self.nvm_mc.device().stats()
+        self.tier_stats(TierId::Nvm)
     }
 
-    pub fn nvm_device(&self) -> &NvmDevice {
-        self.nvm_mc.device()
+    /// Highest per-page write count observed on one tier (0 for bare
+    /// DRAM ranks).
+    pub fn tier_max_wear(&self, tier: TierId) -> u64 {
+        self.tiers[tier.index()].device().max_wear()
+    }
+
+    /// Per-tier max wear, rank order.
+    pub fn tier_wear(&self) -> Vec<u64> {
+        self.tiers.iter().map(|t| t.device().max_wear()).collect()
+    }
+
+    /// Worst per-page wear across the wear-limited (rank ≥ 1) tiers —
+    /// the legacy `nvm_max_wear` report column (= rank-1 wear on a
+    /// two-tier stack).
+    pub fn nvm_max_wear(&self) -> u64 {
+        self.tiers[1..]
+            .iter()
+            .map(|t| t.device().max_wear())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Per-tier resident page counts, rank order (sums to the mapped
+    /// page count).
+    pub fn tier_residency(&self) -> Vec<u64> {
+        self.table.residency().to_vec()
     }
 
     /// Process one memory request arriving at `now`. Returns the time the
@@ -303,10 +361,7 @@ impl Hmmu {
                 .table
                 .place(page, preferred)
                 .expect("hybrid memory exhausted: host space exceeds frames");
-            match m.device {
-                Device::Dram => self.counters.pages_placed_dram += 1,
-                Device::Nvm => self.counters.pages_placed_nvm += 1,
-            }
+            self.counters.record_placement(m.device.index());
         }
 
         // --- policy accounting ---
@@ -349,22 +404,8 @@ impl Hmmu {
             t = freed_at;
             tag
         };
-        let done = match device {
-            Device::Dram => {
-                match kind {
-                    AccessKind::Read => self.counters.dram_reads += 1,
-                    AccessKind::Write => self.counters.dram_writes += 1,
-                }
-                self.dram_mc.issue(dev_addr, kind, bytes, t)
-            }
-            Device::Nvm => {
-                match kind {
-                    AccessKind::Read => self.counters.nvm_reads += 1,
-                    AccessKind::Write => self.counters.nvm_writes += 1,
-                }
-                self.nvm_mc.issue(dev_addr, kind, bytes, t)
-            }
-        };
+        self.counters.record_tier_access(device.index(), kind.is_write());
+        let done = self.tiers[device.index()].issue(dev_addr, kind, bytes, t);
 
         // --- in-order completion drain (§III-C) ---
         let release = self.tags.complete_inline(tag, done);
@@ -428,18 +469,26 @@ impl Hmmu {
         // one); a bare `Hmmu::access` keeps device-side DMA.
         let host_managed = self.cfg.hmmu.host_managed_dma;
         let max_payload = self.cfg.pcie.max_payload_bytes as u64;
-        for &(nvm_page, dram_page) in pairs {
-            let (Some(ma), Some(mb)) = (self.table.lookup(nvm_page), self.table.lookup(dram_page))
+        for &(deep_page, fast_page) in pairs {
+            let (Some(ma), Some(mb)) = (self.table.lookup(deep_page), self.table.lookup(fast_page))
             else {
                 continue;
             };
             // Policies see a consistent snapshot, but double-check
-            // directions: promote NVM→DRAM only.
-            if ma.device != Device::Nvm || mb.device != Device::Dram {
+            // directions: promote from a deeper rank to a faster one
+            // only (any tier pair is allowed; for the two-tier stack
+            // this is exactly the old NVM→DRAM check).
+            if ma.device <= mb.device {
                 continue;
             }
-            let dram_mc = &mut self.dram_mc;
-            let nvm_mc = &mut self.nvm_mc;
+            // Belt-and-braces: pairs launched earlier *this epoch* are
+            // already active on the DMA engine (the policy's `migrating`
+            // snapshot predates them; policies also dedupe, so this
+            // never fires on a two-tier stack).
+            if self.dma.is_active(deep_page) || self.dma.is_active(fast_page) {
+                continue;
+            }
+            let tiers = &mut self.tiers;
             let hdr = &mut self.hdr_occupancy;
             let counters = &mut self.counters;
             let link_ref = &mut link;
@@ -487,10 +536,7 @@ impl Hmmu {
                                 // serialized back-to-back on the RX wire
                                 // as one column.
                                 let arrive = l.send_to_device(0, at);
-                                let ready = match dev {
-                                    Device::Dram => dram_mc.issue(a, k, b, arrive),
-                                    Device::Nvm => nvm_mc.issue(a, k, b, arrive),
-                                };
+                                let ready = tiers[dev.index()].issue(a, k, b, arrive);
                                 cpl.payloads.clear();
                                 cpl.times.clear();
                                 let mut remaining = b;
@@ -523,20 +569,14 @@ impl Hmmu {
                                     l.hold_credit_until(arrive);
                                     remaining -= chunk;
                                 }
-                                match dev {
-                                    Device::Dram => dram_mc.issue(a, k, b, arrive),
-                                    Device::Nvm => nvm_mc.issue(a, k, b, arrive),
-                                }
+                                tiers[dev.index()].issue(a, k, b, arrive)
                             }
                         };
                         counters.pcie_dma_bytes += b;
                         counters.dma_link_stalls += l.credit_stalls - stalls_before;
                         done
                     }
-                    _ => match dev {
-                        Device::Dram => dram_mc.issue(a, k, b, at),
-                        Device::Nvm => nvm_mc.issue(a, k, b, at),
-                    },
+                    _ => tiers[dev.index()].issue(a, k, b, at),
                 };
                 if occupy {
                     counters.dma_hdr_slots += 1;
@@ -545,7 +585,7 @@ impl Hmmu {
                 done
             };
             self.dma
-                .start_swap(nvm_page, ma, dram_page, mb, now, &mut issue);
+                .start_swap(deep_page, ma, fast_page, mb, now, &mut issue);
             self.counters.migrations += 1;
             self.counters.migration_bytes += 2 * self.cfg.hmmu.page_bytes;
         }
@@ -599,9 +639,9 @@ mod tests {
         let mut h = hmmu(PolicyKind::Static);
         let dram_bytes = h.config().dram.size_bytes;
         h.access(0, AccessKind::Read, 64, 0);
-        assert_eq!(h.counters.dram_reads, 1);
+        assert_eq!(h.counters.dram_reads(), 1);
         h.access(dram_bytes + 64, AccessKind::Read, 64, 1000);
-        assert_eq!(h.counters.nvm_reads, 1);
+        assert_eq!(h.counters.nvm_reads(), 1);
     }
 
     #[test]
@@ -628,8 +668,8 @@ mod tests {
         for p in 0..(dram_pages + 10) {
             t = h.access(p * page_bytes, AccessKind::Write, 64, t + 100);
         }
-        assert_eq!(h.counters.pages_placed_dram, dram_pages);
-        assert_eq!(h.counters.pages_placed_nvm, 10);
+        assert_eq!(h.counters.pages_placed_dram(), dram_pages);
+        assert_eq!(h.counters.pages_placed_nvm(), 10);
     }
 
     #[test]
@@ -817,6 +857,54 @@ mod tests {
             2 * h.counters.migration_bytes,
             "each migrated byte crosses the link once per direction"
         );
+    }
+
+    #[test]
+    fn three_tier_stack_runs_and_accounts_per_tier() {
+        use crate::config::MemTech;
+        let mut cfg = SystemConfig::default_scaled(64)
+            .with_tiers(&[MemTech::Dram, MemTech::Pcm, MemTech::Xpoint3D])
+            .unwrap();
+        cfg.policy = PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = 1000;
+        let mut h = Hmmu::new(cfg, None);
+        assert_eq!(h.tier_count(), 3);
+        let page_bytes = h.config().hmmu.page_bytes;
+        let total = h.config().total_pages();
+        let mut rng = crate::util::rng::Xoshiro256::new(11);
+        let mut t = 0;
+        for _ in 0..8000 {
+            let p = rng.below(total.min(6000));
+            let kind = if rng.chance(0.3) {
+                AccessKind::Write
+            } else {
+                AccessKind::Read
+            };
+            t = h.access(p * page_bytes, kind, 64, t + 20);
+        }
+        h.drain(t + 10_000_000);
+        h.table.check_invariants().unwrap();
+        // Residency counters sum to mapped pages across all tiers.
+        assert_eq!(
+            h.tier_residency().iter().sum::<u64>(),
+            h.table.mapped_pages()
+        );
+        // Demand requests partition across the three tiers' counters.
+        assert_eq!(h.counters.tier_reads.len(), 3);
+        let device: u64 = h.counters.tier_reads.iter().sum::<u64>()
+            + h.counters.tier_writes.iter().sum::<u64>();
+        assert_eq!(h.counters.total_host_requests(), device);
+        // The footprint overflows ranks 0 and 1, so the deep tier serves
+        // traffic and holds pages.
+        assert!(h.tier_residency()[2] > 0, "deep tier must hold pages");
+        assert!(
+            h.counters.tier_reads[2] + h.counters.tier_writes[2] > 0,
+            "deep tier must serve traffic"
+        );
+        // Wear is tracked per wear-limited tier.
+        assert_eq!(h.tier_wear().len(), 3);
+        assert_eq!(h.tier_wear()[0], 0, "bare DRAM rank tracks no wear");
+        assert!(h.nvm_max_wear() >= h.tier_wear()[2]);
     }
 
     #[test]

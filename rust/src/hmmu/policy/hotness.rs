@@ -24,6 +24,9 @@
 use super::{Device, PlacementPolicy, PolicyView};
 use crate::alloc::Placement;
 
+/// Tier marker for unmapped pages in the per-page tier scratch.
+pub(crate) const TIER_UNMAPPED: u8 = u8::MAX;
+
 /// Exponential decay applied to hotness each epoch.
 pub const HOTNESS_DECAY: f32 = 0.5;
 /// Weight of a write relative to a read (NVM write asymmetry).
@@ -38,6 +41,157 @@ pub struct PolicyStepOutput {
     pub hotness: Vec<f32>,
     pub promote_score: Vec<f32>,
     pub demote_score: Vec<f32>,
+}
+
+/// (score, idx) ordered by score asc then idx desc, so a bounded
+/// min-heap's minimum is the *worst* retained candidate and ties keep
+/// the smaller index (drop larger-index equals first). Shared by the
+/// rank-0 selection and the deeper-boundary cascade so every tier
+/// boundary ranks candidates identically.
+#[derive(PartialEq)]
+struct Cand(f32, u32);
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(other.1.cmp(&self.1))
+    }
+}
+
+/// The **single** bounded-heap pair-selection core shared by the rank-0
+/// boundary ([`HotnessPolicy::select_migrations_into`]) and the deeper
+/// boundaries ([`select_boundary_into`]): one pass over the pages keeps
+/// the top-`k` promote/demote candidates (score desc, index-asc
+/// tie-break), then zips them through the hysteresis gate on raw
+/// hotness. `promote_score`/`demote_score` return `None` for ineligible
+/// pages. `strict_order` declares that candidate order is monotone in
+/// the gate's metric, letting the gate stop at the first failing pair;
+/// pass `false` when candidates are ranked by a *biased* score (the
+/// gate must then examine every pair — a biased ranking is not
+/// hotness-monotone).
+#[allow(clippy::too_many_arguments)]
+fn select_pairs_core(
+    pages: u32,
+    promote_score: &dyn Fn(u32) -> Option<f32>,
+    demote_score: &dyn Fn(u32) -> Option<f32>,
+    hotness: &[f32],
+    k: usize,
+    hysteresis: f32,
+    skip: &dyn Fn(u64) -> bool,
+    strict_order: bool,
+    pairs: &mut Vec<(u64, u64)>,
+) {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    if k == 0 {
+        return;
+    }
+    let mut promote: BinaryHeap<Reverse<Cand>> = BinaryHeap::with_capacity(k + 1);
+    let mut demote: BinaryHeap<Reverse<Cand>> = BinaryHeap::with_capacity(k + 1);
+    for i in 0..pages {
+        if let Some(ps) = promote_score(i) {
+            let better = promote.len() < k
+                || promote.peek().map(|Reverse(c)| Cand(ps, i) > *c).unwrap();
+            if better && !skip(i as u64) {
+                promote.push(Reverse(Cand(ps, i)));
+                if promote.len() > k {
+                    promote.pop();
+                }
+            }
+        }
+        if let Some(ds) = demote_score(i) {
+            let better =
+                demote.len() < k || demote.peek().map(|Reverse(c)| Cand(ds, i) > *c).unwrap();
+            if better && !skip(i as u64) {
+                demote.push(Reverse(Cand(ds, i)));
+                if demote.len() > k {
+                    demote.pop();
+                }
+            }
+        }
+    }
+    // `into_sorted_vec` sorts ascending in `Reverse<Cand>`, i.e.
+    // descending in `Cand`: best candidates first.
+    let promote: Vec<u32> = promote.into_sorted_vec().into_iter().map(|Reverse(c)| c.1).collect();
+    let demote: Vec<u32> = demote.into_sorted_vec().into_iter().map(|Reverse(c)| c.1).collect();
+    for (p, d) in promote.iter().zip(demote.iter()).take(k) {
+        let hot_p = hotness[*p as usize];
+        let hot_d = hotness[*d as usize];
+        // Hysteresis: only swap if the promoted page is decisively hotter.
+        if hot_p > hot_d * hysteresis + 1.0 {
+            pairs.push((*p as u64, *d as u64));
+        } else if strict_order {
+            break; // candidates sorted by the gate metric; later pairs are worse
+        }
+    }
+}
+
+/// Select up to `k` swap pairs `(deep_page, upper_page)` across the tier
+/// boundary directly below rank `upper`: promote candidates are the
+/// hottest pages on rank `upper + 1` (strictly adjacent — the cascade
+/// climbs one rank per epoch; only the rank-0 boundary, which runs the
+/// engine's scores, promotes from any depth), demotion victims the
+/// coldest pages on rank `upper` — the same bounded-heap selection,
+/// tie-breaks and hysteresis rule as the rank-0 boundary (shared
+/// [`select_pairs_core`]). Optional per-page biases, scaled by
+/// `bias_weight` (the wear-aware policy passes its epoch write counts /
+/// lifetime writes with [`super::WEAR_BIAS`]), are added to promote
+/// scores / subtracted from demote scores. Pages for which `skip`
+/// returns true, or that are already in `pairs` from an earlier
+/// boundary this epoch, are excluded; selected pairs are **appended**
+/// to `pairs`.
+#[allow(clippy::too_many_arguments)]
+pub fn select_boundary_into(
+    hotness: &[f32],
+    tier_of: &[u8],
+    upper: u8,
+    k: usize,
+    hysteresis: f32,
+    promote_bias: Option<&[f32]>,
+    demote_bias: Option<&[f32]>,
+    bias_weight: f32,
+    skip: &dyn Fn(u64) -> bool,
+    pairs: &mut Vec<(u64, u64)>,
+) {
+    let taken: Vec<u64> = pairs.iter().flat_map(|&(a, b)| [a, b]).collect();
+    let skip_all = |p: u64| skip(p) || taken.contains(&p);
+    let promote = |i: u32| {
+        if tier_of[i as usize] != upper + 1 {
+            return None;
+        }
+        let ps = hotness[i as usize]
+            + promote_bias.map_or(0.0, |b| bias_weight * b[i as usize]);
+        if ps > 0.0 {
+            Some(ps)
+        } else {
+            None
+        }
+    };
+    let demote = |i: u32| {
+        if tier_of[i as usize] != upper {
+            return None;
+        }
+        Some(-hotness[i as usize] - demote_bias.map_or(0.0, |b| bias_weight * b[i as usize]))
+    };
+    // A biased ranking is not monotone in raw hotness: the gate must
+    // examine every pair instead of breaking at the first failure.
+    let strict_order = promote_bias.is_none() && demote_bias.is_none();
+    select_pairs_core(
+        hotness.len() as u32,
+        &promote,
+        &demote,
+        hotness,
+        k,
+        hysteresis,
+        &skip_all,
+        strict_order,
+        pairs,
+    );
 }
 
 /// The hotness math, swappable between native Rust and the XLA artifact.
@@ -124,19 +278,30 @@ impl HotnessEngine for NativeHotnessEngine {
     }
 }
 
-/// The migration policy driving an engine.
+/// The migration policy driving an engine: hotness promotes toward rank
+/// 0. The rank-0 boundary runs the engine's promote/demote scores
+/// (bit-identical to the two-tier policy); for deeper stacks every lower
+/// boundary additionally cascades — warm pages climb one rank per epoch
+/// ([`select_boundary_into`]) — so a three-tier demotion scenario
+/// (hot→DRAM, warm→PCM, cold→3D XPoint) emerges from the same hotness
+/// state.
 pub struct HotnessPolicy {
     pages: usize,
+    /// Number of tiers in the stack (2 = the classic pair).
+    tiers: usize,
     reads: Vec<f32>,
     writes: Vec<f32>,
     hotness: Vec<f32>,
     /// Residency bitmap scratch, reused across epochs (§Perf: avoids a
     /// page-count allocation per epoch).
     in_dram: Vec<f32>,
+    /// Per-page tier rank scratch ([`TIER_UNMAPPED`] = unplaced), reused
+    /// across epochs; drives the deeper-boundary cascade.
+    tier_of: Vec<u8>,
     /// Selected migration pairs, reused across epochs (§Perf, ROADMAP
     /// item: `epoch` used to allocate a fresh `Vec` per epoch; the buffer
     /// now reaches steady-state capacity — at most `max_migrations`
-    /// entries — and never grows again).
+    /// entries per tier boundary — and never grows again).
     pairs: Vec<(u64, u64)>,
     engine: Box<dyn HotnessEngine>,
     /// Epochs run (for reports).
@@ -145,13 +310,20 @@ pub struct HotnessPolicy {
 
 impl HotnessPolicy {
     pub fn new(pages: u64, engine: Box<dyn HotnessEngine>) -> Self {
+        Self::new_tiered(pages, 2, engine)
+    }
+
+    /// Policy for an `tiers`-deep stack.
+    pub fn new_tiered(pages: u64, tiers: usize, engine: Box<dyn HotnessEngine>) -> Self {
         let pages = pages as usize;
         HotnessPolicy {
             pages,
+            tiers: tiers.max(2),
             reads: vec![0.0; pages],
             writes: vec![0.0; pages],
             hotness: vec![0.0; pages],
             in_dram: vec![0.0; pages],
+            tier_of: vec![TIER_UNMAPPED; pages],
             pairs: Vec::new(),
             engine,
             epochs: 0,
@@ -188,7 +360,8 @@ impl HotnessPolicy {
     }
 
     /// [`Self::select_migrations`] into a caller-provided buffer
-    /// (cleared first) — the allocation-free epoch path.
+    /// (cleared first) — the allocation-free epoch path, riding the
+    /// shared [`select_pairs_core`].
     pub fn select_migrations_into(
         out: &PolicyStepOutput,
         k: usize,
@@ -196,73 +369,36 @@ impl HotnessPolicy {
         skip: &dyn Fn(u64) -> bool,
         pairs: &mut Vec<(u64, u64)>,
     ) {
-        use std::cmp::Reverse;
-        use std::collections::BinaryHeap;
-
-        /// (score, idx) ordered by score asc then idx desc, so the heap
-        /// minimum is the *worst* retained candidate and ties keep the
-        /// smaller index (drop larger-index equals first).
-        #[derive(PartialEq)]
-        struct Cand(f32, u32);
-        impl Eq for Cand {}
-        impl PartialOrd for Cand {
-            fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-                Some(self.cmp(other))
-            }
-        }
-        impl Ord for Cand {
-            fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-                self.0
-                    .total_cmp(&other.0)
-                    .then(other.1.cmp(&self.1))
-            }
-        }
-
         pairs.clear();
-        if k == 0 {
-            return;
-        }
-        let mut promote: BinaryHeap<Reverse<Cand>> = BinaryHeap::with_capacity(k + 1);
-        let mut demote: BinaryHeap<Reverse<Cand>> = BinaryHeap::with_capacity(k + 1);
-        for i in 0..out.promote_score.len() as u32 {
+        let promote = |i: u32| {
             let ps = out.promote_score[i as usize];
             if ps > 0.0 {
-                let better = promote.len() < k
-                    || promote.peek().map(|Reverse(c)| Cand(ps, i) > *c).unwrap();
-                if better && !skip(i as u64) {
-                    promote.push(Reverse(Cand(ps, i)));
-                    if promote.len() > k {
-                        promote.pop();
-                    }
-                }
+                Some(ps)
+            } else {
+                None
             }
+        };
+        let demote = |i: u32| {
             let ds = out.demote_score[i as usize];
             if ds > NEG_INF / 2.0 {
-                let better = demote.len() < k
-                    || demote.peek().map(|Reverse(c)| Cand(ds, i) > *c).unwrap();
-                if better && !skip(i as u64) {
-                    demote.push(Reverse(Cand(ds, i)));
-                    if demote.len() > k {
-                        demote.pop();
-                    }
-                }
-            }
-        }
-        // `into_sorted_vec` sorts ascending in `Reverse<Cand>`, i.e.
-        // descending in `Cand`: best candidates first.
-        let promote: Vec<u32> = promote.into_sorted_vec().into_iter().map(|Reverse(c)| c.1).collect();
-        let demote: Vec<u32> = demote.into_sorted_vec().into_iter().map(|Reverse(c)| c.1).collect();
-
-        for (p, d) in promote.iter().zip(demote.iter()).take(k) {
-            let hot_p = out.hotness[*p as usize];
-            let hot_d = out.hotness[*d as usize];
-            // Hysteresis: only swap if the NVM page is decisively hotter.
-            if hot_p > hot_d * hysteresis + 1.0 {
-                pairs.push((*p as u64, *d as u64));
+                Some(ds)
             } else {
-                break; // candidates are sorted; later pairs are worse
+                None
             }
-        }
+        };
+        select_pairs_core(
+            out.promote_score.len() as u32,
+            &promote,
+            &demote,
+            &out.hotness,
+            k,
+            hysteresis,
+            skip,
+            // Legacy two-tier contract (pinned by the equivalence
+            // batteries): the gate stops at the first failing pair.
+            true,
+            pairs,
+        );
     }
 }
 
@@ -290,11 +426,13 @@ impl PlacementPolicy for HotnessPolicy {
 
     fn epoch(&mut self, view: &PolicyView) -> &[(u64, u64)] {
         self.epochs += 1;
-        // Residency bitmap from the table (scratch buffer reused; the
-        // clears compile to tile-width memsets — same contiguous-chunk
-        // discipline as the engine step).
+        // Residency bitmap + per-page tier ranks from the table (scratch
+        // buffers reused; the clears compile to tile-width memsets —
+        // same contiguous-chunk discipline as the engine step).
         self.in_dram.fill(0.0);
+        self.tier_of.fill(TIER_UNMAPPED);
         for (page, m) in view.table.iter_mapped() {
+            self.tier_of[page as usize] = m.device.rank();
             if m.device == Device::Dram {
                 self.in_dram[page as usize] = 1.0;
             }
@@ -306,6 +444,9 @@ impl PlacementPolicy for HotnessPolicy {
         self.reads.fill(0.0);
         self.writes.fill(0.0);
 
+        // Rank-0 boundary: the engine's promote/demote scores — exactly
+        // the two-tier policy (hot pages anywhere below rank 0 swap with
+        // the coldest rank-0 victims).
         Self::select_migrations_into(
             &out,
             view.max_migrations as usize,
@@ -313,6 +454,23 @@ impl PlacementPolicy for HotnessPolicy {
             view.migrating,
             &mut self.pairs,
         );
+        // Deeper boundaries (no-op for the two-tier stack): warm pages
+        // cascade one rank upward per epoch, each boundary with its own
+        // migration budget.
+        for upper in 1..(self.tiers as u8 - 1) {
+            select_boundary_into(
+                &out.hotness,
+                &self.tier_of,
+                upper,
+                view.max_migrations as usize,
+                HYSTERESIS,
+                None,
+                None,
+                0.0,
+                view.migrating,
+                &mut self.pairs,
+            );
+        }
         self.hotness = out.hotness; // move, not clone (§Perf)
         &self.pairs
     }
@@ -374,7 +532,7 @@ mod tests {
 
     #[test]
     fn hot_nvm_page_promoted_over_cold_dram_page() {
-        let mut t = RedirectionTable::new(8, 4, 8, 4096);
+        let mut t = RedirectionTable::two_tier(8, 4, 8, 4096);
         t.identity_map(); // pages 0-3 DRAM, 4-7 NVM
         let mut p = policy(8);
         // Page 5 (NVM) is hot; page 2 (DRAM) is cold (untouched).
@@ -393,7 +551,7 @@ mod tests {
 
     #[test]
     fn hysteresis_blocks_marginal_swaps() {
-        let mut t = RedirectionTable::new(4, 2, 4, 4096);
+        let mut t = RedirectionTable::two_tier(4, 2, 4, 4096);
         t.identity_map();
         let mut p = policy(4);
         // NVM page 2 barely warmer than DRAM page 0.
@@ -412,7 +570,7 @@ mod tests {
 
     #[test]
     fn counters_reset_and_decay() {
-        let mut t = RedirectionTable::new(4, 2, 4, 4096);
+        let mut t = RedirectionTable::two_tier(4, 2, 4, 4096);
         t.identity_map();
         let mut p = policy(4);
         for _ in 0..64 {
@@ -427,7 +585,7 @@ mod tests {
 
     #[test]
     fn migrating_pages_skipped() {
-        let mut t = RedirectionTable::new(8, 4, 8, 4096);
+        let mut t = RedirectionTable::two_tier(8, 4, 8, 4096);
         t.identity_map();
         let mut p = policy(8);
         for _ in 0..100 {
@@ -488,7 +646,7 @@ mod tests {
         // Hammer the policy so every epoch selects the full migration cap:
         // the recycled pair buffer must reach k capacity once and never
         // grow again (zero steady-state allocation, ROADMAP item).
-        let mut t = RedirectionTable::new(64, 32, 32, 4096);
+        let mut t = RedirectionTable::two_tier(64, 32, 32, 4096);
         t.identity_map(); // 0-31 DRAM, 32-63 NVM
         let mut p = policy(64);
         let mut warm = 0usize;
@@ -514,8 +672,76 @@ mod tests {
     }
 
     #[test]
+    fn three_tier_cascade_promotes_warm_pages_one_rank() {
+        // 4 DRAM + 4 tier-1 + 8 tier-2 frames, identity mapped. DRAM is
+        // scorching (no rank-0 swap clears hysteresis); a warm tier-2
+        // page must still climb into tier 1 via the boundary-1 cascade.
+        let mut t = RedirectionTable::new(16, &[4, 4, 8], 4096);
+        t.identity_map();
+        let mut p = HotnessPolicy::new_tiered(16, 3, Box::new(NativeHotnessEngine));
+        for d in 0..4u64 {
+            for _ in 0..100 {
+                p.record_access(d, false);
+            }
+        }
+        for _ in 0..20 {
+            p.record_access(8, false); // warm page deep in tier 2
+        }
+        let pairs = p.epoch(&view(&t));
+        assert_eq!(
+            pairs,
+            vec![(8, 4)],
+            "warm tier-2 page swaps with the coldest tier-1 page"
+        );
+    }
+
+    #[test]
+    fn cascade_never_selects_a_page_twice() {
+        // A scorching tier-2 page wins the rank-0 boundary; the deeper
+        // boundary must skip it (already paired) and promote the next
+        // warm page instead.
+        let mut t = RedirectionTable::new(16, &[4, 4, 8], 4096);
+        t.identity_map();
+        let mut p = HotnessPolicy::new_tiered(16, 3, Box::new(NativeHotnessEngine));
+        for d in 0..4u64 {
+            for _ in 0..100 {
+                p.record_access(d, false); // DRAM warm: hysteresis bar is high
+            }
+        }
+        for _ in 0..300 {
+            p.record_access(8, false); // hot: clears the rank-0 bar
+        }
+        for _ in 0..50 {
+            p.record_access(9, false); // warm: blocked at rank 0, cascades
+        }
+        let pairs = p.epoch(&view(&t)).to_vec();
+        let mut seen = std::collections::HashSet::new();
+        for &(a, b) in &pairs {
+            assert!(seen.insert(a), "page {a} selected twice: {pairs:?}");
+            assert!(seen.insert(b), "page {b} selected twice: {pairs:?}");
+        }
+        assert!(pairs.contains(&(8, 0)), "hot page promotes to rank 0: {pairs:?}");
+        assert!(pairs.contains(&(9, 4)), "warm page cascades to rank 1: {pairs:?}");
+    }
+
+    #[test]
+    fn two_tier_stack_runs_no_cascade() {
+        // With two tiers the cascade loop is empty: `new` and
+        // `new_tiered(.., 2, ..)` make identical decisions.
+        let mut t = RedirectionTable::new(8, &[4, 8], 4096);
+        t.identity_map();
+        let mut a = policy(8);
+        let mut b = HotnessPolicy::new_tiered(8, 2, Box::new(NativeHotnessEngine));
+        for pg in [5u64, 5, 5, 6, 0] {
+            a.record_access(pg, false);
+            b.record_access(pg, false);
+        }
+        assert_eq!(a.epoch(&view(&t)), b.epoch(&view(&t)));
+    }
+
+    #[test]
     fn respects_migration_cap() {
-        let mut t = RedirectionTable::new(64, 32, 32, 4096);
+        let mut t = RedirectionTable::two_tier(64, 32, 32, 4096);
         t.identity_map();
         let mut p = policy(64);
         for page in 32..64 {

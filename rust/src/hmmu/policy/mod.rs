@@ -15,8 +15,8 @@ mod wear_aware;
 pub use first_touch::FirstTouchPolicy;
 pub use hints_policy::HintsPolicy;
 pub use hotness::{
-    HotnessEngine, HotnessPolicy, NativeHotnessEngine, PolicyStepOutput, HOTNESS_DECAY,
-    HOTNESS_TILE, NEG_INF, WRITE_WEIGHT,
+    select_boundary_into, HotnessEngine, HotnessPolicy, NativeHotnessEngine, PolicyStepOutput,
+    HOTNESS_DECAY, HOTNESS_TILE, NEG_INF, WRITE_WEIGHT,
 };
 pub use static_split::StaticPolicy;
 pub use wear_aware::{WearAwarePolicy, WEAR_BIAS};
@@ -119,19 +119,22 @@ impl PolicyImpl {
     }
 }
 
-/// Build the configured policy. `engine` supplies the hotness math
-/// (native or AOT-XLA); ignored by the stateless policies.
+/// Build the configured policy for the config's tier stack. `engine`
+/// supplies the hotness math (native or AOT-XLA); ignored by the
+/// stateless policies.
 pub fn build_policy(cfg: &SystemConfig, engine: Option<Box<dyn HotnessEngine>>) -> PolicyImpl {
     let pages = cfg.total_pages();
+    let tiers = cfg.tier_count();
     match cfg.policy {
-        PolicyKind::Static => PolicyImpl::Static(StaticPolicy::new(cfg.dram_pages())),
+        PolicyKind::Static => PolicyImpl::Static(StaticPolicy::new_tiered(&cfg.tier_pages())),
         PolicyKind::FirstTouch => PolicyImpl::FirstTouch(FirstTouchPolicy::new()),
         PolicyKind::Hints => PolicyImpl::Hints(HintsPolicy::new()),
-        PolicyKind::Hotness => PolicyImpl::Hotness(HotnessPolicy::new(
+        PolicyKind::Hotness => PolicyImpl::Hotness(HotnessPolicy::new_tiered(
             pages,
+            tiers,
             engine.unwrap_or_else(|| Box::new(NativeHotnessEngine)),
         )),
-        PolicyKind::WearAware => PolicyImpl::WearAware(WearAwarePolicy::new(pages)),
+        PolicyKind::WearAware => PolicyImpl::WearAware(WearAwarePolicy::new_tiered(pages, tiers)),
     }
 }
 

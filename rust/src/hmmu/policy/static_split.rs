@@ -1,17 +1,40 @@
-//! Static address-split policy: host pages below the DRAM capacity live
-//! in DRAM, the rest in NVM; no migration ever. The trivial baseline —
-//! equivalent to the redirection table's identity mapping.
+//! Static address-split policy: the flat host space is carved across the
+//! tier stack in rank order by capacity — host pages below the rank-0
+//! capacity live there, the next span on rank 1, and so on; no migration
+//! ever. The trivial baseline — equivalent to the redirection table's
+//! identity mapping.
 
 use super::{Device, PlacementPolicy, PolicyView};
 use crate::alloc::Placement;
+use crate::hmmu::redirection::TierId;
 
 pub struct StaticPolicy {
-    dram_pages: u64,
+    /// Cumulative page-count boundaries, rank order: a page below
+    /// `bounds[t]` (and not below `bounds[t-1]`) lives on tier `t`.
+    bounds: Vec<u64>,
 }
 
 impl StaticPolicy {
+    /// Two-tier constructor (the legacy call shape): everything below
+    /// `dram_pages` is rank 0, the rest rank 1.
     pub fn new(dram_pages: u64) -> Self {
-        StaticPolicy { dram_pages }
+        StaticPolicy {
+            bounds: vec![dram_pages, u64::MAX],
+        }
+    }
+
+    /// Stack-generic constructor from per-tier page counts, rank order.
+    pub fn new_tiered(tier_pages: &[u64]) -> Self {
+        let mut bounds = Vec::with_capacity(tier_pages.len());
+        let mut cum = 0u64;
+        for &p in tier_pages {
+            cum += p;
+            bounds.push(cum);
+        }
+        if let Some(last) = bounds.last_mut() {
+            *last = u64::MAX; // the table falls back when the last tier fills
+        }
+        StaticPolicy { bounds }
     }
 }
 
@@ -21,11 +44,12 @@ impl PlacementPolicy for StaticPolicy {
     }
 
     fn place(&mut self, page: u64, _hint: Placement) -> Device {
-        if page < self.dram_pages {
-            Device::Dram
-        } else {
-            Device::Nvm
-        }
+        let rank = self
+            .bounds
+            .iter()
+            .position(|&b| page < b)
+            .unwrap_or(self.bounds.len() - 1);
+        TierId(rank as u8)
     }
 
     fn record_access(&mut self, _page: u64, _is_write: bool) {}
@@ -43,11 +67,36 @@ mod tests {
     #[test]
     fn splits_at_capacity() {
         let mut p = StaticPolicy::new(100);
-        assert_eq!(p.place(0, Placement::Any), Device::Dram);
-        assert_eq!(p.place(99, Placement::Any), Device::Dram);
-        assert_eq!(p.place(100, Placement::Any), Device::Nvm);
+        assert_eq!(p.place(0, Placement::Any), TierId::Dram);
+        assert_eq!(p.place(99, Placement::Any), TierId::Dram);
+        assert_eq!(p.place(100, Placement::Any), TierId::Nvm);
         // Hints ignored by design.
-        assert_eq!(p.place(500, Placement::PreferDram), Device::Nvm);
+        assert_eq!(p.place(500, Placement::PreferDram), TierId::Nvm);
+    }
+
+    #[test]
+    fn tiered_split_matches_cumulative_capacities() {
+        let mut p = StaticPolicy::new_tiered(&[4, 4, 8]);
+        assert_eq!(p.place(3, Placement::Any), TierId(0));
+        assert_eq!(p.place(4, Placement::Any), TierId(1));
+        assert_eq!(p.place(7, Placement::Any), TierId(1));
+        assert_eq!(p.place(8, Placement::Any), TierId(2));
+        assert_eq!(p.place(15, Placement::Any), TierId(2));
+        // Beyond the stack: stays on the last rank (table falls back).
+        assert_eq!(p.place(99, Placement::Any), TierId(2));
+    }
+
+    #[test]
+    fn two_tier_constructors_agree() {
+        let mut legacy = StaticPolicy::new(10);
+        let mut tiered = StaticPolicy::new_tiered(&[10, 90]);
+        for page in [0u64, 5, 9, 10, 50, 99, 1000] {
+            assert_eq!(
+                legacy.place(page, Placement::Any),
+                tiered.place(page, Placement::Any),
+                "page {page}"
+            );
+        }
     }
 
     #[test]
@@ -56,7 +105,7 @@ mod tests {
         for page in 0..1000 {
             p.record_access(page % 20, true);
         }
-        let t = RedirectionTable::new(20, 10, 10, 4096);
+        let t = RedirectionTable::two_tier(20, 10, 10, 4096);
         let not_migrating = |_: u64| false;
         let v = PolicyView {
             table: &t,

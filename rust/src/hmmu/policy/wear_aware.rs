@@ -1,22 +1,29 @@
 //! Wear-aware hotness policy — an extension the paper's Table I
-//! motivates: 3D XPoint endures ~10⁹ writes/cell, so a migration policy
-//! should keep *write-hot* pages out of NVM even when their total
-//! hotness is moderate, and prefer *read-mostly* pages as demotion
-//! victims.
+//! motivates: 3D XPoint endures ~10⁹ writes/cell (PCM an order of
+//! magnitude less), so a migration policy should keep *write-hot* pages
+//! out of the wear-limited tiers even when their total hotness is
+//! moderate, and prefer *read-mostly* pages as demotion victims.
 //!
 //! Scoring (on top of the base hotness math):
 //!
 //! ```text
-//! promote_score += WEAR_BIAS * write_rate        (write-hot NVM pages first)
+//! promote_score += WEAR_BIAS * write_rate        (write-hot pages climb first)
 //! demote_score  -= WEAR_BIAS * lifetime_writes   (never demote write-hot pages)
 //! ```
 //!
+//! On a deep stack the same biases drive every tier boundary
+//! ([`select_boundary_into`]): write-hot pages are pulled up out of
+//! *all* wear-limited ranks, spreading write pressure toward rank 0,
+//! and historically write-hot upper-tier pages are never pushed down.
 //! The ablation bench compares NVM max-wear under hotness vs wear-aware.
 
-use super::hotness::{HotnessEngine, NativeHotnessEngine, NEG_INF};
+use super::hotness::{
+    select_boundary_into, HotnessEngine, NativeHotnessEngine, NEG_INF, TIER_UNMAPPED,
+};
 use super::{Device, PlacementPolicy, PolicyView};
 use crate::alloc::Placement;
 use crate::hmmu::policy::HotnessPolicy;
+use crate::hmmu::redirection::TierId;
 
 /// Weight of write activity in the wear-adjusted scores.
 pub const WEAR_BIAS: f32 = 4.0;
@@ -24,6 +31,8 @@ pub const WEAR_BIAS: f32 = 4.0;
 /// Wear-aware epoch-migration policy.
 pub struct WearAwarePolicy {
     pages: usize,
+    /// Number of tiers in the stack (2 = the classic pair).
+    tiers: usize,
     reads: Vec<f32>,
     writes: Vec<f32>,
     /// Lifetime write counts (never reset — proxies frame wear).
@@ -31,6 +40,9 @@ pub struct WearAwarePolicy {
     hotness: Vec<f32>,
     /// Residency bitmap scratch, reused across epochs (§Perf).
     in_dram: Vec<f32>,
+    /// Per-page tier rank scratch, reused across epochs (drives the
+    /// deeper-boundary cascade).
+    tier_of: Vec<u8>,
     /// Selected migration pairs, reused across epochs (§Perf, ROADMAP
     /// item — see [`HotnessPolicy`]).
     pairs: Vec<(u64, u64)>,
@@ -40,14 +52,21 @@ pub struct WearAwarePolicy {
 
 impl WearAwarePolicy {
     pub fn new(pages: u64) -> Self {
+        Self::new_tiered(pages, 2)
+    }
+
+    /// Policy for a `tiers`-deep stack.
+    pub fn new_tiered(pages: u64, tiers: usize) -> Self {
         let pages = pages as usize;
         WearAwarePolicy {
             pages,
+            tiers: tiers.max(2),
             reads: vec![0.0; pages],
             writes: vec![0.0; pages],
             lifetime_writes: vec![0.0; pages],
             hotness: vec![0.0; pages],
             in_dram: vec![0.0; pages],
+            tier_of: vec![TIER_UNMAPPED; pages],
             pairs: Vec::new(),
             engine: Box::new(NativeHotnessEngine),
             epochs: 0,
@@ -68,8 +87,8 @@ impl PlacementPolicy for WearAwarePolicy {
 
     fn place(&mut self, _page: u64, hint: Placement) -> Device {
         match hint {
-            Placement::PreferNvm => Device::Nvm,
-            _ => Device::Dram,
+            Placement::PreferNvm => TierId::Nvm,
+            _ => TierId::Dram,
         }
     }
 
@@ -86,7 +105,9 @@ impl PlacementPolicy for WearAwarePolicy {
     fn epoch(&mut self, view: &PolicyView) -> &[(u64, u64)] {
         self.epochs += 1;
         self.in_dram.fill(0.0);
+        self.tier_of.fill(TIER_UNMAPPED);
         for (page, m) in view.table.iter_mapped() {
+            self.tier_of[page as usize] = m.device.rank();
             if m.device == Device::Dram {
                 self.in_dram[page as usize] = 1.0;
             }
@@ -106,9 +127,7 @@ impl PlacementPolicy for WearAwarePolicy {
             }
         }
 
-        self.reads.iter_mut().for_each(|x| *x = 0.0);
-        self.writes.iter_mut().for_each(|x| *x = 0.0);
-
+        // Rank-0 boundary: exactly the two-tier wear-aware selection.
         HotnessPolicy::select_migrations_into(
             &out,
             view.max_migrations as usize,
@@ -116,6 +135,26 @@ impl PlacementPolicy for WearAwarePolicy {
             view.migrating,
             &mut self.pairs,
         );
+        // Deeper boundaries (no-op for two tiers): the same wear biases
+        // pull write-hot pages up out of every wear-limited rank and
+        // protect historically write-hot upper-tier pages from demotion.
+        for upper in 1..(self.tiers as u8 - 1) {
+            select_boundary_into(
+                &out.hotness,
+                &self.tier_of,
+                upper,
+                view.max_migrations as usize,
+                super::hotness::HYSTERESIS,
+                Some(&self.writes),
+                Some(&self.lifetime_writes),
+                WEAR_BIAS,
+                view.migrating,
+                &mut self.pairs,
+            );
+        }
+
+        self.reads.iter_mut().for_each(|x| *x = 0.0);
+        self.writes.iter_mut().for_each(|x| *x = 0.0);
         self.hotness = out.hotness; // move, not clone (§Perf)
         &self.pairs
     }
@@ -136,7 +175,7 @@ mod tests {
 
     #[test]
     fn write_hot_nvm_page_promoted_over_read_hot() {
-        let mut t = RedirectionTable::new(8, 4, 8, 4096);
+        let mut t = RedirectionTable::two_tier(8, 4, 8, 4096);
         t.identity_map(); // 0-3 DRAM, 4-7 NVM
         let mut p = WearAwarePolicy::new(8);
         // Page 4: 30 reads. Page 5: 20 writes (less raw hotness than 40
@@ -158,7 +197,7 @@ mod tests {
 
     #[test]
     fn write_hot_dram_page_never_demoted() {
-        let mut t = RedirectionTable::new(8, 4, 8, 4096);
+        let mut t = RedirectionTable::two_tier(8, 4, 8, 4096);
         t.identity_map();
         let mut p = WearAwarePolicy::new(8);
         // DRAM page 0 is write-hot historically; pages 1-3 idle.
@@ -180,7 +219,7 @@ mod tests {
     fn epoch_pair_buffer_reaches_steady_state() {
         // Same zero-steady-state-growth contract as HotnessPolicy: the
         // recycled pair buffer caps at k and never grows after warmup.
-        let mut t = RedirectionTable::new(64, 32, 32, 4096);
+        let mut t = RedirectionTable::two_tier(64, 32, 32, 4096);
         t.identity_map();
         let mut p = WearAwarePolicy::new(64);
         let v = PolicyView {
@@ -207,7 +246,7 @@ mod tests {
 
     #[test]
     fn lifetime_writes_persist_across_epochs() {
-        let mut t = RedirectionTable::new(4, 2, 4, 4096);
+        let mut t = RedirectionTable::two_tier(4, 2, 4, 4096);
         t.identity_map();
         let mut p = WearAwarePolicy::new(4);
         for _ in 0..10 {
@@ -217,5 +256,37 @@ mod tests {
         // Epoch counters reset, lifetime persists.
         assert_eq!(p.writes[0], 0.0);
         assert_eq!(p.lifetime_writes[0], 10.0);
+    }
+
+    #[test]
+    fn deep_stack_cascade_pulls_write_hot_pages_up() {
+        // 2+2+4 stack: tier-2 page 5 is write-hot, page 4 read-warm with
+        // slightly higher raw hotness; tier-1 victims idle. The wear bias
+        // must rank the write-hot page first at the boundary-1 cascade.
+        let mut t = RedirectionTable::new(8, &[2, 2, 4], 4096);
+        t.identity_map(); // 0-1 tier0, 2-3 tier1, 4-7 tier2
+        let mut p = WearAwarePolicy::new_tiered(8, 3);
+        // Keep DRAM hot so the rank-0 boundary stays closed.
+        for d in 0..2u64 {
+            for _ in 0..200 {
+                p.record_access(d, false);
+            }
+        }
+        for _ in 0..30 {
+            p.record_access(4, false); // read-warm: hotness 30
+        }
+        for _ in 0..12 {
+            p.record_access(5, true); // write-hot: hotness 24, bias +48
+        }
+        let pairs = p.epoch(&view(&t)).to_vec();
+        assert!(!pairs.is_empty(), "cascade must fire");
+        assert_eq!(
+            pairs[0].0, 5,
+            "write-hot tier-2 page must climb first: {pairs:?}"
+        );
+        assert!(
+            pairs[0].1 == 2 || pairs[0].1 == 3,
+            "victim must come from tier 1: {pairs:?}"
+        );
     }
 }

@@ -1,100 +1,140 @@
 //! Address redirection table — the paper's §III-B "heterogeneity
-//! transparency" mechanism.
+//! transparency" mechanism, generalized to an N-tier stack.
 //!
 //! The OS sees one flat physical space (the BAR window); the HMMU
-//! translates each host page to a *device frame* (DRAM or NVM). The
-//! mapping is the mutable core of every placement policy, and page
-//! migration is a frame swap in this table.
+//! translates each host page to a *device frame* in one of the stack's
+//! tiers (rank 0 = fastest). The mapping is the mutable core of every
+//! placement policy, and page migration is a frame swap in this table.
+//! Frame pools and residency counters are **per tier** — the binary
+//! `dram`/`nvm` pair is just the two-tier special case.
 
 use crate::bail;
 use crate::util::error::Result;
 
-/// Which memory device backs a frame.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Device {
-    Dram,
-    Nvm,
+/// A tier of the memory stack, by rank (0 = fastest). The legacy
+/// two-tier names survive as associated constants: `TierId::Dram` is
+/// rank 0, `TierId::Nvm` rank 1 — so `Device::Dram`-style call sites
+/// keep compiling against the [`Device`] alias.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TierId(pub u8);
+
+/// Legacy alias: the binary device type, generalized to N tiers.
+pub type Device = TierId;
+
+#[allow(non_upper_case_globals)]
+impl TierId {
+    /// Rank-0 (DRAM-class) tier — the legacy two-tier name.
+    pub const Dram: TierId = TierId(0);
+    /// Rank-1 tier — the legacy two-tier "NVM" name.
+    pub const Nvm: TierId = TierId(1);
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    #[inline]
+    pub fn rank(self) -> u8 {
+        self.0
+    }
+
+    pub fn name(&self) -> &'static str {
+        const NAMES: [&str; 8] = [
+            "DRAM", "NVM", "TIER2", "TIER3", "TIER4", "TIER5", "TIER6", "TIER7",
+        ];
+        NAMES[self.0 as usize]
+    }
 }
 
-impl Device {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Device::Dram => "DRAM",
-            Device::Nvm => "NVM",
+impl std::fmt::Debug for TierId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Keep the legacy enum-style rendering for the two-tier names.
+        match self.0 {
+            0 => f.write_str("Dram"),
+            1 => f.write_str("Nvm"),
+            n => write!(f, "Tier{n}"),
         }
     }
 }
 
-/// Packed table entry: device bit + frame index (u32 capped: 16 TiB of 4K
-/// pages is far beyond the platform).
+/// Packed table entry: tier rank + frame index.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Mapping {
-    pub device: Device,
+    pub device: TierId,
     pub frame: u32,
 }
 
 const UNMAPPED: u32 = u32::MAX;
+/// Bits of a packed entry that hold the frame index; the top 3 bits hold
+/// the tier rank (`config::MAX_TIERS` = 8). 2^28 4K frames = 1 TiB per
+/// tier — far beyond the platform.
+const FRAME_BITS: u32 = 28;
+const FRAME_MASK: u32 = (1 << FRAME_BITS) - 1;
 
-/// Host-page → device-frame redirection table with frame free lists.
+/// Host-page → tier-frame redirection table with per-tier frame free
+/// lists and residency counters.
 #[derive(Clone, Debug)]
 pub struct RedirectionTable {
     page_bytes: u64,
-    /// Packed entries: high bit = device (1 = NVM), low 31 bits = frame;
+    /// Packed entries: bits 28..31 = tier rank, bits 0..27 = frame;
     /// `UNMAPPED` = not yet placed.
     entries: Vec<u32>,
-    free_dram: Vec<u32>,
-    free_nvm: Vec<u32>,
-    dram_frames: u32,
-    nvm_frames: u32,
-    /// Mapped-page count, maintained on place (§Perf: keeps
-    /// `dram_residency()` O(1) instead of a full-table walk per report).
+    /// Per-tier free frame lists (popped from the back → low frames
+    /// allocate first).
+    free: Vec<Vec<u32>>,
+    /// Frame capacity per tier.
+    frames: Vec<u32>,
+    /// Mapped-page count, maintained on place (§Perf: keeps residency
+    /// reporting O(1) instead of a full-table walk).
     mapped: u64,
-    /// Mapped pages currently backed by DRAM, maintained on place/swap.
-    dram_resident: u64,
+    /// Mapped pages currently backed by each tier, maintained on
+    /// place/swap; sums to `mapped`.
+    resident: Vec<u64>,
 }
 
 impl RedirectionTable {
-    /// `host_pages` = size of the flat space; frames per device from the
-    /// device capacities. Pages start **unmapped** (policies place them on
-    /// first touch) unless [`Self::identity_map`] is called.
-    pub fn new(host_pages: u64, dram_frames: u32, nvm_frames: u32, page_bytes: u64) -> Self {
-        assert!(host_pages <= (dram_frames as u64 + nvm_frames as u64));
+    /// `host_pages` = size of the flat space; `tier_frames` = frame
+    /// capacity per tier, rank order. Pages start **unmapped** (policies
+    /// place them on first touch) unless [`Self::identity_map`] is
+    /// called.
+    pub fn new(host_pages: u64, tier_frames: &[u32], page_bytes: u64) -> Self {
+        assert!(
+            (2..=crate::config::MAX_TIERS).contains(&tier_frames.len()),
+            "tier stack must hold 2..=8 tiers"
+        );
+        assert!(
+            tier_frames.iter().all(|&f| f < FRAME_MASK),
+            "tier frame count exceeds the packed-entry range"
+        );
+        assert!(host_pages <= tier_frames.iter().map(|&f| f as u64).sum());
         // Free lists popped from the back → allocate low frames first.
-        let free_dram: Vec<u32> = (0..dram_frames).rev().collect();
-        let free_nvm: Vec<u32> = (0..nvm_frames).rev().collect();
+        let free: Vec<Vec<u32>> = tier_frames.iter().map(|&f| (0..f).rev().collect()).collect();
         RedirectionTable {
             page_bytes,
             entries: vec![UNMAPPED; host_pages as usize],
-            free_dram,
-            free_nvm,
-            dram_frames,
-            nvm_frames,
+            free,
+            frames: tier_frames.to_vec(),
             mapped: 0,
-            dram_resident: 0,
+            resident: vec![0; tier_frames.len()],
         }
+    }
+
+    /// Two-tier convenience constructor (the legacy call shape).
+    pub fn two_tier(host_pages: u64, dram_frames: u32, nvm_frames: u32, page_bytes: u64) -> Self {
+        Self::new(host_pages, &[dram_frames, nvm_frames], page_bytes)
     }
 
     #[inline]
     fn pack(m: Mapping) -> u32 {
-        debug_assert!(m.frame < (1 << 31));
-        match m.device {
-            Device::Dram => m.frame,
-            Device::Nvm => m.frame | 0x8000_0000,
-        }
+        debug_assert!(m.frame < FRAME_MASK);
+        ((m.device.0 as u32) << FRAME_BITS) | m.frame
     }
 
     #[inline]
     fn unpack(e: u32) -> Mapping {
-        if e & 0x8000_0000 != 0 {
-            Mapping {
-                device: Device::Nvm,
-                frame: e & 0x7FFF_FFFF,
-            }
-        } else {
-            Mapping {
-                device: Device::Dram,
-                frame: e,
-            }
+        Mapping {
+            device: TierId((e >> FRAME_BITS) as u8),
+            frame: e & FRAME_MASK,
         }
     }
 
@@ -106,31 +146,43 @@ impl RedirectionTable {
         self.page_bytes
     }
 
-    /// Identity mapping: host pages below the DRAM capacity map to DRAM
-    /// frames 1:1, the rest to NVM frames (the paper's "straightforward
-    /// approach" / the static policy's starting point).
+    /// Number of tiers in the stack.
+    pub fn tiers(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Identity mapping: host pages fill the tiers in rank order 1:1
+    /// (the paper's "straightforward approach" / the static policy's
+    /// starting point).
     pub fn identity_map(&mut self) {
-        for page in 0..self.entries.len() as u64 {
-            let m = if page < self.dram_frames as u64 {
-                Mapping {
-                    device: Device::Dram,
-                    frame: page as u32,
-                }
-            } else {
-                Mapping {
-                    device: Device::Nvm,
-                    frame: (page - self.dram_frames as u64) as u32,
-                }
-            };
-            self.entries[page as usize] = Self::pack(m);
+        self.resident.fill(0);
+        let mut tier = 0usize;
+        let mut next_frame = 0u32;
+        for page in 0..self.entries.len() {
+            while next_frame >= self.frames[tier] {
+                tier += 1;
+                next_frame = 0;
+            }
+            self.entries[page] = Self::pack(Mapping {
+                device: TierId(tier as u8),
+                frame: next_frame,
+            });
+            self.resident[tier] += 1;
+            next_frame += 1;
         }
-        self.free_dram.clear();
-        self.free_nvm.clear();
-        // Leftover NVM frames stay free.
-        let used_nvm = self.entries.len() as u64 - self.dram_frames as u64;
-        self.free_nvm = ((used_nvm as u32)..self.nvm_frames).rev().collect();
+        // Remaining frames of the partially-filled tier and every deeper
+        // tier stay free.
+        for (t, f) in self.free.iter_mut().enumerate() {
+            let used = if t < tier {
+                self.frames[t]
+            } else if t == tier {
+                next_frame
+            } else {
+                0
+            };
+            *f = (used..self.frames[t]).rev().collect();
+        }
         self.mapped = self.entries.len() as u64;
-        self.dram_resident = self.mapped.min(self.dram_frames as u64);
     }
 
     /// Look up a host page; `None` if unmapped.
@@ -144,58 +196,42 @@ impl RedirectionTable {
         }
     }
 
-    /// Translate a host address to (device, device address).
+    /// Translate a host address to (tier, device address).
     #[inline]
-    pub fn translate(&self, addr: u64) -> Option<(Device, u64)> {
+    pub fn translate(&self, addr: u64) -> Option<(TierId, u64)> {
         let page = addr / self.page_bytes;
         let off = addr % self.page_bytes;
         self.lookup(page)
             .map(|m| (m.device, m.frame as u64 * self.page_bytes + off))
     }
 
-    /// Place an unmapped page on `device`; falls back to the other device
-    /// when full. Returns the final mapping.
-    pub fn place(&mut self, page: u64, device: Device) -> Result<Mapping> {
+    /// Place an unmapped page on `tier`, falling back when it is full:
+    /// first down the stack (slower ranks — overflow demotes rather than
+    /// stealing faster frames), then up. For a two-tier stack this is
+    /// exactly the legacy behavior (DRAM→NVM, NVM→DRAM). Returns the
+    /// final mapping.
+    pub fn place(&mut self, page: u64, tier: TierId) -> Result<Mapping> {
         if self.entries[page as usize] != UNMAPPED {
             bail!("page {page} already mapped");
         }
-        let m = match device {
-            Device::Dram => {
-                if let Some(f) = self.free_dram.pop() {
-                    Mapping {
-                        device: Device::Dram,
-                        frame: f,
-                    }
-                } else if let Some(f) = self.free_nvm.pop() {
-                    Mapping {
-                        device: Device::Nvm,
-                        frame: f,
-                    }
-                } else {
-                    bail!("no free frames");
-                }
+        let start = tier.index().min(self.tiers() - 1);
+        let order = (start..self.tiers()).chain((0..start).rev());
+        let mut found = None;
+        for t in order {
+            if let Some(f) = self.free[t].pop() {
+                found = Some(Mapping {
+                    device: TierId(t as u8),
+                    frame: f,
+                });
+                break;
             }
-            Device::Nvm => {
-                if let Some(f) = self.free_nvm.pop() {
-                    Mapping {
-                        device: Device::Nvm,
-                        frame: f,
-                    }
-                } else if let Some(f) = self.free_dram.pop() {
-                    Mapping {
-                        device: Device::Dram,
-                        frame: f,
-                    }
-                } else {
-                    bail!("no free frames");
-                }
-            }
+        }
+        let Some(m) = found else {
+            bail!("no free frames");
         };
         self.entries[page as usize] = Self::pack(m);
         self.mapped += 1;
-        if m.device == Device::Dram {
-            self.dram_resident += 1;
-        }
+        self.resident[m.device.index()] += 1;
         Ok(m)
     }
 
@@ -212,12 +248,17 @@ impl RedirectionTable {
         Ok(())
     }
 
+    /// Free frames currently available on `tier`.
+    pub fn free_frames(&self, tier: TierId) -> usize {
+        self.free[tier.index()].len()
+    }
+
     pub fn free_dram_frames(&self) -> usize {
-        self.free_dram.len()
+        self.free_frames(TierId::Dram)
     }
 
     pub fn free_nvm_frames(&self) -> usize {
-        self.free_nvm.len()
+        self.free_frames(TierId::Nvm)
     }
 
     /// Count of mapped pages — O(1), maintained on place.
@@ -225,19 +266,36 @@ impl RedirectionTable {
         self.mapped
     }
 
-    /// Count of mapped pages currently backed by DRAM — O(1), maintained
-    /// on place/swap (§Perf: was a full-table scan per call).
-    pub fn dram_resident_pages(&self) -> u64 {
-        self.dram_resident
+    /// Mapped pages currently backed by `tier` — O(1), maintained on
+    /// place (swaps conserve the per-tier counts).
+    pub fn resident_pages(&self, tier: TierId) -> u64 {
+        self.resident[tier.index()]
     }
 
-    /// Full-table recount of DRAM-resident pages; tests pin the O(1)
-    /// counter against this.
-    pub fn recount_dram_resident(&self) -> u64 {
+    /// Per-tier residency counts, rank order; sums to
+    /// [`Self::mapped_pages`].
+    pub fn residency(&self) -> &[u64] {
+        &self.resident
+    }
+
+    /// Count of mapped pages currently backed by rank 0 — the legacy
+    /// accessor.
+    pub fn dram_resident_pages(&self) -> u64 {
+        self.resident[0]
+    }
+
+    /// Full-table recount of pages resident on `tier`; tests pin the
+    /// O(1) counters against this.
+    pub fn recount_resident(&self, tier: TierId) -> u64 {
         self.entries
             .iter()
-            .filter(|&&e| e != UNMAPPED && e & 0x8000_0000 == 0)
+            .filter(|&&e| e != UNMAPPED && Self::unpack(e).device == tier)
             .count() as u64
+    }
+
+    /// Legacy rank-0 recount.
+    pub fn recount_dram_resident(&self) -> u64 {
+        self.recount_resident(TierId::Dram)
     }
 
     /// Iterate mapped (page, mapping) pairs.
@@ -252,44 +310,49 @@ impl RedirectionTable {
     }
 
     /// Invariant check (used by property tests): every mapped frame is
-    /// unique per device and no mapped frame is also on a free list.
+    /// unique per tier, no mapped frame is also on a free list, and the
+    /// O(1) counters match a full recount (per-tier residency sums to
+    /// the mapped count by construction).
     pub fn check_invariants(&self) -> Result<()> {
-        let mut dram_seen = vec![false; self.dram_frames as usize];
-        let mut nvm_seen = vec![false; self.nvm_frames as usize];
+        let mut seen: Vec<Vec<bool>> =
+            self.frames.iter().map(|&f| vec![false; f as usize]).collect();
         for &e in &self.entries {
             if e == UNMAPPED {
                 continue;
             }
             let m = Self::unpack(e);
-            let seen = match m.device {
-                Device::Dram => &mut dram_seen[m.frame as usize],
-                Device::Nvm => &mut nvm_seen[m.frame as usize],
-            };
-            if *seen {
+            if m.device.index() >= self.tiers() || m.frame >= self.frames[m.device.index()] {
+                bail!("entry {:?}:{} out of range", m.device, m.frame);
+            }
+            let s = &mut seen[m.device.index()][m.frame as usize];
+            if *s {
                 bail!("frame {:?}:{} double-mapped", m.device, m.frame);
             }
-            *seen = true;
+            *s = true;
         }
-        for &f in &self.free_dram {
-            if dram_seen[f as usize] {
-                bail!("DRAM frame {f} both mapped and free");
-            }
-        }
-        for &f in &self.free_nvm {
-            if nvm_seen[f as usize] {
-                bail!("NVM frame {f} both mapped and free");
+        for (t, frees) in self.free.iter().enumerate() {
+            for &f in frees {
+                if seen[t][f as usize] {
+                    bail!("{:?} frame {f} both mapped and free", TierId(t as u8));
+                }
             }
         }
         let mapped_recount = self.entries.iter().filter(|&&e| e != UNMAPPED).count() as u64;
         if self.mapped != mapped_recount {
             bail!("mapped counter {} != recount {mapped_recount}", self.mapped);
         }
-        let dram_recount = self.recount_dram_resident();
-        if self.dram_resident != dram_recount {
-            bail!(
-                "dram_resident counter {} != recount {dram_recount}",
-                self.dram_resident
-            );
+        for t in 0..self.tiers() {
+            let tier = TierId(t as u8);
+            let recount = self.recount_resident(tier);
+            if self.resident[t] != recount {
+                bail!(
+                    "{tier:?} resident counter {} != recount {recount}",
+                    self.resident[t]
+                );
+            }
+        }
+        if self.resident.iter().sum::<u64>() != self.mapped {
+            bail!("per-tier residency does not sum to the mapped count");
         }
         Ok(())
     }
@@ -301,7 +364,7 @@ mod tests {
 
     fn table() -> RedirectionTable {
         // 8 host pages, 4 DRAM + 8 NVM frames, 4K pages.
-        RedirectionTable::new(8, 4, 8, 4096)
+        RedirectionTable::two_tier(8, 4, 8, 4096)
     }
 
     #[test]
@@ -318,14 +381,14 @@ mod tests {
         assert_eq!(
             t.lookup(0),
             Some(Mapping {
-                device: Device::Dram,
+                device: TierId::Dram,
                 frame: 0
             })
         );
         assert_eq!(
             t.lookup(4),
             Some(Mapping {
-                device: Device::Nvm,
+                device: TierId::Nvm,
                 frame: 0
             })
         );
@@ -338,7 +401,7 @@ mod tests {
         let mut t = table();
         t.identity_map();
         let (dev, da) = t.translate(5 * 4096 + 123).unwrap();
-        assert_eq!(dev, Device::Nvm);
+        assert_eq!(dev, TierId::Nvm);
         assert_eq!(da, 4096 + 123); // nvm frame 1, offset 123
     }
 
@@ -346,20 +409,20 @@ mod tests {
     fn place_prefers_then_falls_back() {
         let mut t = table();
         for p in 0..4 {
-            let m = t.place(p, Device::Dram).unwrap();
-            assert_eq!(m.device, Device::Dram);
+            let m = t.place(p, TierId::Dram).unwrap();
+            assert_eq!(m.device, TierId::Dram);
         }
         // DRAM exhausted → falls over to NVM.
-        let m = t.place(4, Device::Dram).unwrap();
-        assert_eq!(m.device, Device::Nvm);
+        let m = t.place(4, TierId::Dram).unwrap();
+        assert_eq!(m.device, TierId::Nvm);
         t.check_invariants().unwrap();
     }
 
     #[test]
     fn double_place_rejected() {
         let mut t = table();
-        t.place(0, Device::Dram).unwrap();
-        assert!(t.place(0, Device::Dram).is_err());
+        t.place(0, TierId::Dram).unwrap();
+        assert!(t.place(0, TierId::Dram).is_err());
     }
 
     #[test]
@@ -377,19 +440,19 @@ mod tests {
     #[test]
     fn swap_unmapped_fails() {
         let mut t = table();
-        t.place(0, Device::Dram).unwrap();
+        t.place(0, TierId::Dram).unwrap();
         assert!(t.swap(0, 1).is_err());
     }
 
     #[test]
     fn exhaustion_errors() {
-        let mut t = RedirectionTable::new(3, 1, 2, 4096);
-        t.place(0, Device::Dram).unwrap();
-        t.place(1, Device::Dram).unwrap();
-        t.place(2, Device::Dram).unwrap();
-        let mut t2 = RedirectionTable::new(2, 1, 1, 4096);
-        t2.place(0, Device::Nvm).unwrap();
-        t2.place(1, Device::Nvm).unwrap();
+        let mut t = RedirectionTable::two_tier(3, 1, 2, 4096);
+        t.place(0, TierId::Dram).unwrap();
+        t.place(1, TierId::Dram).unwrap();
+        t.place(2, TierId::Dram).unwrap();
+        let mut t2 = RedirectionTable::two_tier(2, 1, 1, 4096);
+        t2.place(0, TierId::Nvm).unwrap();
+        t2.place(1, TierId::Nvm).unwrap();
         // Everything mapped; placing again impossible (all pages mapped).
         assert_eq!(t2.free_dram_frames() + t2.free_nvm_frames(), 0);
     }
@@ -407,14 +470,14 @@ mod tests {
     fn resident_counters_track_recount() {
         // Random place/swap churn: the O(1) counters must stay pinned to
         // the full-table recount the whole way.
-        let mut t = RedirectionTable::new(64, 16, 64, 4096);
+        let mut t = RedirectionTable::two_tier(64, 16, 64, 4096);
         let mut rng = crate::util::rng::Xoshiro256::new(99);
         let mut placed: Vec<u64> = Vec::new();
         for page in 0..48u64 {
             let dev = if rng.chance(0.5) {
-                Device::Dram
+                TierId::Dram
             } else {
-                Device::Nvm
+                TierId::Nvm
             };
             t.place(page, dev).unwrap();
             placed.push(page);
@@ -439,5 +502,60 @@ mod tests {
         assert_eq!(t.mapped_pages(), 8);
         assert_eq!(t.dram_resident_pages(), t.recount_dram_resident());
         t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn three_tier_identity_map_fills_rank_order() {
+        // 10 host pages over a 4+4+8 stack: 4 in rank 0, 4 in rank 1,
+        // 2 in rank 2, 6 rank-2 frames left free.
+        let mut t = RedirectionTable::new(10, &[4, 4, 8], 4096);
+        t.identity_map();
+        assert_eq!(t.lookup(3).unwrap().device, TierId(0));
+        assert_eq!(t.lookup(4).unwrap().device, TierId(1));
+        assert_eq!(t.lookup(8), Some(Mapping { device: TierId(2), frame: 0 }));
+        assert_eq!(t.free_frames(TierId(2)), 6);
+        assert_eq!(t.residency(), &[4, 4, 2]);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn three_tier_place_falls_down_then_up() {
+        let mut t = RedirectionTable::new(6, &[1, 1, 4], 4096);
+        // Rank-1 request: fills rank 1, then falls DOWN to rank 2 (not up
+        // to rank 0) until the deep tier is full, then up to rank 0.
+        assert_eq!(t.place(0, TierId(1)).unwrap().device, TierId(1));
+        for p in 1..5u64 {
+            assert_eq!(t.place(p, TierId(1)).unwrap().device, TierId(2), "page {p}");
+        }
+        assert_eq!(t.place(5, TierId(1)).unwrap().device, TierId(0));
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn three_tier_swap_any_pair_conserves_residency() {
+        let mut t = RedirectionTable::new(16, &[4, 4, 8], 4096);
+        t.identity_map();
+        let before: Vec<u64> = t.residency().to_vec();
+        // Swap across every tier pair: (0,1), (1,2), (0,2).
+        t.swap(0, 4).unwrap();
+        t.swap(5, 9).unwrap();
+        t.swap(1, 10).unwrap();
+        assert_eq!(t.residency(), before.as_slice());
+        assert_eq!(t.lookup(0).unwrap().device, TierId(1));
+        assert_eq!(t.lookup(10).unwrap().device, TierId(0));
+        t.check_invariants().unwrap();
+        // Residency sums to mapped across all tiers.
+        assert_eq!(t.residency().iter().sum::<u64>(), t.mapped_pages());
+    }
+
+    #[test]
+    fn tier_names_and_ordering() {
+        assert_ne!(TierId::Dram, TierId::Nvm);
+        assert_eq!(TierId::Dram.name(), "DRAM");
+        assert_eq!(TierId::Nvm.name(), "NVM");
+        assert_eq!(TierId(2).name(), "TIER2");
+        assert!(TierId::Dram < TierId::Nvm);
+        assert_eq!(format!("{:?}", TierId::Dram), "Dram");
+        assert_eq!(format!("{:?}", TierId(3)), "Tier3");
     }
 }

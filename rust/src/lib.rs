@@ -16,7 +16,10 @@
 //! - [`hmmu`] — the paper's contribution: request pipeline, tag-matching
 //!   consistency, address redirection, DMA page-swap engine, pluggable
 //!   placement/migration policies, performance counters.
-//! - [`mem`] — DDR4 timing model + stall-scaled NVM emulation (§III-F).
+//! - [`mem`] — DDR4 timing model + stall-scaled NVM emulation (§III-F),
+//!   composed into an N-tier device stack (`TierSpec` presets for DDR4,
+//!   PCM, memristor and 3D XPoint classes; the paper's pair is the
+//!   two-tier default).
 //! - [`workload`] — synthetic SPEC CPU 2017 workload generators (Table III).
 //! - [`alloc`] — driver/allocator middleware (Fig 4): genpool frame pool +
 //!   jemalloc-like arenas + placement hints.

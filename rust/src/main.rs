@@ -54,6 +54,28 @@ fn config_from(args: &Args) -> SystemConfig {
     if let Some(t) = args.get("tech").and_then(MemTech::parse) {
         cfg = cfg.with_tech(t);
     }
+    // Tier-stack topology, e.g. `--tiers dram+pcm+xpoint` (for `sweep`,
+    // `--tiers` may be a comma-separated *axis*, handled in cmd_sweep; a
+    // single topology here configures every other command).
+    if let Some(s) = args.get("tiers") {
+        if s.contains(',') {
+            if args.command.as_deref() != Some("sweep") {
+                eprintln!(
+                    "--tiers {s:?}: a comma-separated topology list is only a sweep axis; \
+                     pass one topology (e.g. dram+pcm+xpoint) to this command"
+                );
+                std::process::exit(1);
+            }
+        } else {
+            match hymem::config::parse_topology(s).map(|c| cfg.clone().with_tiers(&c)) {
+                Some(Ok(c)) => cfg = c,
+                _ => {
+                    eprintln!("bad --tiers topology {s:?}; want e.g. dram+pcm+xpoint");
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
     cfg.seed = args.get_u64("seed", cfg.seed);
     if let Some(e) = args.get("epoch") {
         cfg.hmmu.epoch_requests = e.parse().unwrap_or(cfg.hmmu.epoch_requests);
@@ -134,6 +156,31 @@ fn cmd_sweep(args: &Args) -> i32 {
     };
 
     let mut scenarios = Scenario::grid(&WORKLOADS, &policies, &cfg, ops);
+    // Optional tier-topology axis:
+    // `--tiers dram+pcm,dram+xpoint,dram+pcm+xpoint` — each entry
+    // rebuilds the stack for every scenario and suffixes its name.
+    if let Some(list) = args.get("tiers") {
+        if list.contains(',') {
+            let mut topologies = Vec::new();
+            for tok in list.split(',') {
+                match hymem::config::parse_topology(tok.trim()) {
+                    Some(t) => topologies.push(t),
+                    None => {
+                        eprintln!("bad --tiers entry {tok:?}; want e.g. dram+pcm+xpoint");
+                        return 1;
+                    }
+                }
+            }
+            scenarios = match Scenario::tier_grid(&scenarios, &topologies) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("--tiers: {e:#}");
+                    return 1;
+                }
+            };
+        }
+        // A single topology was already folded into `cfg` by config_from.
+    }
     // Optional NVM-stall axis: `--nvm-stalls 50:225,200:900` (read:write ns).
     if let Some(list) = args.get("nvm-stalls") {
         let mut points = Vec::new();
@@ -467,9 +514,11 @@ USAGE: hymem <command> [--options]
 COMMANDS:
   run             --workload <name> [--policy static|first-touch|hotness|hints|wear-aware]
                   [--ops N] [--scale N] [--tech 3dxpoint|stt-ram|...] [--flush]
-                  [--native-engine] [--host-managed-dma] [--coalesce-writes]
+                  [--tiers dram+pcm+xpoint] [--native-engine]
+                  [--host-managed-dma] [--coalesce-writes]
   sweep           parallel scenario sweep: 12 workloads [x --policies a,b,..]
-                  [x --nvm-stalls rd:wr,rd:wr,..] [x --cores 1,4,..] on
+                  [x --nvm-stalls rd:wr,rd:wr,..] [x --cores 1,4,..]
+                  [x --tiers dram+pcm,dram+xpoint,dram+pcm+xpoint] on
                   --threads N OS threads (default: all cores; bit-identical
                   to serial), writes --json <path> (default BENCH_sweep.json)
                   [--ops N] [--host-managed-dma] [--coalesce-writes]

@@ -11,9 +11,14 @@ pub mod device;
 pub mod dram;
 pub mod energy;
 pub mod nvm;
+pub mod tier;
 
 pub use controller::MemoryController;
 pub use device::{AccessKind, DeviceStats, MemDevice};
 pub use dram::DramDevice;
-pub use energy::{estimate as estimate_energy, EnergyReport};
+pub use energy::{
+    estimate as estimate_energy, estimate_tiers as estimate_tier_energy, EnergyCoeffs,
+    EnergyReport,
+};
 pub use nvm::NvmDevice;
+pub use tier::TierDevice;

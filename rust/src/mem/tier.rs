@@ -1,0 +1,150 @@
+//! Tier device: one rank of the N-tier memory stack.
+//!
+//! Every tier is emulated the paper's way (§III-F): a DDR4 timing model,
+//! optionally with injected read/write stall cycles scaled from the
+//! technology class. Enum dispatch (PR 1's de-virtualization discipline)
+//! keeps the per-access call devirtualized on the HMMU hot path: rank 0
+//! of a default stack is a bare [`DramDevice`] — bit-identical to the
+//! pre-tier-refactor `dram_mc` — and every stalled/wear-limited tier is
+//! an [`NvmDevice`].
+
+use super::device::{AccessKind, DeviceStats, MemDevice};
+use super::dram::DramDevice;
+use super::nvm::NvmDevice;
+use crate::config::{DramConfig, MemTech, NvmConfig, TierSpec};
+use crate::sim::Time;
+
+/// One tier's device model: a bare DRAM timing model, or DRAM + injected
+/// stalls + wear tracking (the NVM emulation).
+#[derive(Clone, Debug)]
+pub enum TierDevice {
+    Dram(DramDevice),
+    Nvm(NvmDevice),
+}
+
+impl TierDevice {
+    /// Build the device for `spec`. A zero-stall DRAM-class tier gets the
+    /// bare DDR4 model (no wear map, no stall adds — the fast path);
+    /// everything else gets the stall-injection wrapper.
+    pub fn build(spec: &TierSpec, dram_timing: DramConfig, page_bytes: u64) -> Self {
+        if spec.tech == MemTech::Dram && spec.read_stall_ns == 0 && spec.write_stall_ns == 0 {
+            let mut timing = dram_timing;
+            timing.size_bytes = spec.size_bytes;
+            TierDevice::Dram(DramDevice::new(timing))
+        } else {
+            TierDevice::Nvm(NvmDevice::new(
+                NvmConfig {
+                    size_bytes: spec.size_bytes,
+                    read_stall_ns: spec.read_stall_ns,
+                    write_stall_ns: spec.write_stall_ns,
+                    endurance: spec.endurance,
+                },
+                dram_timing,
+                page_bytes,
+            ))
+        }
+    }
+
+    /// Highest per-page write count observed (0 for bare DRAM tiers).
+    pub fn max_wear(&self) -> u64 {
+        match self {
+            TierDevice::Dram(_) => 0,
+            TierDevice::Nvm(d) => d.max_wear(),
+        }
+    }
+
+    /// Fraction of the endurance budget consumed by the hottest page.
+    pub fn wear_fraction(&self) -> f64 {
+        match self {
+            TierDevice::Dram(_) => 0.0,
+            TierDevice::Nvm(d) => d.wear_fraction(),
+        }
+    }
+
+    /// Change the injected stalls at runtime (Table I / `--nvm-stalls`
+    /// sweeps); a no-op on bare DRAM tiers.
+    pub fn set_stalls(&mut self, read_ns: u64, write_ns: u64) {
+        if let TierDevice::Nvm(d) = self {
+            d.set_stalls(read_ns, write_ns);
+        }
+    }
+}
+
+impl MemDevice for TierDevice {
+    #[inline]
+    fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> (Time, bool) {
+        match self {
+            TierDevice::Dram(d) => d.access(addr, kind, bytes, now),
+            TierDevice::Nvm(d) => d.access(addr, kind, bytes, now),
+        }
+    }
+
+    fn size_bytes(&self) -> u64 {
+        match self {
+            TierDevice::Dram(d) => d.size_bytes(),
+            TierDevice::Nvm(d) => d.size_bytes(),
+        }
+    }
+
+    fn stats(&self) -> &DeviceStats {
+        match self {
+            TierDevice::Dram(d) => d.stats(),
+            TierDevice::Nvm(d) => d.stats(),
+        }
+    }
+
+    fn reset_stats(&mut self) {
+        match self {
+            TierDevice::Dram(d) => d.reset_stats(),
+            TierDevice::Nvm(d) => d.reset_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn dram_class_builds_bare_timing_model() {
+        let c = SystemConfig::paper();
+        let spec = c.tier_specs()[0];
+        let d = TierDevice::build(&spec, c.dram, c.hmmu.page_bytes);
+        assert!(matches!(d, TierDevice::Dram(_)));
+        assert_eq!(d.size_bytes(), c.dram.size_bytes);
+        assert_eq!(d.max_wear(), 0);
+    }
+
+    #[test]
+    fn stalled_class_builds_nvm_wrapper_with_identical_timing_to_legacy() {
+        let c = SystemConfig::paper();
+        let spec = c.tier_specs()[1];
+        let mut tier = TierDevice::build(&spec, c.dram, c.hmmu.page_bytes);
+        assert!(matches!(tier, TierDevice::Nvm(_)));
+        // Same completion times as a directly-constructed legacy NvmDevice.
+        let mut legacy = NvmDevice::new(c.nvm, c.dram, c.hmmu.page_bytes);
+        let mut t = 0;
+        for i in 0..32u64 {
+            let kind = if i % 3 == 0 { AccessKind::Write } else { AccessKind::Read };
+            let (a, ha) = tier.access(i * 4096, kind, 64, t);
+            let (b, hb) = legacy.access(i * 4096, kind, 64, t);
+            assert_eq!((a, ha), (b, hb), "access {i}");
+            t = a + 10;
+        }
+        assert_eq!(tier.max_wear(), legacy.max_wear());
+    }
+
+    #[test]
+    fn pcm_tier_wears_and_stalls() {
+        let c = SystemConfig::paper();
+        let spec = TierSpec::of(MemTech::Pcm, 8 << 20, 28);
+        let mut tier = TierDevice::build(&spec, c.dram, c.hmmu.page_bytes);
+        let (r_done, _) = tier.access(0, AccessKind::Read, 64, 0);
+        let mut tier2 = TierDevice::build(&spec, c.dram, c.hmmu.page_bytes);
+        let (w_done, _) = tier2.access(0, AccessKind::Write, 64, 0);
+        assert!(w_done > r_done, "PCM writes slower than reads");
+        assert_eq!(tier2.max_wear(), 1);
+        assert!(tier2.wear_fraction() > 0.0);
+    }
+}

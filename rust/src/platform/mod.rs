@@ -1,7 +1,7 @@
 //! The emulation platform (Fig 1b) and the native-execution reference.
 //!
 //! - [`Platform`] — host CPU model whose post-cache memory traffic crosses
-//!   the PCIe link into the HMMU and its two devices. Running a workload
+//!   the PCIe link into the HMMU and its tier stack. Running a workload
 //!   yields the **platform time** (what a stopwatch would show on the
 //!   paper's LS2085A+FPGA rig).
 //! - [`native`] — the same CPU model with local on-board DDR4 (the paper's
@@ -261,6 +261,22 @@ impl Platform {
                 (platform_pass(), native_pass())
             };
 
+        // Per-tier energy: every rank contributes its own coefficients
+        // (the two-tier default folds to the legacy DDR4/XPoint pair).
+        let specs = backend.hmmu.tier_specs().to_vec();
+        let energy_inputs: Vec<_> = specs
+            .iter()
+            .enumerate()
+            .map(|(t, s)| {
+                (
+                    backend.hmmu.tier_stats(crate::hmmu::TierId(t as u8)),
+                    s.energy,
+                    s.size_bytes,
+                )
+            })
+            .collect();
+        let energy = crate::mem::estimate_tier_energy(&energy_inputs, platform_time_ns);
+
         Ok(RunReport {
             workload: wl.name.to_string(),
             policy: backend.hmmu.policy_name().to_string(),
@@ -276,18 +292,15 @@ impl Platform {
             counters: backend.hmmu.counters.clone(),
             dram_stats: backend.hmmu.dram_stats().clone(),
             nvm_stats: backend.hmmu.nvm_stats().clone(),
-            nvm_max_wear: backend.hmmu.nvm_device().max_wear(),
+            topology: cfg.topology_label(),
+            nvm_max_wear: backend.hmmu.nvm_max_wear(),
+            tier_wear: backend.hmmu.tier_wear(),
+            tier_residency: backend.hmmu.tier_residency(),
             dram_residency: backend.hmmu.dram_residency(),
             pcie_tx_bytes: backend.link.tx_bytes(),
             pcie_rx_bytes: backend.link.rx_bytes(),
             pcie_credit_stalls: backend.link.credit_stalls,
-            energy: crate::mem::estimate_energy(
-                backend.hmmu.dram_stats(),
-                backend.hmmu.nvm_stats(),
-                cfg.dram.size_bytes,
-                cfg.nvm.size_bytes,
-                platform_time_ns,
-            ),
+            energy,
             host_wall_ns,
             native_wall_ns,
         })

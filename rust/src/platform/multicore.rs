@@ -54,6 +54,12 @@ pub struct MulticoreReport {
     /// DRAM residency of mapped pages at end of run.
     pub dram_residency: f64,
     pub nvm_max_wear: u64,
+    /// Tier-stack topology label (e.g. `dram+xpoint`).
+    pub topology: String,
+    /// Per-tier max wear, rank order.
+    pub tier_wear: Vec<u64>,
+    /// Per-tier resident page counts at end of run, rank order.
+    pub tier_residency: Vec<u64>,
 }
 
 impl MulticoreReport {
@@ -271,7 +277,10 @@ pub fn run_multicore(
             pcie_credit_stalls: backend.link.credit_stalls,
             fifo_full_stalls: backend.hmmu.counters.fifo_full_stalls,
             dram_residency: backend.hmmu.dram_residency(),
-            nvm_max_wear: backend.hmmu.nvm_device().max_wear(),
+            nvm_max_wear: backend.hmmu.nvm_max_wear(),
+            topology: cfg.topology_label(),
+            tier_wear: backend.hmmu.tier_wear(),
+            tier_residency: backend.hmmu.tier_residency(),
             counters: backend.hmmu.counters.clone(),
             cores: reports,
             makespan_ns: makespan,

@@ -25,7 +25,15 @@ pub struct RunReport {
     pub counters: HmmuCounters,
     pub dram_stats: DeviceStats,
     pub nvm_stats: DeviceStats,
+    /// Tier-stack topology label (e.g. `dram+xpoint`).
+    pub topology: String,
+    /// Worst per-page wear across the wear-limited tiers (= rank-1 wear
+    /// on a two-tier stack).
     pub nvm_max_wear: u64,
+    /// Per-tier max wear, rank order.
+    pub tier_wear: Vec<u64>,
+    /// Per-tier resident page counts at end of run, rank order.
+    pub tier_residency: Vec<u64>,
     pub dram_residency: f64,
     pub pcie_tx_bytes: u64,
     pub pcie_rx_bytes: u64,
@@ -82,6 +90,19 @@ impl RunReport {
     /// Multi-line detail block.
     pub fn detail(&self) -> String {
         let (rb, wb) = self.counters.fig8_row();
+        let mut tiers = String::new();
+        if self.counters.tiers() > 2 {
+            tiers.push_str(&format!("\ntiers           {}", self.topology));
+            for t in 0..self.counters.tiers() {
+                tiers.push_str(&format!(
+                    "\n  tier{t}         {}r+{}w, {} pages resident, max wear {}",
+                    self.counters.tier_reads.get(t).copied().unwrap_or(0),
+                    self.counters.tier_writes.get(t).copied().unwrap_or(0),
+                    self.tier_residency.get(t).copied().unwrap_or(0),
+                    self.tier_wear.get(t).copied().unwrap_or(0),
+                ));
+            }
+        }
         format!(
             "workload        {}\n\
              policy          {} (scale 1/{})\n\
@@ -96,7 +117,7 @@ impl RunReport {
              NVM wear        max {} writes/page\n\
              energy est.     {:.2} mJ dynamic; {}\n\
              latency         mean {:.0}ns p50 {}ns p99 {}ns max {}ns\n\
-             emulator        {} wall, {:.2} modeled-ns/wall-ns",
+             emulator        {} wall, {:.2} modeled-ns/wall-ns{tiers}",
             self.workload,
             self.policy,
             self.scale,
@@ -111,10 +132,10 @@ impl RunReport {
             fmt_ns(self.mem_stall_ns),
             fmt_bytes(rb),
             fmt_bytes(wb),
-            self.counters.dram_reads,
-            self.counters.dram_writes,
-            self.counters.nvm_reads,
-            self.counters.nvm_writes,
+            self.counters.dram_reads(),
+            self.counters.dram_writes(),
+            self.counters.nvm_reads(),
+            self.counters.nvm_writes(),
             self.dram_residency * 100.0,
             self.counters.migrations,
             fmt_bytes(self.counters.migration_bytes),
@@ -159,7 +180,10 @@ mod tests {
             counters: HmmuCounters::default(),
             dram_stats: DeviceStats::default(),
             nvm_stats: DeviceStats::default(),
+            topology: "dram+xpoint".into(),
             nvm_max_wear: 3,
+            tier_wear: vec![0, 3],
+            tier_residency: vec![100, 150],
             dram_residency: 0.4,
             pcie_tx_bytes: 1000,
             pcie_rx_bytes: 2000,

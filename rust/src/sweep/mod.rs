@@ -121,6 +121,31 @@ impl Scenario {
         out
     }
 
+    /// Expand scenarios across a tier-topology axis, suffixing names
+    /// with `~<topology>` (e.g. `505.mcf/hotness~dram+pcm+xpoint`).
+    /// Each topology rebuilds the scenario's tier stack via
+    /// [`SystemConfig::with_tiers`]; the plain two-tier default keeps
+    /// its unsuffixed name so existing series stay comparable.
+    pub fn tier_grid(
+        scenarios: &[Scenario],
+        topologies: &[Vec<crate::config::MemTech>],
+    ) -> Result<Vec<Scenario>> {
+        let mut out = Vec::with_capacity(scenarios.len() * topologies.len());
+        for sc in scenarios {
+            for classes in topologies {
+                let cfg = sc.cfg.clone().with_tiers(classes)?;
+                let mut s = sc.clone();
+                let label = cfg.topology_label();
+                if label != sc.cfg.topology_label() {
+                    s.name = format!("{}~{label}", sc.name);
+                }
+                s.cfg = cfg;
+                out.push(s);
+            }
+        }
+        Ok(out)
+    }
+
     /// Expand scenarios across a core-count axis, suffixing names with
     /// `x<cores>` (e.g. `505.mcf/hotness x4` → `"505.mcf/hotnessx4"`).
     /// Entries with `1` keep the single-core platform path unsuffixed.
@@ -281,6 +306,39 @@ mod tests {
         assert_eq!(grid[0].name, "mcf/static@50:225");
         assert_eq!(grid[1].cfg.nvm.read_stall_ns, 200);
         assert_eq!(grid[1].cfg.nvm.write_stall_ns, 900);
+    }
+
+    #[test]
+    fn tier_grid_expands_and_fingerprints_topology() {
+        use crate::config::MemTech;
+        let wl = spec::by_name("505.mcf").unwrap();
+        let base = vec![Scenario::new("mcf/static", wl, small_cfg(), 1000)];
+        let grid = Scenario::tier_grid(
+            &base,
+            &[
+                vec![MemTech::Dram, MemTech::Xpoint3D],
+                vec![MemTech::Dram, MemTech::Pcm, MemTech::Xpoint3D],
+            ],
+        )
+        .unwrap();
+        assert_eq!(grid.len(), 2);
+        // The default pair keeps its unsuffixed name; the deep stack is
+        // labeled.
+        assert_eq!(grid[0].name, "mcf/static");
+        assert_eq!(grid[1].name, "mcf/static~dram+pcm+xpoint");
+        assert_eq!(grid[1].cfg.tier_count(), 3);
+
+        // A three-tier scenario runs end to end through the sweep, with
+        // the topology in the fingerprint and per-tier columns populated.
+        let r = run_sweep(&grid[1..], 1).unwrap();
+        let fp = r.deterministic_fingerprint();
+        assert!(fp.contains("tiers=dram+pcm+xpoint"), "{fp}");
+        assert_eq!(r.scenarios[0].tier_reads.len(), 3);
+        assert_eq!(r.scenarios[0].tier_residency.len(), 3);
+        assert_eq!(r.scenarios[0].tier_energy_mj.len(), 3);
+        let js = r.to_json().render();
+        assert!(js.contains("\"topology\":\"dram+pcm+xpoint\""), "{js}");
+        assert!(js.contains("\"tier_wear\":["), "{js}");
     }
 
     #[test]

@@ -24,6 +24,9 @@ pub struct ScenarioResult {
     /// multicore run, where `platform_time_ns` is the makespan and the
     /// native/slowdown columns are 0 — no native reference exists).
     pub cores: usize,
+    /// Tier-stack topology label (`dram+xpoint`, `dram+pcm+xpoint`, …) —
+    /// the tier axis of the scenario fingerprint.
+    pub topology: String,
     pub platform_time_ns: u64,
     pub native_time_ns: u64,
     pub slowdown: f64,
@@ -36,6 +39,17 @@ pub struct ScenarioResult {
     pub dram_writes: u64,
     pub nvm_reads: u64,
     pub nvm_writes: u64,
+    /// Per-tier demand reads/writes, rank order (the two-tier columns
+    /// above are ranks 0/1 of these).
+    pub tier_reads: Vec<u64>,
+    pub tier_writes: Vec<u64>,
+    /// Per-tier resident page counts at end of run.
+    pub tier_residency: Vec<u64>,
+    /// Per-tier max page wear.
+    pub tier_wear: Vec<u64>,
+    /// Per-tier (static + dynamic) energy, mJ (empty for multicore rows,
+    /// which carry no full energy report).
+    pub tier_energy_mj: Vec<f64>,
     pub host_read_bytes: u64,
     pub host_write_bytes: u64,
     pub fifo_full_stalls: u64,
@@ -66,6 +80,7 @@ impl ScenarioResult {
             seed,
             ops: sc.ops,
             cores: sc.cores,
+            topology: r.topology.clone(),
             platform_time_ns: r.platform_time_ns,
             native_time_ns: r.native_time_ns,
             slowdown: r.slowdown(),
@@ -74,10 +89,15 @@ impl ScenarioResult {
             dram_residency: r.dram_residency,
             migrations: r.counters.migrations,
             epochs: r.counters.epochs,
-            dram_reads: r.counters.dram_reads,
-            dram_writes: r.counters.dram_writes,
-            nvm_reads: r.counters.nvm_reads,
-            nvm_writes: r.counters.nvm_writes,
+            dram_reads: r.counters.dram_reads(),
+            dram_writes: r.counters.dram_writes(),
+            nvm_reads: r.counters.nvm_reads(),
+            nvm_writes: r.counters.nvm_writes(),
+            tier_reads: r.counters.tier_reads.clone(),
+            tier_writes: r.counters.tier_writes.clone(),
+            tier_residency: r.tier_residency.clone(),
+            tier_wear: r.tier_wear.clone(),
+            tier_energy_mj: r.energy.tiers.iter().map(|&(s, d)| s + d).collect(),
             host_read_bytes: r.counters.host_read_bytes,
             host_write_bytes: r.counters.host_write_bytes,
             fifo_full_stalls: r.counters.fifo_full_stalls,
@@ -113,6 +133,7 @@ impl ScenarioResult {
             seed,
             ops: sc.ops,
             cores: sc.cores,
+            topology: r.topology.clone(),
             platform_time_ns: r.makespan_ns,
             native_time_ns: 0,
             slowdown: 0.0,
@@ -121,10 +142,15 @@ impl ScenarioResult {
             dram_residency: r.dram_residency,
             migrations: r.counters.migrations,
             epochs: r.counters.epochs,
-            dram_reads: r.counters.dram_reads,
-            dram_writes: r.counters.dram_writes,
-            nvm_reads: r.counters.nvm_reads,
-            nvm_writes: r.counters.nvm_writes,
+            dram_reads: r.counters.dram_reads(),
+            dram_writes: r.counters.dram_writes(),
+            nvm_reads: r.counters.nvm_reads(),
+            nvm_writes: r.counters.nvm_writes(),
+            tier_reads: r.counters.tier_reads.clone(),
+            tier_writes: r.counters.tier_writes.clone(),
+            tier_residency: r.tier_residency.clone(),
+            tier_wear: r.tier_wear.clone(),
+            tier_energy_mj: Vec::new(),
             host_read_bytes: r.counters.host_read_bytes,
             host_write_bytes: r.counters.host_write_bytes,
             fifo_full_stalls: r.counters.fifo_full_stalls,
@@ -164,8 +190,9 @@ impl ScenarioResult {
         let mut s = String::new();
         let _ = write!(
             s,
-            "{}|{}|{}|seed={:#x}|ops={}|cores={}|plat={}|native={}|slow={:?}|l2={:?}|serv={:?}|resid={:?}\
-             |mig={}|epochs={}|dr={}|dw={}|nr={}|nw={}|hrb={}|hwb={}|fifo={}|reorder={}|dma={}\
+            "{}|{}|{}|seed={:#x}|ops={}|cores={}|tiers={}|plat={}|native={}|slow={:?}|l2={:?}|serv={:?}|resid={:?}\
+             |mig={}|epochs={}|dr={}|dw={}|nr={}|nw={}|tr={:?}|tw={:?}|tres={:?}|twear={:?}|tmj={:?}\
+             |hrb={}|hwb={}|fifo={}|reorder={}|dma={}\
              |dmaPcieB={}|dmaLinkStalls={}|wear={}|mj={:?}|lat=({:?},{},{},{})",
             self.name,
             self.workload,
@@ -173,6 +200,7 @@ impl ScenarioResult {
             self.seed,
             self.ops,
             self.cores,
+            self.topology,
             self.platform_time_ns,
             self.native_time_ns,
             self.slowdown,
@@ -185,6 +213,11 @@ impl ScenarioResult {
             self.dram_writes,
             self.nvm_reads,
             self.nvm_writes,
+            self.tier_reads,
+            self.tier_writes,
+            self.tier_residency,
+            self.tier_wear,
+            self.tier_energy_mj,
             self.host_read_bytes,
             self.host_write_bytes,
             self.fifo_full_stalls,
@@ -203,6 +236,8 @@ impl ScenarioResult {
     }
 
     fn to_json(&self) -> Json {
+        let arr_u64 = |v: &[u64]| Json::Arr(v.iter().map(|&x| Json::U64(x)).collect());
+        let arr_f64 = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::F64(x)).collect());
         let mut o = Json::obj();
         o.set("name", self.name.as_str())
             .set("workload", self.workload.as_str())
@@ -210,6 +245,12 @@ impl ScenarioResult {
             .set("seed", self.seed)
             .set("ops", self.ops)
             .set("cores", self.cores as u64)
+            .set("topology", self.topology.as_str())
+            .set("tier_reads", arr_u64(&self.tier_reads))
+            .set("tier_writes", arr_u64(&self.tier_writes))
+            .set("tier_residency", arr_u64(&self.tier_residency))
+            .set("tier_wear", arr_u64(&self.tier_wear))
+            .set("tier_energy_mj", arr_f64(&self.tier_energy_mj))
             .set("platform_time_ns", self.platform_time_ns)
             .set("native_time_ns", self.native_time_ns)
             .set("slowdown", self.slowdown)

@@ -61,7 +61,7 @@ fn prop_redirection_translate_consistent_under_random_swaps() {
         let host_pages = 16 + rng.below(200);
         let dram = 4 + rng.below(host_pages / 2) as u32;
         let nvm = host_pages as u32; // plenty
-        let mut t = RedirectionTable::new(host_pages, dram, nvm, 4096);
+        let mut t = RedirectionTable::two_tier(host_pages, dram, nvm, 4096);
         t.identity_map();
         // Shadow model: page -> unique logical frame id.
         let ids: Vec<u64> = (0..host_pages).collect();
@@ -172,10 +172,13 @@ fn prop_first_touch_placement_deterministic_per_seed() {
 }
 
 #[test]
-fn device_enum_is_two_valued() {
-    // Cheap compile-time-ish sanity so Device stays binary (the packed
-    // redirection entry owns exactly one bit for it).
+fn tier_ids_keep_legacy_device_names() {
+    // The binary Device type generalized to TierId: the legacy two-tier
+    // names survive as rank 0/1 constants with their old rendering.
     assert_ne!(Device::Dram, Device::Nvm);
     assert_eq!(Device::Dram.name(), "DRAM");
     assert_eq!(Device::Nvm.name(), "NVM");
+    assert_eq!(Device::Dram.index(), 0);
+    assert_eq!(Device::Nvm.index(), 1);
+    assert!(Device::Dram < Device::Nvm, "ranks order fast-to-slow");
 }

@@ -324,12 +324,12 @@ fn coalescing_on_platform_preserves_state_and_device_counters() {
 
     assert_eq!(on.counters.host_reads, off.counters.host_reads);
     assert_eq!(on.counters.host_writes, off.counters.host_writes);
-    assert_eq!(on.counters.dram_reads, off.counters.dram_reads);
-    assert_eq!(on.counters.dram_writes, off.counters.dram_writes);
-    assert_eq!(on.counters.nvm_reads, off.counters.nvm_reads);
-    assert_eq!(on.counters.nvm_writes, off.counters.nvm_writes);
-    assert_eq!(on.counters.pages_placed_dram, off.counters.pages_placed_dram);
-    assert_eq!(on.counters.pages_placed_nvm, off.counters.pages_placed_nvm);
+    assert_eq!(on.counters.dram_reads(), off.counters.dram_reads());
+    assert_eq!(on.counters.dram_writes(), off.counters.dram_writes());
+    assert_eq!(on.counters.nvm_reads(), off.counters.nvm_reads());
+    assert_eq!(on.counters.nvm_writes(), off.counters.nvm_writes());
+    assert_eq!(on.counters.pages_placed_dram(), off.counters.pages_placed_dram());
+    assert_eq!(on.counters.pages_placed_nvm(), off.counters.pages_placed_nvm());
     assert_eq!(on.counters.migrations, off.counters.migrations);
     assert!((on.dram_residency - off.dram_residency).abs() < f64::EPSILON);
     assert!(on.pcie_tx_bytes <= off.pcie_tx_bytes, "coalescing never adds wire bytes");

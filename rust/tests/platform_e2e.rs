@@ -58,10 +58,10 @@ fn prop_conservation_of_requests() {
         // Host requests (reads+writes) = device requests (DMA traffic is
         // counted at the devices, not as host traffic).
         let host = c.host_reads + c.host_writes;
-        let device = c.dram_reads + c.dram_writes + c.nvm_reads + c.nvm_writes;
+        let device = c.dram_reads() + c.dram_writes() + c.nvm_reads() + c.nvm_writes();
         assert_eq!(host, device, "{}: host {host} != device {device}", wl.name);
         // Page placement happened for every touched page.
-        assert!(c.pages_placed_dram + c.pages_placed_nvm > 0);
+        assert!(c.pages_placed_dram() + c.pages_placed_nvm() > 0);
     });
 }
 

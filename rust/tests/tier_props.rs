@@ -1,0 +1,196 @@
+//! Property tests for the tier-generic migration substrate: any
+//! (src, dst) tier pair must move exactly `page_bytes` in each
+//! direction, per-tier wear may only increment on tiers that receive
+//! writes, and the per-tier residency counters must always sum to the
+//! mapped page count.
+
+use hymem::config::{MemTech, PolicyKind, SystemConfig};
+use hymem::hmmu::dma::DmaEngine;
+use hymem::hmmu::redirection::{Mapping, RedirectionTable, TierId};
+use hymem::hmmu::Hmmu;
+use hymem::mem::AccessKind;
+use hymem::util::prop::run_prop;
+
+fn three_tier_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::default_scaled(64)
+        .with_tiers(&[MemTech::Dram, MemTech::Pcm, MemTech::Xpoint3D])
+        .unwrap();
+    cfg.policy = PolicyKind::Hotness;
+    cfg.hmmu.epoch_requests = 1000;
+    cfg
+}
+
+#[test]
+fn prop_any_tier_pair_moves_page_bytes_each_way() {
+    // Swap two pages mapped on arbitrary (src, dst) tier ranks: the DMA
+    // engine must read exactly `page_bytes` from each side and write
+    // exactly `page_bytes` to each side, whatever the pair.
+    run_prop("tier-pair-bytes", |rng| {
+        let page_bytes = 4096u64;
+        let block = *[256u64, 512, 1024].get(rng.below(3) as usize).unwrap();
+        let src = TierId(rng.below(4) as u8);
+        let mut dst = TierId(rng.below(4) as u8);
+        if dst == src {
+            dst = TierId((src.0 + 1) % 4);
+        }
+        let ma = Mapping { device: src, frame: 7 };
+        let mb = Mapping { device: dst, frame: 3 };
+        let mut dma = DmaEngine::new(block, page_bytes, rng.chance(0.5));
+        // Byte ledger: (tier, kind) -> bytes.
+        let mut reads = [0u64; 4];
+        let mut writes = [0u64; 4];
+        dma.start_swap(10, ma, 20, mb, 0, &mut |d, _a, k, b, at| {
+            if k.is_write() {
+                writes[d.index()] += b;
+            } else {
+                reads[d.index()] += b;
+            }
+            at + 10
+        });
+        for t in 0..4usize {
+            let expect = if t == src.index() || t == dst.index() {
+                page_bytes
+            } else {
+                0
+            };
+            assert_eq!(reads[t], expect, "tier {t} read bytes (src {src:?} dst {dst:?})");
+            assert_eq!(writes[t], expect, "tier {t} write bytes (src {src:?} dst {dst:?})");
+        }
+        assert_eq!(dma.bytes_moved, 2 * page_bytes);
+    });
+}
+
+#[test]
+fn prop_residency_sums_to_mapped_under_churn() {
+    // Random place/swap churn over a three-tier table: per-tier resident
+    // counts always sum to the mapped count, and every tier's O(1)
+    // counter matches a full recount.
+    run_prop("tier-residency-sum", |rng| {
+        let frames = [
+            8 + rng.below(16) as u32,
+            8 + rng.below(16) as u32,
+            16 + rng.below(32) as u32,
+        ];
+        let host = (frames.iter().map(|&f| f as u64).sum::<u64>()).min(40);
+        let mut t = RedirectionTable::new(host, &frames, 4096);
+        let mut placed: Vec<u64> = Vec::new();
+        for page in 0..host {
+            if rng.chance(0.8) {
+                let pref = TierId(rng.below(3) as u8);
+                t.place(page, pref).unwrap();
+                placed.push(page);
+            }
+            assert_eq!(
+                t.residency().iter().sum::<u64>(),
+                t.mapped_pages(),
+                "residency must sum to mapped after every place"
+            );
+        }
+        for _ in 0..100 {
+            if placed.len() < 2 {
+                break;
+            }
+            let a = placed[rng.below(placed.len() as u64) as usize];
+            let b = placed[rng.below(placed.len() as u64) as usize];
+            if a != b {
+                t.swap(a, b).unwrap();
+            }
+            assert_eq!(t.residency().iter().sum::<u64>(), t.mapped_pages());
+        }
+        for rank in 0..3u8 {
+            assert_eq!(
+                t.resident_pages(TierId(rank)),
+                t.recount_resident(TierId(rank)),
+                "rank {rank} counter drifted"
+            );
+        }
+        t.check_invariants().unwrap();
+    });
+}
+
+#[test]
+fn wear_only_increments_on_write_target_tiers() {
+    // Drive a read-only stream over a three-tier stack: pages spill into
+    // every tier, but with no writes and no migrations (first-touch
+    // never migrates) no tier may accrue wear. Then a write-heavy run
+    // must wear exactly the wear-limited tiers that received writes.
+    let mut cfg = three_tier_cfg();
+    cfg.policy = PolicyKind::FirstTouch;
+    let page_bytes = cfg.hmmu.page_bytes;
+    let total = cfg.total_pages();
+
+    let mut h = Hmmu::new(cfg.clone(), None);
+    let mut t = 0;
+    for p in 0..total.min(6000) {
+        t = h.access(p * page_bytes, AccessKind::Read, 64, t + 20);
+    }
+    assert!(
+        h.tier_residency()[2] > 0,
+        "stream must spill into the deep tier"
+    );
+    assert_eq!(h.tier_wear(), vec![0, 0, 0], "reads must not wear any tier");
+
+    let mut h = Hmmu::new(cfg, None);
+    let mut t = 0;
+    for p in 0..total.min(6000) {
+        t = h.access(p * page_bytes, AccessKind::Write, 64, t + 20);
+    }
+    let wear = h.tier_wear();
+    assert_eq!(wear[0], 0, "bare DRAM rank tracks no wear");
+    assert!(wear[1] > 0 && wear[2] > 0, "written tiers must wear: {wear:?}");
+    // The device write counters corroborate: wear appears exactly where
+    // writes landed.
+    for rank in 1..3u8 {
+        let stats = h.tier_stats(TierId(rank));
+        assert!(
+            stats.writes > 0,
+            "rank {rank} must have served writes to wear"
+        );
+    }
+}
+
+#[test]
+fn migration_wear_lands_on_destination_tiers_only() {
+    // Hotness scenario on three tiers with a read-only demand stream:
+    // the only writes in the system are the DMA engine's cross-writes,
+    // so any wear must be attributable to migration block writes, and
+    // each migration's byte ledger stays 2 × page_bytes.
+    let cfg = three_tier_cfg();
+    let page_bytes = cfg.hmmu.page_bytes;
+    let total = cfg.total_pages();
+    let mut h = Hmmu::new(cfg, None);
+    let mut t = 0;
+    // Touch everything once (spill deep), then hammer a few deep pages
+    // hot so they migrate upward.
+    for p in 0..total.min(6000) {
+        t = h.access(p * page_bytes, AccessKind::Read, 64, t + 20);
+    }
+    // Enough hot traffic to cross several epoch boundaries (epoch =
+    // 1000 requests) after the warm-up stream.
+    let hot_base = 5000u64;
+    for _ in 0..300 {
+        for p in hot_base..hot_base + 8 {
+            t = h.access(p * page_bytes, AccessKind::Read, 64, t + 20);
+        }
+    }
+    h.drain(t + 100_000_000);
+    assert!(h.counters.migrations > 0, "scenario must migrate");
+    assert_eq!(
+        h.counters.migration_bytes,
+        h.counters.migrations * 2 * page_bytes,
+        "each swap moves both pages exactly once"
+    );
+    // Demand stream was read-only: every device write is DMA traffic,
+    // and wear can only exist on tiers the DMA wrote to.
+    for rank in 0..3u8 {
+        let stats = h.tier_stats(TierId(rank));
+        let wear = h.tier_max_wear(TierId(rank));
+        if stats.writes == 0 {
+            assert_eq!(wear, 0, "rank {rank} wore without receiving writes");
+        }
+        if rank == 0 {
+            assert_eq!(wear, 0, "bare DRAM rank tracks no wear");
+        }
+    }
+    h.table.check_invariants().unwrap();
+}
