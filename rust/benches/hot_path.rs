@@ -439,6 +439,60 @@ fn main() {
         });
     }
 
+    // Per-op vs block: policy + per-tier accounting (§Perf satellite).
+    // Identical zipf request streams through the full HMMU with the
+    // hotness policy; the block row brackets each 4096-op batch with
+    // `begin_block`/`end_block`, so record_access + record_tier_access
+    // defer into the pending queue and drain in one tight loop per block
+    // instead of interleaving policy-state touches with routing. Results
+    // are bit-identical (every reader sits behind a flush point;
+    // `tests/batch_equivalence.rs` pins the per-op vs block paths). CI
+    // gates block ≥ per-op (scripts/check_bench_gate.py).
+    {
+        fn accounting_hmmu() -> (Hmmu, u64) {
+            let mut cfg = SystemConfig::default_scaled(16);
+            cfg.policy = PolicyKind::Hotness;
+            cfg.hmmu.epoch_requests = 50_000;
+            let total = cfg.total_mem_bytes();
+            (Hmmu::new(cfg, None), total)
+        }
+        let ops = TRACE_BLOCK_OPS as u64;
+
+        let (mut hmmu, total) = accounting_hmmu();
+        let mut rng = Xoshiro256::new(8);
+        let mut t = 0u64;
+        suite.bench_items("hmmu_accounting/per-op (batch 4096)", ops, || {
+            for _ in 0..TRACE_BLOCK_OPS {
+                let addr = (rng.zipf(total / 4096, 1.1)) * 4096 + rng.below(4096) & !63;
+                let kind = if rng.chance(0.3) {
+                    AccessKind::Write
+                } else {
+                    AccessKind::Read
+                };
+                t = hmmu.access(addr, kind, 64, t + 20);
+            }
+            ops
+        });
+
+        let (mut hmmu, total) = accounting_hmmu();
+        let mut rng = Xoshiro256::new(8);
+        let mut t = 0u64;
+        suite.bench_items("hmmu_accounting/block (batch 4096)", ops, || {
+            hmmu.begin_block();
+            for _ in 0..TRACE_BLOCK_OPS {
+                let addr = (rng.zipf(total / 4096, 1.1)) * 4096 + rng.below(4096) & !63;
+                let kind = if rng.chance(0.3) {
+                    AccessKind::Write
+                } else {
+                    AccessKind::Read
+                };
+                t = hmmu.access(addr, kind, 64, t + 20);
+            }
+            hmmu.end_block();
+            ops
+        });
+    }
+
     // Tiled hotness step (the epoch-boundary dense pass; HOTNESS_TILE
     // chunks, auto-vectorized inner loop).
     {

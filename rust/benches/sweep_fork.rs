@@ -1,0 +1,72 @@
+//! Warm-state fork vs cold replay: the sweep-level win the checkpoint
+//! engine exists for.
+//!
+//! Both rows run the identical 8-point design grid (2 workloads × 2
+//! policies × 2 NVM stall points, 2 warm groups) through the same
+//! warm+morph code path and produce bit-identical modeled results
+//! (`tests/checkpoint_fork.rs`); the only difference is who pays the
+//! warm-up. Cold replay re-simulates the warm prefix for every scenario
+//! (8 × warm + 8 × tail); the forked row pays it once per warm group
+//! (2 × warm + 8 × tail). With warm 20K of a 24K-op run the forked
+//! sweep does ~2.7× less simulation — CI gates forked strictly faster
+//! than cold (scripts/check_bench_gate.py on BENCH_sweep_fork.json).
+
+use hymem::config::{PolicyKind, SystemConfig};
+use hymem::sweep::{run_sweep_forked, ForkOpts, Scenario};
+use hymem::util::bench::BenchSuite;
+use hymem::workload::spec;
+
+const OPS: u64 = 24_000;
+const WARM: u64 = 20_000;
+
+fn grid() -> Vec<Scenario> {
+    let mut base = SystemConfig::default_scaled(64);
+    base.hmmu.epoch_requests = 2_000;
+    let workloads = [
+        spec::by_name("505.mcf").unwrap(),
+        spec::by_name("557.xz").unwrap(),
+    ];
+    let policies = [PolicyKind::Static, PolicyKind::Hotness];
+    let grid = Scenario::grid(&workloads, &policies, &base, OPS);
+    Scenario::stall_grid(&grid, &[(50, 225), (400, 1_800)])
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("sweep: warm-state fork vs cold replay");
+    suite.header();
+
+    let scenarios = grid();
+    assert_eq!(scenarios.len(), 8);
+    // Items = modeled ops the *grid* represents (scenarios × ops), the
+    // same for both rows — so the throughput ratio is exactly the
+    // wall-clock ratio on identical logical work. Single worker thread:
+    // the rows measure simulation volume, not scheduling.
+    let grid_ops = scenarios.len() as u64 * OPS;
+
+    let cold = ForkOpts {
+        warmup_ops: WARM,
+        checkpoint_dir: None,
+        cold_replay: true,
+    };
+    suite.bench_items("sweep/cold (8-point grid)", grid_ops, || {
+        let r = run_sweep_forked(&scenarios, 1, &cold).unwrap();
+        assert_eq!(r.scenarios.len(), 8);
+        grid_ops
+    });
+
+    let forked = ForkOpts {
+        warmup_ops: WARM,
+        checkpoint_dir: None,
+        cold_replay: false,
+    };
+    suite.bench_items("sweep/forked (8-point grid)", grid_ops, || {
+        let r = run_sweep_forked(&scenarios, 1, &forked).unwrap();
+        assert_eq!(r.scenarios.len(), 8);
+        grid_ops
+    });
+
+    suite
+        .write_json("BENCH_sweep_fork.json")
+        .expect("writing BENCH_sweep_fork.json");
+    suite.finish();
+}

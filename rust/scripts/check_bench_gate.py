@@ -1,16 +1,24 @@
 #!/usr/bin/env python3
-"""Perf gate over BENCH_hot_path.json: the block-batched paths must not be
-slower than their per-op counterparts.
+"""Perf gate over the BENCH_*.json snapshots.
 
-Usage: check_bench_gate.py [BENCH_hot_path.json]
+Usage: check_bench_gate.py [BENCH_hot_path.json | BENCH_sweep_fork.json | ...]
 
-Compares the throughput of each (per-op, block) row pair and fails (exit 1)
-if a block row falls below the tolerance x the per-op row. The tolerance
-absorbs run-to-run noise — wider when the snapshot came from the quick CI
-smoke (short budgets, shared runners; the JSON records `"quick": true`) —
-while a real regression, the block path losing its amortization, shows up
-far below either bar. The trajectory itself is archived per run as a CI
-artifact.
+Two kinds of gated pairs:
+
+- Block-batched paths (BENCH_hot_path.json) must not be slower than their
+  per-op counterparts. The tolerance absorbs run-to-run noise — wider when
+  the snapshot came from the quick CI smoke (short budgets, shared
+  runners; the JSON records `"quick": true`) — while a real regression,
+  the block path losing its amortization, shows up far below either bar.
+- The warm-state forked sweep (BENCH_sweep_fork.json) must be *strictly*
+  faster than cold replay of the same 8-point grid: the fork skips ~3/4
+  of the simulation volume, so any ratio <= 1.0 means the checkpoint
+  engine stopped paying for itself.
+
+Pairs whose rows are absent from the given file are skipped (each JSON
+carries only its own suite), but a file matching no known pair fails, as
+does a pair with only one row present. The trajectory itself is archived
+per run as a CI artifact.
 """
 
 import json
@@ -19,12 +27,16 @@ import sys
 TOLERANCE = 0.95
 QUICK_TOLERANCE = 0.85
 
+# (baseline row, improved row, required ratio or None = noise tolerance)
 PAIRS = [
-    ("trace_gen/per-op (batch 4096)", "trace_gen/fill_block (batch 4096)"),
-    ("platform_step/per-op (batch 4096)", "platform_step/block (batch 4096)"),
-    ("hierarchy_access/per-op (batch 4096)", "hierarchy_access/block (batch 4096)"),
-    ("pcie_link/per-op (batch 4096)", "pcie_link/block (batch 4096)"),
-    ("hierarchy_flush/per-op (batch 4096)", "hierarchy_flush/block (batch 4096)"),
+    ("trace_gen/per-op (batch 4096)", "trace_gen/fill_block (batch 4096)", None),
+    ("platform_step/per-op (batch 4096)", "platform_step/block (batch 4096)", None),
+    ("hierarchy_access/per-op (batch 4096)", "hierarchy_access/block (batch 4096)", None),
+    ("pcie_link/per-op (batch 4096)", "pcie_link/block (batch 4096)", None),
+    ("hierarchy_flush/per-op (batch 4096)", "hierarchy_flush/block (batch 4096)", None),
+    ("hmmu_accounting/per-op (batch 4096)", "hmmu_accounting/block (batch 4096)", None),
+    # Strict: forked sweep must beat cold replay outright (ratio > 1.0).
+    ("sweep/cold (8-point grid)", "sweep/forked (8-point grid)", 1.0),
 ]
 
 
@@ -36,31 +48,42 @@ def main() -> int:
     tolerance = QUICK_TOLERANCE if data.get("quick") else TOLERANCE
 
     failed = False
-    for per_op_name, block_name in PAIRS:
-        missing = [n for n in (per_op_name, block_name) if n not in rows]
-        if missing:
-            print(f"FAIL: missing bench rows: {missing}")
+    checked = 0
+    for base_name, fast_name, required in PAIRS:
+        present = [n for n in (base_name, fast_name) if n in rows]
+        if not present:
+            continue  # pair belongs to another suite's JSON
+        if len(present) == 1:
+            print(f"FAIL: {path} has {present[0]!r} but not its pair row")
             failed = True
             continue
-        per_op = rows[per_op_name].get("throughput_per_sec")
-        block = rows[block_name].get("throughput_per_sec")
-        if not per_op or not block:
-            print(f"FAIL: no throughput recorded for {per_op_name!r} / {block_name!r}")
+        base = rows[base_name].get("throughput_per_sec")
+        fast = rows[fast_name].get("throughput_per_sec")
+        if not base or not fast:
+            print(f"FAIL: no throughput recorded for {base_name!r} / {fast_name!r}")
             failed = True
             continue
-        ratio = block / per_op
-        verdict = "ok" if ratio >= tolerance else "REGRESSION"
+        bar = required if required is not None else tolerance
+        strict = required is not None
+        ratio = fast / base
+        ok = ratio > bar if strict else ratio >= bar
+        verdict = "ok" if ok else "REGRESSION"
         print(
-            f"{verdict}: {block_name} {block:,.0f}/s vs "
-            f"{per_op_name} {per_op:,.0f}/s (block/per-op = {ratio:.2f}x)"
+            f"{verdict}: {fast_name} {fast:,.0f}/s vs "
+            f"{base_name} {base:,.0f}/s (ratio = {ratio:.2f}x, "
+            f"bar {'>' if strict else '>='} {bar}x)"
         )
-        if ratio < tolerance:
+        if not ok:
             failed = True
+        checked += 1
 
+    if checked == 0:
+        print(f"FAIL: {path} matched no known bench pairs")
+        failed = True
     if failed:
-        print(f"bench gate failed: block path slower than per-op (tolerance {tolerance}x)")
+        print("bench gate failed")
         return 1
-    print("bench gate passed")
+    print(f"bench gate passed ({checked} pairs)")
     return 0
 
 

@@ -6,6 +6,9 @@
 //! Hints are recorded per allocated range; the HMMU's hint-aware policy
 //! queries them by page.
 
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
+
 /// Device preference attached to an allocation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Placement {
@@ -90,6 +93,51 @@ impl HintStore {
     }
 }
 
+impl Placement {
+    fn tag(self) -> u8 {
+        match self {
+            Placement::Any => 0,
+            Placement::PreferDram => 1,
+            Placement::PreferNvm => 2,
+            Placement::PinDram => 3,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => Placement::Any,
+            1 => Placement::PreferDram,
+            2 => Placement::PreferNvm,
+            3 => Placement::PinDram,
+            _ => crate::bail!("checkpoint corrupt: placement tag {t}"),
+        })
+    }
+}
+
+impl CodecState for HintStore {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_len(self.ranges.len());
+        for &(s, end, h) in &self.ranges {
+            e.put_u64(s);
+            e.put_u64(end);
+            e.put_u8(h.tag());
+        }
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let n = d.len()?;
+        let mut ranges = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = d.u64()?;
+            let end = d.u64()?;
+            let h = Placement::from_tag(d.u8()?)?;
+            ranges.push((s, end, h));
+        }
+        self.ranges = ranges;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +170,23 @@ mod tests {
         h.remove(0, 0x1000);
         assert_eq!(h.lookup(0x500), Placement::Any);
         assert_eq!(h.lookup(0x1800), Placement::PreferDram);
+    }
+
+    #[test]
+    fn codec_round_trip_preserves_lookups() {
+        let mut h = HintStore::new();
+        h.insert(0, 0x3000, Placement::PreferNvm);
+        h.insert(0x1000, 0x1000, Placement::PinDram);
+        let mut e = Encoder::new();
+        h.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut restored = HintStore::new();
+        let mut d = Decoder::new(&bytes);
+        restored.decode_state(&mut d).unwrap();
+        assert!(d.is_done());
+        for addr in [0x500u64, 0x1500, 0x2500, 0x9000] {
+            assert_eq!(restored.lookup(addr), h.lookup(addr), "addr {addr:#x}");
+        }
     }
 
     #[test]

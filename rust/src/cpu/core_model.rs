@@ -14,6 +14,8 @@
 use super::hierarchy::{BlockOutcomes, CacheHierarchy, MemBackend};
 use crate::config::CpuConfig;
 use crate::sim::Time;
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 use crate::workload::{TraceBlock, TraceOp};
 
 /// Execution statistics for a run.
@@ -39,6 +41,7 @@ impl CoreStats {
 }
 
 /// The core model: owns time; drives hierarchy + backend per op.
+#[derive(Clone)]
 pub struct CoreModel {
     cfg: CpuConfig,
     /// ns of compute per instruction at base IPC (sub-ns, hence f64 acc).
@@ -99,6 +102,7 @@ impl CoreModel {
     ) {
         let mut out = std::mem::take(&mut self.outcomes);
         hierarchy.access_block(block, &mut out);
+        backend.begin_block();
         let flags = block.flags();
         let mut wr = 0usize; // cursor into out.writes()
         let mut rd = 0usize; // cursor into out.fills()
@@ -137,6 +141,7 @@ impl CoreModel {
                 ),
             }
         }
+        backend.end_block();
         self.outcomes = out;
     }
 
@@ -212,6 +217,34 @@ impl CoreModel {
         self.window.clear();
         self.stats.time_ns = self.now_f as Time;
         self.stats.time_ns
+    }
+}
+
+impl CodecState for CoreModel {
+    fn encode_state(&self, e: &mut Encoder) {
+        // The outcome buffer is per-block scratch; cfg/ns_per_instr come
+        // from construction. The mutable state is the fractional clock,
+        // the MSHR window (in-flight miss completion times, mid-run) and
+        // the stats. `now_f` goes over the wire as raw bits so the
+        // sub-ns accumulation error is reproduced exactly.
+        e.put_f64(self.now_f);
+        e.put_u64_slice(&self.window);
+        e.put_u64(self.stats.instructions);
+        e.put_u64(self.stats.mem_ops);
+        e.put_u64(self.stats.time_ns);
+        e.put_u64(self.stats.mem_stall_ns);
+        e.put_u64(self.stats.memory_accesses);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.now_f = d.f64()?;
+        self.window = d.u64_vec()?;
+        self.stats.instructions = d.u64()?;
+        self.stats.mem_ops = d.u64()?;
+        self.stats.time_ns = d.u64()?;
+        self.stats.mem_stall_ns = d.u64()?;
+        self.stats.memory_accesses = d.u64()?;
+        Ok(())
     }
 }
 

@@ -12,6 +12,8 @@ use super::tlb::Tlb;
 use crate::config::SystemConfig;
 use crate::mem::AccessKind;
 use crate::sim::Time;
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 use crate::workload::TraceBlock;
 
 /// Anything that can serve a line-sized memory access at a point in time.
@@ -22,6 +24,17 @@ pub trait MemBackend {
     /// Called at epoch boundaries / end-of-run to let the backend flush
     /// (e.g., HMMU migration bookkeeping). Default: nothing.
     fn drain(&mut self, _now: Time) {}
+
+    /// A block of accesses is about to be issued. Backends that defer
+    /// per-access bookkeeping (the HMMU batches hotness/tier-access
+    /// counting over a block) open their deferral window here.
+    /// Default: nothing.
+    fn begin_block(&mut self) {}
+
+    /// The current block's accesses have all been issued; any bookkeeping
+    /// deferred since [`begin_block`](Self::begin_block) must be flushed
+    /// now. Default: nothing.
+    fn end_block(&mut self) {}
 
     /// Issue op `i`'s recorded block traffic — posted victim write-backs,
     /// then the demand fill — at time `now`, advancing the caller's
@@ -168,6 +181,7 @@ impl BlockOutcomes {
 }
 
 /// L1D + L2 + TLB in front of a [`MemBackend`].
+#[derive(Clone)]
 pub struct CacheHierarchy {
     pub l1d: Cache,
     pub l2: Cache,
@@ -382,9 +396,33 @@ impl CacheHierarchy {
         self.flush_scratch = dirty;
 
         let (mut wr, mut rd) = (0usize, 0usize);
+        backend.begin_block();
         backend.issue_block_op(&out, 0, &mut wr, &mut rd, now);
+        backend.end_block();
         debug_assert_eq!(wr, out.writes.len());
         self.flush_col = out;
+    }
+}
+
+impl CodecState for CacheHierarchy {
+    fn encode_state(&self, e: &mut Encoder) {
+        // Latency constants and line geometry are config-derived; the
+        // flush columns are per-call scratch. Mutable state is the two
+        // cache levels, the TLB, and the memory-traffic counters.
+        self.l1d.encode_state(e);
+        self.l2.encode_state(e);
+        self.tlb.encode_state(e);
+        e.put_u64(self.mem_reads);
+        e.put_u64(self.mem_writes);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.l1d.decode_state(d)?;
+        self.l2.decode_state(d)?;
+        self.tlb.decode_state(d)?;
+        self.mem_reads = d.u64()?;
+        self.mem_writes = d.u64()?;
+        Ok(())
     }
 }
 

@@ -4,6 +4,9 @@
 //! memory accesses; we charge a configurable walk penalty and surface the
 //! counters. Fully-associative LRU at both levels (small enough).
 
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
+
 /// A fully-associative LRU translation buffer.
 #[derive(Clone, Debug)]
 struct TlbLevel {
@@ -39,6 +42,33 @@ impl TlbLevel {
         }
         self.entries.push((vpn, self.tick));
         false
+    }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.put_len(self.entries.len());
+        for &(vpn, lru) in &self.entries {
+            e.put_u64(vpn);
+            e.put_u64(lru);
+        }
+        e.put_u64(self.tick);
+    }
+
+    fn decode(&mut self, d: &mut Decoder) -> Result<()> {
+        let n = d.len()?;
+        if n > self.capacity {
+            crate::bail!(
+                "checkpoint geometry mismatch: TLB level capacity {} cannot hold {n} entries",
+                self.capacity
+            );
+        }
+        self.entries.clear();
+        for _ in 0..n {
+            let vpn = d.u64()?;
+            let lru = d.u64()?;
+            self.entries.push((vpn, lru));
+        }
+        self.tick = d.u64()?;
+        Ok(())
     }
 }
 
@@ -100,6 +130,25 @@ impl Tlb {
     }
 }
 
+impl CodecState for Tlb {
+    fn encode_state(&self, e: &mut Encoder) {
+        self.l1.encode(e);
+        self.l2.encode(e);
+        e.put_u64(self.l1_hits);
+        e.put_u64(self.l2_hits);
+        e.put_u64(self.walks);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.l1.decode(d)?;
+        self.l2.decode(d)?;
+        self.l1_hits = d.u64()?;
+        self.l2_hits = d.u64()?;
+        self.walks = d.u64()?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +182,24 @@ mod tests {
         // Revisit early pages: both levels evicted them.
         assert_eq!(t.access(0), 2);
         assert!(t.walk_rate() > 0.9);
+    }
+
+    #[test]
+    fn codec_round_trip_continues_identically() {
+        let mut warm = Tlb::new(4, 16, 4096);
+        for p in 0..40u64 {
+            warm.access((p % 9) * 4096);
+        }
+        let mut e = Encoder::new();
+        warm.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut restored = Tlb::new(4, 16, 4096);
+        restored.decode_state(&mut Decoder::new(&bytes)).unwrap();
+        for p in 0..60u64 {
+            let a = (p % 13) * 4096;
+            assert_eq!(restored.access(a), warm.access(a));
+        }
+        assert_eq!(restored.walks, warm.walks);
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! ranks 0/1, so the golden counter snapshots and every report column
 //! stay stable for two-tier configs.
 
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 use crate::util::stats::LatencyHistogram;
 
 /// Aggregated HMMU counters for one run.
@@ -135,6 +137,59 @@ impl std::fmt::Debug for HmmuCounters {
                 .field("tier_pages_placed", tier_pages_placed);
         }
         s.finish_non_exhaustive()
+    }
+}
+
+impl CodecState for HmmuCounters {
+    fn encode_state(&self, e: &mut Encoder) {
+        // Same exclusions as Debug: `policy_wall_ns` is host wall clock
+        // (would make byte-identical warm-ups serialize differently) and
+        // `energy_nj` is configuration, re-derived from the tier specs on
+        // construction. Everything else round-trips.
+        e.put_u64(self.host_reads);
+        e.put_u64(self.host_writes);
+        e.put_u64(self.host_read_bytes);
+        e.put_u64(self.host_write_bytes);
+        e.put_u64_slice(&self.tier_reads);
+        e.put_u64_slice(&self.tier_writes);
+        e.put_u64_slice(&self.tier_pages_placed);
+        e.put_u64(self.migrations);
+        e.put_u64(self.migration_bytes);
+        e.put_u64(self.epochs);
+        self.latency.encode_state(e);
+        e.put_u64(self.reorder_wait_ns);
+        e.put_u64(self.fifo_full_stalls);
+        e.put_u64(self.dma_conflict_stalls);
+        e.put_u64(self.dma_hdr_slots);
+        e.put_u64(self.dma_hdr_stalls);
+        e.put_u64(self.pcie_dma_bytes);
+        e.put_u64(self.dma_link_stalls);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.host_reads = d.u64()?;
+        self.host_writes = d.u64()?;
+        self.host_read_bytes = d.u64()?;
+        self.host_write_bytes = d.u64()?;
+        // The per-tier vectors grow on demand, so their encoded lengths
+        // are state, not geometry — adopt them as-is.
+        self.tier_reads = d.u64_vec()?;
+        self.tier_writes = d.u64_vec()?;
+        self.tier_pages_placed = d.u64_vec()?;
+        self.migrations = d.u64()?;
+        self.migration_bytes = d.u64()?;
+        self.epochs = d.u64()?;
+        self.latency.decode_state(d)?;
+        self.reorder_wait_ns = d.u64()?;
+        self.fifo_full_stalls = d.u64()?;
+        self.dma_conflict_stalls = d.u64()?;
+        self.dma_hdr_slots = d.u64()?;
+        self.dma_hdr_stalls = d.u64()?;
+        self.pcie_dma_bytes = d.u64()?;
+        self.dma_link_stalls = d.u64()?;
+        // Host wall clock restarts at the restore point.
+        self.policy_wall_ns = 0;
+        Ok(())
     }
 }
 
@@ -380,6 +435,36 @@ mod tests {
         dear.tier_writes[2] = 1000;
         dear.energy_nj = vec![(15.0, 18.0), (28.0, 94.0), (20.0, 120.0)];
         assert!(dear.energy_estimate_mj() > 50.0 * cheap.energy_estimate_mj());
+    }
+
+    #[test]
+    fn codec_round_trip_matches_debug_surface() {
+        let mut c = HmmuCounters::with_tiers(3);
+        c.host_reads = 11;
+        c.host_writes = 7;
+        c.host_read_bytes = 704;
+        c.host_write_bytes = 448;
+        c.record_tier_access(0, false);
+        c.record_tier_access(2, true);
+        c.record_placement(1);
+        c.migrations = 3;
+        c.migration_bytes = 3 * 8192;
+        c.epochs = 2;
+        c.latency.record(120);
+        c.latency.record(950);
+        c.reorder_wait_ns = 42;
+        c.policy_wall_ns = 987_654; // excluded from the codec surface
+
+        let mut e = Encoder::new();
+        c.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut restored = HmmuCounters::with_tiers(3);
+        let mut d = Decoder::new(&bytes);
+        restored.decode_state(&mut d).unwrap();
+        assert!(d.is_done());
+
+        assert_eq!(format!("{restored:?}"), format!("{c:?}"));
+        assert_eq!(restored.policy_wall_ns, 0, "wall clock restarts on restore");
     }
 
     #[test]

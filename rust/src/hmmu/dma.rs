@@ -26,9 +26,11 @@
 //! (`HmmuCounters::pcie_dma_bytes` / `dma_link_stalls`). Nothing here
 //! changes between the two modes; only the callback's cost model does.
 
-use super::redirection::{Device, Mapping};
+use super::redirection::{Device, Mapping, TierId};
 use crate::mem::AccessKind;
 use crate::sim::Time;
+use crate::util::codec::{check_len, CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 
 /// Routing decision for a request touching an in-flight swap.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -105,6 +107,7 @@ const FREE_BUF_CAP: usize = 64;
 /// timing is produced by the HMMU's memory controllers via the `issue`
 /// callback so DMA traffic contends with demand traffic at the devices
 /// (as in hardware — a shared DDR interface).
+#[derive(Clone)]
 pub struct DmaEngine {
     block_bytes: u64,
     page_bytes: u64,
@@ -291,6 +294,81 @@ impl DmaEngine {
     }
 }
 
+fn encode_mapping(e: &mut Encoder, m: Mapping) {
+    e.put_u8(m.device.rank());
+    e.put_u32(m.frame);
+}
+
+fn decode_mapping(d: &mut Decoder) -> Result<Mapping> {
+    let rank = d.u8()?;
+    let frame = d.u32()?;
+    Ok(Mapping {
+        device: TierId(rank),
+        frame,
+    })
+}
+
+impl CodecState for DmaEngine {
+    fn encode_state(&self, e: &mut Encoder) {
+        // `block_bytes`/`page_bytes`/`pipelined` are configuration; the
+        // `free_bufs` arena is a pure allocation-recycling optimization
+        // (restored engines refill it as swaps commit) — neither is
+        // serialized. Active swaps and counters are the state.
+        e.put_len(self.active.len());
+        for s in &self.active {
+            e.put_u64(s.page_a);
+            e.put_u64(s.page_b);
+            encode_mapping(e, s.map_a);
+            encode_mapping(e, s.map_b);
+            e.put_u64_slice(&s.start);
+            e.put_u64_slice(&s.done);
+            e.put_u64(s.finished);
+        }
+        e.put_u64(self.swaps_started);
+        e.put_u64(self.swaps_committed);
+        e.put_u64(self.blocks_moved);
+        e.put_u64(self.bytes_moved);
+        e.put_u64(self.busy_ns);
+        e.put_u64(self.conflict_stalls);
+        e.put_u64(self.bufs_recycled);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let n = d.len()?;
+        let nblocks = self.blocks_per_page() as usize;
+        let mut active = Vec::with_capacity(n);
+        for _ in 0..n {
+            let page_a = d.u64()?;
+            let page_b = d.u64()?;
+            let map_a = decode_mapping(d)?;
+            let map_b = decode_mapping(d)?;
+            let start = d.u64_vec()?;
+            let done = d.u64_vec()?;
+            check_len("dma swap block windows", nblocks, start.len())?;
+            check_len("dma swap block windows", nblocks, done.len())?;
+            let finished = d.u64()?;
+            active.push(ActiveSwap {
+                page_a,
+                page_b,
+                map_a,
+                map_b,
+                start,
+                done,
+                finished,
+            });
+        }
+        self.active = active;
+        self.swaps_started = d.u64()?;
+        self.swaps_committed = d.u64()?;
+        self.blocks_moved = d.u64()?;
+        self.bytes_moved = d.u64()?;
+        self.busy_ns = d.u64()?;
+        self.conflict_stalls = d.u64()?;
+        self.bufs_recycled = d.u64()?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -421,6 +499,45 @@ mod tests {
         let d = dma.start_swap(50, ma, 60, mb, 100_000, &mut fixed_issue);
         let (r, _) = dma.route(50, 7 * 512, d);
         assert_eq!(r, DmaRoute::UseDestination);
+    }
+
+    #[test]
+    fn codec_round_trip_preserves_inflight_routing() {
+        // Snapshot with a swap mid-flight; the restored engine must make
+        // identical routing decisions and commit at the same time.
+        let mut dma = DmaEngine::new(512, 4096, false);
+        let (ma, mb) = maps();
+        let done = dma.start_swap(10, ma, 20, mb, 0, &mut fixed_issue);
+
+        let mut e = Encoder::new();
+        dma.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut restored = DmaEngine::new(512, 4096, false);
+        let mut d = Decoder::new(&bytes);
+        restored.decode_state(&mut d).unwrap();
+        assert!(d.is_done());
+
+        for &(off, t) in &[(0u64, 0u64), (7 * 512, 0), (0, 100), (7 * 512, done)] {
+            let (want, _) = dma.route(10, off, t);
+            let (got, _) = restored.route(10, off, t);
+            assert_eq!(got, want, "offset {off} at t={t}");
+        }
+        assert_eq!(restored.next_commit(), dma.next_commit());
+        assert_eq!(restored.drain_committed(done), vec![(10, 20)]);
+        assert_eq!(restored.swaps_committed, dma.swaps_committed + 1);
+    }
+
+    #[test]
+    fn codec_rejects_block_count_mismatch() {
+        let mut dma = DmaEngine::new(512, 4096, false);
+        let (ma, mb) = maps();
+        dma.start_swap(10, ma, 20, mb, 0, &mut fixed_issue);
+        let mut e = Encoder::new();
+        dma.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        // An engine with a different blocks-per-page geometry refuses.
+        let mut wrong = DmaEngine::new(1024, 4096, false);
+        assert!(wrong.decode_state(&mut Decoder::new(&bytes)).is_err());
     }
 
     #[test]

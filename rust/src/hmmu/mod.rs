@@ -42,6 +42,8 @@ use crate::config::{SystemConfig, TierSpec};
 use crate::mem::{AccessKind, MemoryController, TierDevice};
 use crate::pcie::PcieLink;
 use crate::sim::{Clock, Time};
+use crate::util::codec::{check_len, CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 
 /// Fixed-capacity ring of outstanding-response release times — the HDR
 /// FIFO occupancy model. §Perf: replaces a per-request `VecDeque` (which
@@ -116,14 +118,34 @@ impl ReleaseRing {
 /// migrated block's max_payload chunks crossed device→host as a single
 /// [`PcieLink::send_block_to_host`] column). Recycled across transfers —
 /// steady state allocates nothing.
-#[derive(Default)]
+#[derive(Clone, Default)]
 struct CplScratch {
     payloads: Vec<u32>,
     times: Vec<Time>,
     arrivals: Vec<Time>,
 }
 
+/// Deferred hotness/tier-access accounting for one trace block (§Perf).
+/// While a block drains, the per-request `policy.record_access` +
+/// `counters.record_tier_access` calls — pure counter additions that no
+/// reader consults until the next epoch boundary — are queued here and
+/// flushed in one pass at block end (or just before an epoch fires
+/// mid-block). Entry order is preserved, so the flush is bit-identical to
+/// immediate recording; per-op callers (no block active) still record
+/// immediately.
+#[derive(Clone, Default)]
+struct PendingAccesses {
+    pages: Vec<u64>,
+    /// Tier rank in bits 0..6, write flag in bit 7.
+    meta: Vec<u8>,
+    /// True between `begin_block` and `end_block`.
+    active: bool,
+}
+
+const PENDING_WRITE_BIT: u8 = 0x80;
+
 /// The HMMU model.
+#[derive(Clone)]
 pub struct Hmmu {
     cfg: SystemConfig,
     pub table: RedirectionTable,
@@ -144,6 +166,9 @@ pub struct Hmmu {
     hdr_occupancy: ReleaseRing,
     /// Host-managed DMA completion-column scratch (see [`CplScratch`]).
     dma_cpl: CplScratch,
+    /// Block-batched hotness/tier-access accounting (see
+    /// [`PendingAccesses`]).
+    pending: PendingAccesses,
     requests_since_epoch: u64,
     /// Simulated time of the last processed request (drives epoch DMA).
     last_now: Time,
@@ -204,6 +229,7 @@ impl Hmmu {
             pipeline_ns,
             hdr_occupancy: ReleaseRing::new(cfg.hmmu.hdr_fifo_depth as usize),
             dma_cpl: CplScratch::default(),
+            pending: PendingAccesses::default(),
             requests_since_epoch: 0,
             last_now: 0,
             cfg,
@@ -364,9 +390,6 @@ impl Hmmu {
             self.counters.record_placement(m.device.index());
         }
 
-        // --- policy accounting ---
-        self.policy.record_access(page, kind.is_write());
-
         // --- DMA conflict routing (§III-D) ---
         let (device, dev_addr) = {
             let (route, swap) = self.dma.route(page, offset, t);
@@ -404,7 +427,19 @@ impl Hmmu {
             t = freed_at;
             tag
         };
-        self.counters.record_tier_access(device.index(), kind.is_write());
+        // --- policy + per-tier accounting ---
+        // §Perf: inside a trace block the two recorder calls (pure
+        // counter additions no reader consults until the next epoch
+        // boundary) are queued and flushed in one batch at block end —
+        // see [`PendingAccesses`]. Per-op callers record immediately.
+        if self.pending.active {
+            self.pending.pages.push(page);
+            let write = if kind.is_write() { PENDING_WRITE_BIT } else { 0 };
+            self.pending.meta.push(device.rank() | write);
+        } else {
+            self.policy.record_access(page, kind.is_write());
+            self.counters.record_tier_access(device.index(), kind.is_write());
+        }
         let done = self.tiers[device.index()].issue(dev_addr, kind, bytes, t);
 
         // --- in-order completion drain (§III-C) ---
@@ -418,10 +453,49 @@ impl Hmmu {
         self.requests_since_epoch += 1;
         if self.requests_since_epoch >= self.cfg.hmmu.epoch_requests {
             self.requests_since_epoch = 0;
+            // The epoch step reads the policy counters: drain any
+            // block-batched accounting first so deferral is invisible.
+            self.flush_pending();
             self.run_epoch(release, link);
         }
 
         release
+    }
+
+    /// Start deferring hotness/tier-access accounting for a trace block
+    /// (the [`crate::cpu::MemBackend::begin_block`] hook).
+    pub fn begin_block(&mut self) {
+        self.pending.active = true;
+    }
+
+    /// End the block: flush the deferred accounting in arrival order.
+    pub fn end_block(&mut self) {
+        self.pending.active = false;
+        self.flush_pending();
+    }
+
+    /// Drain the deferred accounting queue into the policy and counters,
+    /// in arrival order — bit-identical to immediate recording because
+    /// both recorders are pure additions and every reader (epoch step,
+    /// reports) runs behind a flush point.
+    fn flush_pending(&mut self) {
+        if self.pending.pages.is_empty() {
+            return;
+        }
+        // Take the buffers to split the borrow; hand them back afterwards
+        // so steady state allocates nothing.
+        let pages = std::mem::take(&mut self.pending.pages);
+        let meta = std::mem::take(&mut self.pending.meta);
+        for (&page, &m) in pages.iter().zip(meta.iter()) {
+            let is_write = m & PENDING_WRITE_BIT != 0;
+            self.policy.record_access(page, is_write);
+            self.counters
+                .record_tier_access((m & !PENDING_WRITE_BIT) as usize, is_write);
+        }
+        self.pending.pages = pages;
+        self.pending.meta = meta;
+        self.pending.pages.clear();
+        self.pending.meta.clear();
     }
 
     /// Commit DMA swaps completed by `now` into the redirection table.
@@ -593,6 +667,7 @@ impl Hmmu {
 
     /// Finish outstanding work at end-of-run (commit in-flight swaps).
     pub fn drain(&mut self, now: Time) {
+        self.flush_pending();
         while self.dma.active_count() > 0 {
             let horizon = self.dma.next_commit().unwrap().max(now);
             self.commit_dma(horizon);
@@ -608,6 +683,112 @@ impl Hmmu {
             return 0.0;
         }
         self.table.dram_resident_pages() as f64 / mapped
+    }
+
+    /// Re-target a forked (cloned or restored) warm HMMU at scenario
+    /// `cfg`, which may differ from the warm-up config only on the fork
+    /// axes: policy kind and rank-1 injected stalls.
+    ///
+    /// - Policy **kind** change: the warm policy state belongs to another
+    ///   algorithm, so the new policy starts fresh (`build_policy`) — the
+    ///   redirection table, caches, devices and clocks stay warm. Note
+    ///   a fork to Static keeps the warm table layout (identity mapping
+    ///   happens only at construction): inherent to checkpoint-fork
+    ///   methodology, and pinned as such by the fork-vs-cold tests, which
+    ///   replay the same morph path cold.
+    /// - Same kind: the warm policy state (hotness, wear) carries over.
+    /// - Stall change: reconfigures the rank-1 device in place (§III-F
+    ///   "arbitrary latency cycles" — same mechanism as `--nvm-stalls`).
+    pub fn morph_for_fork(&mut self, cfg: &SystemConfig) {
+        if cfg.policy != self.cfg.policy {
+            self.policy = build_policy(cfg, None);
+            self.cfg.policy = cfg.policy;
+        }
+        if cfg.nvm.read_stall_ns != self.cfg.nvm.read_stall_ns
+            || cfg.nvm.write_stall_ns != self.cfg.nvm.write_stall_ns
+        {
+            self.set_nvm_stalls(cfg.nvm.read_stall_ns, cfg.nvm.write_stall_ns);
+            self.cfg.nvm = cfg.nvm;
+        }
+    }
+}
+
+impl CodecState for ReleaseRing {
+    fn encode_state(&self, e: &mut Encoder) {
+        // Entries in drain order; the restored ring re-bases at index 0
+        // (head position is representation, not state).
+        e.put_len(self.len);
+        for k in 0..self.len {
+            let mut i = self.head + k;
+            if i >= self.buf.len() {
+                i -= self.buf.len();
+            }
+            e.put_u64(self.buf[i]);
+        }
+        e.put_u64(self.last);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let n = d.len()?;
+        if n > self.buf.len() {
+            crate::bail!(
+                "checkpoint geometry mismatch: {n} HDR occupancy entries exceed capacity {}",
+                self.buf.len()
+            );
+        }
+        self.head = 0;
+        self.len = n;
+        for k in 0..n {
+            self.buf[k] = d.u64()?;
+        }
+        self.last = d.u64()?;
+        Ok(())
+    }
+}
+
+impl CodecState for Hmmu {
+    fn encode_state(&self, e: &mut Encoder) {
+        // Checkpoints are taken at trace-block boundaries, where the
+        // deferred accounting queue is empty (`end_block` flushed it) and
+        // the DMA completion scratch is idle — so neither is serialized.
+        // `cfg`/`specs`/`pipeline_ns` are configuration, rebuilt by
+        // `Hmmu::new` and validated structurally by each member decode.
+        debug_assert!(
+            self.pending.pages.is_empty() && !self.pending.active,
+            "checkpoint mid-block: deferred accounting not flushed"
+        );
+        self.table.encode_state(e);
+        self.tags.encode_state(e);
+        self.dma.encode_state(e);
+        self.policy.encode_state(e);
+        e.put_len(self.tiers.len());
+        for t in &self.tiers {
+            t.encode_state(e);
+        }
+        self.counters.encode_state(e);
+        self.hints.encode_state(e);
+        self.hdr_occupancy.encode_state(e);
+        e.put_u64(self.requests_since_epoch);
+        e.put_u64(self.last_now);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.table.decode_state(d)?;
+        self.tags.decode_state(d)?;
+        self.dma.decode_state(d)?;
+        self.policy.decode_state(d)?;
+        let n = d.len()?;
+        check_len("hmmu tiers", self.tiers.len(), n)?;
+        for t in &mut self.tiers {
+            t.decode_state(d)?;
+        }
+        self.counters.decode_state(d)?;
+        self.hints.decode_state(d)?;
+        self.hdr_occupancy.decode_state(d)?;
+        self.requests_since_epoch = d.u64()?;
+        self.last_now = d.u64()?;
+        self.pending = PendingAccesses::default();
+        Ok(())
     }
 }
 

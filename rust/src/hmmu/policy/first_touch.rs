@@ -6,7 +6,7 @@
 use super::{Device, PlacementPolicy, PolicyView};
 use crate::alloc::Placement;
 
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct FirstTouchPolicy;
 
 impl FirstTouchPolicy {

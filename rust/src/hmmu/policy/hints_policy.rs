@@ -5,9 +5,11 @@
 
 use super::{Device, PlacementPolicy, PolicyView};
 use crate::alloc::Placement;
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 use std::collections::HashSet;
 
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct HintsPolicy {
     /// Pages pinned to DRAM (never offered as demotion victims).
     pinned: HashSet<u64>,
@@ -43,6 +45,21 @@ impl PlacementPolicy for HintsPolicy {
 
     fn epoch(&mut self, _view: &PolicyView) -> &[(u64, u64)] {
         &[]
+    }
+}
+
+impl CodecState for HintsPolicy {
+    fn encode_state(&self, e: &mut Encoder) {
+        // Pinned set sorted: same state ⇒ same bytes regardless of
+        // HashSet iteration order.
+        let mut pinned: Vec<u64> = self.pinned.iter().copied().collect();
+        pinned.sort_unstable();
+        e.put_u64_slice(&pinned);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.pinned = d.u64_vec()?.into_iter().collect();
+        Ok(())
     }
 }
 

@@ -23,6 +23,8 @@
 
 use super::{Device, PlacementPolicy, PolicyView};
 use crate::alloc::Placement;
+use crate::util::codec::{check_len, CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 
 /// Tier marker for unmapped pages in the per-page tier scratch.
 pub(crate) const TIER_UNMAPPED: u8 = u8::MAX;
@@ -209,6 +211,16 @@ pub trait HotnessEngine {
 
     /// Implementation label for reports.
     fn label(&self) -> &'static str;
+
+    /// Clone the engine for a checkpoint fork. The default returns the
+    /// native engine: every engine is stateless and bit-compatible with
+    /// it (the XLA engine is cross-checked against native by integration
+    /// test), and the sweep fork path always runs native — so forks
+    /// degrade gracefully instead of requiring every engine to be
+    /// clonable.
+    fn clone_box(&self) -> Box<dyn HotnessEngine> {
+        Box::new(NativeHotnessEngine)
+    }
 }
 
 /// Pure-Rust engine, bit-compatible with the Pallas kernel under
@@ -306,6 +318,49 @@ pub struct HotnessPolicy {
     engine: Box<dyn HotnessEngine>,
     /// Epochs run (for reports).
     pub epochs: u64,
+}
+
+impl Clone for HotnessPolicy {
+    fn clone(&self) -> Self {
+        HotnessPolicy {
+            pages: self.pages,
+            tiers: self.tiers,
+            reads: self.reads.clone(),
+            writes: self.writes.clone(),
+            hotness: self.hotness.clone(),
+            in_dram: self.in_dram.clone(),
+            tier_of: self.tier_of.clone(),
+            pairs: self.pairs.clone(),
+            engine: self.engine.clone_box(),
+            epochs: self.epochs,
+        }
+    }
+}
+
+impl CodecState for HotnessPolicy {
+    fn encode_state(&self, e: &mut Encoder) {
+        // `in_dram`/`tier_of`/`pairs` are per-epoch scratch, rebuilt from
+        // the table at the next epoch boundary; the persistent state is
+        // the epoch counters, the decayed hotness, and the epoch count.
+        e.put_f32_slice(&self.reads);
+        e.put_f32_slice(&self.writes);
+        e.put_f32_slice(&self.hotness);
+        e.put_u64(self.epochs);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let reads = d.f32_vec()?;
+        check_len("hotness pages", self.pages, reads.len())?;
+        self.reads = reads;
+        let writes = d.f32_vec()?;
+        check_len("hotness pages", self.pages, writes.len())?;
+        self.writes = writes;
+        let hotness = d.f32_vec()?;
+        check_len("hotness pages", self.pages, hotness.len())?;
+        self.hotness = hotness;
+        self.epochs = d.u64()?;
+        Ok(())
+    }
 }
 
 impl HotnessPolicy {

@@ -24,6 +24,8 @@ pub use wear_aware::{WearAwarePolicy, WEAR_BIAS};
 use super::redirection::{Device, RedirectionTable};
 use crate::alloc::Placement;
 use crate::config::{PolicyKind, SystemConfig};
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 
 /// Read-only state a policy may consult at an epoch boundary.
 pub struct PolicyView<'a> {
@@ -61,6 +63,7 @@ pub trait PlacementPolicy {
 /// entirely for the stateless policies). Dynamic dispatch survives only
 /// at the [`HotnessEngine`] boundary, where it is needed to swap the
 /// native math for the AOT-XLA executable.
+#[derive(Clone)]
 pub enum PolicyImpl {
     Static(StaticPolicy),
     FirstTouch(FirstTouchPolicy),
@@ -115,6 +118,51 @@ impl PolicyImpl {
             PolicyImpl::Hints(p) => p.epoch(view),
             PolicyImpl::Hotness(p) => p.epoch(view),
             PolicyImpl::WearAware(p) => p.epoch(view),
+        }
+    }
+}
+
+impl PolicyImpl {
+    fn variant_tag(&self) -> u8 {
+        match self {
+            PolicyImpl::Static(_) => 0,
+            PolicyImpl::FirstTouch(_) => 1,
+            PolicyImpl::Hints(_) => 2,
+            PolicyImpl::Hotness(_) => 3,
+            PolicyImpl::WearAware(_) => 4,
+        }
+    }
+}
+
+impl CodecState for PolicyImpl {
+    fn encode_state(&self, e: &mut Encoder) {
+        // The variant is config-derived (`build_policy`); tag it so a
+        // snapshot restored into the wrong policy kind fails loudly.
+        e.put_u8(self.variant_tag());
+        match self {
+            // Static split and first-touch are stateless (geometry lives
+            // in the config); hints/hotness/wear-aware carry state.
+            PolicyImpl::Static(_) | PolicyImpl::FirstTouch(_) => {}
+            PolicyImpl::Hints(p) => p.encode_state(e),
+            PolicyImpl::Hotness(p) => p.encode_state(e),
+            PolicyImpl::WearAware(p) => p.encode_state(e),
+        }
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let tag = d.u8()?;
+        if tag != self.variant_tag() {
+            crate::bail!(
+                "checkpoint geometry mismatch: policy variant tag {tag}, expected {} ({})",
+                self.variant_tag(),
+                self.name()
+            );
+        }
+        match self {
+            PolicyImpl::Static(_) | PolicyImpl::FirstTouch(_) => Ok(()),
+            PolicyImpl::Hints(p) => p.decode_state(d),
+            PolicyImpl::Hotness(p) => p.decode_state(d),
+            PolicyImpl::WearAware(p) => p.decode_state(d),
         }
     }
 }

@@ -8,6 +8,7 @@ use super::{Device, PlacementPolicy, PolicyView};
 use crate::alloc::Placement;
 use crate::hmmu::redirection::TierId;
 
+#[derive(Clone)]
 pub struct StaticPolicy {
     /// Cumulative page-count boundaries, rank order: a page below
     /// `bounds[t]` (and not below `bounds[t-1]`) lives on tier `t`.

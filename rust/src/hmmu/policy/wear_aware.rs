@@ -24,6 +24,8 @@ use super::{Device, PlacementPolicy, PolicyView};
 use crate::alloc::Placement;
 use crate::hmmu::policy::HotnessPolicy;
 use crate::hmmu::redirection::TierId;
+use crate::util::codec::{check_len, CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 
 /// Weight of write activity in the wear-adjusted scores.
 pub const WEAR_BIAS: f32 = 4.0;
@@ -48,6 +50,54 @@ pub struct WearAwarePolicy {
     pairs: Vec<(u64, u64)>,
     engine: Box<dyn HotnessEngine>,
     pub epochs: u64,
+}
+
+impl Clone for WearAwarePolicy {
+    fn clone(&self) -> Self {
+        WearAwarePolicy {
+            pages: self.pages,
+            tiers: self.tiers,
+            reads: self.reads.clone(),
+            writes: self.writes.clone(),
+            lifetime_writes: self.lifetime_writes.clone(),
+            hotness: self.hotness.clone(),
+            in_dram: self.in_dram.clone(),
+            tier_of: self.tier_of.clone(),
+            pairs: self.pairs.clone(),
+            engine: self.engine.clone_box(),
+            epochs: self.epochs,
+        }
+    }
+}
+
+impl CodecState for WearAwarePolicy {
+    fn encode_state(&self, e: &mut Encoder) {
+        // Scratch buffers (`in_dram`/`tier_of`/`pairs`) are rebuilt each
+        // epoch; persistent state adds `lifetime_writes` (the wear proxy,
+        // never reset) to the hotness-policy set.
+        e.put_f32_slice(&self.reads);
+        e.put_f32_slice(&self.writes);
+        e.put_f32_slice(&self.lifetime_writes);
+        e.put_f32_slice(&self.hotness);
+        e.put_u64(self.epochs);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let reads = d.f32_vec()?;
+        check_len("wear-aware pages", self.pages, reads.len())?;
+        self.reads = reads;
+        let writes = d.f32_vec()?;
+        check_len("wear-aware pages", self.pages, writes.len())?;
+        self.writes = writes;
+        let lifetime = d.f32_vec()?;
+        check_len("wear-aware pages", self.pages, lifetime.len())?;
+        self.lifetime_writes = lifetime;
+        let hotness = d.f32_vec()?;
+        check_len("wear-aware pages", self.pages, hotness.len())?;
+        self.hotness = hotness;
+        self.epochs = d.u64()?;
+        Ok(())
+    }
 }
 
 impl WearAwarePolicy {

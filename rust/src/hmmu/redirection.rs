@@ -9,6 +9,7 @@
 //! `dram`/`nvm` pair is just the two-tier special case.
 
 use crate::bail;
+use crate::util::codec::{check_len, CodecState, Decoder, Encoder};
 use crate::util::error::Result;
 
 /// A tier of the memory stack, by rank (0 = fastest). The legacy
@@ -358,6 +359,50 @@ impl RedirectionTable {
     }
 }
 
+impl CodecState for RedirectionTable {
+    fn encode_state(&self, e: &mut Encoder) {
+        // Geometry (page_bytes, frames) is config-derived and validated on
+        // decode rather than serialized; the mutable state is the entry
+        // array, the per-tier free lists, and the O(1) counters.
+        e.put_u32_slice(&self.entries);
+        e.put_len(self.free.len());
+        for f in &self.free {
+            e.put_u32_slice(f);
+        }
+        e.put_u64(self.mapped);
+        e.put_u64_slice(&self.resident);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let entries = d.u32_vec()?;
+        check_len("redirection entries", self.entries.len(), entries.len())?;
+        let tiers = d.len()?;
+        check_len("redirection tiers", self.free.len(), tiers)?;
+        let mut free = Vec::with_capacity(tiers);
+        for t in 0..tiers {
+            let f = d.u32_vec()?;
+            if f.len() > self.frames[t] as usize {
+                bail!(
+                    "checkpoint geometry mismatch: tier {t} free list {} exceeds {} frames",
+                    f.len(),
+                    self.frames[t]
+                );
+            }
+            free.push(f);
+        }
+        let mapped = d.u64()?;
+        let resident = d.u64_vec()?;
+        check_len("redirection residency", self.resident.len(), resident.len())?;
+        self.entries = entries;
+        self.free = free;
+        self.mapped = mapped;
+        self.resident = resident;
+        // A decoded table must satisfy the same invariants a live one
+        // does — catches corrupt/mismatched snapshots up front.
+        self.check_invariants()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -546,6 +591,50 @@ mod tests {
         t.check_invariants().unwrap();
         // Residency sums to mapped across all tiers.
         assert_eq!(t.residency().iter().sum::<u64>(), t.mapped_pages());
+    }
+
+    #[test]
+    fn codec_round_trip_restores_mappings_and_counters() {
+        let mut t = RedirectionTable::new(16, &[4, 4, 8], 4096);
+        t.identity_map();
+        t.swap(0, 4).unwrap();
+        t.swap(5, 9).unwrap();
+
+        let mut e = Encoder::new();
+        t.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut restored = RedirectionTable::new(16, &[4, 4, 8], 4096);
+        let mut d = Decoder::new(&bytes);
+        restored.decode_state(&mut d).unwrap();
+        assert!(d.is_done());
+
+        for p in 0..16 {
+            assert_eq!(restored.lookup(p), t.lookup(p), "page {p}");
+        }
+        assert_eq!(restored.residency(), t.residency());
+        assert_eq!(restored.mapped_pages(), t.mapped_pages());
+        for tier in 0..3 {
+            assert_eq!(
+                restored.free_frames(TierId(tier)),
+                t.free_frames(TierId(tier))
+            );
+        }
+        restored.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn codec_rejects_wrong_geometry() {
+        let mut t = table();
+        t.identity_map();
+        let mut e = Encoder::new();
+        t.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        // Different host-page count refuses the overlay.
+        let mut wrong = RedirectionTable::two_tier(16, 4, 16, 4096);
+        assert!(wrong.decode_state(&mut Decoder::new(&bytes)).is_err());
+        // Different tier count refuses too.
+        let mut wrong3 = RedirectionTable::new(8, &[4, 4, 8], 4096);
+        assert!(wrong3.decode_state(&mut Decoder::new(&bytes)).is_err());
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //! `max(own completion, previous release)` — i.e. in-order drain.
 
 use crate::sim::Time;
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 use std::collections::VecDeque;
 
 /// One in-flight request tracked by the HDR FIFO.
@@ -175,6 +177,48 @@ impl TagMatcher {
     }
 }
 
+impl CodecState for TagMatcher {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_len(self.fifo.len());
+        for entry in &self.fifo {
+            e.put_u16(entry.tag);
+            e.put_bool(entry.done.is_some());
+            e.put_u64(entry.done.unwrap_or(0));
+        }
+        e.put_u16(self.next_tag);
+        e.put_u64(self.last_release);
+        e.put_u64(self.completed);
+        e.put_u64(self.reorder_wait_ns);
+        e.put_u64(self.fifo_full_stalls);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let n = d.len()?;
+        if n > self.depth {
+            crate::bail!(
+                "checkpoint geometry mismatch: {n} HDR FIFO entries exceed depth {}",
+                self.depth
+            );
+        }
+        self.fifo.clear();
+        for _ in 0..n {
+            let tag = d.u16()?;
+            let stamped = d.bool()?;
+            let done = d.u64()?;
+            self.fifo.push_back(HdrEntry {
+                tag,
+                done: stamped.then_some(done),
+            });
+        }
+        self.next_tag = d.u16()?;
+        self.last_release = d.u64()?;
+        self.completed = d.u64()?;
+        self.reorder_wait_ns = d.u64()?;
+        self.fifo_full_stalls = d.u64()?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,6 +335,43 @@ mod tests {
         assert_eq!(tm.last_release(), 200);
         assert_eq!(tm.outstanding(), 1); // only the new issue remains
         assert_eq!(tm.fifo_full_stalls, 1);
+    }
+
+    #[test]
+    fn codec_round_trip_preserves_drain_order() {
+        // Snapshot mid-flight with a stamped entry held behind an
+        // unstamped head; the restored matcher must drain identically.
+        let mut tm = TagMatcher::new(8);
+        let a = tm.issue();
+        let b = tm.issue();
+        assert_eq!(tm.complete(b, 50), vec![]);
+
+        let mut e = Encoder::new();
+        tm.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut restored = TagMatcher::new(8);
+        let mut d = Decoder::new(&bytes);
+        restored.decode_state(&mut d).unwrap();
+        assert!(d.is_done());
+
+        let want = tm.complete(a, 300);
+        let got = restored.complete(a, 300);
+        assert_eq!(got, want);
+        assert_eq!(restored.reorder_wait_ns, tm.reorder_wait_ns);
+        assert_eq!(restored.completed, tm.completed);
+    }
+
+    #[test]
+    fn codec_rejects_overdeep_fifo() {
+        let mut tm = TagMatcher::new(4);
+        tm.issue();
+        tm.issue();
+        tm.issue();
+        let mut e = Encoder::new();
+        tm.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut small = TagMatcher::new(2);
+        assert!(small.decode_state(&mut Decoder::new(&bytes)).is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use hymem::baselines::run_fig7_row;
 use hymem::config::{MemTech, PolicyKind, SystemConfig, TechPreset};
 use hymem::platform::{Platform, RunOpts};
 use hymem::runtime;
-use hymem::sweep::{default_threads, run_sweep, Scenario};
+use hymem::sweep::{default_threads, run_sweep, run_sweep_forked, ForkOpts, Scenario};
 use hymem::util::cli::Args;
 use hymem::util::stats::geomean;
 use hymem::util::units::fmt_bytes;
@@ -218,6 +218,18 @@ fn cmd_sweep(args: &Args) -> i32 {
         scenarios = Scenario::cores_grid(&scenarios, &counts);
     }
 
+    // Warm-state checkpoint/fork engine: `--warmup-ops N` pays the
+    // warm-up once per (workload, base-config) group and forks it across
+    // the policy × stall grid; `--checkpoint-dir D` caches serialized
+    // warm states across invocations (CI rides on this); `--cold-replay`
+    // re-warms every scenario through the same code path (baseline for
+    // the fork speedup, bit-identical results).
+    let fork = ForkOpts {
+        warmup_ops: args.get_u64("warmup-ops", 0),
+        checkpoint_dir: args.get("checkpoint-dir").map(std::path::PathBuf::from),
+        cold_replay: args.flag("cold-replay"),
+    };
+
     println!(
         "# sweep: {} scenarios ({} workloads x {} policies) scale=1/{} ops={ops} threads={threads}",
         scenarios.len(),
@@ -225,6 +237,17 @@ fn cmd_sweep(args: &Args) -> i32 {
         policies.len(),
         cfg.scale
     );
+    if fork.warmup_ops > 0 {
+        println!(
+            "# warm-state fork: warmup-ops={} mode={}{}",
+            fork.warmup_ops,
+            if fork.cold_replay { "cold-replay" } else { "forked" },
+            fork.checkpoint_dir
+                .as_deref()
+                .map(|d| format!(" checkpoint-dir={}", d.display()))
+                .unwrap_or_default()
+        );
+    }
     // Sweep scenarios always use the native hotness engine (bit-compatible
     // with the XLA artifact); say so instead of silently ignoring the
     // engine selection that `run` honors.
@@ -236,7 +259,12 @@ fn cmd_sweep(args: &Args) -> i32 {
     } else if args.flag("native-engine") {
         println!("# note: --native-engine is implied for sweep (scenarios always run native)");
     }
-    match run_sweep(&scenarios, threads) {
+    let result = if fork.warmup_ops > 0 {
+        run_sweep_forked(&scenarios, threads, &fork)
+    } else {
+        run_sweep(&scenarios, threads)
+    };
+    match result {
         Ok(report) => {
             println!("{}", report.summary());
             println!("(paper geomean: 3.17x)");
@@ -522,6 +550,10 @@ COMMANDS:
                   --threads N OS threads (default: all cores; bit-identical
                   to serial), writes --json <path> (default BENCH_sweep.json)
                   [--ops N] [--host-managed-dma] [--coalesce-writes]
+                  [--warmup-ops N] pay warm-up once per workload group and
+                  fork it across the grid; [--checkpoint-dir D] cache warm
+                  states on disk; [--cold-replay] re-warm per scenario
+                  (fork-speedup baseline, bit-identical results)
   fig7            full comparison vs gem5-like and champsim-like
                   [--ops N] [--baseline-instructions N]
   fig8            memory request bytes per workload [--ops N]

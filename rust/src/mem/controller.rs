@@ -8,10 +8,13 @@
 
 use super::device::{AccessKind, MemDevice};
 use crate::sim::{Clock, Time};
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 /// A memory controller wrapping a device.
+#[derive(Clone)]
 pub struct MemoryController<D: MemDevice> {
     device: D,
     clock: Clock,
@@ -91,6 +94,35 @@ impl<D: MemDevice> MemoryController<D> {
 
     pub fn outstanding(&self) -> usize {
         self.inflight.len()
+    }
+}
+
+impl<D: MemDevice + CodecState> CodecState for MemoryController<D> {
+    fn encode_state(&self, e: &mut Encoder) {
+        // The heap's internal layout depends on insertion history; encode
+        // the completion multiset sorted so identical controller state
+        // always produces identical bytes.
+        let mut inflight: Vec<Time> = self.inflight.iter().map(|&Reverse(t)| t).collect();
+        inflight.sort_unstable();
+        e.put_u64_slice(&inflight);
+        e.put_u64(self.queue_wait_ns);
+        e.put_u64(self.stalls);
+        self.device.encode_state(e);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let inflight = d.u64_vec()?;
+        if inflight.len() > self.queue_depth as usize {
+            crate::bail!(
+                "checkpoint geometry mismatch: {} in-flight requests exceed queue depth {}",
+                inflight.len(),
+                self.queue_depth
+            );
+        }
+        self.inflight = inflight.into_iter().map(Reverse).collect();
+        self.queue_wait_ns = d.u64()?;
+        self.stalls = d.u64()?;
+        self.device.decode_state(d)
     }
 }
 

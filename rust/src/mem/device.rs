@@ -1,6 +1,8 @@
 //! Common device interface and statistics.
 
 use crate::sim::Time;
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 
 /// Read or write access.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -69,6 +71,29 @@ impl DeviceStats {
     pub fn dynamic_energy_nj(&self, act_nj: f64, byte_nj: f64) -> f64 {
         (self.row_misses as f64) * act_nj
             + (self.read_bytes + self.write_bytes) as f64 * byte_nj
+    }
+}
+
+impl CodecState for DeviceStats {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_u64(self.reads);
+        e.put_u64(self.writes);
+        e.put_u64(self.read_bytes);
+        e.put_u64(self.write_bytes);
+        e.put_u64(self.row_hits);
+        e.put_u64(self.row_misses);
+        e.put_u64(self.busy_ns);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.reads = d.u64()?;
+        self.writes = d.u64()?;
+        self.read_bytes = d.u64()?;
+        self.write_bytes = d.u64()?;
+        self.row_hits = d.u64()?;
+        self.row_misses = d.u64()?;
+        self.busy_ns = d.u64()?;
+        Ok(())
     }
 }
 

@@ -12,6 +12,8 @@
 use super::device::{AccessKind, DeviceStats, MemDevice};
 use crate::config::DramConfig;
 use crate::sim::Time;
+use crate::util::codec::{check_len, CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 
 #[derive(Clone, Copy, Debug)]
 struct BankState {
@@ -64,6 +66,32 @@ impl DramDevice {
     /// calibration path: "we measured the round trip time ... first").
     pub fn unloaded_miss_ns(&self) -> u64 {
         self.cfg.t_rcd_ns + self.cfg.t_cas_ns + self.cfg.t_burst_ns
+    }
+}
+
+impl CodecState for DramDevice {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_len(self.banks.len());
+        for b in &self.banks {
+            e.put_bool(b.open_row.is_some());
+            e.put_u64(b.open_row.unwrap_or(0));
+            e.put_u64(b.next_free);
+        }
+        e.put_u64(self.bus_free);
+        self.stats.encode_state(e);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let n = d.len()?;
+        check_len("dram banks", self.banks.len(), n)?;
+        for b in &mut self.banks {
+            let open = d.bool()?;
+            let row = d.u64()?;
+            b.open_row = open.then_some(row);
+            b.next_free = d.u64()?;
+        }
+        self.bus_free = d.u64()?;
+        self.stats.decode_state(d)
     }
 }
 

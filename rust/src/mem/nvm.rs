@@ -11,6 +11,8 @@ use super::device::{AccessKind, DeviceStats, MemDevice};
 use super::dram::DramDevice;
 use crate::config::{DramConfig, NvmConfig};
 use crate::sim::Time;
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 use std::collections::HashMap;
 
 /// An emulated NVM device: DRAM timing + stall injection + wear tracking.
@@ -64,6 +66,35 @@ impl NvmDevice {
     /// Number of distinct pages ever written.
     pub fn pages_written(&self) -> usize {
         self.wear.len()
+    }
+}
+
+impl CodecState for NvmDevice {
+    fn encode_state(&self, e: &mut Encoder) {
+        self.inner.encode_state(e);
+        // Sparse wear map, sorted by page so the encoding is independent
+        // of HashMap iteration order (same state ⇒ same bytes).
+        let mut pages: Vec<(u64, u64)> = self.wear.iter().map(|(&p, &w)| (p, w)).collect();
+        pages.sort_unstable();
+        e.put_len(pages.len());
+        for (p, w) in pages {
+            e.put_u64(p);
+            e.put_u64(w);
+        }
+        e.put_u64(self.max_wear);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.inner.decode_state(d)?;
+        let n = d.len()?;
+        self.wear = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let p = d.u64()?;
+            let w = d.u64()?;
+            self.wear.insert(p, w);
+        }
+        self.max_wear = d.u64()?;
+        Ok(())
     }
 }
 

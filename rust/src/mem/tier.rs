@@ -13,6 +13,8 @@ use super::dram::DramDevice;
 use super::nvm::NvmDevice;
 use crate::config::{DramConfig, MemTech, NvmConfig, TierSpec};
 use crate::sim::Time;
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 
 /// One tier's device model: a bare DRAM timing model, or DRAM + injected
 /// stalls + wear tracking (the NVM emulation).
@@ -66,6 +68,32 @@ impl TierDevice {
     pub fn set_stalls(&mut self, read_ns: u64, write_ns: u64) {
         if let TierDevice::Nvm(d) = self {
             d.set_stalls(read_ns, write_ns);
+        }
+    }
+}
+
+impl CodecState for TierDevice {
+    fn encode_state(&self, e: &mut Encoder) {
+        // The variant is config-derived (TierDevice::build); tag it anyway
+        // so a mismatched overlay fails loudly instead of misparsing.
+        match self {
+            TierDevice::Dram(d) => {
+                e.put_u8(0);
+                d.encode_state(e);
+            }
+            TierDevice::Nvm(d) => {
+                e.put_u8(1);
+                d.encode_state(e);
+            }
+        }
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let tag = d.u8()?;
+        match (tag, self) {
+            (0, TierDevice::Dram(dev)) => dev.decode_state(d),
+            (1, TierDevice::Nvm(dev)) => dev.decode_state(d),
+            (t, _) => crate::bail!("checkpoint geometry mismatch: tier device variant tag {t}"),
         }
     }
 }

@@ -1,0 +1,401 @@
+//! Warm-state checkpoint/fork engine (§Perf).
+//!
+//! Sweeps spend most of their simulated ops re-warming identical state:
+//! every scenario that shares a (workload, cores, topology, sizing) base
+//! replays the same warm-up prefix before the policies diverge. A
+//! [`WarmPlatform`] captures **all** mutable platform state at a trace
+//! block boundary — cache/TLB arrays, redirection table + frame pools,
+//! policy hotness/wear counters, memory-controller queues, DMA in-flight
+//! swaps, PCIe credit state, trace-generator RNG cursors, and both
+//! clocks — so the warm-up is paid **once** and then forked (cheap
+//! in-memory clone, or serialized bytes cached across CI runs) across the
+//! whole policy × stall grid.
+//!
+//! Correctness leans on the block-boundary independence the repo already
+//! pins: `step_block` results are block-size independent
+//! (`tests/batch_equivalence.rs`), so splitting a run into a warm phase
+//! and a measured phase at *any* op boundary is bit-identical to one cold
+//! run — `warm_up(0)` literally *is* today's `run_opts_serial` path, and
+//! `tests/checkpoint_fork.rs` pins fork-vs-cold-replay equality on time,
+//! counters, residency and fingerprint.
+
+use super::native::NativeBackend;
+use super::{HmmuBackend, RunOpts, RunReport};
+use crate::config::SystemConfig;
+use crate::cpu::{CacheHierarchy, CoreModel};
+use crate::util::codec::{fingerprint64, CodecState, Decoder, Encoder};
+use crate::util::error::Result;
+use crate::workload::{TraceBlock, TraceGenerator, Workload, TRACE_BLOCK_OPS};
+
+/// Serialized-checkpoint magic ("HYMW" little-endian) + format version.
+const CHECKPOINT_MAGIC: u32 = 0x574d_5948;
+const CHECKPOINT_VERSION: u32 = 1;
+
+/// One run (platform pass + native reference pass) paused at a trace
+/// block boundary, ready to be forked across scenario variants or
+/// resumed to completion.
+#[derive(Clone)]
+pub struct WarmPlatform {
+    cfg: SystemConfig,
+    wl: Workload,
+    opts: RunOpts,
+    /// Ops already executed (the warm prefix length).
+    warmed: u64,
+    // --- platform pass ---
+    backend: HmmuBackend,
+    core: CoreModel,
+    hier: CacheHierarchy,
+    gen: TraceGenerator,
+    // --- native reference pass ---
+    nat_backend: NativeBackend,
+    nat_core: CoreModel,
+    nat_hier: CacheHierarchy,
+    nat_gen: TraceGenerator,
+}
+
+impl WarmPlatform {
+    /// A cold platform: identical state to the top of
+    /// `Platform::run_opts_serial`'s two passes.
+    pub fn new(cfg: SystemConfig, wl: &Workload, opts: RunOpts) -> Self {
+        let seed = cfg.seed;
+        let backend = HmmuBackend::new(cfg.clone(), None);
+        let core = CoreModel::new(cfg.cpu);
+        let hier = CacheHierarchy::new(&cfg);
+        let gen = TraceGenerator::new(*wl, cfg.scale, seed).take_ops(opts.ops);
+        let nat_backend = NativeBackend::new(&cfg);
+        let nat_core = CoreModel::new(cfg.cpu);
+        let nat_hier = CacheHierarchy::new(&cfg);
+        let nat_gen = TraceGenerator::new(*wl, cfg.scale, seed).take_ops(opts.ops);
+        WarmPlatform {
+            cfg,
+            wl: *wl,
+            opts,
+            warmed: 0,
+            backend,
+            core,
+            hier,
+            gen,
+            nat_backend,
+            nat_core,
+            nat_hier,
+            nat_gen,
+        }
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.wl
+    }
+
+    /// Ops executed so far (warm prefix length).
+    pub fn warmed_ops(&self) -> u64 {
+        self.warmed
+    }
+
+    /// Advance both passes by up to `n` ops (bounded by the run's total),
+    /// stopping at a block boundary with the deferred accounting flushed —
+    /// the exact point a checkpoint may be taken.
+    pub fn warm_up(&mut self, n: u64) {
+        let n = n.min(self.opts.ops.saturating_sub(self.warmed));
+        // Blocks of the default size, shrunk for the tail so the pause
+        // lands exactly on op `warmed + n`. Block sizing does not affect
+        // results (`tests/batch_equivalence.rs`), only where we may pause.
+        let mut left = n;
+        let mut block = TraceBlock::new();
+        let mut nat_block = TraceBlock::new();
+        while left > 0 {
+            if (left as usize) < block.capacity() {
+                block = TraceBlock::with_capacity(left as usize);
+                nat_block = TraceBlock::with_capacity(left as usize);
+            }
+            let got = self.gen.fill_block(&mut block);
+            if got == 0 {
+                break;
+            }
+            self.core.step_block(&block, &mut self.hier, &mut self.backend);
+            self.nat_gen.fill_block(&mut nat_block);
+            self.nat_core.step_block(&nat_block, &mut self.nat_hier, &mut self.nat_backend);
+            self.warmed += got as u64;
+            left -= got as u64;
+        }
+    }
+
+    /// Fork this warm state at scenario `cfg`, which may differ from the
+    /// warm config only on the fork axes (policy kind, rank-1 stalls).
+    /// O(state size) clone; no simulation happens here.
+    pub fn fork(&self, cfg: &SystemConfig) -> WarmPlatform {
+        let mut wp = self.clone();
+        wp.backend.hmmu.morph_for_fork(cfg);
+        wp.cfg = cfg.clone();
+        wp
+    }
+
+    /// Run the remaining ops on both passes and produce the same
+    /// [`RunReport`] a cold `Platform::run_opts_serial` of the full run
+    /// would. `host_wall_ns`/`native_wall_ns` cover only the measured
+    /// (post-fork) phase — that saved warm-up is the point of forking.
+    pub fn run_to_completion(mut self) -> Result<RunReport> {
+        let wall0 = std::time::Instant::now();
+        let mut block = TraceBlock::with_capacity(TRACE_BLOCK_OPS);
+        while self.gen.fill_block(&mut block) > 0 {
+            self.core.step_block(&block, &mut self.hier, &mut self.backend);
+        }
+        if self.opts.flush_at_end {
+            let now = self.core.now();
+            self.hier.flush(now, &mut self.backend);
+        }
+        let platform_time_ns = self.core.finish();
+        self.backend.drain(platform_time_ns);
+        let host_wall_ns = wall0.elapsed().as_nanos() as u64;
+
+        let wall1 = std::time::Instant::now();
+        while self.nat_gen.fill_block(&mut block) > 0 {
+            self.nat_core.step_block(&block, &mut self.nat_hier, &mut self.nat_backend);
+        }
+        let native_time_ns = self.nat_core.finish();
+        let native_wall_ns = wall1.elapsed().as_nanos() as u64;
+
+        let backend = self.backend;
+        let specs = backend.hmmu.tier_specs().to_vec();
+        let energy_inputs: Vec<_> = specs
+            .iter()
+            .enumerate()
+            .map(|(t, s)| {
+                (
+                    backend.hmmu.tier_stats(crate::hmmu::TierId(t as u8)),
+                    s.energy,
+                    s.size_bytes,
+                )
+            })
+            .collect();
+        let energy = crate::mem::estimate_tier_energy(&energy_inputs, platform_time_ns);
+
+        Ok(RunReport {
+            workload: self.wl.name.to_string(),
+            policy: backend.hmmu.policy_name().to_string(),
+            scale: self.cfg.scale,
+            instructions: self.core.stats.instructions,
+            mem_ops: self.core.stats.mem_ops,
+            memory_accesses: self.core.stats.memory_accesses,
+            l1d_miss_rate: self.hier.l1d.miss_rate(),
+            l2_miss_rate: self.hier.l2.miss_rate(),
+            native_time_ns,
+            platform_time_ns,
+            mem_stall_ns: self.core.stats.mem_stall_ns,
+            counters: backend.hmmu.counters.clone(),
+            dram_stats: backend.hmmu.dram_stats().clone(),
+            nvm_stats: backend.hmmu.nvm_stats().clone(),
+            topology: self.cfg.topology_label(),
+            nvm_max_wear: backend.hmmu.nvm_max_wear(),
+            tier_wear: backend.hmmu.tier_wear(),
+            tier_residency: backend.hmmu.tier_residency(),
+            dram_residency: backend.hmmu.dram_residency(),
+            pcie_tx_bytes: backend.link.tx_bytes(),
+            pcie_rx_bytes: backend.link.rx_bytes(),
+            pcie_credit_stalls: backend.link.credit_stalls,
+            energy,
+            host_wall_ns,
+            native_wall_ns,
+        })
+    }
+
+    /// Cache key for a serialized checkpoint: everything that determines
+    /// the warm state. Fork-axis fields are part of the config Debug
+    /// surface, so two warm groups never collide on a key.
+    pub fn cache_key(cfg: &SystemConfig, wl: &Workload, opts: RunOpts, warm_ops: u64) -> u64 {
+        fingerprint64(&format!(
+            "{:?}|{}|{}|{}|{warm_ops}",
+            cfg, wl.name, opts.ops, opts.flush_at_end
+        ))
+    }
+
+    /// Serialize the warm state into the compact binary checkpoint form
+    /// (versioned header + every member's [`CodecState`] payload).
+    pub fn save(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        e.put_u32(CHECKPOINT_MAGIC);
+        e.put_u32(CHECKPOINT_VERSION);
+        e.put_u64(fingerprint64(&format!("{:?}", self.cfg)));
+        e.put_str(self.wl.name);
+        e.put_u64(self.cfg.scale);
+        e.put_u64(self.cfg.seed);
+        e.put_u64(self.opts.ops);
+        e.put_bool(self.opts.flush_at_end);
+        e.put_u64(self.warmed);
+        self.backend.encode_state(&mut e);
+        self.core.encode_state(&mut e);
+        self.hier.encode_state(&mut e);
+        self.gen.encode_state(&mut e);
+        self.nat_backend.encode_state(&mut e);
+        self.nat_core.encode_state(&mut e);
+        self.nat_hier.encode_state(&mut e);
+        self.nat_gen.encode_state(&mut e);
+        e.into_bytes()
+    }
+
+    /// Rebuild a warm platform from checkpoint `bytes`. The geometry
+    /// (config, workload, run sizing) comes from the arguments — the
+    /// header only *validates* that the bytes belong to this scenario;
+    /// structural mismatches deeper in the payload fail loudly via each
+    /// member's decode validation.
+    pub fn load(bytes: &[u8], cfg: SystemConfig, wl: &Workload, opts: RunOpts) -> Result<Self> {
+        let mut d = Decoder::new(bytes);
+        let magic = d.u32()?;
+        if magic != CHECKPOINT_MAGIC {
+            crate::bail!("not a checkpoint: bad magic {magic:#x}");
+        }
+        let version = d.u32()?;
+        if version != CHECKPOINT_VERSION {
+            crate::bail!("checkpoint version {version} != {CHECKPOINT_VERSION}");
+        }
+        let fp = d.u64()?;
+        let want_fp = fingerprint64(&format!("{:?}", cfg));
+        if fp != want_fp {
+            crate::bail!("checkpoint config fingerprint {fp:#x} != {want_fp:#x}");
+        }
+        let name = d.str()?;
+        if name != wl.name {
+            crate::bail!("checkpoint workload {name:?} != {:?}", wl.name);
+        }
+        let scale = d.u64()?;
+        let seed = d.u64()?;
+        if scale != cfg.scale || seed != cfg.seed {
+            crate::bail!("checkpoint scale/seed {scale}/{seed} != {}/{}", cfg.scale, cfg.seed);
+        }
+        let ops = d.u64()?;
+        let flush = d.bool()?;
+        if ops != opts.ops || flush != opts.flush_at_end {
+            crate::bail!(
+                "checkpoint run sizing {ops}/{flush} != {}/{}",
+                opts.ops,
+                opts.flush_at_end
+            );
+        }
+        let warmed = d.u64()?;
+        let mut wp = WarmPlatform::new(cfg, wl, opts);
+        wp.warmed = warmed;
+        wp.backend.decode_state(&mut d)?;
+        wp.core.decode_state(&mut d)?;
+        wp.hier.decode_state(&mut d)?;
+        wp.gen.decode_state(&mut d)?;
+        wp.nat_backend.decode_state(&mut d)?;
+        wp.nat_core.decode_state(&mut d)?;
+        wp.nat_hier.decode_state(&mut d)?;
+        wp.nat_gen.decode_state(&mut d)?;
+        if !d.is_done() {
+            crate::bail!("checkpoint has {} trailing bytes", d.remaining());
+        }
+        Ok(wp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+    use crate::workload::spec;
+
+    fn opts() -> RunOpts {
+        RunOpts {
+            ops: 12_000,
+            flush_at_end: false,
+        }
+    }
+
+    fn cfg() -> SystemConfig {
+        let mut c = SystemConfig::default_scaled(64);
+        c.policy = PolicyKind::Hotness;
+        c.hmmu.epoch_requests = 2_000;
+        c
+    }
+
+    #[test]
+    fn warm_then_run_matches_cold_run() {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let cold = WarmPlatform::new(cfg(), &wl, opts())
+            .run_to_completion()
+            .unwrap();
+        let mut warm = WarmPlatform::new(cfg(), &wl, opts());
+        warm.warm_up(5_000);
+        assert_eq!(warm.warmed_ops(), 5_000);
+        let split = warm.run_to_completion().unwrap();
+        assert_eq!(cold.platform_time_ns, split.platform_time_ns);
+        assert_eq!(cold.native_time_ns, split.native_time_ns);
+        assert_eq!(
+            format!("{:#?}", cold.counters),
+            format!("{:#?}", split.counters)
+        );
+        assert_eq!(cold.tier_residency, split.tier_residency);
+    }
+
+    #[test]
+    fn matches_platform_run_opts_serial() {
+        let wl = spec::by_name("557.xz").unwrap();
+        let classic = super::super::Platform::new(cfg())
+            .run_opts_serial(&wl, opts())
+            .unwrap();
+        let mut warm = WarmPlatform::new(cfg(), &wl, opts());
+        warm.warm_up(4_000);
+        let forked = warm.run_to_completion().unwrap();
+        assert_eq!(classic.platform_time_ns, forked.platform_time_ns);
+        assert_eq!(classic.native_time_ns, forked.native_time_ns);
+        assert_eq!(
+            format!("{:#?}", classic.counters),
+            format!("{:#?}", forked.counters)
+        );
+    }
+
+    #[test]
+    fn serialized_round_trip_resumes_identically() {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let mut warm = WarmPlatform::new(cfg(), &wl, opts());
+        warm.warm_up(6_000);
+        let bytes = warm.save();
+        let restored = WarmPlatform::load(&bytes, cfg(), &wl, opts()).unwrap();
+        assert_eq!(restored.warmed_ops(), 6_000);
+        let a = warm.run_to_completion().unwrap();
+        let b = restored.run_to_completion().unwrap();
+        assert_eq!(a.platform_time_ns, b.platform_time_ns);
+        assert_eq!(format!("{:#?}", a.counters), format!("{:#?}", b.counters));
+        assert_eq!(a.tier_residency, b.tier_residency);
+    }
+
+    #[test]
+    fn load_rejects_wrong_scenario() {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let mut warm = WarmPlatform::new(cfg(), &wl, opts());
+        warm.warm_up(2_000);
+        let bytes = warm.save();
+        // Different config → fingerprint mismatch.
+        let mut other = cfg();
+        other.policy = PolicyKind::Static;
+        assert!(WarmPlatform::load(&bytes, other, &wl, opts()).is_err());
+        // Different workload → name mismatch (same cfg, so only the
+        // workload field differs).
+        let xz = spec::by_name("557.xz").unwrap();
+        assert!(WarmPlatform::load(&bytes, cfg(), &xz, opts()).is_err());
+        // Truncated payload → positioned decode error.
+        assert!(WarmPlatform::load(&bytes[..bytes.len() / 2], cfg(), &wl, opts()).is_err());
+    }
+
+    #[test]
+    fn fork_morphs_policy_and_stalls() {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let mut warm = WarmPlatform::new(cfg(), &wl, opts());
+        warm.warm_up(4_000);
+        let mut static_cfg = cfg();
+        static_cfg.policy = PolicyKind::Static;
+        static_cfg.nvm.read_stall_ns = 900;
+        static_cfg.nvm.write_stall_ns = 2_000;
+        let fork = warm.fork(&static_cfg);
+        let r = fork.run_to_completion().unwrap();
+        assert_eq!(r.policy, "static");
+        // Warm platform unaffected by the fork.
+        let r0 = warm.run_to_completion().unwrap();
+        assert_eq!(r0.policy, "hotness");
+        assert!(r.platform_time_ns != r0.platform_time_ns);
+    }
+}

@@ -12,10 +12,12 @@
 //! "merely 3.17×" metric; per-workload values range 1.17× (imagick) to
 //! 15.36× (mcf) with memory intensity.
 
+pub mod checkpoint;
 pub mod multicore;
 pub mod native;
 pub mod report;
 
+pub use checkpoint::WarmPlatform;
 pub use multicore::{run_multicore, MulticoreReport};
 pub use report::RunReport;
 
@@ -25,8 +27,9 @@ use crate::hmmu::{Hmmu, HotnessEngine};
 use crate::mem::AccessKind;
 use crate::pcie::{PcieLink, TlpColumn, TlpKind};
 use crate::sim::Time;
-use crate::workload::{TraceBlock, TraceGenerator, Workload};
+use crate::util::codec::{CodecState, Decoder, Encoder};
 use crate::util::error::Result;
+use crate::workload::{TraceBlock, TraceGenerator, Workload};
 
 /// Run-size options.
 #[derive(Clone, Copy, Debug)]
@@ -47,6 +50,7 @@ impl Default for RunOpts {
 }
 
 /// Memory backend that sends requests over PCIe to the HMMU (Fig 1b path).
+#[derive(Clone)]
 pub struct HmmuBackend {
     pub link: PcieLink,
     pub hmmu: Hmmu,
@@ -148,8 +152,37 @@ impl MemBackend for HmmuBackend {
         }
     }
 
+    /// Block-batched accounting (§Perf): while a block is in flight the
+    /// HMMU defers policy hotness counting and per-tier counters into a
+    /// queue drained once at `end_block` — one tight accounting loop per
+    /// block instead of a policy-dispatch + counter update per op.
+    /// Bit-identical to immediate accounting (every reader sits behind a
+    /// flush point; `tests/batch_equivalence.rs` pins it).
+    fn begin_block(&mut self) {
+        self.hmmu.begin_block();
+    }
+
+    fn end_block(&mut self) {
+        self.hmmu.end_block();
+    }
+
     fn drain(&mut self, now: Time) {
         self.hmmu.drain(now);
+    }
+}
+
+impl CodecState for HmmuBackend {
+    fn encode_state(&self, e: &mut Encoder) {
+        // `col`/`completions` are per-block scratch (empty between
+        // blocks, where checkpoints are taken); `line_bytes` is config.
+        self.link.encode_state(e);
+        self.hmmu.encode_state(e);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.link.decode_state(d)?;
+        self.hmmu.decode_state(d)?;
+        Ok(())
     }
 }
 

@@ -6,12 +6,15 @@ use crate::config::SystemConfig;
 use crate::cpu::MemBackend;
 use crate::mem::{AccessKind, DramDevice, MemoryController};
 use crate::sim::{Clock, Time};
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
 
 /// SoC interconnect latency between LLC miss and the DRAM controller
 /// (CCN-504-class fabric on the LS2085A): a fixed cost per access.
 const SOC_FABRIC_NS: u64 = 45;
 
 /// Local-DRAM backend.
+#[derive(Clone)]
 pub struct NativeBackend {
     mc: MemoryController<DramDevice>,
     pub accesses: u64,
@@ -40,6 +43,19 @@ impl MemBackend for NativeBackend {
     fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> Time {
         self.accesses += 1;
         self.mc.issue(addr, kind, bytes, now + SOC_FABRIC_NS)
+    }
+}
+
+impl CodecState for NativeBackend {
+    fn encode_state(&self, e: &mut Encoder) {
+        self.mc.encode_state(e);
+        e.put_u64(self.accesses);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.mc.decode_state(d)?;
+        self.accesses = d.u64()?;
+        Ok(())
     }
 }
 

@@ -29,10 +29,11 @@ pub mod report;
 pub use report::{ScenarioResult, SweepReport};
 
 use crate::config::{PolicyKind, SystemConfig};
-use crate::platform::{run_multicore, Platform, RunOpts};
+use crate::platform::{run_multicore, Platform, RunOpts, WarmPlatform};
 use crate::util::error::Result;
 use crate::util::rng::splitmix64;
 use crate::workload::Workload;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -257,7 +258,168 @@ pub fn run_sweep(scenarios: &[Scenario], threads: usize) -> Result<SweepReport> 
     });
     let wall_ns = wall.elapsed().as_nanos() as u64;
 
-    let mut results = Vec::with_capacity(n);
+    collect_slots(scenarios, slots, threads, wall_ns)
+}
+
+/// Warm-state forked sweep options (`hymem sweep --warmup-ops N`).
+#[derive(Clone, Debug, Default)]
+pub struct ForkOpts {
+    /// Warm-up prefix length in ops, paid **once per warm group** and
+    /// forked across the group's scenarios. `0` = plain cold sweep.
+    pub warmup_ops: u64,
+    /// Directory for serialized warm checkpoints: hits skip the warm-up
+    /// simulation entirely (the CI cache rides on this across runs).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Replay every scenario cold through the **same** warm+morph code
+    /// path (fresh warm-up per scenario instead of a fork). The baseline
+    /// the fork speedup and bit-identity pins are measured against.
+    pub cold_replay: bool,
+}
+
+/// Group scenarios that can share one warm state: identical on every
+/// axis **except** the fork axes (policy kind, emulated NVM stall
+/// point). Seed, workload, topology, sizing and core count all stay in
+/// the key, so only scenarios replaying the identical warm-up prefix
+/// trace land together.
+fn warm_group_key(sc: &Scenario) -> String {
+    let mut cfg = sc.cfg.clone();
+    cfg.policy = PolicyKind::Static;
+    cfg.nvm.read_stall_ns = 0;
+    cfg.nvm.write_stall_ns = 0;
+    format!(
+        "{:?}|{}|{}|{}|{}",
+        cfg, sc.workload.name, sc.ops, sc.flush_at_end, sc.cores
+    )
+}
+
+/// Run one warm group: pay the warm-up once on the group leader's
+/// config, then fork the warm state across every member (morphing the
+/// fork axes). Falls back to the classic cold path for multicore
+/// scenarios (no single-platform state to fork) and `warmup_ops == 0`.
+fn run_warm_group(
+    scenarios: &[Scenario],
+    members: &[usize],
+    fork: &ForkOpts,
+    slots: &[Mutex<Option<Result<ScenarioResult>>>],
+) {
+    let leader = &scenarios[members[0]];
+    if leader.cores > 1 || fork.warmup_ops == 0 {
+        for &i in members {
+            *slots[i].lock().unwrap() = Some(run_scenario(&scenarios[i]));
+        }
+        return;
+    }
+    let opts = RunOpts {
+        ops: leader.ops,
+        flush_at_end: leader.flush_at_end,
+    };
+    // The warm prefix runs under the **leader's** full config (its policy
+    // included) — cold replay below replays exactly that, so the two
+    // modes are bit-identical by construction. A fork whose policy
+    // differs from the leader's inherits the leader-warmed table layout;
+    // that is the checkpoint-fork methodology, pinned as such by
+    // `tests/checkpoint_fork.rs`.
+    let warm = if fork.cold_replay {
+        None
+    } else {
+        Some(obtain_warm(leader, opts, fork))
+    };
+    for &i in members {
+        let sc = &scenarios[i];
+        let wall = Instant::now();
+        let wp = match &warm {
+            Some(w) => w.fork(&sc.cfg),
+            None => {
+                let mut w = WarmPlatform::new(leader.cfg.clone(), &leader.workload, opts);
+                w.warm_up(fork.warmup_ops);
+                w.fork(&sc.cfg)
+            }
+        };
+        let result = wp.run_to_completion().map(|report| {
+            ScenarioResult::new(sc, sc.cfg.seed, &report, wall.elapsed().as_nanos() as u64)
+        });
+        *slots[i].lock().unwrap() = Some(result);
+    }
+}
+
+/// Produce the group's warm platform: checkpoint-cache hit (deserialize,
+/// skip the warm-up simulation), else simulate the warm-up and populate
+/// the cache. Cache problems degrade to a fresh warm-up, never an error.
+fn obtain_warm(leader: &Scenario, opts: RunOpts, fork: &ForkOpts) -> WarmPlatform {
+    let path = fork.checkpoint_dir.as_ref().map(|dir| {
+        let key = WarmPlatform::cache_key(&leader.cfg, &leader.workload, opts, fork.warmup_ops);
+        dir.join(format!("warm-{key:016x}.ckpt"))
+    });
+    if let Some(p) = &path {
+        if let Ok(bytes) = std::fs::read(p) {
+            match WarmPlatform::load(&bytes, leader.cfg.clone(), &leader.workload, opts) {
+                Ok(wp) => return wp,
+                Err(e) => eprintln!("warning: stale checkpoint {}: {e}", p.display()),
+            }
+        }
+    }
+    let mut wp = WarmPlatform::new(leader.cfg.clone(), &leader.workload, opts);
+    wp.warm_up(fork.warmup_ops);
+    if let Some(p) = &path {
+        let write = std::fs::create_dir_all(p.parent().unwrap_or(std::path::Path::new(".")))
+            .and_then(|()| std::fs::write(p, wp.save()));
+        if let Err(e) = write {
+            eprintln!("warning: cannot cache checkpoint {}: {e}", p.display());
+        }
+    }
+    wp
+}
+
+/// Warm-state forked sweep: group scenarios by [`warm_group_key`], fan
+/// the **groups** across `threads` workers (each group's warm-up runs
+/// once, inside the worker that owns it), fork per member. Results come
+/// back in scenario order and are bit-identical across thread counts —
+/// and bit-identical to `cold_replay` mode, which replays the identical
+/// warm+morph path per scenario (`tests/checkpoint_fork.rs` pins both).
+pub fn run_sweep_forked(
+    scenarios: &[Scenario],
+    threads: usize,
+    fork: &ForkOpts,
+) -> Result<SweepReport> {
+    let n = scenarios.len();
+    let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+    for (i, sc) in scenarios.iter().enumerate() {
+        let key = warm_group_key(sc);
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => v.push(i),
+            None => groups.push((key, vec![i])),
+        }
+    }
+    let g = groups.len();
+    let threads = threads.max(1).min(g.max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<ScenarioResult>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+
+    let wall = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let gi = next.fetch_add(1, Ordering::Relaxed);
+                if gi >= g {
+                    break;
+                }
+                run_warm_group(scenarios, &groups[gi].1, fork, &slots);
+            });
+        }
+    });
+    let wall_ns = wall.elapsed().as_nanos() as u64;
+
+    collect_slots(scenarios, slots, threads, wall_ns)
+}
+
+fn collect_slots(
+    scenarios: &[Scenario],
+    slots: Vec<Mutex<Option<Result<ScenarioResult>>>>,
+    threads: usize,
+    wall_ns: u64,
+) -> Result<SweepReport> {
+    let mut results = Vec::with_capacity(scenarios.len());
     for (i, slot) in slots.into_iter().enumerate() {
         match slot.into_inner().unwrap() {
             Some(Ok(r)) => results.push(r),

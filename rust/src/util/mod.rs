@@ -6,10 +6,12 @@
 //! ([`rng`]), statistics ([`stats`]), a minimal CLI argument parser
 //! ([`cli`]), SI-unit formatting ([`units`]), a tiny property-testing
 //! harness ([`prop`]), a micro-benchmark harness ([`bench`]), an
-//! `anyhow`-style error type ([`error`]) and write-only JSON ([`json`]).
+//! `anyhow`-style error type ([`error`]), write-only JSON ([`json`]) and
+//! a compact binary codec for warm-state checkpoints ([`codec`]).
 
 pub mod bench;
 pub mod cli;
+pub mod codec;
 pub mod error;
 pub mod json;
 pub mod prop;

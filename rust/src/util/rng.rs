@@ -35,6 +35,18 @@ impl Xoshiro256 {
         }
     }
 
+    /// The raw 256-bit state, for checkpointing.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from [`state`](Self::state) output. The state
+    /// is taken verbatim (no SplitMix64 expansion), so
+    /// `Xoshiro256::from_state(r.state())` continues `r`'s stream exactly.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
     /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
@@ -213,6 +225,18 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn state_round_trip_continues_stream() {
+        let mut a = Xoshiro256::new(314);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Xoshiro256::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -1,5 +1,8 @@
 //! Summary statistics used by run reports and the benchmark harness.
 
+use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::error::Result;
+
 /// Arithmetic mean; 0.0 for empty input.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -132,6 +135,25 @@ impl LatencyHistogram {
     }
 }
 
+impl CodecState for LatencyHistogram {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_u64_slice(&self.buckets);
+        e.put_u64(self.count);
+        e.put_u128(self.sum);
+        e.put_u64(self.max);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let buckets = d.u64_vec()?;
+        crate::util::codec::check_len("latency histogram buckets", self.buckets.len(), buckets.len())?;
+        self.buckets.copy_from_slice(&buckets);
+        self.count = d.u64()?;
+        self.sum = d.u128()?;
+        self.max = d.u64()?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,6 +211,20 @@ mod tests {
         let p99 = h.percentile(99.0);
         assert!(p50 <= p99);
         assert!(p99 >= 512);
+    }
+
+    #[test]
+    fn histogram_codec_round_trip() {
+        let mut h = LatencyHistogram::new();
+        for ns in [1u64, 7, 100, 4096, 1 << 30] {
+            h.record(ns);
+        }
+        let mut e = Encoder::new();
+        h.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut restored = LatencyHistogram::new();
+        restored.decode_state(&mut Decoder::new(&bytes)).unwrap();
+        assert_eq!(format!("{h:?}"), format!("{restored:?}"));
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Warm-state checkpoint/fork fidelity pins.
+//!
+//! The fork engine's contract has two halves:
+//!
+//! 1. **Fork == cold replay, bit-for-bit.** A forked sweep (warm-up paid
+//!    once per group, state cloned per scenario) produces the *identical*
+//!    modeled results — platform time, every counter, residency, the full
+//!    scenario fingerprint — as cold-replay mode, which re-simulates the
+//!    same warm-up + morph path per scenario. Across thread counts.
+//! 2. **Serialized == in-memory.** A checkpoint that round-trips through
+//!    the binary codec resumes bit-identically to the in-memory clone it
+//!    was saved from — across tier-stack depths and all five policies.
+
+use hymem::config::{MemTech, PolicyKind, SystemConfig};
+use hymem::platform::{RunOpts, WarmPlatform};
+use hymem::sweep::{run_sweep_forked, ForkOpts, Scenario};
+use hymem::workload::spec;
+
+const OPS: u64 = 6_000;
+const WARM: u64 = 3_000;
+
+/// 2 workloads × 2 policies × 2 stall points on a 3-tier stack: 8
+/// scenarios in 4 warm groups (grouping ignores the policy and stall
+/// fork axes, keeps workload and topology).
+fn grid_3tier() -> Vec<Scenario> {
+    let mut base = SystemConfig::default_scaled(64);
+    base.hmmu.epoch_requests = 2_000;
+    let base = base
+        .with_tiers(&[MemTech::Dram, MemTech::Pcm, MemTech::Xpoint3D])
+        .unwrap();
+    let workloads = [
+        spec::by_name("505.mcf").unwrap(),
+        spec::by_name("557.xz").unwrap(),
+    ];
+    let policies = [PolicyKind::Static, PolicyKind::Hotness];
+    let grid = Scenario::grid(&workloads, &policies, &base, OPS);
+    let grid = Scenario::stall_grid(&grid, &[(50, 225), (400, 1_800)]);
+    assert_eq!(grid.len(), 8);
+    grid
+}
+
+fn forked(warmup_ops: u64, cold_replay: bool) -> ForkOpts {
+    ForkOpts {
+        warmup_ops,
+        checkpoint_dir: None,
+        cold_replay,
+    }
+}
+
+#[test]
+fn forked_sweep_bit_identical_to_cold_replay_across_threads() {
+    let grid = grid_3tier();
+    let cold = run_sweep_forked(&grid, 1, &forked(WARM, true)).unwrap();
+    let fp_cold = cold.deterministic_fingerprint();
+    assert_eq!(fp_cold.lines().count(), 8);
+
+    for threads in [1usize, 2, 4] {
+        let fork = run_sweep_forked(&grid, threads, &forked(WARM, false)).unwrap();
+        assert_eq!(
+            fp_cold,
+            fork.deterministic_fingerprint(),
+            "forked sweep (threads={threads}) diverged from cold replay"
+        );
+        // Spot-check the headline fields beyond the fingerprint.
+        for (c, f) in cold.scenarios.iter().zip(&fork.scenarios) {
+            assert_eq!(c.platform_time_ns, f.platform_time_ns, "{}", c.name);
+            assert_eq!(c.native_time_ns, f.native_time_ns, "{}", c.name);
+            assert_eq!(c.tier_residency, f.tier_residency, "{}", c.name);
+            assert_eq!(c.migrations, f.migrations, "{}", c.name);
+        }
+    }
+}
+
+#[test]
+fn zero_warmup_forked_sweep_matches_classic_sweep() {
+    // `--warmup-ops 0` must reduce to today's cold path exactly.
+    let grid = grid_3tier();
+    let classic = hymem::sweep::run_sweep(&grid, 2).unwrap();
+    let forked0 = run_sweep_forked(&grid, 2, &forked(0, false)).unwrap();
+    assert_eq!(
+        classic.deterministic_fingerprint(),
+        forked0.deterministic_fingerprint()
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_matches_in_memory_fork_across_stacks_and_policies() {
+    let wl = spec::by_name("505.mcf").unwrap();
+    let stacks: [&[MemTech]; 3] = [
+        &[MemTech::Dram, MemTech::Xpoint3D],
+        &[MemTech::Dram, MemTech::Pcm, MemTech::Xpoint3D],
+        &[MemTech::Dram, MemTech::SttRam, MemTech::Pcm, MemTech::Xpoint3D],
+    ];
+    let policies = [
+        PolicyKind::Static,
+        PolicyKind::FirstTouch,
+        PolicyKind::Hints,
+        PolicyKind::Hotness,
+        PolicyKind::WearAware,
+    ];
+    let opts = RunOpts {
+        ops: OPS,
+        flush_at_end: false,
+    };
+    for stack in stacks {
+        for policy in policies {
+            let mut cfg = SystemConfig::default_scaled(64);
+            cfg.hmmu.epoch_requests = 2_000;
+            cfg.policy = policy;
+            let cfg = cfg.with_tiers(stack).unwrap();
+            let label = format!("{}/{:?}", cfg.topology_label(), policy);
+
+            let mut warm = WarmPlatform::new(cfg.clone(), &wl, opts);
+            warm.warm_up(WARM);
+            let bytes = warm.save();
+            let restored = WarmPlatform::load(&bytes, cfg, &wl, opts).unwrap();
+            assert_eq!(restored.warmed_ops(), warm.warmed_ops(), "{label}");
+
+            let a = warm.run_to_completion().unwrap();
+            let b = restored.run_to_completion().unwrap();
+            assert_eq!(a.platform_time_ns, b.platform_time_ns, "{label}");
+            assert_eq!(a.native_time_ns, b.native_time_ns, "{label}");
+            assert_eq!(
+                format!("{:#?}", a.counters),
+                format!("{:#?}", b.counters),
+                "{label}"
+            );
+            assert_eq!(a.tier_residency, b.tier_residency, "{label}");
+            assert_eq!(a.tier_wear, b.tier_wear, "{label}");
+            assert_eq!(a.nvm_max_wear, b.nvm_max_wear, "{label}");
+        }
+    }
+}
+
+#[test]
+fn checkpoint_dir_cache_hit_is_bit_identical() {
+    let grid = &grid_3tier()[..4]; // one workload, 2 policies × 2 stalls
+    let dir = std::env::temp_dir().join(format!("hymem-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = ForkOpts {
+        warmup_ops: WARM,
+        checkpoint_dir: Some(dir.clone()),
+        cold_replay: false,
+    };
+    // First run seeds the cache, second run resumes from it.
+    let seeded = run_sweep_forked(grid, 2, &opts).unwrap();
+    let ckpts = std::fs::read_dir(&dir).unwrap().count();
+    assert!(ckpts >= 1, "no checkpoints cached in {}", dir.display());
+    let cached = run_sweep_forked(grid, 2, &opts).unwrap();
+    assert_eq!(
+        seeded.deterministic_fingerprint(),
+        cached.deterministic_fingerprint(),
+        "cache-hit sweep diverged from cache-seeding sweep"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn multicore_scenarios_fall_back_to_cold_path() {
+    // cores > 1 has no single-platform state to fork; the forked sweep
+    // must still produce the classic result for those rows.
+    let mut base = SystemConfig::default_scaled(64);
+    base.hmmu.epoch_requests = 2_000;
+    let wl = spec::by_name("541.leela").unwrap();
+    let scenarios = vec![
+        Scenario::new("leela/static", wl, base.clone(), 4_000),
+        Scenario::new("leela/staticx2", wl, base, 4_000).with_cores(2),
+    ];
+    let classic = hymem::sweep::run_sweep(&scenarios, 2).unwrap();
+    let fork = run_sweep_forked(&scenarios, 2, &forked(2_000, false)).unwrap();
+    // The multicore row is identical to classic; the single-core row is
+    // identical to its own cold replay (same warm+morph path).
+    assert_eq!(
+        classic.scenarios[1].deterministic_key(),
+        fork.scenarios[1].deterministic_key()
+    );
+    let cold = run_sweep_forked(&scenarios, 1, &forked(2_000, true)).unwrap();
+    assert_eq!(
+        cold.deterministic_fingerprint(),
+        fork.deterministic_fingerprint()
+    );
+}
