@@ -493,6 +493,57 @@ fn main() {
         });
     }
 
+    // Fault layer off vs on (robustness satellite): identical zipf
+    // streams through the full HMMU; the `off` row is today's healthy
+    // hot path (the fault hook reduces to one branch on a disabled
+    // config), the `on` row pays the per-access RBER draw plus ECC
+    // charging. CI gates off ≥ 0.95× on (scripts/check_bench_gate.py) so
+    // the default-off hook stays free.
+    {
+        fn fault_hmmu(rber: f64) -> (Hmmu, u64) {
+            let mut cfg = SystemConfig::default_scaled(16);
+            cfg.policy = PolicyKind::Hotness;
+            cfg.hmmu.epoch_requests = 50_000;
+            cfg.fault.rber_base = rber;
+            cfg.fault.uncorrectable_frac = 0.0; // ECC-corrected only: no retirement churn
+            let total = cfg.total_mem_bytes();
+            (Hmmu::new(cfg, None), total)
+        }
+        let ops = TRACE_BLOCK_OPS as u64;
+
+        let (mut hmmu, total) = fault_hmmu(0.0);
+        let mut rng = Xoshiro256::new(9);
+        let mut t = 0u64;
+        suite.bench_items("fault_check/off (batch 4096)", ops, || {
+            for _ in 0..TRACE_BLOCK_OPS {
+                let addr = (rng.zipf(total / 4096, 1.1)) * 4096 + rng.below(4096) & !63;
+                let kind = if rng.chance(0.3) {
+                    AccessKind::Write
+                } else {
+                    AccessKind::Read
+                };
+                t = hmmu.access(addr, kind, 64, t + 20);
+            }
+            ops
+        });
+
+        let (mut hmmu, total) = fault_hmmu(1e-4);
+        let mut rng = Xoshiro256::new(9);
+        let mut t = 0u64;
+        suite.bench_items("fault_check/on (batch 4096)", ops, || {
+            for _ in 0..TRACE_BLOCK_OPS {
+                let addr = (rng.zipf(total / 4096, 1.1)) * 4096 + rng.below(4096) & !63;
+                let kind = if rng.chance(0.3) {
+                    AccessKind::Write
+                } else {
+                    AccessKind::Read
+                };
+                t = hmmu.access(addr, kind, 64, t + 20);
+            }
+            ops
+        });
+    }
+
     // Tiled hotness step (the epoch-boundary dense pass; HOTNESS_TILE
     // chunks, auto-vectorized inner loop).
     {

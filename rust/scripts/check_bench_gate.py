@@ -35,6 +35,10 @@ PAIRS = [
     ("pcie_link/per-op (batch 4096)", "pcie_link/block (batch 4096)", None),
     ("hierarchy_flush/per-op (batch 4096)", "hierarchy_flush/block (batch 4096)", None),
     ("hmmu_accounting/per-op (batch 4096)", "hmmu_accounting/block (batch 4096)", None),
+    # Fault layer default-off must stay free: the healthy path may not run
+    # slower than the faulted one (off/on >= tolerance; off is normally
+    # faster, so only a hook-cost regression can trip this).
+    ("fault_check/on (batch 4096)", "fault_check/off (batch 4096)", None),
     # Strict: forked sweep must beat cold replay outright (ratio > 1.0).
     ("sweep/cold (8-point grid)", "sweep/forked (8-point grid)", 1.0),
 ]

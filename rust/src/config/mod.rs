@@ -55,6 +55,93 @@ impl TierSpec {
     }
 }
 
+/// Fault-injection and graceful-degradation knobs. All-off by default:
+/// with `rber_base == 0.0` and `link_ber == 0.0` every fault hook is
+/// dead code and the platform is bit-identical to a build without the
+/// subsystem (pinned like `coalesce_writes`). Fault draws come from a
+/// dedicated `Xoshiro256` stream seeded from `SystemConfig::seed` mixed
+/// with `FaultConfig::seed`, owned per-HMMU / per-link, so sweeps stay
+/// deterministic at any thread count.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultConfig {
+    /// Fault-stream seed, mixed (splitmix64) with the platform seed so
+    /// the fault draws decorrelate from trace generation.
+    pub seed: u64,
+    /// Raw bit-error probability per memory access at zero wear.
+    /// `0.0` disables the memory-side fault model entirely.
+    pub rber_base: f64,
+    /// Linear RBER growth with wear: the per-access error probability is
+    /// `rber_base * (1 + rber_wear_slope * wear/endurance)`, clamped to 1.
+    /// Tiers with unlimited endurance stay at `rber_base`.
+    pub rber_wear_slope: f64,
+    /// Fraction of raw errors the ECC cannot correct (those retire the
+    /// frame); the rest are corrected at `ecc_latency_ns` cost.
+    pub uncorrectable_frac: f64,
+    /// Latency penalty (ns) charged on the access for an ECC correction.
+    pub ecc_latency_ns: u64,
+    /// Per-TLP corruption probability on the PCIe link. `0.0` disables
+    /// the link fault model entirely.
+    pub link_ber: f64,
+    /// Max replay attempts per corrupted TLP (ack/nak replay buffer);
+    /// after the limit the TLP is delivered as-is (modeled link gives up
+    /// rather than hanging the emulation).
+    pub link_retry_limit: u32,
+    /// Replay-timeout charged per retry (nak detection + replay fetch),
+    /// on top of re-serializing the TLP on the wire.
+    pub replay_timeout_ns: u64,
+}
+
+impl FaultConfig {
+    /// All fault injection off — the bit-identity default.
+    pub fn disabled() -> Self {
+        FaultConfig {
+            seed: 0xFA57,
+            rber_base: 0.0,
+            rber_wear_slope: 8.0,
+            uncorrectable_frac: 0.05,
+            ecc_latency_ns: 40,
+            link_ber: 0.0,
+            link_retry_limit: 3,
+            replay_timeout_ns: 100,
+        }
+    }
+
+    /// Is the memory-side (RBER/ECC/retirement) model active?
+    pub fn mem_enabled(&self) -> bool {
+        self.rber_base > 0.0
+    }
+
+    /// Is the link-side (TLP corruption/replay) model active?
+    pub fn link_enabled(&self) -> bool {
+        self.link_ber > 0.0
+    }
+
+    /// Any fault model active?
+    pub fn enabled(&self) -> bool {
+        self.mem_enabled() || self.link_enabled()
+    }
+
+    /// The wear-driven RBER curve: per-access raw error probability for a
+    /// frame at `wear` writes against a tier `endurance` budget.
+    pub fn rber(&self, wear: u64, endurance: u64) -> f64 {
+        if self.rber_base <= 0.0 {
+            return 0.0;
+        }
+        let frac = if endurance == u64::MAX {
+            0.0
+        } else {
+            wear as f64 / endurance as f64
+        };
+        (self.rber_base * (1.0 + self.rber_wear_slope * frac)).min(1.0)
+    }
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
 /// Parse a tier-topology string like `dram+pcm+xpoint` into its class
 /// list (used by `hymem sweep --tiers` and `hymem run --tiers`).
 pub fn parse_topology(s: &str) -> Option<Vec<MemTech>> {
@@ -171,7 +258,13 @@ pub struct HmmuConfig {
     /// Epoch length (in processed requests) between policy invocations.
     pub epoch_requests: u64,
     /// Max migrations enacted per epoch (top-k from the policy step).
+    /// Applies **per boundary** unless overridden below.
     pub migrations_per_epoch: u32,
+    /// Per-boundary migration budgets: entry `b` caps the epoch's
+    /// migrations across the rank-`b` / rank-`b+1` boundary. An entry of
+    /// `0` means "unset" and falls back to `migrations_per_epoch`, so the
+    /// all-zero default is bit-identical to the legacy global budget.
+    pub migrations_per_boundary: [u32; MAX_TIERS - 1],
     /// Fidelity: DMA migration block transfers occupy HDR FIFO slots
     /// (and stall when it is full) like demand requests do in hardware —
     /// the engine shares the same DDR interfaces and header FIFO. `false`
@@ -247,6 +340,16 @@ pub struct SystemConfig {
     /// Tiers beyond the base DRAM/NVM pair (rank 2 and deeper). Empty =
     /// the paper's two-tier topology; [`Self::with_tiers`] populates it.
     pub extra_tiers: Vec<TierSpec>,
+    /// Optional non-DRAM rank-0 tier (e.g. an all-NVM stack like
+    /// `pcm+xpoint`). `None` (the default) keeps the legacy DRAM rank 0
+    /// built from the `dram` config, bit-identically; `Some` overrides
+    /// its class/stalls/endurance/energy while the capacity still comes
+    /// from `dram.size_bytes` (the emulation substrate is DRAM either
+    /// way — §III-F injects the class's stalls on top).
+    pub rank0: Option<TierSpec>,
+    /// Fault-injection knobs (RBER/ECC/frame retirement + link replay).
+    /// Disabled by default — bit-identical to a fault-free build.
+    pub fault: FaultConfig,
 }
 
 impl SystemConfig {
@@ -316,6 +419,7 @@ impl SystemConfig {
                 page_bytes: 4096,
                 epoch_requests: 100_000,
                 migrations_per_epoch: 32,
+                migrations_per_boundary: [0; MAX_TIERS - 1],
                 dma_hdr_occupancy: true,
                 host_managed_dma: false,
             },
@@ -324,6 +428,8 @@ impl SystemConfig {
             seed: 0x5EED,
             nvm_tech: MemTech::Xpoint3D,
             extra_tiers: Vec::new(),
+            rank0: None,
+            fault: FaultConfig::disabled(),
         }
     }
 
@@ -362,19 +468,19 @@ impl SystemConfig {
     }
 
     /// Materialize the full tier stack, rank order: rank 0 from the
-    /// `dram` config (DDR4 class), rank 1 from the `nvm` config (class
-    /// `nvm_tech`, so the legacy stall/endurance knobs keep acting on
-    /// it), then `extra_tiers`.
+    /// `dram` config (DDR4 class, unless `rank0` overrides it), rank 1
+    /// from the `nvm` config (class `nvm_tech`, so the legacy
+    /// stall/endurance knobs keep acting on it), then `extra_tiers`.
     pub fn tier_specs(&self) -> Vec<TierSpec> {
         let mut v = Vec::with_capacity(self.tier_count());
-        v.push(TierSpec {
+        v.push(self.rank0.unwrap_or(TierSpec {
             tech: MemTech::Dram,
             size_bytes: self.dram.size_bytes,
             read_stall_ns: 0,
             write_stall_ns: 0,
             endurance: u64::MAX,
             energy: EnergyCoeffs::ddr4(),
-        });
+        }));
         v.push(TierSpec {
             tech: self.nvm_tech,
             size_bytes: self.nvm.size_bytes,
@@ -406,21 +512,40 @@ impl SystemConfig {
     }
 
     /// Reconfigure the tier stack from a topology of technology classes
-    /// (e.g. `[Dram, Pcm, Xpoint3D]`). Rank 0 must be DRAM-class (the
-    /// emulation substrate); rank 1 reconfigures the `nvm` config from
-    /// its class preset **only when the class changes**, so the default
-    /// `dram+xpoint` topology keeps the paper-calibrated stall point
-    /// bit-identical; ranks 2+ become `extra_tiers`, each twice the
-    /// capacity of the previous NVM rank (capacity grows down the
-    /// stack).
+    /// (e.g. `[Dram, Pcm, Xpoint3D]` or `[Pcm, Xpoint3D]`). The only
+    /// ordering constraint is `deeper → slower`: Table I read latency
+    /// must be non-decreasing with rank (the DMA engine and the cascade
+    /// policies promote *up* the stack). Rank 0 may be any class — a
+    /// non-DRAM rank 0 lands in [`Self::rank0`] (capacity still
+    /// `dram.size_bytes`, stalls scaled per §III-F); rank 1 reconfigures
+    /// the `nvm` config from its class preset **only when the class
+    /// changes**, so the default `dram+xpoint` topology keeps the
+    /// paper-calibrated stall point bit-identical; ranks 2+ become
+    /// `extra_tiers`, each twice the capacity of the previous NVM rank
+    /// (capacity grows down the stack).
     pub fn with_tiers(mut self, classes: &[MemTech]) -> Result<Self> {
         if classes.len() < 2 || classes.len() > MAX_TIERS {
             bail!("tier topology needs 2..={MAX_TIERS} classes, got {}", classes.len());
         }
-        if classes[0] != MemTech::Dram {
-            bail!("tier rank 0 must be dram-class (the emulation substrate)");
-        }
         let rt = self.dram.t_cas_ns + self.dram.t_rcd_ns;
+        // Deeper → slower, in *emulated* terms: the injected §III-F read
+        // stall over the DRAM substrate must be non-decreasing with rank
+        // (classes faster than DRAM clamp to 0, so e.g. dram+stt-ram
+        // remains a valid stack — both emulate at substrate speed).
+        for w in classes.windows(2) {
+            let (a, b) = (TechPreset::of(w[0]), TechPreset::of(w[1]));
+            if a.read_stall_ns(rt) > b.read_stall_ns(rt) {
+                bail!(
+                    "tier topology must order deeper->slower: {} ({}ns read) sits above {} ({}ns read)",
+                    w[0].label(),
+                    a.read_ns,
+                    w[1].label(),
+                    b.read_ns
+                );
+            }
+        }
+        self.rank0 = (classes[0] != MemTech::Dram)
+            .then(|| TierSpec::of(classes[0], self.dram.size_bytes, rt));
         if classes[1] != self.nvm_tech {
             let p = TechPreset::of(classes[1]);
             self.nvm.read_stall_ns = p.read_stall_ns(rt);
@@ -640,8 +765,57 @@ mod tests {
     fn with_tiers_rejects_bad_topologies() {
         let c = SystemConfig::default_scaled(64);
         assert!(c.clone().with_tiers(&[MemTech::Dram]).is_err());
-        let wrong_rank0 = c.clone().with_tiers(&[MemTech::Pcm, MemTech::Xpoint3D]);
-        assert!(wrong_rank0.is_err(), "rank 0 must be dram-class");
+        let inverted = c.clone().with_tiers(&[MemTech::Xpoint3D, MemTech::SttRam]);
+        assert!(inverted.is_err(), "slower class above faster must be rejected");
         assert!(c.with_tiers(&[MemTech::Dram; 9]).is_err());
+    }
+
+    #[test]
+    fn non_dram_rank0_stack_accepted() {
+        // The old restriction ("rank 0 must be dram-class") is lifted: an
+        // all-NVM stack orders deeper->slower and is a valid topology.
+        let base = SystemConfig::default_scaled(64);
+        let c = base
+            .clone()
+            .with_tiers(&[MemTech::Pcm, MemTech::Xpoint3D])
+            .unwrap();
+        assert_eq!(c.tier_count(), 2);
+        assert_eq!(c.topology_label(), "pcm+xpoint");
+        let specs = c.tier_specs();
+        assert_eq!(specs[0].tech, MemTech::Pcm);
+        // Capacity still comes from the DRAM substrate config; the class
+        // override injects the PCM stall/endurance/energy point.
+        assert_eq!(specs[0].size_bytes, base.dram.size_bytes);
+        assert!(specs[0].write_stall_ns > specs[0].read_stall_ns);
+        assert!(specs[0].wear_limited());
+        // Rank order stays emulated-slower-downward.
+        assert!(specs[1].read_stall_ns >= specs[0].read_stall_ns);
+        // A DRAM-rank-0 topology keeps the legacy (override-free) path.
+        let d = base.with_tiers(&[MemTech::Dram, MemTech::Xpoint3D]).unwrap();
+        assert!(d.rank0.is_none());
+    }
+
+    #[test]
+    fn fault_config_defaults_disabled() {
+        let c = SystemConfig::paper();
+        assert!(!c.fault.enabled());
+        assert!(!c.fault.mem_enabled());
+        assert!(!c.fault.link_enabled());
+        assert_eq!(c.fault.rber(u64::MAX - 1, 100), 0.0, "disabled curve is flat zero");
+        let mut f = c.fault;
+        f.rber_base = 1e-4;
+        assert!(f.mem_enabled() && f.enabled() && !f.link_enabled());
+        // The RBER curve grows with wear fraction and clamps at 1.
+        assert!(f.rber(0, 1000) < f.rber(500, 1000));
+        assert!(f.rber(500, 1000) < f.rber(1000, 1000));
+        assert_eq!(f.rber(10, u64::MAX), f.rber(0, u64::MAX), "unlimited endurance never wears");
+        f.rber_base = 1.0;
+        assert_eq!(f.rber(u64::MAX / 2, 1), 1.0, "clamped at certainty");
+    }
+
+    #[test]
+    fn boundary_budgets_default_unset() {
+        let c = SystemConfig::paper();
+        assert_eq!(c.hmmu.migrations_per_boundary, [0; MAX_TIERS - 1]);
     }
 }

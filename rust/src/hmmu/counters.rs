@@ -69,6 +69,24 @@ pub struct HmmuCounters {
     /// subset of the link's total `credit_stalls`, attributed so demand
     /// vs migration link pressure can be separated).
     pub dma_link_stalls: u64,
+    /// Fault-injection counters (all zero when the fault layer is off;
+    /// they render in Debug only when nonzero, so the fault-free Debug
+    /// surface — and every golden snapshot — is byte-identical to the
+    /// pre-fault layout). ECC events corrected in place (latency penalty
+    /// only).
+    pub ecc_corrected: u64,
+    /// ECC events beyond correction strength: the frame is retired and
+    /// its page emergency-remapped.
+    pub ecc_uncorrectable: u64,
+    /// Frames permanently removed from circulation (uncorrectable error
+    /// or endurance exhaustion).
+    pub frames_retired: u64,
+    /// Emergency page remaps triggered by frame retirement.
+    pub remap_migrations: u64,
+    /// Bytes copied by emergency remaps (one page per remap).
+    pub remap_bytes: u64,
+    /// PCIe TLP replays triggered by injected link corruption.
+    pub link_retries: u64,
     /// Per-tier (read_nj, write_nj) dynamic-energy coefficients, set by
     /// the HMMU from the tier specs. **Not a counter**: excluded from
     /// Debug (like `policy_wall_ns`); empty falls back to the legacy
@@ -107,6 +125,12 @@ impl std::fmt::Debug for HmmuCounters {
             dma_hdr_stalls,
             pcie_dma_bytes,
             dma_link_stalls,
+            ecc_corrected,
+            ecc_uncorrectable,
+            frames_retired,
+            remap_migrations,
+            remap_bytes,
+            link_retries,
             energy_nj: _,
         } = self;
         let mut s = f.debug_struct("HmmuCounters");
@@ -131,6 +155,17 @@ impl std::fmt::Debug for HmmuCounters {
             .field("dma_hdr_stalls", dma_hdr_stalls)
             .field("pcie_dma_bytes", pcie_dma_bytes)
             .field("dma_link_stalls", dma_link_stalls);
+        // Fault counters render only when a fault run produced events:
+        // the fault-free rendering stays byte-identical to the pre-fault
+        // layout (golden snapshots, equivalence batteries).
+        if self.fault_events() > 0 {
+            s.field("ecc_corrected", ecc_corrected)
+                .field("ecc_uncorrectable", ecc_uncorrectable)
+                .field("frames_retired", frames_retired)
+                .field("remap_migrations", remap_migrations)
+                .field("remap_bytes", remap_bytes)
+                .field("link_retries", link_retries);
+        }
         if self.tiers() > 2 {
             s.field("tier_reads", tier_reads)
                 .field("tier_writes", tier_writes)
@@ -164,6 +199,12 @@ impl CodecState for HmmuCounters {
         e.put_u64(self.dma_hdr_stalls);
         e.put_u64(self.pcie_dma_bytes);
         e.put_u64(self.dma_link_stalls);
+        e.put_u64(self.ecc_corrected);
+        e.put_u64(self.ecc_uncorrectable);
+        e.put_u64(self.frames_retired);
+        e.put_u64(self.remap_migrations);
+        e.put_u64(self.remap_bytes);
+        e.put_u64(self.link_retries);
     }
 
     fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
@@ -187,6 +228,12 @@ impl CodecState for HmmuCounters {
         self.dma_hdr_stalls = d.u64()?;
         self.pcie_dma_bytes = d.u64()?;
         self.dma_link_stalls = d.u64()?;
+        self.ecc_corrected = d.u64()?;
+        self.ecc_uncorrectable = d.u64()?;
+        self.frames_retired = d.u64()?;
+        self.remap_migrations = d.u64()?;
+        self.remap_bytes = d.u64()?;
+        self.link_retries = d.u64()?;
         // Host wall clock restarts at the restore point.
         self.policy_wall_ns = 0;
         Ok(())
@@ -271,6 +318,17 @@ impl HmmuCounters {
             self.tier_pages_placed.resize(t + 1, 0);
         }
         self.tier_pages_placed[t] += 1;
+    }
+
+    /// Total fault-layer events recorded (0 ⇔ the fault counters are
+    /// absent from the Debug surface).
+    pub fn fault_events(&self) -> u64 {
+        self.ecc_corrected
+            + self.ecc_uncorrectable
+            + self.frames_retired
+            + self.remap_migrations
+            + self.remap_bytes
+            + self.link_retries
     }
 
     pub fn total_host_requests(&self) -> u64 {
@@ -465,6 +523,37 @@ mod tests {
 
         assert_eq!(format!("{restored:?}"), format!("{c:?}"));
         assert_eq!(restored.policy_wall_ns, 0, "wall clock restarts on restore");
+    }
+
+    #[test]
+    fn fault_counters_hidden_when_zero_and_round_trip() {
+        // Zero fault counters must be invisible on the Debug surface
+        // (golden snapshots pre-date the fault layer) ...
+        let mut c = HmmuCounters::with_tiers(2);
+        c.record_tier_access(0, false);
+        let s = format!("{c:?}");
+        assert!(!s.contains("ecc_corrected"), "{s}");
+        assert!(!s.contains("link_retries"), "{s}");
+        // ... and nonzero ones must render and survive the codec.
+        c.ecc_corrected = 9;
+        c.ecc_uncorrectable = 2;
+        c.frames_retired = 2;
+        c.remap_migrations = 2;
+        c.remap_bytes = 2 * 4096;
+        c.link_retries = 5;
+        let s = format!("{c:?}");
+        assert!(s.contains("ecc_corrected: 9"), "{s}");
+        assert!(s.contains("frames_retired: 2"), "{s}");
+        assert!(s.contains("link_retries: 5"), "{s}");
+
+        let mut e = Encoder::new();
+        c.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut restored = HmmuCounters::with_tiers(2);
+        let mut d = Decoder::new(&bytes);
+        restored.decode_state(&mut d).unwrap();
+        assert!(d.is_done());
+        assert_eq!(format!("{restored:?}"), format!("{c:?}"));
     }
 
     #[test]

@@ -44,6 +44,7 @@ use crate::pcie::PcieLink;
 use crate::sim::{Clock, Time};
 use crate::util::codec::{check_len, CodecState, Decoder, Encoder};
 use crate::util::error::Result;
+use crate::util::rng::{splitmix64, Xoshiro256};
 
 /// Fixed-capacity ring of outstanding-response release times — the HDR
 /// FIFO occupancy model. §Perf: replaces a per-request `VecDeque` (which
@@ -172,6 +173,11 @@ pub struct Hmmu {
     requests_since_epoch: u64,
     /// Simulated time of the last processed request (drives epoch DMA).
     last_now: Time,
+    /// Dedicated fault-injection stream ([`crate::config::FaultConfig`]):
+    /// decoupled from every workload/policy RNG so fault draws are
+    /// deterministic at any thread count, and never consumed when the
+    /// fault layer is off (default-off runs stay bit-identical).
+    fault_rng: Xoshiro256,
 }
 
 impl Hmmu {
@@ -232,6 +238,10 @@ impl Hmmu {
             pending: PendingAccesses::default(),
             requests_since_epoch: 0,
             last_now: 0,
+            fault_rng: {
+                let mut mix = cfg.seed ^ cfg.fault.seed;
+                Xoshiro256::new(splitmix64(&mut mix))
+            },
             cfg,
         }
     }
@@ -331,7 +341,7 @@ impl Hmmu {
         kind: AccessKind,
         bytes: u64,
         now: Time,
-        link: Option<&mut PcieLink>,
+        mut link: Option<&mut PcieLink>,
     ) -> Time {
         self.last_now = now;
         // --- counters: host side ---
@@ -440,7 +450,12 @@ impl Hmmu {
             self.policy.record_access(page, kind.is_write());
             self.counters.record_tier_access(device.index(), kind.is_write());
         }
-        let done = self.tiers[device.index()].issue(dev_addr, kind, bytes, t);
+        let mut done = self.tiers[device.index()].issue(dev_addr, kind, bytes, t);
+
+        // --- fault layer: wear-driven errors, ECC, frame retirement ---
+        if self.cfg.fault.mem_enabled() {
+            done = self.mem_fault(page, device, dev_addr, done, &mut link);
+        }
 
         // --- in-order completion drain (§III-C) ---
         let release = self.tags.complete_inline(tag, done);
@@ -521,6 +536,7 @@ impl Hmmu {
                 table: &self.table,
                 migrating: &migrating,
                 max_migrations: self.cfg.hmmu.migrations_per_epoch,
+                boundary_budgets: &self.cfg.hmmu.migrations_per_boundary,
             };
             // Borrows the policy's recycled pair buffer (§Perf: no
             // per-epoch allocation).
@@ -568,101 +584,233 @@ impl Hmmu {
             let link_ref = &mut link;
             let cpl = &mut self.dma_cpl;
             let mut issue = |dev: Device, a: u64, k: AccessKind, b: u64, at: Time| {
-                let mut at = at;
-                if occupy {
-                    // Free slots whose responses left by `at`; stall the
-                    // transfer on a full FIFO until the head drains.
-                    // Time-base note: every ring entry's stored release is
-                    // ≤ the epoch time `now` (demand releases are monotone
-                    // and the epoch fires at the newest one; earlier DMA
-                    // pushes were clamped monotone) or is a DMA completion
-                    // from this epoch, and `at >= now` — so these pops
-                    // never free a slot before its modeled drain time.
-                    while let Some(front) = hdr.front() {
-                        if front <= at {
-                            hdr.pop_front();
-                        } else {
-                            break;
-                        }
-                    }
-                    if hdr.is_full() {
-                        counters.dma_hdr_stalls += 1;
-                        at = hdr.front().unwrap();
-                        hdr.pop_front();
-                        while let Some(front) = hdr.front() {
-                            if front <= at {
-                                hdr.pop_front();
-                            } else {
-                                break;
-                            }
-                        }
-                    }
-                }
-                let done = match (host_managed, link_ref.as_deref_mut()) {
-                    (true, Some(l)) => {
-                        let stalls_before = l.credit_stalls;
-                        let done = match k {
-                            AccessKind::Read => {
-                                // Host reads the block: MRd request out
-                                // (header only), device access, then the
-                                // data rides completion TLPs back —
-                                // split at the link's max payload and
-                                // serialized back-to-back on the RX wire
-                                // as one column.
-                                let arrive = l.send_to_device(0, at);
-                                let ready = tiers[dev.index()].issue(a, k, b, arrive);
-                                cpl.payloads.clear();
-                                cpl.times.clear();
-                                let mut remaining = b;
-                                while remaining > 0 {
-                                    let chunk = remaining.min(max_payload);
-                                    cpl.payloads.push(chunk as u32);
-                                    cpl.times.push(ready);
-                                    remaining -= chunk;
-                                }
-                                l.send_block_to_host(&cpl.payloads, &cpl.times, &mut cpl.arrivals);
-                                let done = *cpl.arrivals.last().unwrap();
-                                l.hold_credit_until(done);
-                                done
-                            }
-                            AccessKind::Write => {
-                                // Host writes the block: posted MWr TLPs
-                                // carry the payload out in max_payload
-                                // chunks. Each chunk's flow-control
-                                // credit is recorded as it is sent
-                                // (posted writes free their credit once
-                                // the device RX buffer accepts them), so
-                                // the pool never exceeds `cfg.credits`
-                                // mid-burst; the device commit happens
-                                // once the last chunk has arrived.
-                                let mut arrive = at;
-                                let mut remaining = b;
-                                while remaining > 0 {
-                                    let chunk = remaining.min(max_payload);
-                                    arrive = l.send_to_device(chunk as u32, at);
-                                    l.hold_credit_until(arrive);
-                                    remaining -= chunk;
-                                }
-                                tiers[dev.index()].issue(a, k, b, arrive)
-                            }
-                        };
-                        counters.pcie_dma_bytes += b;
-                        counters.dma_link_stalls += l.credit_stalls - stalls_before;
-                        done
-                    }
-                    _ => tiers[dev.index()].issue(a, k, b, at),
-                };
-                if occupy {
-                    counters.dma_hdr_slots += 1;
-                    hdr.push_back(done);
-                }
-                done
+                let l = if host_managed { link_ref.as_deref_mut() } else { None };
+                Self::dma_issue(tiers, hdr, counters, cpl, l, occupy, max_payload, dev, a, k, b, at)
             };
             self.dma
                 .start_swap(deep_page, ma, fast_page, mb, now, &mut issue);
             self.counters.migrations += 1;
             self.counters.migration_bytes += 2 * self.cfg.hmmu.page_bytes;
         }
+    }
+
+    /// Issue one DMA block access against the tier stack, modeling HDR
+    /// FIFO occupancy (when `occupy`) and the host-managed PCIe crossing
+    /// (when a `link` handle is given). An associated function over split
+    /// field borrows so the epoch migration closure and the fault layer's
+    /// emergency remap charge the **identical** machinery.
+    #[allow(clippy::too_many_arguments)]
+    fn dma_issue(
+        tiers: &mut [MemoryController<TierDevice>],
+        hdr: &mut ReleaseRing,
+        counters: &mut HmmuCounters,
+        cpl: &mut CplScratch,
+        link: Option<&mut PcieLink>,
+        occupy: bool,
+        max_payload: u64,
+        dev: Device,
+        a: u64,
+        k: AccessKind,
+        b: u64,
+        at: Time,
+    ) -> Time {
+        let mut at = at;
+        if occupy {
+            // Free slots whose responses left by `at`; stall the
+            // transfer on a full FIFO until the head drains.
+            // Time-base note: every ring entry's stored release is
+            // ≤ the epoch time `now` (demand releases are monotone
+            // and the epoch fires at the newest one; earlier DMA
+            // pushes were clamped monotone) or is a DMA completion
+            // from this epoch, and `at >= now` — so these pops
+            // never free a slot before its modeled drain time.
+            while let Some(front) = hdr.front() {
+                if front <= at {
+                    hdr.pop_front();
+                } else {
+                    break;
+                }
+            }
+            if hdr.is_full() {
+                counters.dma_hdr_stalls += 1;
+                at = hdr.front().unwrap();
+                hdr.pop_front();
+                while let Some(front) = hdr.front() {
+                    if front <= at {
+                        hdr.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+        let done = match link {
+            Some(l) => {
+                let stalls_before = l.credit_stalls;
+                let done = match k {
+                    AccessKind::Read => {
+                        // Host reads the block: MRd request out
+                        // (header only), device access, then the
+                        // data rides completion TLPs back —
+                        // split at the link's max payload and
+                        // serialized back-to-back on the RX wire
+                        // as one column.
+                        let arrive = l.send_to_device(0, at);
+                        let ready = tiers[dev.index()].issue(a, k, b, arrive);
+                        cpl.payloads.clear();
+                        cpl.times.clear();
+                        let mut remaining = b;
+                        while remaining > 0 {
+                            let chunk = remaining.min(max_payload);
+                            cpl.payloads.push(chunk as u32);
+                            cpl.times.push(ready);
+                            remaining -= chunk;
+                        }
+                        l.send_block_to_host(&cpl.payloads, &cpl.times, &mut cpl.arrivals);
+                        let done = *cpl.arrivals.last().unwrap();
+                        l.hold_credit_until(done);
+                        done
+                    }
+                    AccessKind::Write => {
+                        // Host writes the block: posted MWr TLPs
+                        // carry the payload out in max_payload
+                        // chunks. Each chunk's flow-control
+                        // credit is recorded as it is sent
+                        // (posted writes free their credit once
+                        // the device RX buffer accepts them), so
+                        // the pool never exceeds `cfg.credits`
+                        // mid-burst; the device commit happens
+                        // once the last chunk has arrived.
+                        let mut arrive = at;
+                        let mut remaining = b;
+                        while remaining > 0 {
+                            let chunk = remaining.min(max_payload);
+                            arrive = l.send_to_device(chunk as u32, at);
+                            l.hold_credit_until(arrive);
+                            remaining -= chunk;
+                        }
+                        tiers[dev.index()].issue(a, k, b, arrive)
+                    }
+                };
+                counters.pcie_dma_bytes += b;
+                counters.dma_link_stalls += l.credit_stalls - stalls_before;
+                done
+            }
+            None => tiers[dev.index()].issue(a, k, b, at),
+        };
+        if occupy {
+            counters.dma_hdr_slots += 1;
+            hdr.push_back(done);
+        }
+        done
+    }
+
+    /// Fault layer (called per demand access when
+    /// [`crate::config::FaultConfig::mem_enabled`]): draw a wear-driven
+    /// bit error against the frame that served this access. Corrected
+    /// events cost the ECC latency penalty; uncorrectable events — and
+    /// frames whose wear has exhausted the endurance budget — retire the
+    /// frame into the tier's retired pool and emergency-remigrate the
+    /// page to a healthy frame, charging the copy through the same
+    /// DMA/HDR/PCIe machinery as an epoch migration. Returns the
+    /// fault-adjusted completion time.
+    fn mem_fault(
+        &mut self,
+        page: u64,
+        device: Device,
+        dev_addr: u64,
+        done: Time,
+        link: &mut Option<&mut PcieLink>,
+    ) -> Time {
+        let page_bytes = self.cfg.hmmu.page_bytes;
+        let frame = dev_addr / page_bytes;
+        let dev = self.tiers[device.index()].device();
+        let wear = dev.wear_of(frame);
+        let endurance = dev.endurance();
+        let dead = endurance != u64::MAX && wear >= endurance;
+        if !dead {
+            // One Bernoulli draw per access against the frame's
+            // wear-scaled raw bit error rate.
+            let rber = self.cfg.fault.rber(wear, endurance);
+            if !self.fault_rng.chance(rber) {
+                return done;
+            }
+            if !self.fault_rng.chance(self.cfg.fault.uncorrectable_frac) {
+                // Within ECC correction strength: latency penalty only.
+                self.counters.ecc_corrected += 1;
+                return done + self.cfg.fault.ecc_latency_ns;
+            }
+        }
+        // Uncorrectable error (or hard frame death at endurance
+        // exhaustion): the ECC pipeline still spends its detection
+        // latency before the rescue starts.
+        self.counters.ecc_uncorrectable += 1;
+        let done = done + self.cfg.fault.ecc_latency_ns;
+        // A page mid-DMA owns its frames until the swap commits — defer
+        // the retirement; a later access to the degraded frame retries.
+        if self.dma.is_active(page) {
+            return done;
+        }
+        let Some(old) = self.table.lookup(page) else {
+            return done;
+        };
+        let new = match self.table.retire_and_remap(page) {
+            // No healthy frame anywhere in the stack: the page limps on
+            // its degraded frame (survival over retirement).
+            Ok(None) | Err(_) => return done,
+            Ok(Some(m)) => m,
+        };
+        self.counters.frames_retired += 1;
+        self.counters.remap_migrations += 1;
+        self.counters.remap_bytes += page_bytes;
+        // One-way rescue copy, block by block: read the old frame, write
+        // the healthy one — HDR occupancy and (under host-managed DMA)
+        // the PCIe link charged exactly like an epoch migration block.
+        let occupy = self.cfg.hmmu.dma_hdr_occupancy;
+        let host_managed = self.cfg.hmmu.host_managed_dma;
+        let max_payload = self.cfg.pcie.max_payload_bytes as u64;
+        let block = (self.cfg.hmmu.dma_block_bytes as u64).clamp(1, page_bytes);
+        let src = old.frame as u64 * page_bytes;
+        let dst = new.frame as u64 * page_bytes;
+        let mut at = done;
+        let mut off = 0;
+        while off < page_bytes {
+            let b = block.min(page_bytes - off);
+            let l = if host_managed { link.as_deref_mut() } else { None };
+            let ready = Self::dma_issue(
+                &mut self.tiers,
+                &mut self.hdr_occupancy,
+                &mut self.counters,
+                &mut self.dma_cpl,
+                l,
+                occupy,
+                max_payload,
+                old.device,
+                src + off,
+                AccessKind::Read,
+                b,
+                at,
+            );
+            let l = if host_managed { link.as_deref_mut() } else { None };
+            at = Self::dma_issue(
+                &mut self.tiers,
+                &mut self.hdr_occupancy,
+                &mut self.counters,
+                &mut self.dma_cpl,
+                l,
+                occupy,
+                max_payload,
+                new.device,
+                dst + off,
+                AccessKind::Write,
+                b,
+                ready,
+            );
+            off += b;
+        }
+        // The demand response waits for the rescue: the data is only
+        // guaranteed good once it lands on the healthy frame.
+        at
     }
 
     /// Finish outstanding work at end-of-run (commit in-flight swaps).
@@ -770,6 +918,9 @@ impl CodecState for Hmmu {
         self.hdr_occupancy.encode_state(e);
         e.put_u64(self.requests_since_epoch);
         e.put_u64(self.last_now);
+        // Fault stream position: a restored faulted run must draw the
+        // exact sequence a continuous run would have drawn.
+        e.put_u64_slice(&self.fault_rng.state());
     }
 
     fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
@@ -787,6 +938,9 @@ impl CodecState for Hmmu {
         self.hdr_occupancy.decode_state(d)?;
         self.requests_since_epoch = d.u64()?;
         self.last_now = d.u64()?;
+        let s = d.u64_vec()?;
+        check_len("fault rng words", 4, s.len())?;
+        self.fault_rng = Xoshiro256::from_state([s[0], s[1], s[2], s[3]]);
         self.pending = PendingAccesses::default();
         Ok(())
     }
@@ -1086,6 +1240,110 @@ mod tests {
         assert_eq!(h.tier_wear().len(), 3);
         assert_eq!(h.tier_wear()[0], 0, "bare DRAM rank tracks no wear");
         assert!(h.nvm_max_wear() >= h.tier_wear()[2]);
+    }
+
+    #[test]
+    fn fault_off_records_no_events() {
+        let mut h = hmmu(PolicyKind::Hotness);
+        let page_bytes = h.config().hmmu.page_bytes;
+        let total = h.config().total_pages();
+        let mut rng = crate::util::rng::Xoshiro256::new(3);
+        let mut t = 0;
+        for _ in 0..5000 {
+            let p = rng.below(total.min(4096));
+            let kind = if rng.chance(0.3) { AccessKind::Write } else { AccessKind::Read };
+            t = h.access(p * page_bytes, kind, 64, t + 20);
+        }
+        h.drain(t + 10_000_000);
+        assert_eq!(h.counters.fault_events(), 0, "default-off layer must be silent");
+    }
+
+    #[test]
+    fn ecc_corrected_events_add_latency_only() {
+        // Every injected error falls within correction strength: the run
+        // pays latency but never retires a frame or moves a page.
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = PolicyKind::Static;
+        cfg.hmmu.epoch_requests = 100_000;
+        cfg.fault.rber_base = 0.5;
+        cfg.fault.uncorrectable_frac = 0.0;
+        let mut h = Hmmu::new(cfg, None);
+        let mut t = 0;
+        for i in 0..500u64 {
+            t = h.access(i * 4096, AccessKind::Read, 64, t + 100);
+        }
+        assert!(h.counters.ecc_corrected > 100, "rber 0.5 must fire often");
+        assert_eq!(h.counters.ecc_uncorrectable, 0);
+        assert_eq!(h.counters.frames_retired, 0);
+        assert_eq!(h.counters.remap_migrations, 0);
+        h.table.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn wear_exhaustion_retires_frames_and_remaps() {
+        // Hammer writes at a handful of wear-limited pages with a tiny
+        // endurance budget: their frames die, retire into the tier's
+        // retired pool, and the pages emergency-remap to healthy frames
+        // — shrinking effective capacity while the run survives.
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = PolicyKind::FirstTouch;
+        cfg.hmmu.epoch_requests = 100_000;
+        cfg.nvm.endurance = 8;
+        cfg.fault.rber_base = 1e-9; // enables the layer; death comes from wear
+        let mut h = Hmmu::new(cfg, None);
+        let page_bytes = h.config().hmmu.page_bytes;
+        let dram_pages = h.config().dram_pages();
+        let mut t = 0;
+        // Fill DRAM so the next pages land on the wear-limited rank.
+        for p in 0..dram_pages {
+            t = h.access(p * page_bytes, AccessKind::Read, 64, t + 50);
+        }
+        for i in 0..400u64 {
+            let p = dram_pages + (i % 4);
+            t = h.access(p * page_bytes, AccessKind::Write, 64, t + 50);
+        }
+        h.drain(t + 10_000_000);
+        assert!(h.counters.frames_retired > 0, "worn frames must retire");
+        assert_eq!(h.counters.frames_retired, h.counters.remap_migrations);
+        assert_eq!(h.counters.remap_bytes, h.counters.remap_migrations * page_bytes);
+        assert!(h.counters.ecc_uncorrectable >= h.counters.frames_retired);
+        assert!(
+            h.table.retired_frames(TierId::Nvm) > 0,
+            "retired pool must hold the dead frames"
+        );
+        assert!(
+            h.table.effective_frames(TierId::Nvm)
+                < h.config().nvm.size_bytes / page_bytes,
+            "retirement must shrink effective capacity"
+        );
+        // Residency still sums to mapped pages; invariants hold.
+        assert_eq!(h.tier_residency().iter().sum::<u64>(), h.table.mapped_pages());
+        h.table.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn faulted_runs_are_deterministic() {
+        let run = || {
+            let mut cfg = SystemConfig::default_scaled(64);
+            cfg.policy = PolicyKind::Hotness;
+            cfg.hmmu.epoch_requests = 1000;
+            cfg.nvm.endurance = 50;
+            cfg.fault.rber_base = 1e-3;
+            let mut h = Hmmu::new(cfg, None);
+            let page_bytes = h.config().hmmu.page_bytes;
+            let total = h.config().total_pages();
+            let mut rng = crate::util::rng::Xoshiro256::new(5);
+            let mut t = 0;
+            for _ in 0..8000 {
+                let p = rng.below(total.min(4096));
+                let kind = if rng.chance(0.5) { AccessKind::Write } else { AccessKind::Read };
+                t = h.access(p * page_bytes, kind, 64, t + 20);
+            }
+            h.drain(t + 10_000_000);
+            h.table.check_invariants().unwrap();
+            (format!("{:?}", h.counters), t)
+        };
+        assert_eq!(run(), run(), "same seed must replay the same faults");
     }
 
     #[test]

@@ -504,7 +504,7 @@ impl PlacementPolicy for HotnessPolicy {
         // the coldest rank-0 victims).
         Self::select_migrations_into(
             &out,
-            view.max_migrations as usize,
+            view.budget(0) as usize,
             HYSTERESIS,
             view.migrating,
             &mut self.pairs,
@@ -517,7 +517,7 @@ impl PlacementPolicy for HotnessPolicy {
                 &out.hotness,
                 &self.tier_of,
                 upper,
-                view.max_migrations as usize,
+                view.budget(upper as usize) as usize,
                 HYSTERESIS,
                 None,
                 None,
@@ -545,6 +545,7 @@ mod tests {
             table: t,
             migrating: &|_| false,
             max_migrations: 8,
+            boundary_budgets: &[],
         }
     }
 
@@ -651,6 +652,7 @@ mod tests {
             table: &t,
             migrating: &busy,
             max_migrations: 8,
+            boundary_budgets: &[],
         };
         let pairs = p.epoch(&v);
         assert!(pairs.iter().all(|&(a, b)| a != 5 && b != 5));
@@ -808,7 +810,43 @@ mod tests {
             table: &t,
             migrating: &|_| false,
             max_migrations: 4,
+            boundary_budgets: &[],
         };
         assert_eq!(p.epoch(&v).len(), 4);
+    }
+
+    #[test]
+    fn boundary_budget_overrides_rank0_cap() {
+        // Same hammered table as `respects_migration_cap`, but with a
+        // per-boundary override for boundary 0: the override wins, and a
+        // zero entry falls back to the legacy epoch-wide cap.
+        let mut t = RedirectionTable::two_tier(64, 32, 32, 4096);
+        t.identity_map();
+        let hammer = |p: &mut HotnessPolicy| {
+            for page in 32..64 {
+                for _ in 0..100 {
+                    p.record_access(page, false);
+                }
+            }
+        };
+        let mut p = policy(64);
+        hammer(&mut p);
+        let v = PolicyView {
+            table: &t,
+            migrating: &|_| false,
+            max_migrations: 8,
+            boundary_budgets: &[2],
+        };
+        assert_eq!(p.epoch(&v).len(), 2, "override caps boundary 0");
+
+        let mut p = policy(64);
+        hammer(&mut p);
+        let v = PolicyView {
+            table: &t,
+            migrating: &|_| false,
+            max_migrations: 8,
+            boundary_budgets: &[0, 0, 0],
+        };
+        assert_eq!(p.epoch(&v).len(), 8, "zero entries fall back to the cap");
     }
 }

@@ -32,8 +32,25 @@ pub struct PolicyView<'a> {
     pub table: &'a RedirectionTable,
     /// Pages currently involved in in-flight DMA swaps (cannot re-migrate).
     pub migrating: &'a dyn Fn(u64) -> bool,
-    /// Cap on migrations this epoch.
+    /// Cap on migrations this epoch (per boundary, unless overridden by
+    /// `boundary_budgets`).
     pub max_migrations: u32,
+    /// Per-boundary overrides (`HmmuConfig::migrations_per_boundary`):
+    /// entry `b` caps the rank-`b`/rank-`b+1` boundary; `0` = unset,
+    /// falling back to `max_migrations`. Policies read it through
+    /// [`Self::budget`].
+    pub boundary_budgets: &'a [u32],
+}
+
+impl PolicyView<'_> {
+    /// Migration budget for tier boundary `b` (rank `b` ↔ rank `b+1`).
+    #[inline]
+    pub fn budget(&self, boundary: usize) -> u32 {
+        match self.boundary_budgets.get(boundary) {
+            Some(&n) if n > 0 => n,
+            _ => self.max_migrations,
+        }
+    }
 }
 
 /// A placement/migration policy.

@@ -112,6 +112,7 @@ mod tests {
             table: &t,
             migrating: &not_migrating,
             max_migrations: 8,
+            boundary_budgets: &[],
         };
         assert!(p.epoch(&v).is_empty());
     }

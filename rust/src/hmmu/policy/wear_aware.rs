@@ -180,7 +180,7 @@ impl PlacementPolicy for WearAwarePolicy {
         // Rank-0 boundary: exactly the two-tier wear-aware selection.
         HotnessPolicy::select_migrations_into(
             &out,
-            view.max_migrations as usize,
+            view.budget(0) as usize,
             super::hotness::HYSTERESIS,
             view.migrating,
             &mut self.pairs,
@@ -193,7 +193,7 @@ impl PlacementPolicy for WearAwarePolicy {
                 &out.hotness,
                 &self.tier_of,
                 upper,
-                view.max_migrations as usize,
+                view.budget(upper as usize) as usize,
                 super::hotness::HYSTERESIS,
                 Some(&self.writes),
                 Some(&self.lifetime_writes),
@@ -220,6 +220,7 @@ mod tests {
             table: t,
             migrating: &|_| false,
             max_migrations: 4,
+            boundary_budgets: &[],
         }
     }
 
@@ -276,6 +277,7 @@ mod tests {
             table: &t,
             migrating: &|_| false,
             max_migrations: 4,
+            boundary_budgets: &[],
         };
         let mut warm = 0usize;
         for epoch in 0..20 {

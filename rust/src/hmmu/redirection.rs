@@ -91,6 +91,10 @@ pub struct RedirectionTable {
     /// Mapped pages currently backed by each tier, maintained on
     /// place/swap; sums to `mapped`.
     resident: Vec<u64>,
+    /// Per-tier retired frames (uncorrectable/dead): permanently removed
+    /// from circulation — never pushed back to a free list — so the
+    /// tier's effective capacity shrinks as the device wears out.
+    retired: Vec<Vec<u32>>,
 }
 
 impl RedirectionTable {
@@ -117,6 +121,7 @@ impl RedirectionTable {
             frames: tier_frames.to_vec(),
             mapped: 0,
             resident: vec![0; tier_frames.len()],
+            retired: vec![Vec::new(); tier_frames.len()],
         }
     }
 
@@ -156,6 +161,10 @@ impl RedirectionTable {
     /// (the paper's "straightforward approach" / the static policy's
     /// starting point).
     pub fn identity_map(&mut self) {
+        debug_assert!(
+            self.retired.iter().all(Vec::is_empty),
+            "identity_map re-issues every frame; only valid on a fresh table"
+        );
         self.resident.fill(0);
         let mut tier = 0usize;
         let mut next_frame = 0u32;
@@ -249,6 +258,54 @@ impl RedirectionTable {
         Ok(())
     }
 
+    /// Retire the frame backing `page` (uncorrectable error / endurance
+    /// death) and remap the page onto a healthy frame, preferring the
+    /// same tier then falling down-then-up the stack in [`Self::place`]
+    /// order. The dead frame lands in the per-tier retired pool — it is
+    /// **never** returned to a free list, so the tier's effective
+    /// capacity shrinks. Returns the new mapping, or `None` when no free
+    /// frame exists anywhere in the stack (fully mapped: the page must
+    /// survive on its degraded frame rather than be lost, and the caller
+    /// skips the retirement).
+    pub fn retire_and_remap(&mut self, page: u64) -> Result<Option<Mapping>> {
+        let e = self.entries[page as usize];
+        if e == UNMAPPED {
+            bail!("retire of unmapped page {page}");
+        }
+        let old = Self::unpack(e);
+        let start = old.device.index();
+        let order = (start..self.tiers()).chain((0..start).rev());
+        let mut found = None;
+        for t in order {
+            if let Some(f) = self.free[t].pop() {
+                found = Some(Mapping {
+                    device: TierId(t as u8),
+                    frame: f,
+                });
+                break;
+            }
+        }
+        let Some(m) = found else {
+            return Ok(None);
+        };
+        self.entries[page as usize] = Self::pack(m);
+        self.resident[old.device.index()] -= 1;
+        self.resident[m.device.index()] += 1;
+        self.retired[old.device.index()].push(old.frame);
+        Ok(Some(m))
+    }
+
+    /// Frames permanently retired on `tier`.
+    pub fn retired_frames(&self, tier: TierId) -> usize {
+        self.retired[tier.index()].len()
+    }
+
+    /// Usable frame capacity of `tier` after retirements — the
+    /// degradation sweep's "effective capacity" column.
+    pub fn effective_frames(&self, tier: TierId) -> u64 {
+        self.frames[tier.index()] as u64 - self.retired[tier.index()].len() as u64
+    }
+
     /// Free frames currently available on `tier`.
     pub fn free_frames(&self, tier: TierId) -> usize {
         self.free[tier.index()].len()
@@ -338,6 +395,30 @@ impl RedirectionTable {
                 }
             }
         }
+        // Retired frames are out of circulation: in range, not mapped,
+        // not free, never retired twice.
+        let mut dead: Vec<Vec<bool>> =
+            self.frames.iter().map(|&f| vec![false; f as usize]).collect();
+        for (t, retired) in self.retired.iter().enumerate() {
+            let tier = TierId(t as u8);
+            for &f in retired {
+                if f >= self.frames[t] {
+                    bail!("retired frame {tier:?}:{f} out of range");
+                }
+                if seen[t][f as usize] {
+                    bail!("{tier:?} frame {f} both mapped and retired");
+                }
+                if dead[t][f as usize] {
+                    bail!("{tier:?} frame {f} retired twice");
+                }
+                dead[t][f as usize] = true;
+            }
+            for &f in &self.free[t] {
+                if dead[t][f as usize] {
+                    bail!("{tier:?} frame {f} both retired and free");
+                }
+            }
+        }
         let mapped_recount = self.entries.iter().filter(|&&e| e != UNMAPPED).count() as u64;
         if self.mapped != mapped_recount {
             bail!("mapped counter {} != recount {mapped_recount}", self.mapped);
@@ -371,6 +452,9 @@ impl CodecState for RedirectionTable {
         }
         e.put_u64(self.mapped);
         e.put_u64_slice(&self.resident);
+        for r in &self.retired {
+            e.put_u32_slice(r);
+        }
     }
 
     fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
@@ -393,10 +477,23 @@ impl CodecState for RedirectionTable {
         let mapped = d.u64()?;
         let resident = d.u64_vec()?;
         check_len("redirection residency", self.resident.len(), resident.len())?;
+        let mut retired = Vec::with_capacity(tiers);
+        for t in 0..tiers {
+            let r = d.u32_vec()?;
+            if r.len() > self.frames[t] as usize {
+                bail!(
+                    "checkpoint geometry mismatch: tier {t} retired pool {} exceeds {} frames",
+                    r.len(),
+                    self.frames[t]
+                );
+            }
+            retired.push(r);
+        }
         self.entries = entries;
         self.free = free;
         self.mapped = mapped;
         self.resident = resident;
+        self.retired = retired;
         // A decoded table must satisfy the same invariants a live one
         // does — catches corrupt/mismatched snapshots up front.
         self.check_invariants()
@@ -591,6 +688,86 @@ mod tests {
         t.check_invariants().unwrap();
         // Residency sums to mapped across all tiers.
         assert_eq!(t.residency().iter().sum::<u64>(), t.mapped_pages());
+    }
+
+    #[test]
+    fn retire_prefers_same_tier_then_falls_down_the_stack() {
+        let mut t = table(); // 8 pages, 4 DRAM + 8 NVM frames
+        t.identity_map();
+        let old = t.lookup(0).unwrap();
+        assert_eq!(old.device, TierId::Dram);
+        // No free DRAM frames (identity map filled all 4): the victim
+        // falls to the NVM pool; the dead DRAM frame is retired.
+        let m = t.retire_and_remap(0).unwrap().unwrap();
+        assert_eq!(m.device, TierId::Nvm);
+        assert_eq!(t.lookup(0), Some(m));
+        assert_eq!(t.retired_frames(TierId::Dram), 1);
+        assert_eq!(t.effective_frames(TierId::Dram), 3);
+        assert_eq!(t.residency(), &[3, 5]);
+        assert_eq!(t.mapped_pages(), 8, "page survives the retirement");
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retired_frames_never_reallocated() {
+        let mut t = RedirectionTable::two_tier(6, 2, 4, 4096);
+        t.place(0, TierId::Dram).unwrap();
+        let dead = t.lookup(0).unwrap();
+        let m = t.retire_and_remap(0).unwrap().unwrap();
+        assert_ne!((m.device, m.frame), (dead.device, dead.frame));
+        // Exhaust every remaining frame: the retired one must never come
+        // back out of a free list.
+        for p in 1..5u64 {
+            let got = t.place(p, TierId::Dram).unwrap();
+            assert_ne!((got.device, got.frame), (dead.device, dead.frame), "page {p}");
+        }
+        // 6 frames - 1 retired - 5 mapped = 0 free anywhere.
+        assert_eq!(t.free_frames(TierId::Dram) + t.free_frames(TierId::Nvm), 0);
+        assert!(t.place(5, TierId::Dram).is_err(), "capacity shrank by the retirement");
+        assert!(t.retire_and_remap(5).is_err(), "unmapped page rejected");
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retire_with_full_stack_returns_none() {
+        let mut t = RedirectionTable::two_tier(3, 1, 2, 4096);
+        for p in 0..3 {
+            t.place(p, TierId::Dram).unwrap();
+        }
+        let before = t.lookup(1).unwrap();
+        assert_eq!(t.retire_and_remap(1).unwrap(), None);
+        assert_eq!(t.lookup(1), Some(before), "page survives on its degraded frame");
+        assert_eq!(t.retired_frames(TierId::Dram) + t.retired_frames(TierId::Nvm), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn codec_round_trip_restores_retired_pools() {
+        let mut t = RedirectionTable::new(16, &[4, 4, 8], 4096);
+        t.identity_map();
+        t.retire_and_remap(0).unwrap().unwrap();
+        t.retire_and_remap(5).unwrap().unwrap();
+        let mut e = Encoder::new();
+        t.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut restored = RedirectionTable::new(16, &[4, 4, 8], 4096);
+        let mut d = Decoder::new(&bytes);
+        restored.decode_state(&mut d).unwrap();
+        assert!(d.is_done());
+        for tier in 0..3u8 {
+            assert_eq!(
+                restored.retired_frames(TierId(tier)),
+                t.retired_frames(TierId(tier))
+            );
+            assert_eq!(
+                restored.effective_frames(TierId(tier)),
+                t.effective_frames(TierId(tier))
+            );
+        }
+        for p in 0..16 {
+            assert_eq!(restored.lookup(p), t.lookup(p), "page {p}");
+        }
+        restored.check_invariants().unwrap();
     }
 
     #[test]

@@ -88,6 +88,34 @@ fn config_from(args: &Args) -> SystemConfig {
     if args.flag("coalesce-writes") {
         cfg.pcie.coalesce_writes = true;
     }
+    // Fault-injection axes (default off = bit-identical to a healthy
+    // platform): wear-driven NVM bit errors, link-TLP corruption, and the
+    // dedicated fault RNG stream seed. For `sweep`, `--rber` may be a
+    // comma-separated axis, handled in cmd_sweep.
+    cfg.fault.seed = args.get_u64("fault-seed", cfg.fault.seed);
+    if let Some(s) = args.get("rber") {
+        if !s.contains(',') {
+            match s.parse::<f64>() {
+                Ok(r) if r >= 0.0 => cfg.fault.rber_base = r,
+                _ => {
+                    eprintln!("bad --rber {s:?}; want a rate in [0,1], e.g. 1e-4");
+                    std::process::exit(1);
+                }
+            }
+        } else if args.command.as_deref() != Some("sweep") {
+            eprintln!(
+                "--rber {s:?}: a comma-separated rate list is only a sweep axis; \
+                 pass one rate (e.g. 1e-4) to this command"
+            );
+            std::process::exit(1);
+        }
+    }
+    let link_ber = args.get_f64("link-ber", cfg.fault.link_ber);
+    if !(0.0..=1.0).contains(&link_ber) {
+        eprintln!("bad --link-ber {link_ber}; want a rate in [0,1]");
+        std::process::exit(1);
+    }
+    cfg.fault.link_ber = link_ber;
     cfg
 }
 
@@ -216,6 +244,24 @@ fn cmd_sweep(args: &Args) -> i32 {
             }
         }
         scenarios = Scenario::cores_grid(&scenarios, &counts);
+    }
+    // Optional fault-rate axis: `--rber 0,1e-5,1e-4` (wear-driven raw bit
+    // error rate per point; 0 keeps the healthy baseline unsuffixed). A
+    // single rate was already folded into `cfg` by config_from.
+    if let Some(list) = args.get("rber") {
+        if list.contains(',') {
+            let mut points = Vec::new();
+            for tok in list.split(',') {
+                match tok.trim().parse::<f64>() {
+                    Ok(r) if r >= 0.0 => points.push(r),
+                    _ => {
+                        eprintln!("bad --rber entry {tok:?}; want a rate in [0,1], e.g. 1e-4");
+                        return 1;
+                    }
+                }
+            }
+            scenarios = Scenario::fault_grid(&scenarios, &points);
+        }
     }
 
     // Warm-state checkpoint/fork engine: `--warmup-ops N` pays the
@@ -544,12 +590,17 @@ COMMANDS:
                   [--ops N] [--scale N] [--tech 3dxpoint|stt-ram|...] [--flush]
                   [--tiers dram+pcm+xpoint] [--native-engine]
                   [--host-managed-dma] [--coalesce-writes]
+                  [--rber R] wear-driven NVM bit-error rate (ECC + frame
+                  retirement); [--link-ber R] PCIe TLP corruption/replay
+                  rate; [--fault-seed N] fault RNG stream seed
   sweep           parallel scenario sweep: 12 workloads [x --policies a,b,..]
                   [x --nvm-stalls rd:wr,rd:wr,..] [x --cores 1,4,..]
-                  [x --tiers dram+pcm,dram+xpoint,dram+pcm+xpoint] on
+                  [x --tiers dram+pcm,dram+xpoint,dram+pcm+xpoint]
+                  [x --rber 0,1e-5,1e-4] on
                   --threads N OS threads (default: all cores; bit-identical
                   to serial), writes --json <path> (default BENCH_sweep.json)
                   [--ops N] [--host-managed-dma] [--coalesce-writes]
+                  [--link-ber R] [--fault-seed N]
                   [--warmup-ops N] pay warm-up once per workload group and
                   fork it across the grid; [--checkpoint-dir D] cache warm
                   states on disk; [--cold-replay] re-warm per scenario

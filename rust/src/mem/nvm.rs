@@ -55,6 +55,13 @@ impl NvmDevice {
         self.max_wear
     }
 
+    /// Write count of one device frame (page index into this device's
+    /// address space; 0 if never written). The fault model's RBER curve
+    /// is driven by this.
+    pub fn wear_of(&self, frame: u64) -> u64 {
+        self.wear.get(&frame).copied().unwrap_or(0)
+    }
+
     /// Fraction of the endurance budget consumed by the hottest page.
     pub fn wear_fraction(&self) -> f64 {
         if self.cfg.endurance == 0 || self.cfg.endurance == u64::MAX {

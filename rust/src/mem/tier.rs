@@ -63,6 +63,22 @@ impl TierDevice {
         }
     }
 
+    /// Write count of one device frame (0 for bare DRAM tiers).
+    pub fn wear_of(&self, frame: u64) -> u64 {
+        match self {
+            TierDevice::Dram(_) => 0,
+            TierDevice::Nvm(d) => d.wear_of(frame),
+        }
+    }
+
+    /// Per-frame endurance budget (unlimited for bare DRAM tiers).
+    pub fn endurance(&self) -> u64 {
+        match self {
+            TierDevice::Dram(_) => u64::MAX,
+            TierDevice::Nvm(d) => d.config().endurance,
+        }
+    }
+
     /// Change the injected stalls at runtime (Table I / `--nvm-stalls`
     /// sweeps); a no-op on bare DRAM tiers.
     pub fn set_stalls(&mut self, read_ns: u64, write_ns: u64) {

@@ -27,10 +27,11 @@ pub mod tlp;
 
 pub use tlp::{Tlp, TlpKind};
 
-use crate::config::PcieConfig;
+use crate::config::{FaultConfig, PcieConfig};
 use crate::sim::Time;
-use crate::util::codec::{CodecState, Decoder, Encoder};
+use crate::util::codec::{check_len, CodecState, Decoder, Encoder};
 use crate::util::error::Result;
+use crate::util::rng::{splitmix64, Xoshiro256};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -119,6 +120,20 @@ impl TlpColumn {
     }
 }
 
+/// Link-fault injection state ([`FaultConfig::link_enabled`]): each TLP
+/// put on a wire draws against the bit error rate; a corrupted TLP is
+/// NAK'd by the receiver's LCRC check and retransmitted from the replay
+/// buffer — re-occupying the wire for another serialization after the
+/// replay timeout, bounded by the retry limit (PCIe's DLLP ack/nak
+/// protocol, collapsed to its timing shape).
+#[derive(Clone, Debug)]
+struct LinkFaultState {
+    rng: Xoshiro256,
+    ber: f64,
+    retry_limit: u32,
+    replay_timeout_ns: u64,
+}
+
 /// Full-duplex PCIe link with credit flow control.
 #[derive(Clone, Debug)]
 pub struct PcieLink {
@@ -137,6 +152,13 @@ pub struct PcieLink {
     /// on): `tlps_sent` counts wire TLPs, this counts the requests that
     /// rode along in a combined one.
     pub coalesced_writes: u64,
+    /// Fault-injection state; `None` (the default) keeps every wire push
+    /// on the exact pre-fault path.
+    fault: Option<LinkFaultState>,
+    /// TLP retransmissions triggered by injected corruption (both
+    /// directions, per-op and block paths alike — the replay runs inside
+    /// the shared wire-push choke points).
+    pub link_retries: u64,
 }
 
 impl PcieLink {
@@ -157,7 +179,27 @@ impl PcieLink {
             credit_stalls: 0,
             credit_wait_ns: 0,
             coalesced_writes: 0,
+            fault: None,
+            link_retries: 0,
         }
+    }
+
+    /// Arm the link-fault layer from `fault` (a no-op when
+    /// [`FaultConfig::link_enabled`] is false). `seed` is the platform
+    /// seed; the fault stream is mixed away from every workload RNG so
+    /// arming it never perturbs anything else.
+    pub fn set_fault(&mut self, fault: &FaultConfig, seed: u64) {
+        if !fault.link_enabled() {
+            self.fault = None;
+            return;
+        }
+        let mut mix = seed ^ fault.seed.rotate_left(17);
+        self.fault = Some(LinkFaultState {
+            rng: Xoshiro256::new(splitmix64(&mut mix)),
+            ber: fault.link_ber,
+            retry_limit: fault.link_retry_limit,
+            replay_timeout_ns: fault.replay_timeout_ns,
+        });
     }
 
     pub fn config(&self) -> &PcieConfig {
@@ -205,15 +247,43 @@ impl PcieLink {
         }
     }
 
+    /// Corruption draw + replay charging for one TLP whose clean
+    /// transmission ends at `sent`. Each corrupted attempt costs the
+    /// replay timeout (LCRC check + NAK DLLP round) plus a full
+    /// reserialization; after `retry_limit` replays the transfer is
+    /// delivered (the protocol escalates to link retrain — out of scope —
+    /// so we cap the charged retries). Returns the fault-adjusted
+    /// wire-occupied-until time; retries are tallied on `link_retries`.
+    /// `bytes_sent`/`tlps_sent` stay goodput (one count per delivered
+    /// TLP) so traffic accounting remains comparable across fault rates.
+    #[inline]
+    fn faulted_wire_end(&mut self, ser: u64, sent: Time) -> Time {
+        let Some(f) = self.fault.as_mut() else {
+            return sent;
+        };
+        let mut sent = sent;
+        let mut tries = 0;
+        while tries < f.retry_limit && f.rng.chance(f.ber) {
+            tries += 1;
+            sent += f.replay_timeout_ns + ser;
+        }
+        self.link_retries += tries as u64;
+        sent
+    }
+
     /// Put a pre-serialized TLP on the TX wire at `start`; returns its
     /// arrival at the device.
     #[inline]
     fn tx_push(&mut self, ser: u64, payload_bytes: u32, start: Time) -> Time {
         let wire_start = start.max(self.tx.wire_free);
-        self.tx.wire_free = wire_start + ser;
+        let mut wire_end = wire_start + ser;
+        if self.fault.is_some() {
+            wire_end = self.faulted_wire_end(ser, wire_end);
+        }
+        self.tx.wire_free = wire_end;
         self.tx.bytes_sent += (self.cfg.tlp_header_bytes + payload_bytes) as u64;
         self.tx.tlps_sent += 1;
-        wire_start + ser + self.cfg.propagation_ns
+        wire_end + self.cfg.propagation_ns
     }
 
     /// Put a pre-serialized TLP on the RX wire at `now`; returns its
@@ -221,10 +291,14 @@ impl PcieLink {
     #[inline]
     fn rx_push(&mut self, ser: u64, payload_bytes: u32, now: Time) -> Time {
         let wire_start = now.max(self.rx.wire_free);
-        self.rx.wire_free = wire_start + ser;
+        let mut wire_end = wire_start + ser;
+        if self.fault.is_some() {
+            wire_end = self.faulted_wire_end(ser, wire_end);
+        }
+        self.rx.wire_free = wire_end;
         self.rx.bytes_sent += (self.cfg.tlp_header_bytes + payload_bytes) as u64;
         self.rx.tlps_sent += 1;
-        wire_start + ser + self.cfg.propagation_ns
+        wire_end + self.cfg.propagation_ns
     }
 
     /// Transmit host→HMMU at `now`; returns arrival time at the HMMU RX.
@@ -450,6 +524,17 @@ impl CodecState for PcieLink {
         e.put_u64(self.credit_stalls);
         e.put_u64(self.credit_wait_ns);
         e.put_u64(self.coalesced_writes);
+        // Fault stream position (the ber/limits are config-derived): a
+        // restored faulted link must replay the exact corruption draws a
+        // continuous run would have made.
+        match &self.fault {
+            None => e.put_bool(false),
+            Some(f) => {
+                e.put_bool(true);
+                e.put_u64_slice(&f.rng.state());
+            }
+        }
+        e.put_u64(self.link_retries);
     }
 
     fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
@@ -467,6 +552,21 @@ impl CodecState for PcieLink {
         self.credit_stalls = d.u64()?;
         self.credit_wait_ns = d.u64()?;
         self.coalesced_writes = d.u64()?;
+        let armed = d.bool()?;
+        match (&mut self.fault, armed) {
+            (None, false) => {}
+            (Some(f), true) => {
+                let s = d.u64_vec()?;
+                check_len("link fault rng words", 4, s.len())?;
+                f.rng = Xoshiro256::from_state([s[0], s[1], s[2], s[3]]);
+            }
+            (have, _) => crate::bail!(
+                "checkpoint geometry mismatch: link fault layer {} in snapshot, {} in config",
+                if armed { "armed" } else { "absent" },
+                if have.is_some() { "armed" } else { "absent" },
+            ),
+        }
+        self.link_retries = d.u64()?;
         Ok(())
     }
 }
@@ -689,6 +789,77 @@ mod tests {
         }
         assert_eq!(restored.credit_stalls, warm.credit_stalls);
         assert_eq!(restored.credit_wait_ns, warm.credit_wait_ns);
+    }
+
+    #[test]
+    fn link_faults_replay_and_count_retries() {
+        // ber = 1.0: every attempt corrupts, so every TLP burns exactly
+        // `link_retry_limit` replays — each costing a reserialization
+        // plus the replay timeout — before the capped delivery.
+        let mut fault = FaultConfig::disabled();
+        fault.link_ber = 1.0;
+        let mut clean = link();
+        let mut faulty = link();
+        faulty.set_fault(&fault, 42);
+        let a_clean = clean.send_to_device(64, 0);
+        let a_faulty = faulty.send_to_device(64, 0);
+        let ser = clean.serialize_ns(64);
+        let expect = fault.link_retry_limit as u64 * (fault.replay_timeout_ns + ser);
+        assert_eq!(a_faulty - a_clean, expect);
+        assert_eq!(faulty.link_retries, fault.link_retry_limit as u64);
+        // RX direction replays through the same choke point.
+        let r_clean = clean.send_to_host(64, 10_000);
+        let r_faulty = faulty.send_to_host(64, 10_000);
+        assert_eq!(r_faulty - r_clean, expect);
+        // Goodput accounting is unchanged by replays.
+        assert_eq!(faulty.tx_bytes(), clean.tx_bytes());
+        assert_eq!(faulty.tlps(), clean.tlps());
+    }
+
+    #[test]
+    fn disarmed_fault_layer_is_bit_identical() {
+        let mut fault = FaultConfig::disabled();
+        fault.rber_base = 0.1; // memory faults on, link faults off
+        let mut a = link();
+        let mut b = link();
+        b.set_fault(&fault, 42);
+        for i in 0..50u64 {
+            assert_eq!(a.send_to_device(64, i * 7), b.send_to_device(64, i * 7));
+            assert_eq!(a.send_to_host(64, i * 7), b.send_to_host(64, i * 7));
+        }
+        assert_eq!(b.link_retries, 0);
+    }
+
+    #[test]
+    fn faulted_link_codec_round_trip_replays_identically() {
+        let mut fault = FaultConfig::disabled();
+        fault.link_ber = 0.3;
+        let mut warm = link();
+        warm.set_fault(&fault, 7);
+        for i in 0..60u64 {
+            let a = warm.send_to_device(64, i * 11);
+            warm.hold_credit_until(a + 2_000);
+            warm.send_to_host(64, i * 11 + 3);
+        }
+        assert!(warm.link_retries > 0, "ber 0.3 over 120 TLPs must retry");
+        let mut e = Encoder::new();
+        warm.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut restored = link();
+        restored.set_fault(&fault, 7);
+        restored.decode_state(&mut Decoder::new(&bytes)).unwrap();
+        assert_eq!(restored.link_retries, warm.link_retries);
+        // Future corruption draws continue from the same stream position.
+        for i in 0..40u64 {
+            assert_eq!(
+                restored.send_to_device(64, 5_000 + i * 9),
+                warm.send_to_device(64, 5_000 + i * 9)
+            );
+        }
+        assert_eq!(restored.link_retries, warm.link_retries);
+        // Geometry mismatch fails loudly.
+        let mut disarmed = link();
+        assert!(disarmed.decode_state(&mut Decoder::new(&bytes)).is_err());
     }
 
     #[test]

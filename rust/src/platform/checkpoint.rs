@@ -29,7 +29,7 @@ use crate::workload::{TraceBlock, TraceGenerator, Workload, TRACE_BLOCK_OPS};
 
 /// Serialized-checkpoint magic ("HYMW" little-endian) + format version.
 const CHECKPOINT_MAGIC: u32 = 0x574d_5948;
-const CHECKPOINT_VERSION: u32 = 1;
+const CHECKPOINT_VERSION: u32 = 2;
 
 /// One run (platform pass + native reference pass) paused at a trace
 /// block boundary, ready to be forked across scenario variants or
@@ -158,7 +158,10 @@ impl WarmPlatform {
         let native_time_ns = self.nat_core.finish();
         let native_wall_ns = wall1.elapsed().as_nanos() as u64;
 
-        let backend = self.backend;
+        let mut backend = self.backend;
+        // Same link_retries mirror as `Platform::run_opts_mode` — the
+        // forked report must be byte-identical to a cold run's.
+        backend.hmmu.counters.link_retries = backend.link.link_retries;
         let specs = backend.hmmu.tier_specs().to_vec();
         let energy_inputs: Vec<_> = specs
             .iter()

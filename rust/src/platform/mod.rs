@@ -64,8 +64,10 @@ pub struct HmmuBackend {
 
 impl HmmuBackend {
     pub fn new(cfg: SystemConfig, engine: Option<Box<dyn HotnessEngine>>) -> Self {
+        let mut link = PcieLink::new(cfg.pcie);
+        link.set_fault(&cfg.fault, cfg.seed);
         HmmuBackend {
-            link: PcieLink::new(cfg.pcie),
+            link,
             line_bytes: cfg.l1d.line_bytes,
             hmmu: Hmmu::new(cfg, engine),
             col: TlpColumn::new(),
@@ -283,7 +285,7 @@ impl Platform {
             (backend, core, hier, platform_time_ns, wall0.elapsed().as_nanos() as u64)
         };
 
-        let ((backend, core, hier, platform_time_ns, host_wall_ns), (native_time_ns, native_wall_ns)) =
+        let ((mut backend, core, hier, platform_time_ns, host_wall_ns), (native_time_ns, native_wall_ns)) =
             if concurrent {
                 std::thread::scope(|s| {
                     let native = s.spawn(native_pass);
@@ -309,6 +311,11 @@ impl Platform {
             })
             .collect();
         let energy = crate::mem::estimate_tier_energy(&energy_inputs, platform_time_ns);
+
+        // Link replays live on the PCIe side; mirror them into the HMMU
+        // counter block so every report surface (Debug golden, sweep
+        // fingerprint, checkpoint) sees one consolidated fault tally.
+        backend.hmmu.counters.link_retries = backend.link.link_retries;
 
         Ok(RunReport {
             workload: wl.name.to_string(),

@@ -147,6 +147,27 @@ impl Scenario {
         Ok(out)
     }
 
+    /// Expand scenarios across a fault-rate axis, suffixing names with
+    /// `%<rber>` (e.g. `505.mcf/hotness%0.0001`). Each point sets the
+    /// wear-driven raw bit error rate ([`crate::config::FaultConfig`]
+    /// `rber_base`); `0.0` disables the fault layer and keeps the
+    /// unsuffixed name, so healthy baselines stay comparable across
+    /// series.
+    pub fn fault_grid(scenarios: &[Scenario], rber_points: &[f64]) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(scenarios.len() * rber_points.len());
+        for sc in scenarios {
+            for &rber in rber_points {
+                let mut s = sc.clone();
+                s.cfg.fault.rber_base = rber;
+                if rber > 0.0 {
+                    s.name = format!("{}%{rber}", sc.name);
+                }
+                out.push(s);
+            }
+        }
+        out
+    }
+
     /// Expand scenarios across a core-count axis, suffixing names with
     /// `x<cores>` (e.g. `505.mcf/hotness x4` → `"505.mcf/hotnessx4"`).
     /// Entries with `1` keep the single-core platform path unsuffixed.
@@ -501,6 +522,21 @@ mod tests {
         let js = r.to_json().render();
         assert!(js.contains("\"topology\":\"dram+pcm+xpoint\""), "{js}");
         assert!(js.contains("\"tier_wear\":["), "{js}");
+    }
+
+    #[test]
+    fn fault_grid_expands_and_suffixes() {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let base = vec![Scenario::new("mcf/static", wl, small_cfg(), 1000)];
+        let grid = Scenario::fault_grid(&base, &[0.0, 1e-4]);
+        assert_eq!(grid.len(), 2);
+        // The healthy point keeps its unsuffixed name and a disabled
+        // fault layer; the faulted point is labeled with its rate.
+        assert_eq!(grid[0].name, "mcf/static");
+        assert!(!grid[0].cfg.fault.enabled());
+        assert_eq!(grid[1].name, "mcf/static%0.0001");
+        assert_eq!(grid[1].cfg.fault.rber_base, 1e-4);
+        assert!(grid[1].cfg.fault.mem_enabled());
     }
 
     #[test]

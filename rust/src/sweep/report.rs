@@ -60,6 +60,16 @@ pub struct ScenarioResult {
     pub pcie_dma_bytes: u64,
     /// PCIe credit stalls attributed to host-managed DMA transfers.
     pub dma_link_stalls: u64,
+    /// Fault-layer tallies (all 0 with faults off — see
+    /// [`crate::config::FaultConfig`]): ECC events, frames retired into
+    /// the per-tier retired pools, emergency remap migrations/bytes, and
+    /// PCIe replay retries.
+    pub ecc_corrected: u64,
+    pub ecc_uncorrectable: u64,
+    pub frames_retired: u64,
+    pub remap_migrations: u64,
+    pub remap_bytes: u64,
+    pub link_retries: u64,
     pub nvm_max_wear: u64,
     pub energy_mj: f64,
     pub latency_mean_ns: f64,
@@ -105,6 +115,12 @@ impl ScenarioResult {
             dma_conflict_stalls: r.counters.dma_conflict_stalls,
             pcie_dma_bytes: r.counters.pcie_dma_bytes,
             dma_link_stalls: r.counters.dma_link_stalls,
+            ecc_corrected: r.counters.ecc_corrected,
+            ecc_uncorrectable: r.counters.ecc_uncorrectable,
+            frames_retired: r.counters.frames_retired,
+            remap_migrations: r.counters.remap_migrations,
+            remap_bytes: r.counters.remap_bytes,
+            link_retries: r.counters.link_retries,
             nvm_max_wear: r.nvm_max_wear,
             energy_mj: r.counters.energy_estimate_mj(),
             latency_mean_ns: r.counters.latency.mean(),
@@ -158,6 +174,12 @@ impl ScenarioResult {
             dma_conflict_stalls: r.counters.dma_conflict_stalls,
             pcie_dma_bytes: r.counters.pcie_dma_bytes,
             dma_link_stalls: r.counters.dma_link_stalls,
+            ecc_corrected: r.counters.ecc_corrected,
+            ecc_uncorrectable: r.counters.ecc_uncorrectable,
+            frames_retired: r.counters.frames_retired,
+            remap_migrations: r.counters.remap_migrations,
+            remap_bytes: r.counters.remap_bytes,
+            link_retries: r.counters.link_retries,
             nvm_max_wear: r.nvm_max_wear,
             energy_mj: r.counters.energy_estimate_mj(),
             latency_mean_ns: r.counters.latency.mean(),
@@ -232,6 +254,27 @@ impl ScenarioResult {
             self.latency_p99_ns,
             self.latency_max_ns,
         );
+        // Fault block: appended only when any fault event fired, so
+        // fault-off fingerprints stay byte-identical to pre-fault-layer
+        // builds (the same gating as `HmmuCounters`'s Debug rendering).
+        let fault_events = self.ecc_corrected
+            + self.ecc_uncorrectable
+            + self.frames_retired
+            + self.remap_migrations
+            + self.remap_bytes
+            + self.link_retries;
+        if fault_events > 0 {
+            let _ = write!(
+                s,
+                "|eccC={}|eccU={}|retired={}|remap={}|remapB={}|linkRetry={}",
+                self.ecc_corrected,
+                self.ecc_uncorrectable,
+                self.frames_retired,
+                self.remap_migrations,
+                self.remap_bytes,
+                self.link_retries,
+            );
+        }
         s
     }
 
@@ -270,6 +313,12 @@ impl ScenarioResult {
             .set("dma_conflict_stalls", self.dma_conflict_stalls)
             .set("pcie_dma_bytes", self.pcie_dma_bytes)
             .set("dma_link_stalls", self.dma_link_stalls)
+            .set("ecc_corrected", self.ecc_corrected)
+            .set("ecc_uncorrectable", self.ecc_uncorrectable)
+            .set("frames_retired", self.frames_retired)
+            .set("remap_migrations", self.remap_migrations)
+            .set("remap_bytes", self.remap_bytes)
+            .set("link_retries", self.link_retries)
             .set("nvm_max_wear", self.nvm_max_wear)
             .set("energy_mj", self.energy_mj)
             .set("latency_mean_ns", self.latency_mean_ns)

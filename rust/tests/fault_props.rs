@@ -1,0 +1,263 @@
+//! Fault-injection & graceful-degradation property battery.
+//!
+//! The fault layer's contract has three halves:
+//!
+//! 1. **Default-off is free and invisible.** With `FaultConfig` disabled
+//!    (the default), every surface — platform time, the full counter
+//!    Debug block, residency, sweep fingerprints — is byte-identical to
+//!    a build without the layer, across policies, and invariant to the
+//!    (inert) fault-stream seed.
+//! 2. **Degradation is graceful and accounted.** Wear-exhausted frames
+//!    retire into per-tier retired pools, their pages emergency-remap to
+//!    healthy frames, effective capacity shrinks, and the run completes
+//!    with the redirection invariants intact (retired frames never
+//!    re-allocated, residency summing to mapped).
+//! 3. **Faulted runs stay deterministic.** The dedicated fault RNG
+//!    stream makes results a pure function of the scenario: identical
+//!    across reruns, across sweep thread counts, and across
+//!    checkpoint/fork vs cold replay (both fault RNGs ride the codec).
+
+use hymem::config::{FaultConfig, PolicyKind, SystemConfig, MAX_TIERS};
+use hymem::hmmu::{Hmmu, TierId};
+use hymem::mem::AccessKind;
+use hymem::platform::{Platform, RunOpts, WarmPlatform};
+use hymem::sweep::{run_sweep, Scenario};
+use hymem::workload::spec;
+
+fn opts(ops: u64) -> RunOpts {
+    RunOpts {
+        ops,
+        flush_at_end: false,
+    }
+}
+
+/// A config whose fault layer injects heavily enough for every property
+/// below to fire within a few thousand ops.
+fn faulty_cfg(policy: PolicyKind) -> SystemConfig {
+    let mut cfg = SystemConfig::default_scaled(64);
+    cfg.policy = policy;
+    cfg.hmmu.epoch_requests = 2_000;
+    cfg.nvm.endurance = 64;
+    cfg.fault.rber_base = 1e-2;
+    cfg.fault.link_ber = 1e-2;
+    cfg
+}
+
+#[test]
+fn fault_off_is_invisible_and_seed_invariant_across_policies() {
+    let wl = spec::by_name("505.mcf").unwrap();
+    for policy in [PolicyKind::Static, PolicyKind::Hotness, PolicyKind::WearAware] {
+        let mut base = SystemConfig::default_scaled(64);
+        base.policy = policy;
+        base.hmmu.epoch_requests = 2_000;
+        assert!(!base.fault.enabled(), "fault layer must default off");
+
+        // The fault-stream seed and curve knobs are inert while the layer
+        // is off: changing them must not move a single byte of output.
+        let mut reseeded = base.clone();
+        reseeded.fault.seed = 0xDEAD_BEEF;
+        reseeded.fault.rber_wear_slope = 99.0;
+        reseeded.fault.ecc_latency_ns = 9_999;
+
+        let a = Platform::new(base).run_opts_serial(&wl, opts(8_000)).unwrap();
+        let b = Platform::new(reseeded).run_opts_serial(&wl, opts(8_000)).unwrap();
+        assert_eq!(a.platform_time_ns, b.platform_time_ns, "{policy:?}");
+        assert_eq!(a.native_time_ns, b.native_time_ns, "{policy:?}");
+        assert_eq!(
+            format!("{:#?}", a.counters),
+            format!("{:#?}", b.counters),
+            "{policy:?}"
+        );
+        assert_eq!(a.tier_residency, b.tier_residency, "{policy:?}");
+        // And the counter block renders no fault fields at all, so the
+        // golden Debug surface is byte-identical to pre-fault-layer runs.
+        let debug = format!("{:#?}", a.counters);
+        assert!(!debug.contains("ecc_corrected"), "{policy:?}: {debug}");
+        assert!(!debug.contains("link_retries"), "{policy:?}: {debug}");
+    }
+}
+
+#[test]
+fn retirement_churn_keeps_residency_consistent_and_never_reallocates() {
+    // Drive the HMMU directly through heavy wear-out churn, checking the
+    // table invariants (retired frames absent from free pools and
+    // mappings, residency counters exact) at every epoch-scale interval.
+    let mut cfg = SystemConfig::default_scaled(64);
+    cfg.policy = PolicyKind::FirstTouch;
+    cfg.hmmu.epoch_requests = 100_000;
+    cfg.nvm.endurance = 16;
+    cfg.fault.rber_base = 1e-6; // death comes from wear, not soft errors
+    let mut h = Hmmu::new(cfg, None);
+    let page_bytes = h.config().hmmu.page_bytes;
+    let dram_pages = h.config().dram_pages();
+    let mut t = 0;
+    // Fill DRAM so subsequent pages land on the wear-limited rank.
+    for p in 0..dram_pages {
+        t = h.access(p * page_bytes, AccessKind::Read, 64, t + 50);
+    }
+    for round in 0..40u64 {
+        for i in 0..60u64 {
+            let p = dram_pages + (i % 12);
+            t = h.access(p * page_bytes, AccessKind::Write, 64, t + 50);
+        }
+        h.drain(t + 10_000_000);
+        assert_eq!(
+            h.tier_residency().iter().sum::<u64>(),
+            h.table.mapped_pages(),
+            "round {round}: residency must sum to mapped pages"
+        );
+        h.table
+            .check_invariants()
+            .unwrap_or_else(|e| panic!("round {round}: {e:#}"));
+    }
+    assert!(h.counters.frames_retired > 0, "churn must retire frames");
+    assert_eq!(h.counters.frames_retired, h.counters.remap_migrations);
+    assert_eq!(h.counters.remap_bytes, h.counters.remap_migrations * page_bytes);
+    assert!(h.table.retired_frames(TierId::Nvm) > 0);
+    assert!(
+        h.table.effective_frames(TierId::Nvm) < h.config().nvm.size_bytes / page_bytes,
+        "retirement must shrink effective capacity"
+    );
+}
+
+#[test]
+fn degraded_platform_run_survives_to_completion() {
+    // End to end: a platform run under aggressive wear + link corruption
+    // retires frames, remaps pages, replays TLPs — and still produces a
+    // complete, self-consistent report.
+    let wl = spec::by_name("519.lbm").unwrap();
+    let r = Platform::new(faulty_cfg(PolicyKind::FirstTouch))
+        .run_opts_serial(&wl, opts(60_000))
+        .unwrap();
+    assert!(r.platform_time_ns > 0);
+    assert!(r.counters.ecc_corrected > 0, "rber 1e-2 must correct errors");
+    assert!(r.counters.frames_retired > 0, "endurance 64 must kill frames");
+    assert_eq!(r.counters.frames_retired, r.counters.remap_migrations);
+    assert!(r.counters.link_retries > 0, "link ber must force replays");
+    // The faulted counters now render in Debug (and only now).
+    let debug = format!("{:#?}", r.counters);
+    assert!(debug.contains("ecc_corrected"), "{debug}");
+    assert!(debug.contains("frames_retired"), "{debug}");
+}
+
+#[test]
+fn faulted_sweep_is_deterministic_across_thread_counts() {
+    let workloads = [
+        spec::by_name("505.mcf").unwrap(),
+        spec::by_name("557.xz").unwrap(),
+    ];
+    let base = faulty_cfg(PolicyKind::Hotness);
+    let grid = Scenario::grid(
+        &workloads,
+        &[PolicyKind::Hotness, PolicyKind::WearAware],
+        &base,
+        6_000,
+    );
+    let grid = Scenario::fault_grid(&grid, &[0.0, 1e-2]);
+    assert_eq!(grid.len(), 8);
+
+    let fp1 = run_sweep(&grid, 1).unwrap().deterministic_fingerprint();
+    for threads in [2usize, 4] {
+        let fp = run_sweep(&grid, threads).unwrap().deterministic_fingerprint();
+        assert_eq!(fp1, fp, "faulted sweep diverged at {threads} threads");
+    }
+    // The heavily-faulted rows (rber 1e-2 over thousands of accesses)
+    // must carry the fault block in their fingerprint.
+    let faulted: Vec<&str> = fp1.lines().filter(|l| l.contains("%0.01")).collect();
+    assert_eq!(faulted.len(), 4);
+    for line in faulted {
+        assert!(line.contains("|eccC="), "{line}");
+    }
+}
+
+#[test]
+fn fault_free_fingerprint_carries_no_fault_block() {
+    let wl = spec::by_name("541.leela").unwrap();
+    let mut cfg = SystemConfig::default_scaled(64);
+    cfg.policy = PolicyKind::Hotness;
+    cfg.hmmu.epoch_requests = 2_000;
+    let grid = vec![Scenario::new("leela/hotness", wl, cfg, 4_000)];
+    let fp = run_sweep(&grid, 1).unwrap().deterministic_fingerprint();
+    assert!(
+        !fp.contains("eccC=") && !fp.contains("linkRetry="),
+        "healthy fingerprints must be byte-identical to pre-fault-layer builds: {fp}"
+    );
+}
+
+#[test]
+fn faulted_checkpoint_fork_is_bit_identical_to_cold_replay() {
+    // Both fault RNG streams (HMMU wear/ECC draws, link corruption
+    // draws) ride the checkpoint codec: a warmed, serialized, restored
+    // run must replay the exact fault sequence a cold run draws.
+    let wl = spec::by_name("505.mcf").unwrap();
+    let cfg = faulty_cfg(PolicyKind::Hotness);
+    let run_opts = opts(8_000);
+
+    let cold = WarmPlatform::new(cfg.clone(), &wl, run_opts)
+        .run_to_completion()
+        .unwrap();
+    assert!(
+        cold.counters.ecc_corrected > 0 && cold.counters.link_retries > 0,
+        "scenario must actually fault"
+    );
+
+    let mut warm = WarmPlatform::new(cfg.clone(), &wl, run_opts);
+    warm.warm_up(4_000);
+    let bytes = warm.save();
+    let restored = WarmPlatform::load(&bytes, cfg, &wl, run_opts).unwrap();
+
+    for (label, report) in [
+        ("in-memory fork", warm.run_to_completion().unwrap()),
+        ("serialized round trip", restored.run_to_completion().unwrap()),
+    ] {
+        assert_eq!(cold.platform_time_ns, report.platform_time_ns, "{label}");
+        assert_eq!(
+            format!("{:#?}", cold.counters),
+            format!("{:#?}", report.counters),
+            "{label}"
+        );
+        assert_eq!(cold.tier_residency, report.tier_residency, "{label}");
+        assert_eq!(cold.tier_wear, report.tier_wear, "{label}");
+    }
+}
+
+#[test]
+fn explicit_boundary_budget_pins_legacy_behavior() {
+    // `migrations_per_boundary` unset (all zeros) must behave exactly as
+    // every boundary set to the global `migrations_per_epoch` cap — the
+    // pre-config-knob behavior — and a tight budget must throttle.
+    let wl = spec::by_name("520.omnetpp").unwrap();
+    let mut legacy = SystemConfig::default_scaled(64);
+    legacy.policy = PolicyKind::Hotness;
+    legacy.hmmu.epoch_requests = 2_000;
+    assert_eq!(legacy.hmmu.migrations_per_boundary, [0; MAX_TIERS - 1]);
+
+    let mut pinned = legacy.clone();
+    pinned.hmmu.migrations_per_boundary =
+        [legacy.hmmu.migrations_per_epoch; MAX_TIERS - 1];
+
+    let a = Platform::new(legacy.clone()).run_opts_serial(&wl, opts(30_000)).unwrap();
+    let b = Platform::new(pinned).run_opts_serial(&wl, opts(30_000)).unwrap();
+    assert_eq!(a.platform_time_ns, b.platform_time_ns);
+    assert_eq!(format!("{:#?}", a.counters), format!("{:#?}", b.counters));
+    assert!(a.counters.migrations > 0, "scenario must migrate");
+
+    let mut tight = legacy;
+    tight.hmmu.migrations_per_boundary = [1; MAX_TIERS - 1];
+    let c = Platform::new(tight).run_opts_serial(&wl, opts(30_000)).unwrap();
+    assert!(
+        c.counters.migrations < a.counters.migrations,
+        "budget 1/boundary must throttle migrations ({} vs {})",
+        c.counters.migrations,
+        a.counters.migrations
+    );
+}
+
+#[test]
+fn fault_config_constructor_matches_default() {
+    assert_eq!(
+        format!("{:?}", FaultConfig::disabled()),
+        format!("{:?}", FaultConfig::default())
+    );
+    assert!(!FaultConfig::default().enabled());
+}
