@@ -2,6 +2,7 @@
 """Perf gate over the BENCH_*.json snapshots.
 
 Usage: check_bench_gate.py [BENCH_hot_path.json | BENCH_sweep_fork.json | ...]
+       check_bench_gate.py --list-pairs   # dump the registry, tab-separated
 
 Two kinds of gated pairs:
 
@@ -45,6 +46,12 @@ PAIRS = [
 
 
 def main() -> int:
+    if "--list-pairs" in sys.argv[1:]:
+        # Machine-readable pair registry (one "base<TAB>fast" per line);
+        # consumed by the hymem-audit bench-pair rule.
+        for base_name, fast_name, _required in PAIRS:
+            print(f"{base_name}\t{fast_name}")
+        return 0
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_hot_path.json"
     with open(path) as f:
         data = json.load(f)

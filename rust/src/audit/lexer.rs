@@ -1,0 +1,252 @@
+//! Comment/string-stripping lexer.
+//!
+//! Blanks comments and string/char literals out of Rust source while
+//! preserving byte offsets and line structure, so the downstream
+//! scanners ([`super::parse`]) can brace-match and word-search without
+//! tripping over text inside literals. Along the way it collects the
+//! `// audit: allow(<rule>)` exemption comments and the string literals
+//! themselves (the bench-pair rule matches bench row names).
+
+/// One `audit: allow(<rule>)` exemption found in a line comment. A
+/// single comment may carry several `allow(...)` clauses; each becomes
+/// its own `Allow`.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// Line the comment starts on (1-based).
+    pub line: usize,
+    /// Rule id inside the parentheses, e.g. `codec-coverage`.
+    pub rule: String,
+    /// True when nothing but whitespace precedes the comment on its
+    /// line: the exemption then also covers the following line.
+    pub standalone: bool,
+}
+
+/// Result of stripping one source file.
+pub struct Stripped {
+    /// Source with comments and literals blanked to spaces. Newlines
+    /// are kept, so line numbers and byte offsets match the original.
+    pub code: String,
+    /// Exemption comments, in file order.
+    pub allows: Vec<Allow>,
+    /// `(line, contents)` of every ordinary string literal.
+    pub strings: Vec<(usize, String)>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn blank(out: &mut [u8], from: usize, to: usize) {
+    for b in out.iter_mut().take(to).skip(from) {
+        if *b != b'\n' {
+            *b = b' ';
+        }
+    }
+}
+
+fn is_rule_char(b: u8) -> bool {
+    b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-'
+}
+
+/// Pull every `allow(<rule>)` clause out of a comment that mentions
+/// `audit:`.
+fn collect_allows(comment: &str, line: usize, standalone: bool, allows: &mut Vec<Allow>) {
+    if !comment.contains("audit:") {
+        return;
+    }
+    let mut rest = comment;
+    while let Some(pos) = rest.find("allow(") {
+        rest = &rest[pos + "allow(".len()..];
+        if let Some(end) = rest.find(')') {
+            let rule = &rest[..end];
+            if !rule.is_empty() && rule.bytes().all(is_rule_char) {
+                allows.push(Allow {
+                    line,
+                    rule: rule.to_string(),
+                    standalone,
+                });
+            }
+            rest = &rest[end..];
+        } else {
+            break;
+        }
+    }
+}
+
+/// True when only whitespace precedes byte `i` on its line. Earlier
+/// literals on the line were already blanked in `out`, so a comment
+/// trailing real code is never "standalone".
+fn only_ws_before(out: &[u8], i: usize) -> bool {
+    let nl = out[..i].iter().rposition(|&b| b == b'\n');
+    let start = nl.map_or(0, |p| p + 1);
+    out[start..i].iter().all(|&b| b == b' ' || b == b'\t')
+}
+
+/// Strip `src`, collecting exemptions and string literals.
+pub fn strip(src: &str) -> Stripped {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut allows = Vec::new();
+    let mut strings = Vec::new();
+    let mut i = 0;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers `///` and `//!` doc comments).
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let end = src[i..].find('\n').map_or(n, |p| i + p);
+            let standalone = only_ws_before(&out, i);
+            collect_allows(&src[i..end], line, standalone, &mut allows);
+            blank(&mut out, i, end);
+            i = end;
+            continue;
+        }
+        // Block comment, possibly nested.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Raw string literal r"..." / r#"..."#.
+        if c == b'r' && (i == 0 || !is_ident(b[i - 1])) && i + 1 < n {
+            let mut j = i + 1;
+            let mut hashes = 0;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                j += 1;
+                let close = format!("\"{}", "#".repeat(hashes));
+                let end = src[j..].find(&close).map_or(n, |p| j + p);
+                line += src[j..end].matches('\n').count();
+                blank(&mut out, i, (end + close.len()).min(n));
+                i = (end + close.len()).min(n);
+                continue;
+            }
+        }
+        // Ordinary string literal (and b"..." via the plain `"` byte).
+        if c == b'"' {
+            let start_line = line;
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    break;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            let end = j.min(n);
+            strings.push((start_line, src[i + 1..end].to_string()));
+            blank(&mut out, i, (end + 1).min(n));
+            i = end + 1;
+            continue;
+        }
+        // Char literal vs lifetime: '\n' / 'x' / non-ASCII are literals;
+        // 'a in `&'a str` is a lifetime and only the quote is skipped.
+        if c == b'\'' {
+            let next = if i + 1 < n { b[i + 1] } else { 0 };
+            let after = if i + 2 < n { b[i + 2] } else { 0 };
+            let is_char = next == b'\\' || next >= 0x80 || after == b'\'';
+            if is_char {
+                let mut j = i + 1;
+                if b[j] == b'\\' {
+                    j += 2;
+                }
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                blank(&mut out, i, (j + 1).min(n));
+                i = j + 1;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    Stripped {
+        code: String::from_utf8_lossy(&out).into_owned(),
+        allows,
+        strings,
+    }
+}
+
+/// True when an allow for `rule` covers `line`: the comment sits on the
+/// line itself, or alone on the line directly above.
+pub fn exempted(allows: &[Allow], line: usize, rule: &str) -> bool {
+    allows
+        .iter()
+        .any(|a| a.rule == rule && (a.line == line || (a.standalone && a.line + 1 == line)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanks_comments_and_strings_preserving_lines() {
+        let src = "let a = \"hi // not a comment\"; // real\nlet b = 2; /* multi\nline */ let c = 3;\n";
+        let s = strip(src);
+        assert_eq!(s.code.len(), src.len());
+        assert_eq!(s.code.matches('\n').count(), src.matches('\n').count());
+        assert!(!s.code.contains("not a comment"));
+        assert!(!s.code.contains("real"));
+        assert!(!s.code.contains("multi"));
+        assert!(s.code.contains("let c = 3;"));
+        assert_eq!(s.strings.len(), 1);
+        assert_eq!(s.strings[0], (1, "hi // not a comment".to_string()));
+    }
+
+    #[test]
+    fn collects_allows_with_standalone_flag() {
+        let src = "// audit: allow(wall-clock) timing is reported, not modeled\nlet t = now();\nlet u = now(); // audit: allow(wall-clock) allow(codec-coverage)\n";
+        let s = strip(src);
+        assert_eq!(s.allows.len(), 3);
+        assert!(s.allows[0].standalone);
+        assert_eq!(s.allows[0].line, 1);
+        assert!(!s.allows[1].standalone);
+        assert_eq!(s.allows[1].line, 3);
+        assert_eq!(s.allows[2].rule, "codec-coverage");
+        assert!(exempted(&s.allows, 2, "wall-clock"), "standalone covers next line");
+        assert!(exempted(&s.allows, 3, "codec-coverage"));
+        assert!(!exempted(&s.allows, 2, "codec-coverage"));
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let src = "let p = r#\"raw \"quoted\" text\"#;\nfn f<'a>(x: &'a str, c: char) -> char { if c == '\\'' { 'x' } else { c } }\n";
+        let s = strip(src);
+        assert!(!s.code.contains("quoted"));
+        assert!(s.code.contains("fn f<'a>(x: &'a str"));
+        assert!(!s.code.contains("'x'"));
+        assert_eq!(s.code.len(), src.len());
+    }
+}

@@ -1,0 +1,155 @@
+//! `hymem-audit` — source-level invariant checker.
+//!
+//! The repo's load-bearing property is bit-identical determinism:
+//! forked warm-ups replay cold runs exactly, sweeps are
+//! thread-count-invariant, goldens are byte-stable. The dynamic tests
+//! enforce those properties but cannot see the bug class that threatens
+//! them — a field added to a [`crate::util::codec::CodecState`] holder
+//! without encode/decode coverage, a counter added to `HmmuCounters`
+//! but missed on a report surface, or a stray wall-clock read landing
+//! in model code. This module enforces them *statically*: a
+//! dependency-free lexer/parser walks `rust/src` and applies the rules
+//! in [`rules`]; `cargo run --bin hymem-audit -- rust/src` runs it and
+//! CI fails on any unexempted finding.
+//!
+//! A finding is silenced with a justification comment on its line, or
+//! alone on the line above:
+//!
+//! ```text
+//! pub cfg: CacheConfig, // audit: allow(codec-coverage) — geometry
+//! ```
+
+pub mod lexer;
+pub mod parse;
+pub mod rules;
+
+use std::fmt;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One rule violation, anchored to `file:line`.
+#[derive(Debug)]
+pub struct Finding {
+    /// Path as displayed to the user (root argument + relative path).
+    pub file: String,
+    pub line: usize,
+    /// Rule id, e.g. `codec-coverage`.
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// One stripped source file, addressed both ways the rules need it.
+pub struct SourceFile {
+    /// Display path (root argument joined with the relative path).
+    pub display: String,
+    /// Path relative to the scanned root, `/`-separated — what the
+    /// wall-clock allowlist and the counter-surface lookups match on.
+    pub rel: String,
+    pub stripped: lexer::Stripped,
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries = Vec::new();
+    for e in std::fs::read_dir(dir)? {
+        entries.push(e?);
+    }
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn load_tree(root: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    let mut files = Vec::new();
+    for p in paths {
+        let text = std::fs::read_to_string(&p)?;
+        let rel = p.strip_prefix(root).unwrap_or(&p);
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        files.push(SourceFile {
+            display: p.display().to_string(),
+            rel,
+            stripped: lexer::strip(&text),
+        });
+    }
+    Ok(files)
+}
+
+/// The gate pairs, preferably from the script's own `--list-pairs` mode
+/// (one `base<TAB>fast` per line), falling back to a textual parse of
+/// its `PAIRS` literal when `python3` is unavailable.
+fn gate_pairs(script: &Path) -> Vec<(String, String)> {
+    let run = std::process::Command::new("python3")
+        .arg(script)
+        .arg("--list-pairs")
+        .output();
+    if let Ok(out) = run {
+        if out.status.success() {
+            let text = String::from_utf8_lossy(&out.stdout);
+            let mut pairs = Vec::new();
+            for line in text.lines() {
+                let mut cols = line.split('\t');
+                if let (Some(base), Some(fast)) = (cols.next(), cols.next()) {
+                    pairs.push((base.to_string(), fast.to_string()));
+                }
+            }
+            if !pairs.is_empty() {
+                return pairs;
+            }
+        }
+    }
+    match std::fs::read_to_string(script) {
+        Ok(src) => rules::parse_pairs_literal(&src),
+        Err(_) => Vec::new(),
+    }
+}
+
+/// Walk `src_root`, apply every rule, filter exemptions, and return the
+/// surviving findings sorted by file/line/rule. The bench-pair rule
+/// additionally scans `../benches` and `../scripts/check_bench_gate.py`
+/// relative to the root (skipped when absent, e.g. in rule fixtures).
+pub fn audit_tree(src_root: &Path) -> io::Result<Vec<Finding>> {
+    let files = load_tree(src_root)?;
+    let mut findings = Vec::new();
+    for f in &files {
+        rules::check_file(f, &mut findings);
+    }
+    rules::counter_surface(&files, &mut findings);
+
+    let mut bench_files = Vec::new();
+    if let Some(crate_root) = src_root.parent() {
+        let bench_dir = crate_root.join("benches");
+        if bench_dir.is_dir() {
+            bench_files = load_tree(&bench_dir)?;
+            let pairs = gate_pairs(&crate_root.join("scripts/check_bench_gate.py"));
+            rules::bench_pair(&bench_files, &pairs, &mut findings);
+        }
+    }
+
+    let exempted = |f: &Finding| {
+        let mut lookup = files.iter().chain(bench_files.iter());
+        let Some(src) = lookup.find(|s| s.display == f.file) else {
+            return false;
+        };
+        lexer::exempted(&src.stripped.allows, f.line, f.rule)
+    };
+    findings.retain(|f| !exempted(f));
+    findings.sort_by(|a, b| {
+        let ka = (&a.file, a.line, a.rule);
+        ka.cmp(&(&b.file, b.line, b.rule))
+    });
+    Ok(findings)
+}

@@ -1,0 +1,422 @@
+//! Structure scanners over stripped source ([`super::lexer::strip`]).
+//!
+//! Hand-rolled (the build is dependency-free, so no `syn`): brace
+//! matching plus word-boundary search is enough to extract named-field
+//! struct definitions, `impl` blocks (inherent and trait, generic or
+//! not), and named `fn` bodies — the shapes the rules interrogate.
+
+use std::ops::Range;
+
+/// One named field of a struct definition.
+#[derive(Debug)]
+pub struct Field {
+    pub name: String,
+    /// Declared type, as source text.
+    pub ty: String,
+    /// 1-based line of the field name.
+    pub line: usize,
+    pub is_pub: bool,
+}
+
+/// One `struct Name { ... }` definition (tuple and unit structs carry
+/// no named fields and are not reported).
+#[derive(Debug)]
+pub struct StructDef {
+    pub name: String,
+    pub line: usize,
+    pub fields: Vec<Field>,
+}
+
+/// One `impl` block header plus the byte range of its body.
+#[derive(Debug)]
+pub struct ImplBlock {
+    /// Base trait name (`Debug` for `impl std::fmt::Debug for X`), or
+    /// `None` for an inherent impl.
+    pub trait_name: Option<String>,
+    /// Base type name (`MemoryController` for `MemoryController<D>`).
+    pub type_name: String,
+    pub line: usize,
+    pub body: Range<usize>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// 1-based line number of byte `idx`.
+pub fn line_of(code: &str, idx: usize) -> usize {
+    let upto = &code.as_bytes()[..idx.min(code.len())];
+    let newlines = upto.iter().filter(|&&b| b == b'\n').count();
+    newlines + 1
+}
+
+/// Next occurrence of `word` at identifier boundaries, from `from`.
+pub fn find_word(code: &str, word: &str, from: usize) -> Option<usize> {
+    let b = code.as_bytes();
+    let mut at = from;
+    while let Some(p) = code[at..].find(word) {
+        let start = at + p;
+        let end = start + word.len();
+        let lb = start == 0 || !is_ident(b[start - 1]);
+        let rb = end >= b.len() || !is_ident(b[end]);
+        if lb && rb {
+            return Some(start);
+        }
+        at = start + 1;
+    }
+    None
+}
+
+/// True when `word` occurs anywhere in `hay` at identifier boundaries.
+pub fn word_in(hay: &str, word: &str) -> bool {
+    find_word(hay, word, 0).is_some()
+}
+
+/// Byte index of the `}` matching the `{` at `open`.
+pub fn match_brace(code: &str, open: usize) -> usize {
+    let b = code.as_bytes();
+    let mut depth = 0i32;
+    for (off, &c) in b[open..].iter().enumerate() {
+        if c == b'{' {
+            depth += 1;
+        } else if c == b'}' {
+            depth -= 1;
+            if depth == 0 {
+                return open + off;
+            }
+        }
+    }
+    code.len()
+}
+
+/// Skip a balanced `<...>` group starting at `open` (which must be
+/// `<`); returns the index past the closing `>`. `->` arrows inside do
+/// not close the group.
+fn skip_generics(code: &str, open: usize) -> usize {
+    let b = code.as_bytes();
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < b.len() {
+        match b[i] {
+            b'<' => depth += 1,
+            b'>' if i > 0 && b[i - 1] == b'-' => {}
+            b'>' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    b.len()
+}
+
+fn read_ident(code: &str, from: usize) -> (usize, usize) {
+    let b = code.as_bytes();
+    let mut s = from;
+    while s < b.len() && (b[s] == b' ' || b[s] == b'\t' || b[s] == b'\n') {
+        s += 1;
+    }
+    let mut e = s;
+    while e < b.len() && is_ident(b[e]) {
+        e += 1;
+    }
+    (s, e)
+}
+
+/// Every named-field struct definition in `code`.
+pub fn structs(code: &str) -> Vec<StructDef> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut at = 0;
+    while let Some(kw) = find_word(code, "struct", at) {
+        at = kw + "struct".len();
+        let (ns, ne) = read_ident(code, at);
+        if ns == ne {
+            continue;
+        }
+        let name = &code[ns..ne];
+        // Skip generics, then find which delimiter opens the body: `{`
+        // is a named-field struct, `(`/`;` are tuple/unit (skipped).
+        let mut i = ne;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i < b.len() && b[i] == b'<' {
+            i = skip_generics(code, i);
+        }
+        while i < b.len() && !matches!(b[i], b'{' | b'(' | b';') {
+            i += 1;
+        }
+        if i >= b.len() || b[i] != b'{' {
+            continue;
+        }
+        let close = match_brace(code, i);
+        out.push(StructDef {
+            name: name.to_string(),
+            line: line_of(code, kw),
+            fields: fields_of(code, i + 1, close),
+        });
+        at = close;
+    }
+    out
+}
+
+/// Parse the named fields between body bytes `from..to`.
+fn fields_of(code: &str, from: usize, to: usize) -> Vec<Field> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut seg_start = from;
+    let mut depth = 0i32;
+    let mut i = from;
+    while i <= to {
+        let at_end = i == to;
+        let c = if at_end { b',' } else { b[i] };
+        match c {
+            b'<' | b'(' | b'[' | b'{' => depth += 1,
+            b'>' if i > from && b[i - 1] == b'-' => {}
+            b'>' | b')' | b']' | b'}' => depth -= 1,
+            b',' if depth == 0 => {
+                if let Some(f) = field_of(code, seg_start, i.min(to)) {
+                    out.push(f);
+                }
+                seg_start = i + 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Parse one `pub name: Type` segment, tolerating leading attributes.
+fn field_of(code: &str, from: usize, to: usize) -> Option<Field> {
+    let b = code.as_bytes();
+    let mut i = from;
+    loop {
+        while i < to && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        // Attribute: skip the balanced `#[...]` group.
+        if i < to && b[i] == b'#' {
+            while i < to && b[i] != b'[' {
+                i += 1;
+            }
+            let mut depth = 0i32;
+            while i < to {
+                if b[i] == b'[' {
+                    depth += 1;
+                } else if b[i] == b']' {
+                    depth -= 1;
+                    if depth == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                i += 1;
+            }
+            continue;
+        }
+        break;
+    }
+    let mut is_pub = false;
+    let (s, e) = read_ident(code, i);
+    let mut ns = s;
+    let mut ne = e;
+    if &code[s..e] == "pub" {
+        is_pub = true;
+        let mut j = e;
+        while j < to && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j < to && b[j] == b'(' {
+            // pub(crate) and friends.
+            while j < to && b[j] != b')' {
+                j += 1;
+            }
+            j += 1;
+        }
+        let (s2, e2) = read_ident(code, j);
+        ns = s2;
+        ne = e2;
+    }
+    if ns == ne || ne >= to {
+        return None;
+    }
+    let mut j = ne;
+    while j < to && b[j].is_ascii_whitespace() {
+        j += 1;
+    }
+    if j >= to || b[j] != b':' {
+        return None;
+    }
+    Some(Field {
+        name: code[ns..ne].to_string(),
+        ty: code[j + 1..to].trim().to_string(),
+        line: line_of(code, ns),
+        is_pub,
+    })
+}
+
+/// Every top-level-ish `impl` block in `code`. Occurrences of the
+/// `impl` keyword in type position (`-> impl Trait`, `x: impl Trait`)
+/// are filtered by requiring the previous non-whitespace byte to end an
+/// item (`}` `;` `]` `{` or start of file).
+pub fn impls(code: &str) -> Vec<ImplBlock> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut at = 0;
+    while let Some(kw) = find_word(code, "impl", at) {
+        at = kw + "impl".len();
+        let prev = code[..kw].bytes().rev().find(|b| !b.is_ascii_whitespace());
+        if !matches!(prev, None | Some(b'}') | Some(b';') | Some(b']') | Some(b'{')) {
+            continue;
+        }
+        let mut i = at;
+        if let Some(p) = code[i..].find(['<', '{']) {
+            if b[i + p] == b'<' && code[i..i + p].trim().is_empty() {
+                i = skip_generics(code, i + p);
+            }
+        }
+        let Some(brace) = code[i..].find('{').map(|p| i + p) else {
+            continue;
+        };
+        let header = &code[i..brace];
+        let mut trait_name = None;
+        let mut type_part = header;
+        if let Some(f) = find_word(header, "for", 0) {
+            trait_name = Some(base_name(&header[..f]));
+            type_part = &header[f + "for".len()..];
+        }
+        let type_name = base_name(type_part);
+        if type_name.is_empty() {
+            continue;
+        }
+        let close = match_brace(code, brace);
+        out.push(ImplBlock {
+            trait_name,
+            type_name,
+            line: line_of(code, kw),
+            body: brace + 1..close,
+        });
+        at = close;
+    }
+    out
+}
+
+/// Base identifier of a possibly-qualified, possibly-generic path:
+/// `std::fmt::Debug` → `Debug`, `MemoryController<D>` → `MemoryController`.
+fn base_name(path: &str) -> String {
+    let p = path.trim();
+    let p = p.split('<').next().unwrap_or(p).trim();
+    let p = p.rsplit("::").next().unwrap_or(p).trim();
+    p.trim_start_matches('&').trim().to_string()
+}
+
+/// Byte range of the body of `fn name` inside `within` (a body range
+/// from [`impls`]), if present with a body.
+pub fn find_fn(code: &str, within: Range<usize>, name: &str) -> Option<Range<usize>> {
+    let b = code.as_bytes();
+    let mut at = within.start;
+    while let Some(kw) = find_word(code, "fn", at) {
+        if kw >= within.end {
+            return None;
+        }
+        at = kw + "fn".len();
+        let (s, e) = read_ident(code, at);
+        if &code[s..e] != name {
+            continue;
+        }
+        let mut i = e;
+        while i < within.end && !matches!(b[i], b'{' | b';') {
+            if b[i] == b'<' {
+                i = skip_generics(code, i);
+            } else {
+                i += 1;
+            }
+        }
+        if i < within.end && b[i] == b'{' {
+            let close = match_brace(code, i);
+            return Some(i + 1..close.min(within.end));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::lexer::strip;
+
+    const SRC: &str = "
+/// Doc.
+pub struct Gen<D: Clone> {
+    /// Geometry.
+    pub cfg: Config,
+    #[allow(dead_code)]
+    pub(crate) table: Vec<(u64, u64)>,
+    inner: D,
+}
+
+struct Unit;
+struct Tuple(u64, u64);
+
+impl<D: Clone> util::codec::CodecState for Gen<D> {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_u64(self.table.len() as u64);
+    }
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.table.clear();
+        Ok(())
+    }
+}
+
+impl Gen<u8> {
+    fn helper(&self) -> u64 {
+        self.table.len() as u64
+    }
+}
+";
+
+    #[test]
+    fn finds_structs_and_fields() {
+        let s = strip(SRC);
+        let defs = structs(&s.code);
+        assert_eq!(defs.len(), 1, "tuple/unit structs are skipped");
+        let g = &defs[0];
+        assert_eq!(g.name, "Gen");
+        let names: Vec<&str> = g.fields.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["cfg", "table", "inner"]);
+        assert_eq!(g.fields[0].ty, "Config");
+        assert!(g.fields[0].is_pub);
+        assert!(g.fields[1].is_pub, "pub(crate) counts as pub");
+        assert!(!g.fields[2].is_pub);
+        assert_eq!(g.fields[0].line, 5);
+    }
+
+    #[test]
+    fn finds_generic_and_inherent_impls() {
+        let s = strip(SRC);
+        let blocks = impls(&s.code);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].trait_name.as_deref(), Some("CodecState"));
+        assert_eq!(blocks[0].type_name, "Gen");
+        assert_eq!(blocks[1].trait_name, None);
+        assert_eq!(blocks[1].type_name, "Gen");
+        let enc = find_fn(&s.code, blocks[0].body.clone(), "encode_state").unwrap();
+        assert!(word_in(&s.code[enc], "table"));
+        let dec = find_fn(&s.code, blocks[0].body.clone(), "decode_state").unwrap();
+        assert!(word_in(&s.code[dec.clone()], "table"));
+        assert!(!word_in(&s.code[dec], "cfg"));
+        assert!(find_fn(&s.code, blocks[0].body.clone(), "helper").is_none());
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(word_in("self.host_reads + x", "host_reads"));
+        assert!(!word_in("self.host_read_bytes", "host_reads"));
+        assert!(!word_in("hosted_reads_total", "host_reads"));
+    }
+}

@@ -1,0 +1,319 @@
+//! The invariant rules.
+//!
+//! Each rule reports [`Finding`]s anchored to a file:line; exemption
+//! comments (`// audit: allow(<rule>)`) are applied centrally by
+//! [`super::audit_tree`]. Rule scope:
+//!
+//! - `codec-coverage`: every named field of a struct with an
+//!   `impl CodecState` in the same file must be referenced in both the
+//!   `encode_state` and `decode_state` bodies.
+//! - `counter-surface`: every pub field of `HmmuCounters` must appear
+//!   in the manual `Debug` impl, `ScenarioResult::to_json`, and
+//!   `ScenarioResult::deterministic_key`.
+//! - `wall-clock`: no `Instant::now` / `SystemTime` outside the
+//!   allowlisted timing sites (`util/bench.rs`, `platform/`, `sweep/`).
+//! - `unsorted-iter`: a `HashMap`/`HashSet` field of a codec-holding
+//!   struct referenced in `encode_state` requires a sort in that body
+//!   (the `mem/nvm.rs` pattern), or iteration order leaks into bytes.
+//! - `float-bits`: float fields must cross `encode_state` via
+//!   `put_f32`/`put_f64`/`to_bits`, never ad-hoc casts.
+//! - `bench-pair`: every `/per-op` bench row name must be registered in
+//!   `scripts/check_bench_gate.py` with a block-path partner row that
+//!   exists in `benches/`.
+
+use super::parse;
+use super::{Finding, SourceFile};
+
+pub const CODEC_COVERAGE: &str = "codec-coverage";
+pub const COUNTER_SURFACE: &str = "counter-surface";
+pub const WALL_CLOCK: &str = "wall-clock";
+pub const UNSORTED_ITER: &str = "unsorted-iter";
+pub const FLOAT_BITS: &str = "float-bits";
+pub const BENCH_PAIR: &str = "bench-pair";
+
+/// All per-file rules.
+pub fn check_file(file: &SourceFile, out: &mut Vec<Finding>) {
+    codec_rules(file, out);
+    wall_clock(file, out);
+}
+
+fn push(out: &mut Vec<Finding>, file: &str, line: usize, rule: &'static str, message: String) {
+    out.push(Finding {
+        file: file.to_string(),
+        line,
+        rule,
+        message,
+    });
+}
+
+/// `codec-coverage`, `unsorted-iter` and `float-bits` share the same
+/// scan: pair each `impl CodecState for T` with `struct T` definitions
+/// in the same file and interrogate the encode/decode bodies.
+fn codec_rules(file: &SourceFile, out: &mut Vec<Finding>) {
+    let code = &file.stripped.code;
+    let defs = parse::structs(code);
+    for ib in parse::impls(code) {
+        if ib.trait_name.as_deref() != Some("CodecState") {
+            continue;
+        }
+        let enc = parse::find_fn(code, ib.body.clone(), "encode_state");
+        let dec = parse::find_fn(code, ib.body.clone(), "decode_state");
+        let enc_body = enc.clone().map(|r| &code[r]);
+        let dec_body = dec.map(|r| &code[r]);
+        for def in defs.iter().filter(|d| d.name == ib.type_name) {
+            for f in &def.fields {
+                let mut missing = Vec::new();
+                if let Some(body) = enc_body {
+                    if !parse::word_in(body, &f.name) {
+                        missing.push("encode_state");
+                    }
+                }
+                if let Some(body) = dec_body {
+                    if !parse::word_in(body, &f.name) {
+                        missing.push("decode_state");
+                    }
+                }
+                if !missing.is_empty() {
+                    let msg = format!(
+                        "field `{}.{}` is not referenced in {}",
+                        def.name,
+                        f.name,
+                        missing.join(" or "),
+                    );
+                    push(out, &file.display, f.line, CODEC_COVERAGE, msg);
+                }
+                let hashed = parse::word_in(&f.ty, "HashMap") || parse::word_in(&f.ty, "HashSet");
+                if let Some(body) = enc_body {
+                    if hashed && parse::word_in(body, &f.name) && !body.contains("sort") {
+                        let msg = format!(
+                            "hash-ordered field `{}.{}` is encoded without a sort",
+                            def.name,
+                            f.name,
+                        );
+                        push(out, &file.display, f.line, UNSORTED_ITER, msg);
+                    }
+                }
+                let floaty = parse::word_in(&f.ty, "f32") || parse::word_in(&f.ty, "f64");
+                if floaty {
+                    if let Some(r) = enc.clone() {
+                        float_bits_lines(file, def.name.as_str(), f, code, r, out);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Flag encode lines that touch a float field without `put_f*`/`to_bits`.
+fn float_bits_lines(
+    file: &SourceFile,
+    struct_name: &str,
+    f: &parse::Field,
+    code: &str,
+    body: std::ops::Range<usize>,
+    out: &mut Vec<Finding>,
+) {
+    let start_line = parse::line_of(code, body.start);
+    for (k, line_text) in code[body].split('\n').enumerate() {
+        if !parse::word_in(line_text, &f.name) {
+            continue;
+        }
+        if line_text.contains("put_f") || line_text.contains("to_bits") {
+            continue;
+        }
+        let msg = format!(
+            "float field `{}.{}` is encoded without put_f32/put_f64/to_bits",
+            struct_name,
+            f.name,
+        );
+        push(out, &file.display, start_line + k, FLOAT_BITS, msg);
+    }
+}
+
+/// Wall-clock sites allowed wholesale: the bench harness and the
+/// run/sweep drivers, which *report* host wall time rather than feed it
+/// into the model.
+fn wall_clock_allowlisted(rel: &str) -> bool {
+    rel == "util/bench.rs" || rel.starts_with("platform/") || rel.starts_with("sweep/")
+}
+
+fn wall_clock(file: &SourceFile, out: &mut Vec<Finding>) {
+    if wall_clock_allowlisted(&file.rel) {
+        return;
+    }
+    let code = &file.stripped.code;
+    for pat in ["Instant::now", "SystemTime"] {
+        let mut at = 0;
+        while let Some(p) = parse::find_word(code, pat, at) {
+            at = p + pat.len();
+            let msg = format!("`{pat}` outside the allowlisted timing sites");
+            push(out, &file.display, parse::line_of(code, p), WALL_CLOCK, msg);
+        }
+    }
+}
+
+/// `counter-surface`: needs both `hmmu/counters.rs` (the struct and its
+/// manual Debug impl) and `sweep/report.rs` (`to_json` and the
+/// fingerprint). Skipped when either file is absent from the tree.
+pub fn counter_surface(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let counters = files.iter().find(|f| f.rel.ends_with("hmmu/counters.rs"));
+    let report = files.iter().find(|f| f.rel.ends_with("sweep/report.rs"));
+    let (Some(counters), Some(report)) = (counters, report) else {
+        return;
+    };
+    let ccode = &counters.stripped.code;
+    let rcode = &report.stripped.code;
+    let defs = parse::structs(ccode);
+    let Some(def) = defs.iter().find(|d| d.name == "HmmuCounters") else {
+        return;
+    };
+    let mut debug_body = None;
+    for ib in parse::impls(ccode) {
+        let is_debug = ib.trait_name.as_deref() == Some("Debug");
+        if is_debug && ib.type_name == "HmmuCounters" {
+            debug_body = parse::find_fn(ccode, ib.body, "fmt").map(|r| &ccode[r]);
+        }
+    }
+    let mut to_json = None;
+    let mut det_key = None;
+    for ib in parse::impls(rcode) {
+        if ib.trait_name.is_none() && ib.type_name == "ScenarioResult" {
+            if let Some(r) = parse::find_fn(rcode, ib.body.clone(), "to_json") {
+                to_json = Some(&rcode[r]);
+            }
+            if let Some(r) = parse::find_fn(rcode, ib.body, "deterministic_key") {
+                det_key = Some(&rcode[r]);
+            }
+        }
+    }
+    for f in def.fields.iter().filter(|f| f.is_pub) {
+        let mut missing = Vec::new();
+        if !debug_body.is_some_and(|b| parse::word_in(b, &f.name)) {
+            missing.push("the Debug impl");
+        }
+        if !to_json.is_some_and(|b| parse::word_in(b, &f.name)) {
+            missing.push("ScenarioResult::to_json");
+        }
+        if !det_key.is_some_and(|b| parse::word_in(b, &f.name)) {
+            missing.push("the fingerprint (deterministic_key)");
+        }
+        if !missing.is_empty() {
+            let msg = format!("counter `{}` missing from {}", f.name, missing.join(", "));
+            push(out, &counters.display, f.line, COUNTER_SURFACE, msg);
+        }
+    }
+}
+
+/// `bench-pair`: every `/per-op` row name in `benches/` must be the
+/// baseline of a registered gate pair whose partner is a block row that
+/// also exists in `benches/`.
+pub fn bench_pair(
+    bench_files: &[SourceFile],
+    pairs: &[(String, String)],
+    out: &mut Vec<Finding>,
+) {
+    let mut all_names = Vec::new();
+    for f in bench_files {
+        for (_, lit) in &f.stripped.strings {
+            all_names.push(lit.as_str());
+        }
+    }
+    for f in bench_files {
+        for (line, lit) in &f.stripped.strings {
+            if !lit.contains("/per-op") {
+                continue;
+            }
+            let Some((_, fast)) = pairs.iter().find(|(base, _)| base == lit) else {
+                let msg = format!(
+                    "bench row `{lit}` has no pair registered in scripts/check_bench_gate.py",
+                );
+                push(out, &f.display, *line, BENCH_PAIR, msg);
+                continue;
+            };
+            if !fast.contains("block") {
+                let msg = format!(
+                    "bench row `{lit}` is paired with `{fast}`, which is not a block row",
+                );
+                push(out, &f.display, *line, BENCH_PAIR, msg);
+            } else if !all_names.contains(&fast.as_str()) {
+                let msg = format!(
+                    "bench row `{lit}` is paired with `{fast}`, which no bench registers",
+                );
+                push(out, &f.display, *line, BENCH_PAIR, msg);
+            }
+        }
+    }
+}
+
+/// Fallback pair source when `python3` is unavailable: pull the quoted
+/// strings out of the script's `PAIRS = [...]` literal, two per tuple.
+pub fn parse_pairs_literal(script_src: &str) -> Vec<(String, String)> {
+    let stripped = strip_python(script_src);
+    let Some(start) = stripped.find("PAIRS") else {
+        return Vec::new();
+    };
+    let Some(open) = stripped[start..].find('[') else {
+        return Vec::new();
+    };
+    let from = start + open;
+    let tail = stripped[from..].find("\n]");
+    let end = tail.map_or(stripped.len(), |p| from + p);
+    // Scan quote positions in the stripped text (comments blanked, so a
+    // quote in a comment cannot desynchronize the scan), but slice the
+    // contents out of the original source.
+    let mut strings = Vec::new();
+    let b = stripped.as_bytes();
+    let mut i = from;
+    while i < end {
+        if b[i] == b'"' {
+            let mut j = i + 1;
+            while j < end && b[j] != b'"' {
+                j += 1;
+            }
+            strings.push(script_src[i + 1..j].to_string());
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    let mut pairs = Vec::new();
+    for pair in strings.chunks(2) {
+        if let [base, fast] = pair {
+            pairs.push((base.clone(), fast.clone()));
+        }
+    }
+    pairs
+}
+
+/// Blank `#` comments and string contents out of Python source so the
+/// `PAIRS` region scan cannot be fooled by either (offsets preserved).
+fn strip_python(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = b.to_vec();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'#' => {
+                while i < b.len() && b[i] != b'\n' {
+                    out[i] = b' ';
+                    i += 1;
+                }
+            }
+            b'"' | b'\'' => {
+                let q = b[i];
+                let mut j = i + 1;
+                while j < b.len() && b[j] != q && b[j] != b'\n' {
+                    out[j] = b' ';
+                    if b[j] == b'\\' && j + 1 < b.len() {
+                        out[j + 1] = b' ';
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                i = j + 1;
+            }
+            _ => i += 1,
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}

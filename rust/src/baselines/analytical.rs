@@ -69,6 +69,7 @@ impl AnalyticalModel {
 
     /// Predict platform + native times for `instructions` instructions.
     pub fn predict(&self, wl: &Workload, instructions: u64) -> AnalyticalPrediction {
+        // audit: allow(wall-clock) — baselines time themselves for Fig 7
         let wall = std::time::Instant::now();
         let cfg = &self.cfg;
         let mem_ops = instructions as f64 / (1.0 + wl.mean_gap);

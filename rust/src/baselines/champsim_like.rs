@@ -70,6 +70,7 @@ impl ChampsimLike {
     }
 
     pub fn run(&self, wl: &Workload, instructions: u64) -> SimResult {
+        // audit: allow(wall-clock) — baselines time themselves for Fig 7
         let wall0 = std::time::Instant::now();
         let cfg = &self.cfg;
         let mut l1i = Cache::new(cfg.l1i);

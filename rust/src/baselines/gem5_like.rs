@@ -110,6 +110,7 @@ impl Gem5Like {
 
     /// Run `instructions` of `wl`; returns modeled + wall time.
     pub fn run(&self, wl: &Workload, instructions: u64) -> SimResult {
+        // audit: allow(wall-clock) — baselines time themselves for Fig 7
         let wall0 = std::time::Instant::now();
         let cfg = &self.cfg;
         let mut l1i = Cache::new(cfg.l1i);

@@ -1,0 +1,49 @@
+//! `hymem-audit` — walk a source tree and enforce the repo invariants
+//! (see [`hymem::audit`] for the rule set and exemption syntax).
+//!
+//! Usage: `cargo run --bin hymem-audit -- rust/src` (from the repo
+//! root) or `cargo run --bin hymem-audit -- src` (from `rust/`). Exit
+//! codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let Some(arg) = std::env::args().nth(1) else {
+        eprintln!("usage: hymem-audit <src-root>");
+        return ExitCode::from(2);
+    };
+    let mut root = PathBuf::from(&arg);
+    if !root.is_dir() {
+        // Tolerate a repo-root-relative `rust/src` argument when the
+        // working directory is already the crate (e.g. under CI's
+        // `working-directory: rust`).
+        if let Some(tail) = arg.strip_prefix("rust/") {
+            let alt = Path::new(env!("CARGO_MANIFEST_DIR")).join(tail);
+            if alt.is_dir() {
+                root = alt;
+            }
+        }
+    }
+    if !root.is_dir() {
+        eprintln!("hymem-audit: {arg}: not a directory");
+        return ExitCode::from(2);
+    }
+    match hymem::audit::audit_tree(&root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("hymem-audit: clean ({arg})");
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!("hymem-audit: {} finding(s)", findings.len());
+            ExitCode::from(1)
+        }
+        Err(e) => {
+            eprintln!("hymem-audit: {arg}: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -186,11 +186,16 @@ pub struct CacheHierarchy {
     pub l1d: Cache,
     pub l2: Cache,
     pub tlb: Tlb,
+    // audit: allow(codec-coverage) — geometry, re-derived from SystemConfig
     line_bytes: u64,
+    // audit: allow(codec-coverage) — latency constant, same as line_bytes
     l1_hit_ns: u64,
+    // audit: allow(codec-coverage) — latency constant, same as line_bytes
     l2_hit_ns: u64,
     /// TLB L2-hit / walk penalties in ns.
+    // audit: allow(codec-coverage) — latency constant, same as line_bytes
     tlb_l2_ns: u64,
+    // audit: allow(codec-coverage) — latency constant, same as line_bytes
     tlb_walk_ns: u64,
     /// Memory accesses (fills + writebacks) forwarded to the backend.
     pub mem_reads: u64,
@@ -198,8 +203,10 @@ pub struct CacheHierarchy {
     /// Reusable write-back column for the end-of-run [`Self::flush`]
     /// (§Perf: the flush drains through [`MemBackend::issue_block_op`],
     /// so PCIe-backed runs take the block-batched link crossing).
+    // audit: allow(codec-coverage) — scratch, cleared before every flush
     flush_col: BlockOutcomes,
     /// Reusable dirty-address scratch for the flush.
+    // audit: allow(codec-coverage) — scratch, cleared before every flush
     flush_scratch: Vec<u64>,
 }
 

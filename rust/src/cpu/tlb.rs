@@ -77,6 +77,7 @@ impl TlbLevel {
 pub struct Tlb {
     l1: TlbLevel,
     l2: TlbLevel,
+    // audit: allow(codec-coverage) — geometry, re-derived from config
     page_shift: u32,
     pub l1_hits: u64,
     pub l2_hits: u64,

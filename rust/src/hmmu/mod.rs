@@ -148,6 +148,7 @@ const PENDING_WRITE_BIT: u8 = 0x80;
 /// The HMMU model.
 #[derive(Clone)]
 pub struct Hmmu {
+    // audit: allow(codec-coverage) — configuration, supplied at restore time
     cfg: SystemConfig,
     pub table: RedirectionTable,
     tags: TagMatcher,
@@ -158,14 +159,17 @@ pub struct Hmmu {
     /// The tier stack: one memory controller per rank (0 = fastest).
     tiers: Vec<MemoryController<TierDevice>>,
     /// The specs the stack was built from (energy/report surface).
+    // audit: allow(codec-coverage) — configuration, rebuilt from cfg
     specs: Vec<TierSpec>,
     pub counters: HmmuCounters,
     hints: HintStore,
     /// Pipeline latency (decode + policy + route stages) in ns.
+    // audit: allow(codec-coverage) — derived from cfg on construction
     pipeline_ns: u64,
     /// Release times of outstanding HDR FIFO entries (occupancy model).
     hdr_occupancy: ReleaseRing,
     /// Host-managed DMA completion-column scratch (see [`CplScratch`]).
+    // audit: allow(codec-coverage) — scratch, rebuilt per batch
     dma_cpl: CplScratch,
     /// Block-batched hotness/tier-access accounting (see
     /// [`PendingAccesses`]).
@@ -528,6 +532,9 @@ impl Hmmu {
     /// wall time in the counters for the §Perf report.
     fn run_epoch(&mut self, now: Time, mut link: Option<&mut PcieLink>) {
         self.counters.epochs += 1;
+        // The one sanctioned wall-clock read in model code: it feeds only
+        // `policy_wall_ns`, which every deterministic surface excludes.
+        // audit: allow(wall-clock) — policy_wall_ns measurement site
         let wall = std::time::Instant::now();
         let dma_ref = &self.dma;
         let migrating = |page: u64| dma_ref.is_active(page);
@@ -599,6 +606,14 @@ impl Hmmu {
     /// (when a `link` handle is given). An associated function over split
     /// field borrows so the epoch migration closure and the fault layer's
     /// emergency remap charge the **identical** machinery.
+    ///
+    /// The argument count is deliberate (audited PR 8): the first four
+    /// are *disjoint field borrows* of `self` — they cannot collapse
+    /// into a params struct without re-borrowing `self`, which the
+    /// epoch-migration closure (holding its own `self` splits) forbids —
+    /// and the remaining six are the per-access description. Bundling
+    /// the latter into a struct would only move the same six values one
+    /// level down at both call sites.
     #[allow(clippy::too_many_arguments)]
     fn dma_issue(
         tiers: &mut [MemoryController<TierDevice>],

@@ -15,8 +15,8 @@ mod wear_aware;
 pub use first_touch::FirstTouchPolicy;
 pub use hints_policy::HintsPolicy;
 pub use hotness::{
-    select_boundary_into, HotnessEngine, HotnessPolicy, NativeHotnessEngine, PolicyStepOutput,
-    HOTNESS_DECAY, HOTNESS_TILE, NEG_INF, WRITE_WEIGHT,
+    select_boundary_into, BoundaryBias, HotnessEngine, HotnessPolicy, NativeHotnessEngine,
+    PolicyStepOutput, SelectParams, HOTNESS_DECAY, HOTNESS_TILE, NEG_INF, WRITE_WEIGHT,
 };
 pub use static_split::StaticPolicy;
 pub use wear_aware::{WearAwarePolicy, WEAR_BIAS};

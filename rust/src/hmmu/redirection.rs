@@ -76,6 +76,7 @@ const FRAME_MASK: u32 = (1 << FRAME_BITS) - 1;
 /// lists and residency counters.
 #[derive(Clone, Debug)]
 pub struct RedirectionTable {
+    // audit: allow(codec-coverage) — geometry, re-derived from config
     page_bytes: u64,
     /// Packed entries: bits 28..31 = tier rank, bits 0..27 = frame;
     /// `UNMAPPED` = not yet placed.
@@ -84,6 +85,7 @@ pub struct RedirectionTable {
     /// allocate first).
     free: Vec<Vec<u32>>,
     /// Frame capacity per tier.
+    // audit: allow(codec-coverage) — geometry, validated not restored
     frames: Vec<u32>,
     /// Mapped-page count, maintained on place (§Perf: keeps residency
     /// reporting O(1) instead of a full-table walk).

@@ -29,6 +29,7 @@ struct HdrEntry {
 #[derive(Clone, Debug)]
 pub struct TagMatcher {
     fifo: VecDeque<HdrEntry>,
+    // audit: allow(codec-coverage) — geometry, validated not restored
     depth: usize,
     next_tag: u16,
     /// Release time of the most recently drained response.

@@ -48,6 +48,10 @@
 //! ```
 
 pub mod alloc;
+/// Source-level invariant checker behind the `hymem-audit` binary:
+/// codec coverage, counter surfaces, determinism hygiene, bench-gate
+/// pairing. Dependency-free lexer/parser, like everything else here.
+pub mod audit;
 pub mod baselines;
 pub mod config;
 pub mod cpu;

@@ -110,12 +110,23 @@ fn config_from(args: &Args) -> SystemConfig {
             std::process::exit(1);
         }
     }
-    let link_ber = args.get_f64("link-ber", cfg.fault.link_ber);
-    if !(0.0..=1.0).contains(&link_ber) {
-        eprintln!("bad --link-ber {link_ber}; want a rate in [0,1]");
-        std::process::exit(1);
+    if let Some(s) = args.get("link-ber") {
+        if !s.contains(',') {
+            match s.parse::<f64>() {
+                Ok(r) if (0.0..=1.0).contains(&r) => cfg.fault.link_ber = r,
+                _ => {
+                    eprintln!("bad --link-ber {s:?}; want a rate in [0,1], e.g. 1e-6");
+                    std::process::exit(1);
+                }
+            }
+        } else if args.command.as_deref() != Some("sweep") {
+            eprintln!(
+                "--link-ber {s:?}: a comma-separated rate list is only a sweep axis; \
+                 pass one rate (e.g. 1e-6) to this command"
+            );
+            std::process::exit(1);
+        }
     }
-    cfg.fault.link_ber = link_ber;
     cfg
 }
 
@@ -261,6 +272,24 @@ fn cmd_sweep(args: &Args) -> i32 {
                 }
             }
             scenarios = Scenario::fault_grid(&scenarios, &points);
+        }
+    }
+    // Optional link-fault axis, same shape: `--link-ber 0,1e-6` (PCIe
+    // TLP corruption rate per point; 0 keeps the healthy baseline
+    // unsuffixed). Composes with `--rber` into a full fault grid.
+    if let Some(list) = args.get("link-ber") {
+        if list.contains(',') {
+            let mut points = Vec::new();
+            for tok in list.split(',') {
+                match tok.trim().parse::<f64>() {
+                    Ok(r) if (0.0..=1.0).contains(&r) => points.push(r),
+                    _ => {
+                        eprintln!("bad --link-ber entry {tok:?}; want a rate in [0,1], e.g. 1e-6");
+                        return 1;
+                    }
+                }
+            }
+            scenarios = Scenario::link_fault_grid(&scenarios, &points);
         }
     }
 
@@ -596,11 +625,11 @@ COMMANDS:
   sweep           parallel scenario sweep: 12 workloads [x --policies a,b,..]
                   [x --nvm-stalls rd:wr,rd:wr,..] [x --cores 1,4,..]
                   [x --tiers dram+pcm,dram+xpoint,dram+pcm+xpoint]
-                  [x --rber 0,1e-5,1e-4] on
+                  [x --rber 0,1e-5,1e-4] [x --link-ber 0,1e-6] on
                   --threads N OS threads (default: all cores; bit-identical
                   to serial), writes --json <path> (default BENCH_sweep.json)
                   [--ops N] [--host-managed-dma] [--coalesce-writes]
-                  [--link-ber R] [--fault-seed N]
+                  [--fault-seed N]
                   [--warmup-ops N] pay warm-up once per workload group and
                   fork it across the grid; [--checkpoint-dir D] cache warm
                   states on disk; [--cold-replay] re-warm per scenario

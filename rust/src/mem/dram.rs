@@ -24,6 +24,7 @@ struct BankState {
 /// A DDR4-like DRAM device.
 #[derive(Clone, Debug)]
 pub struct DramDevice {
+    // audit: allow(codec-coverage) — configuration, supplied at restore time
     cfg: DramConfig,
     banks: Vec<BankState>,
     /// Shared data-bus next-free time.

@@ -19,7 +19,9 @@ use std::collections::HashMap;
 #[derive(Clone, Debug)]
 pub struct NvmDevice {
     inner: DramDevice,
+    // audit: allow(codec-coverage) — configuration, supplied at restore time
     cfg: NvmConfig,
+    // audit: allow(codec-coverage) — geometry, re-derived from config
     page_bytes: u64,
     /// Per-page write counts (sparse; only touched pages).
     wear: HashMap<u64, u64>,

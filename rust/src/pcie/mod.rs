@@ -137,6 +137,7 @@ struct LinkFaultState {
 /// Full-duplex PCIe link with credit flow control.
 #[derive(Clone, Debug)]
 pub struct PcieLink {
+    // audit: allow(codec-coverage) — configuration, supplied at restore time
     cfg: PcieConfig,
     pub tx: LinkDirection, // host -> HMMU
     pub rx: LinkDirection, // HMMU -> host

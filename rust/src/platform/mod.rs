@@ -54,11 +54,14 @@ impl Default for RunOpts {
 pub struct HmmuBackend {
     pub link: PcieLink,
     pub hmmu: Hmmu,
+    // audit: allow(codec-coverage) — geometry, re-derived from config
     line_bytes: u32,
     /// Recorded per-op traffic column for the block-batched link crossing
     /// (§Perf) — recycled across ops; steady state allocates nothing.
+    // audit: allow(codec-coverage) — scratch, refilled every block
     col: TlpColumn,
     /// Per-entry completion scratch for the block crossing (recycled).
+    // audit: allow(codec-coverage) — scratch, refilled every block
     completions: Vec<Time>,
 }
 

@@ -168,6 +168,26 @@ impl Scenario {
         out
     }
 
+    /// Expand scenarios across a PCIe link-fault axis, suffixing names
+    /// with `%lber<rate>` (e.g. `505.mcf/hotness%lber1e-6`). Each point
+    /// sets the TLP corruption rate ([`crate::config::FaultConfig`]
+    /// `link_ber`); `0.0` keeps the healthy link and the unsuffixed
+    /// name, mirroring [`Self::fault_grid`] so the two axes compose.
+    pub fn link_fault_grid(scenarios: &[Scenario], ber_points: &[f64]) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(scenarios.len() * ber_points.len());
+        for sc in scenarios {
+            for &ber in ber_points {
+                let mut s = sc.clone();
+                s.cfg.fault.link_ber = ber;
+                if ber > 0.0 {
+                    s.name = format!("{}%lber{ber}", sc.name);
+                }
+                out.push(s);
+            }
+        }
+        out
+    }
+
     /// Expand scenarios across a core-count axis, suffixing names with
     /// `x<cores>` (e.g. `505.mcf/hotness x4` → `"505.mcf/hotnessx4"`).
     /// Entries with `1` keep the single-core platform path unsuffixed.
@@ -537,6 +557,23 @@ mod tests {
         assert_eq!(grid[1].name, "mcf/static%0.0001");
         assert_eq!(grid[1].cfg.fault.rber_base, 1e-4);
         assert!(grid[1].cfg.fault.mem_enabled());
+    }
+
+    #[test]
+    fn link_fault_grid_expands_and_suffixes() {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let base = vec![Scenario::new("mcf/static", wl, small_cfg(), 1000)];
+        let grid = Scenario::link_fault_grid(&base, &[0.0, 1e-6]);
+        assert_eq!(grid.len(), 2);
+        assert_eq!(grid[0].name, "mcf/static");
+        assert!(!grid[0].cfg.fault.enabled());
+        assert_eq!(grid[1].name, "mcf/static%lber0.000001");
+        assert_eq!(grid[1].cfg.fault.link_ber, 1e-6);
+        assert!(grid[1].cfg.fault.link_enabled());
+        // The two fault axes compose: rber × link-ber.
+        let both = Scenario::fault_grid(&grid, &[0.0, 1e-4]);
+        assert_eq!(both.len(), 4);
+        assert_eq!(both[3].name, "mcf/static%lber0.000001%0.0001");
     }
 
     #[test]

@@ -34,6 +34,7 @@ pub struct ScenarioResult {
     pub dram_service_ratio: f64,
     pub dram_residency: f64,
     pub migrations: u64,
+    pub migration_bytes: u64,
     pub epochs: u64,
     pub dram_reads: u64,
     pub dram_writes: u64,
@@ -43,6 +44,8 @@ pub struct ScenarioResult {
     /// above are ranks 0/1 of these).
     pub tier_reads: Vec<u64>,
     pub tier_writes: Vec<u64>,
+    /// Per-tier first-touch placement decisions, rank order.
+    pub tier_pages_placed: Vec<u64>,
     /// Per-tier resident page counts at end of run.
     pub tier_residency: Vec<u64>,
     /// Per-tier max page wear.
@@ -50,11 +53,18 @@ pub struct ScenarioResult {
     /// Per-tier (static + dynamic) energy, mJ (empty for multicore rows,
     /// which carry no full energy report).
     pub tier_energy_mj: Vec<f64>,
+    /// Host requests seen by the HMMU (post cache filter), by kind.
+    pub host_reads: u64,
+    pub host_writes: u64,
     pub host_read_bytes: u64,
     pub host_write_bytes: u64,
     pub fifo_full_stalls: u64,
     pub reorder_wait_ns: u64,
     pub dma_conflict_stalls: u64,
+    /// HDR FIFO slots consumed / stalls incurred by migration DMA (only
+    /// under `HmmuConfig::dma_hdr_occupancy`).
+    pub dma_hdr_slots: u64,
+    pub dma_hdr_stalls: u64,
     /// Migration payload bytes that crossed the PCIe link (host-managed
     /// DMA scenarios; 0 under the paper's device-side DMA).
     pub pcie_dma_bytes: u64,
@@ -98,6 +108,7 @@ impl ScenarioResult {
             dram_service_ratio: r.counters.dram_service_ratio(),
             dram_residency: r.dram_residency,
             migrations: r.counters.migrations,
+            migration_bytes: r.counters.migration_bytes,
             epochs: r.counters.epochs,
             dram_reads: r.counters.dram_reads(),
             dram_writes: r.counters.dram_writes(),
@@ -105,14 +116,19 @@ impl ScenarioResult {
             nvm_writes: r.counters.nvm_writes(),
             tier_reads: r.counters.tier_reads.clone(),
             tier_writes: r.counters.tier_writes.clone(),
+            tier_pages_placed: r.counters.tier_pages_placed.clone(),
             tier_residency: r.tier_residency.clone(),
             tier_wear: r.tier_wear.clone(),
             tier_energy_mj: r.energy.tiers.iter().map(|&(s, d)| s + d).collect(),
+            host_reads: r.counters.host_reads,
+            host_writes: r.counters.host_writes,
             host_read_bytes: r.counters.host_read_bytes,
             host_write_bytes: r.counters.host_write_bytes,
             fifo_full_stalls: r.counters.fifo_full_stalls,
             reorder_wait_ns: r.counters.reorder_wait_ns,
             dma_conflict_stalls: r.counters.dma_conflict_stalls,
+            dma_hdr_slots: r.counters.dma_hdr_slots,
+            dma_hdr_stalls: r.counters.dma_hdr_stalls,
             pcie_dma_bytes: r.counters.pcie_dma_bytes,
             dma_link_stalls: r.counters.dma_link_stalls,
             ecc_corrected: r.counters.ecc_corrected,
@@ -157,6 +173,7 @@ impl ScenarioResult {
             dram_service_ratio: r.counters.dram_service_ratio(),
             dram_residency: r.dram_residency,
             migrations: r.counters.migrations,
+            migration_bytes: r.counters.migration_bytes,
             epochs: r.counters.epochs,
             dram_reads: r.counters.dram_reads(),
             dram_writes: r.counters.dram_writes(),
@@ -164,14 +181,19 @@ impl ScenarioResult {
             nvm_writes: r.counters.nvm_writes(),
             tier_reads: r.counters.tier_reads.clone(),
             tier_writes: r.counters.tier_writes.clone(),
+            tier_pages_placed: r.counters.tier_pages_placed.clone(),
             tier_residency: r.tier_residency.clone(),
             tier_wear: r.tier_wear.clone(),
             tier_energy_mj: Vec::new(),
+            host_reads: r.counters.host_reads,
+            host_writes: r.counters.host_writes,
             host_read_bytes: r.counters.host_read_bytes,
             host_write_bytes: r.counters.host_write_bytes,
             fifo_full_stalls: r.counters.fifo_full_stalls,
             reorder_wait_ns: r.counters.reorder_wait_ns,
             dma_conflict_stalls: r.counters.dma_conflict_stalls,
+            dma_hdr_slots: r.counters.dma_hdr_slots,
+            dma_hdr_stalls: r.counters.dma_hdr_stalls,
             pcie_dma_bytes: r.counters.pcie_dma_bytes,
             dma_link_stalls: r.counters.dma_link_stalls,
             ecc_corrected: r.counters.ecc_corrected,
@@ -213,8 +235,8 @@ impl ScenarioResult {
         let _ = write!(
             s,
             "{}|{}|{}|seed={:#x}|ops={}|cores={}|tiers={}|plat={}|native={}|slow={:?}|l2={:?}|serv={:?}|resid={:?}\
-             |mig={}|epochs={}|dr={}|dw={}|nr={}|nw={}|tr={:?}|tw={:?}|tres={:?}|twear={:?}|tmj={:?}\
-             |hrb={}|hwb={}|fifo={}|reorder={}|dma={}\
+             |mig={}|migB={}|epochs={}|dr={}|dw={}|nr={}|nw={}|tr={:?}|tw={:?}|tpp={:?}|tres={:?}|twear={:?}|tmj={:?}\
+             |hr={}|hw={}|hrb={}|hwb={}|fifo={}|reorder={}|dma={}|hdrSlots={}|hdrStalls={}\
              |dmaPcieB={}|dmaLinkStalls={}|wear={}|mj={:?}|lat=({:?},{},{},{})",
             self.name,
             self.workload,
@@ -230,6 +252,7 @@ impl ScenarioResult {
             self.dram_service_ratio,
             self.dram_residency,
             self.migrations,
+            self.migration_bytes,
             self.epochs,
             self.dram_reads,
             self.dram_writes,
@@ -237,14 +260,19 @@ impl ScenarioResult {
             self.nvm_writes,
             self.tier_reads,
             self.tier_writes,
+            self.tier_pages_placed,
             self.tier_residency,
             self.tier_wear,
             self.tier_energy_mj,
+            self.host_reads,
+            self.host_writes,
             self.host_read_bytes,
             self.host_write_bytes,
             self.fifo_full_stalls,
             self.reorder_wait_ns,
             self.dma_conflict_stalls,
+            self.dma_hdr_slots,
+            self.dma_hdr_stalls,
             self.pcie_dma_bytes,
             self.dma_link_stalls,
             self.nvm_max_wear,
@@ -291,6 +319,7 @@ impl ScenarioResult {
             .set("topology", self.topology.as_str())
             .set("tier_reads", arr_u64(&self.tier_reads))
             .set("tier_writes", arr_u64(&self.tier_writes))
+            .set("tier_pages_placed", arr_u64(&self.tier_pages_placed))
             .set("tier_residency", arr_u64(&self.tier_residency))
             .set("tier_wear", arr_u64(&self.tier_wear))
             .set("tier_energy_mj", arr_f64(&self.tier_energy_mj))
@@ -301,16 +330,21 @@ impl ScenarioResult {
             .set("dram_service_ratio", self.dram_service_ratio)
             .set("dram_residency", self.dram_residency)
             .set("migrations", self.migrations)
+            .set("migration_bytes", self.migration_bytes)
             .set("epochs", self.epochs)
             .set("dram_reads", self.dram_reads)
             .set("dram_writes", self.dram_writes)
             .set("nvm_reads", self.nvm_reads)
             .set("nvm_writes", self.nvm_writes)
+            .set("host_reads", self.host_reads)
+            .set("host_writes", self.host_writes)
             .set("host_read_bytes", self.host_read_bytes)
             .set("host_write_bytes", self.host_write_bytes)
             .set("fifo_full_stalls", self.fifo_full_stalls)
             .set("reorder_wait_ns", self.reorder_wait_ns)
             .set("dma_conflict_stalls", self.dma_conflict_stalls)
+            .set("dma_hdr_slots", self.dma_hdr_slots)
+            .set("dma_hdr_stalls", self.dma_hdr_stalls)
             .set("pcie_dma_bytes", self.pcie_dma_bytes)
             .set("dma_link_stalls", self.dma_link_stalls)
             .set("ecc_corrected", self.ecc_corrected)

@@ -17,30 +17,41 @@ const LINE: u64 = 64;
 #[derive(Clone)]
 pub struct TraceGenerator {
     rng: Xoshiro256,
+    // audit: allow(codec-coverage) — workload spec, supplied at restore time
     wl: Workload,
     /// Scaled footprint in bytes.
+    // audit: allow(codec-coverage) — derived from the workload spec
     footprint: u64,
     /// Region base offsets and sizes (bytes).
+    // audit: allow(codec-coverage) — derived from the workload spec
     stream_base: u64,
+    // audit: allow(codec-coverage) — derived from the workload spec
     stream_size: u64,
+    // audit: allow(codec-coverage) — derived from the workload spec
     chase_base: u64,
+    // audit: allow(codec-coverage) — derived from the workload spec
     random_base: u64,
+    // audit: allow(codec-coverage) — derived from the workload spec
     random_size: u64,
     /// Streaming cursor.
     stream_pos: u64,
     /// Streaming working window (tiled reuse); `stream_size` when the
     /// workload streams its whole region.
+    // audit: allow(codec-coverage) — derived from the workload spec
     stream_window: u64,
     /// Base offset of the current window within the stream region (the
     /// window slides occasionally, modeling tile-to-tile progress).
     window_base: u64,
     /// Stride-walk state.
     stride_pos: u64,
+    // audit: allow(codec-coverage) — derived from the workload spec
     stride: u64,
     /// Pointer-chase permutation over chase-region lines (index = line).
+    // audit: allow(codec-coverage) — re-derived from the seed on restore
     chase_perm: Vec<u32>,
     chase_cur: u32,
     /// Cumulative mix thresholds.
+    // audit: allow(codec-coverage) — derived from the workload spec
     thresholds: [f64; 4],
     /// Remaining ops (None = unbounded).
     remaining: Option<u64>,

@@ -1,0 +1,261 @@
+//! Fixture tests for the `hymem-audit` rule engine: each rule gets a
+//! deliberately-broken source tree in a temp directory and must report
+//! the right rule id at the right place; the exemption syntax must
+//! silence it; and the real crate tree must come back clean (the same
+//! invariant the CI `audit` job enforces).
+
+use hymem::audit::{audit_tree, Finding};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Materialize `files` (path relative to the fixture root → contents)
+/// under a unique temp dir and return its root. `src/` always exists.
+fn fixture(name: &str, files: &[(&str, &str)]) -> PathBuf {
+    let dir = format!("hymem-audit-{}-{name}", std::process::id());
+    let base = std::env::temp_dir().join(dir);
+    let _ = fs::remove_dir_all(&base);
+    fs::create_dir_all(base.join("src")).unwrap();
+    for (rel, text) in files {
+        let p = base.join(rel);
+        fs::create_dir_all(p.parent().unwrap()).unwrap();
+        fs::write(p, text).unwrap();
+    }
+    base
+}
+
+fn run(base: &Path) -> Vec<Finding> {
+    let findings = audit_tree(&base.join("src")).unwrap();
+    let _ = fs::remove_dir_all(base);
+    findings
+}
+
+const BAD_CODEC: &str = r#"
+pub struct Thing {
+    pub a: u64,
+    pub b: u64,
+}
+
+impl CodecState for Thing {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_u64(self.a);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.a = d.get_u64()?;
+        Ok(())
+    }
+}
+"#;
+
+#[test]
+fn codec_coverage_flags_uncovered_field() {
+    let base = fixture("codec", &[("src/thing.rs", BAD_CODEC)]);
+    let findings = run(&base);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    let f = &findings[0];
+    assert_eq!(f.rule, "codec-coverage");
+    assert_eq!(f.line, 4, "anchored to the `pub b` field line");
+    assert!(f.message.contains("Thing.b"), "{}", f.message);
+    assert!(f.message.contains("encode_state or decode_state"), "{}", f.message);
+    // The file:line: [rule] message shape the CI log relies on.
+    let shown = f.to_string();
+    assert!(shown.contains("thing.rs:4: [codec-coverage]"), "{shown}");
+}
+
+#[test]
+fn allow_comment_silences_a_finding() {
+    let trailing = BAD_CODEC.replace(
+        "    pub b: u64,",
+        "    pub b: u64, // audit: allow(codec-coverage) — fixture",
+    );
+    let standalone = BAD_CODEC.replace(
+        "    pub b: u64,",
+        "    // audit: allow(codec-coverage) — fixture\n    pub b: u64,",
+    );
+    let wrong_rule = BAD_CODEC.replace(
+        "    pub b: u64,",
+        "    pub b: u64, // audit: allow(wall-clock) — wrong rule id",
+    );
+    let base = fixture("allow-trailing", &[("src/thing.rs", &trailing)]);
+    assert!(run(&base).is_empty(), "same-line allow must silence");
+    let base = fixture("allow-standalone", &[("src/thing.rs", &standalone)]);
+    assert!(run(&base).is_empty(), "line-above allow must silence");
+    let base = fixture("allow-wrong", &[("src/thing.rs", &wrong_rule)]);
+    assert_eq!(run(&base).len(), 1, "an allow for another rule must not");
+}
+
+const UNSORTED: &str = r#"
+pub struct Wear {
+    map: HashMap<u64, u64>,
+}
+
+impl CodecState for Wear {
+    fn encode_state(&self, e: &mut Encoder) {
+        for (k, v) in &self.map {
+            e.put_u64(*k);
+            e.put_u64(*v);
+        }
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.map.insert(d.get_u64()?, d.get_u64()?);
+        Ok(())
+    }
+}
+"#;
+
+#[test]
+fn unsorted_iter_flags_hash_encode_without_sort() {
+    let base = fixture("unsorted", &[("src/wear.rs", UNSORTED)]);
+    let findings = run(&base);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "unsorted-iter");
+    assert!(findings[0].message.contains("Wear.map"), "{}", findings[0].message);
+
+    // The mem/nvm.rs pattern — collect + sort before emitting — passes.
+    let sorted = UNSORTED.replace(
+        "        for (k, v) in &self.map {",
+        "        let mut kv: Vec<_> = self.map.iter().collect();\n        \
+         kv.sort();\n        for (k, v) in kv {",
+    );
+    let base = fixture("sorted", &[("src/wear.rs", &sorted)]);
+    assert!(run(&base).is_empty());
+}
+
+const FLOAT_CAST: &str = r#"
+pub struct P {
+    x: f32,
+}
+
+impl CodecState for P {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_u32(self.x as u32);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        self.x = d.get_u32()? as f32;
+        Ok(())
+    }
+}
+"#;
+
+#[test]
+fn float_bits_flags_ad_hoc_cast_in_encode() {
+    let base = fixture("float", &[("src/p.rs", FLOAT_CAST)]);
+    let findings = run(&base);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    let f = &findings[0];
+    assert_eq!(f.rule, "float-bits");
+    assert_eq!(f.line, 8, "anchored to the casting encode line");
+    assert!(f.message.contains("P.x"), "{}", f.message);
+
+    let via_bits = FLOAT_CAST.replace(
+        "        e.put_u32(self.x as u32);",
+        "        e.put_u32(self.x.to_bits());",
+    );
+    let base = fixture("float-ok", &[("src/p.rs", &via_bits)]);
+    assert!(run(&base).is_empty());
+}
+
+#[test]
+fn wall_clock_flagged_outside_allowlist_only() {
+    let clocky = "pub fn t() -> u64 {\n    let _w = std::time::Instant::now();\n    0\n}\n";
+    let base = fixture(
+        "wall",
+        &[
+            ("src/model.rs", clocky),
+            // Allowlisted wholesale: the sweep driver reports wall time.
+            ("src/sweep/driver.rs", clocky),
+        ],
+    );
+    let findings = run(&base);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "wall-clock");
+    assert!(findings[0].file.ends_with("model.rs"), "{}", findings[0].file);
+    assert_eq!(findings[0].line, 2);
+}
+
+const MINI_COUNTERS: &str = r#"
+pub struct HmmuCounters {
+    pub good: u64,
+    pub missing_one: u64,
+}
+
+impl std::fmt::Debug for HmmuCounters {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let HmmuCounters { good, missing_one } = self;
+        write!(f, "{good} {missing_one}")
+    }
+}
+"#;
+
+const MINI_REPORT: &str = r#"
+pub struct ScenarioResult {
+    pub good: u64,
+}
+
+impl ScenarioResult {
+    pub fn to_json(&self) -> u64 {
+        self.good
+    }
+
+    pub fn deterministic_key(&self) -> u64 {
+        self.good
+    }
+}
+"#;
+
+#[test]
+fn counter_surface_flags_missing_report_columns() {
+    let base = fixture(
+        "counters",
+        &[
+            ("src/hmmu/counters.rs", MINI_COUNTERS),
+            ("src/sweep/report.rs", MINI_REPORT),
+        ],
+    );
+    let findings = run(&base);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    let f = &findings[0];
+    assert_eq!(f.rule, "counter-surface");
+    assert_eq!(f.line, 4, "anchored to the counter field");
+    assert!(f.message.contains("missing_one"), "{}", f.message);
+    assert!(f.message.contains("to_json"), "{}", f.message);
+    assert!(f.message.contains("deterministic_key"), "{}", f.message);
+    assert!(!f.message.contains("Debug"), "destructured in Debug: {}", f.message);
+}
+
+#[test]
+fn bench_pair_requires_registered_block_partner() {
+    let rows = "fn main() {\n    \
+        suite.bench_items(\"foo/per-op (batch 64)\", 64, || 0);\n    \
+        suite.bench_items(\"bar/per-op (batch 64)\", 64, || 0);\n}\n";
+    let gate = "PAIRS = [\n    (\"foo/per-op (batch 64)\", \"foo/block (batch 64)\", None),\n]\n";
+    let base = fixture(
+        "bench",
+        &[
+            ("src/lib.rs", "// fixture\n"),
+            ("benches/rows.rs", rows),
+            ("scripts/check_bench_gate.py", gate),
+        ],
+    );
+    let findings = run(&base);
+    assert_eq!(findings.len(), 2, "{findings:?}");
+    assert!(findings.iter().all(|f| f.rule == "bench-pair"));
+    let msgs: Vec<&str> = findings.iter().map(|f| f.message.as_str()).collect();
+    // `bar` is not registered at all; `foo`'s partner row exists in the
+    // registry but no bench defines it.
+    assert!(msgs.iter().any(|m| m.contains("bar/per-op") && m.contains("no pair registered")));
+    assert!(msgs.iter().any(|m| m.contains("foo/block") && m.contains("no bench registers")));
+}
+
+/// The invariant the CI `audit` job enforces, pinned as a test so
+/// `cargo test` catches drift without the extra binary run: the crate's
+/// own tree (including `benches/` and the gate-pair registry) is clean.
+#[test]
+fn repo_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = audit_tree(&root).unwrap();
+    let shown: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(findings.is_empty(), "{shown:#?}");
+}
