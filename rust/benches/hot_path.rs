@@ -544,6 +544,58 @@ fn main() {
         });
     }
 
+    // Flat vs row-buffer-aware stall charging on one tier device (the
+    // row-buffer satellite): identical zipf access streams through a
+    // PCM-class `TierDevice` built flat and built row-aware. The rowbuf
+    // row pays the per-access row-buffer outcome branch; the flat row is
+    // the legacy default path and must not regress — CI gates
+    // flat ≥ 0.95× rowbuf (scripts/check_bench_gate.py).
+    {
+        use hymem::config::{MemTech, TierSpec};
+        use hymem::mem::{MemDevice, TierDevice};
+
+        let cfg = SystemConfig::default_scaled(16);
+        let ops = TRACE_BLOCK_OPS as u64;
+        let spec = TierSpec::of(MemTech::Pcm, cfg.nvm.size_bytes, 28);
+        let size = spec.size_bytes;
+
+        let mut dev = TierDevice::build(&spec, cfg.dram, cfg.hmmu.page_bytes);
+        let mut rng = Xoshiro256::new(10);
+        let mut t = 0u64;
+        suite.bench_items("tier_access/flat (batch 4096)", ops, || {
+            for _ in 0..TRACE_BLOCK_OPS {
+                let addr = (rng.zipf(size / 4096, 1.1)) * 4096 + rng.below(4096) & !63;
+                let kind = if rng.chance(0.3) {
+                    AccessKind::Write
+                } else {
+                    AccessKind::Read
+                };
+                let (done, _) = dev.access(addr, kind, 64, t + 20);
+                t = done;
+            }
+            ops
+        });
+        assert!(dev.stats().reads > 0);
+
+        let mut dev = TierDevice::build(&spec.with_row_buffer(), cfg.dram, cfg.hmmu.page_bytes);
+        let mut rng = Xoshiro256::new(10);
+        let mut t = 0u64;
+        suite.bench_items("tier_access/rowbuf (batch 4096)", ops, || {
+            for _ in 0..TRACE_BLOCK_OPS {
+                let addr = (rng.zipf(size / 4096, 1.1)) * 4096 + rng.below(4096) & !63;
+                let kind = if rng.chance(0.3) {
+                    AccessKind::Write
+                } else {
+                    AccessKind::Read
+                };
+                let (done, _) = dev.access(addr, kind, 64, t + 20);
+                t = done;
+            }
+            ops
+        });
+        assert!(dev.stats().row_hits + dev.stats().row_misses > 0);
+    }
+
     // Tiled hotness step (the epoch-boundary dense pass; HOTNESS_TILE
     // chunks, auto-vectorized inner loop).
     {

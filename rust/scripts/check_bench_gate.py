@@ -40,6 +40,11 @@ PAIRS = [
     # slower than the faulted one (off/on >= tolerance; off is normally
     # faster, so only a hook-cost regression can trip this).
     ("fault_check/on (batch 4096)", "fault_check/off (batch 4096)", None),
+    # Row-buffer charging is opt-in: the legacy flat-stall path may not
+    # run slower than the row-aware one (flat/rowbuf >= tolerance; flat
+    # skips the row-buffer outcome bookkeeping, so only a regression on
+    # the default path can trip this).
+    ("tier_access/rowbuf (batch 4096)", "tier_access/flat (batch 4096)", None),
     # Strict: forked sweep must beat cold replay outright (ratio > 1.0).
     ("sweep/cold (8-point grid)", "sweep/forked (8-point grid)", 1.0),
 ]

@@ -27,6 +27,18 @@ pub struct TierSpec {
     pub read_stall_ns: u64,
     /// Extra write stall (ns) injected on top of the DRAM timing model.
     pub write_stall_ns: u64,
+    /// Charge stalls by the row-buffer outcome (`row_hit_stall_ns` /
+    /// `row_miss_stall_ns`) instead of the flat per-kind stalls. Off by
+    /// default: legacy flat charging stays bit-identical, and the row
+    /// fields below are inert until this is set.
+    pub row_aware: bool,
+    /// Row-aware mode: extra stall (ns) on an open-row hit (Yoon et al.,
+    /// arXiv 1804.11040 — ~0 for every class; hits are served from the
+    /// row buffer at DRAM speed).
+    pub row_hit_stall_ns: u64,
+    /// Row-aware mode: extra stall (ns) on a row miss (the array access
+    /// pays the NVM penalty; preset uses the class's write scaling).
+    pub row_miss_stall_ns: u64,
     /// Write endurance budget per page (wear counters).
     pub endurance: u64,
     /// Energy coefficients for this tier's technology class.
@@ -36,7 +48,9 @@ pub struct TierSpec {
 impl TierSpec {
     /// Build a tier from a technology-class preset: stalls scaled from
     /// the measured DRAM round trip `dram_rt_ns` (§III-F), endurance and
-    /// energy coefficients from the class tables.
+    /// energy coefficients from the class tables. Flat charging by
+    /// default; the row-aware stall point is precomputed but inert until
+    /// [`Self::with_row_buffer`] enables it.
     pub fn of(tech: MemTech, size_bytes: u64, dram_rt_ns: u64) -> Self {
         let p = TechPreset::of(tech);
         TierSpec {
@@ -44,8 +58,29 @@ impl TierSpec {
             size_bytes,
             read_stall_ns: p.read_stall_ns(dram_rt_ns),
             write_stall_ns: p.write_stall_ns(dram_rt_ns),
+            row_aware: false,
+            row_hit_stall_ns: p.row_hit_stall_ns(),
+            row_miss_stall_ns: p.row_miss_stall_ns(dram_rt_ns),
             endurance: p.endurance,
             energy: EnergyCoeffs::of(tech),
+        }
+    }
+
+    /// Switch the tier to row-buffer-aware stall charging (open-row hits
+    /// pay `row_hit_stall_ns`, misses `row_miss_stall_ns`).
+    pub fn with_row_buffer(mut self) -> Self {
+        self.row_aware = true;
+        self
+    }
+
+    /// Does this tier inject any stall over the DRAM substrate under its
+    /// active charging mode? (The build gate: a DRAM-class tier with no
+    /// effective stalls gets the bare timing model.)
+    pub fn has_stalls(&self) -> bool {
+        if self.row_aware {
+            self.row_hit_stall_ns > 0 || self.row_miss_stall_ns > 0
+        } else {
+            self.read_stall_ns > 0 || self.write_stall_ns > 0
         }
     }
 
@@ -236,6 +271,13 @@ pub struct NvmConfig {
     pub read_stall_ns: u64,
     /// Extra write stall (ns) added on top of DRAM timing.
     pub write_stall_ns: u64,
+    /// Charge stalls by row-buffer outcome instead of flat per-kind
+    /// stalls (see [`TierSpec::row_aware`]). Off = legacy bit-identical.
+    pub row_aware: bool,
+    /// Row-aware mode: extra stall (ns) on an open-row hit.
+    pub row_hit_stall_ns: u64,
+    /// Row-aware mode: extra stall (ns) on a row miss.
+    pub row_miss_stall_ns: u64,
     /// Write endurance budget per 4K page (for wear counters; 3D XPoint ~1e9).
     pub endurance: u64,
 }
@@ -294,6 +336,10 @@ pub enum PolicyKind {
     /// Hotness migration with NVM-endurance write bias (extension
     /// motivated by Table I's endurance column).
     WearAware,
+    /// Row-buffer-locality migration: promote the pages whose accesses
+    /// keep missing the NVM row buffer (Yoon et al., arXiv 1804.11040 —
+    /// row hits run at DRAM speed wherever they live).
+    Rbl,
 }
 
 impl PolicyKind {
@@ -304,6 +350,7 @@ impl PolicyKind {
             "hotness" | "migration" => Some(Self::Hotness),
             "hints" => Some(Self::Hints),
             "wear-aware" | "wearaware" | "wear" => Some(Self::WearAware),
+            "rbl" | "row-buffer" | "rowbuffer" => Some(Self::Rbl),
             _ => None,
         }
     }
@@ -314,6 +361,7 @@ impl PolicyKind {
             Self::Hotness => "hotness",
             Self::Hints => "hints",
             Self::WearAware => "wear-aware",
+            Self::Rbl => "rbl",
         }
     }
 }
@@ -408,6 +456,11 @@ impl SystemConfig {
                 // DRAM 50ns -> +50ns; write 50-500ns -> +225ns.
                 read_stall_ns: 50,
                 write_stall_ns: 225,
+                // Row-aware point (inert until `row_aware`): hits free,
+                // misses pay the write-scaled array penalty.
+                row_aware: false,
+                row_hit_stall_ns: 0,
+                row_miss_stall_ns: 225,
                 endurance: 1_000_000_000,
             },
             hmmu: HmmuConfig {
@@ -478,6 +531,9 @@ impl SystemConfig {
             size_bytes: self.dram.size_bytes,
             read_stall_ns: 0,
             write_stall_ns: 0,
+            row_aware: false,
+            row_hit_stall_ns: 0,
+            row_miss_stall_ns: 0,
             endurance: u64::MAX,
             energy: EnergyCoeffs::ddr4(),
         }));
@@ -486,6 +542,9 @@ impl SystemConfig {
             size_bytes: self.nvm.size_bytes,
             read_stall_ns: self.nvm.read_stall_ns,
             write_stall_ns: self.nvm.write_stall_ns,
+            row_aware: self.nvm.row_aware,
+            row_hit_stall_ns: self.nvm.row_hit_stall_ns,
+            row_miss_stall_ns: self.nvm.row_miss_stall_ns,
             endurance: self.nvm.endurance,
             energy: EnergyCoeffs::of(self.nvm_tech),
         });
@@ -550,6 +609,8 @@ impl SystemConfig {
             let p = TechPreset::of(classes[1]);
             self.nvm.read_stall_ns = p.read_stall_ns(rt);
             self.nvm.write_stall_ns = p.write_stall_ns(rt);
+            self.nvm.row_hit_stall_ns = p.row_hit_stall_ns();
+            self.nvm.row_miss_stall_ns = p.row_miss_stall_ns(rt);
             self.nvm.endurance = p.endurance;
             self.nvm_tech = classes[1];
         }
@@ -564,10 +625,26 @@ impl SystemConfig {
     /// Apply a Table I technology preset to the NVM emulation parameters.
     pub fn with_tech(mut self, tech: MemTech) -> Self {
         let p = TechPreset::of(tech);
-        self.nvm.read_stall_ns = p.read_stall_ns(self.dram.t_cas_ns + self.dram.t_rcd_ns);
-        self.nvm.write_stall_ns = p.write_stall_ns(self.dram.t_cas_ns + self.dram.t_rcd_ns);
+        let rt = self.dram.t_cas_ns + self.dram.t_rcd_ns;
+        self.nvm.read_stall_ns = p.read_stall_ns(rt);
+        self.nvm.write_stall_ns = p.write_stall_ns(rt);
+        self.nvm.row_hit_stall_ns = p.row_hit_stall_ns();
+        self.nvm.row_miss_stall_ns = p.row_miss_stall_ns(rt);
         self.nvm.endurance = p.endurance;
         self.nvm_tech = tech;
+        self
+    }
+
+    /// Switch every stalled tier to row-buffer-aware charging (`hymem
+    /// --row-aware`): open-row hits run at substrate (DRAM) speed, row
+    /// misses pay the class's array penalty. Flat-charging configs are
+    /// untouched by default — this is the explicit opt-in.
+    pub fn with_row_buffer(mut self) -> Self {
+        self.nvm.row_aware = true;
+        self.rank0 = self.rank0.map(TierSpec::with_row_buffer);
+        for t in &mut self.extra_tiers {
+            t.row_aware = true;
+        }
         self
     }
 
@@ -682,6 +759,8 @@ mod tests {
         assert_eq!(PolicyKind::parse("hotness"), Some(PolicyKind::Hotness));
         assert_eq!(PolicyKind::parse("STATIC"), Some(PolicyKind::Static));
         assert_eq!(PolicyKind::parse("first-touch"), Some(PolicyKind::FirstTouch));
+        assert_eq!(PolicyKind::parse("rbl"), Some(PolicyKind::Rbl));
+        assert_eq!(PolicyKind::parse("row-buffer"), Some(PolicyKind::Rbl));
         assert_eq!(PolicyKind::parse("bogus"), None);
     }
 
@@ -811,6 +890,31 @@ mod tests {
         assert_eq!(f.rber(10, u64::MAX), f.rber(0, u64::MAX), "unlimited endurance never wears");
         f.rber_base = 1.0;
         assert_eq!(f.rber(u64::MAX / 2, 1), 1.0, "clamped at certainty");
+    }
+
+    #[test]
+    fn row_buffer_mode_is_opt_in() {
+        let base = SystemConfig::paper();
+        assert!(!base.nvm.row_aware);
+        let specs = base.tier_specs();
+        assert!(!specs[0].row_aware && !specs[1].row_aware);
+        let rb = base.clone().with_row_buffer().tier_specs();
+        assert!(rb[1].row_aware);
+        assert_eq!(rb[1].row_hit_stall_ns, 0, "hits run at substrate speed");
+        assert_eq!(rb[1].row_miss_stall_ns, 225, "misses pay the array penalty");
+        // `has_stalls` follows the active charging mode.
+        assert!(rb[1].has_stalls());
+        let mut dram_rb = rb[0];
+        dram_rb.row_aware = true;
+        assert!(!dram_rb.has_stalls(), "row-aware DDR4 still injects nothing");
+        // Deeper stacks propagate the flag to extra tiers.
+        let three = SystemConfig::default_scaled(64)
+            .with_tiers(&[MemTech::Dram, MemTech::Pcm, MemTech::Xpoint3D])
+            .unwrap()
+            .with_row_buffer();
+        let spec2 = three.tier_specs()[2];
+        assert!(spec2.row_aware);
+        assert!(spec2.row_miss_stall_ns > 0);
     }
 
     #[test]

@@ -158,6 +158,22 @@ impl TechPreset {
         let ratio = self.write_ns as f64 / dram.write_ns as f64;
         ((ratio - 1.0).max(0.0) * dram_rt_ns as f64) as u64
     }
+
+    /// Row-buffer-aware stall on an open-row *hit*. Yoon et al.
+    /// (arXiv 1804.11040): a row-buffer hit is served from the sense
+    /// amps / row buffer, which costs roughly the same in DRAM and the
+    /// NVM classes — so the hit stall is zero for every class.
+    pub fn row_hit_stall_ns(&self) -> u64 {
+        0
+    }
+
+    /// Row-buffer-aware stall on a row *miss*: the array access is where
+    /// the NVM penalty lives (activation reads the slow cells, and the
+    /// restore/write-back into the array is write-dominated), so the
+    /// miss stall reuses the class's §III-F write-latency scaling.
+    pub fn row_miss_stall_ns(&self, dram_rt_ns: u64) -> u64 {
+        self.write_stall_ns(dram_rt_ns)
+    }
 }
 
 #[cfg(test)]
@@ -214,6 +230,22 @@ mod tests {
         assert!(p.write_stall_ns(28) > 3 * p.read_stall_ns(28));
         // PCM wears out before XPoint.
         assert!(p.endurance < TechPreset::of(MemTech::Xpoint3D).endurance);
+    }
+
+    #[test]
+    fn row_buffer_presets_follow_yoon() {
+        // Hits are class-independent (zero stall); misses pay the
+        // write-scaled array penalty, ordered DDR4 < memristor < xpoint
+        // < pcm like the flat write stalls they derive from.
+        for t in MemTech::ALL {
+            assert_eq!(TechPreset::of(t).row_hit_stall_ns(), 0, "{t:?}");
+        }
+        let miss = |t: MemTech| TechPreset::of(t).row_miss_stall_ns(28);
+        assert_eq!(miss(MemTech::Dram), 0);
+        assert!(miss(MemTech::Dram) < miss(MemTech::Memristor));
+        assert!(miss(MemTech::Memristor) < miss(MemTech::Xpoint3D));
+        assert!(miss(MemTech::Xpoint3D) < miss(MemTech::Pcm));
+        assert_eq!(miss(MemTech::Xpoint3D), 126); // (275/50 - 1) * 28
     }
 
     #[test]

@@ -37,6 +37,12 @@ pub struct HmmuCounters {
     pub tier_writes: Vec<u64>,
     /// First-touch placement decisions per tier.
     pub tier_pages_placed: Vec<u64>,
+    /// Device-level row-buffer outcomes per tier (rank order), mirrored
+    /// from the tier devices' [`crate::mem::DeviceStats`] by
+    /// [`crate::hmmu::Hmmu::sync_row_counters`] just before reports
+    /// clone the block — the RBL observability surface.
+    pub tier_row_hits: Vec<u64>,
+    pub tier_row_misses: Vec<u64>,
     /// Migration activity.
     pub migrations: u64,
     pub migration_bytes: u64,
@@ -118,6 +124,8 @@ impl std::fmt::Debug for HmmuCounters {
             tier_reads,
             tier_writes,
             tier_pages_placed,
+            tier_row_hits,
+            tier_row_misses,
             migrations,
             migration_bytes,
             epochs,
@@ -174,7 +182,9 @@ impl std::fmt::Debug for HmmuCounters {
         if self.tiers() > 2 {
             s.field("tier_reads", tier_reads)
                 .field("tier_writes", tier_writes)
-                .field("tier_pages_placed", tier_pages_placed);
+                .field("tier_pages_placed", tier_pages_placed)
+                .field("tier_row_hits", tier_row_hits)
+                .field("tier_row_misses", tier_row_misses);
         }
         s.finish_non_exhaustive()
     }
@@ -193,6 +203,8 @@ impl CodecState for HmmuCounters {
         e.put_u64_slice(&self.tier_reads);
         e.put_u64_slice(&self.tier_writes);
         e.put_u64_slice(&self.tier_pages_placed);
+        e.put_u64_slice(&self.tier_row_hits);
+        e.put_u64_slice(&self.tier_row_misses);
         e.put_u64(self.migrations);
         e.put_u64(self.migration_bytes);
         e.put_u64(self.epochs);
@@ -222,6 +234,8 @@ impl CodecState for HmmuCounters {
         self.tier_reads = d.u64_vec()?;
         self.tier_writes = d.u64_vec()?;
         self.tier_pages_placed = d.u64_vec()?;
+        self.tier_row_hits = d.u64_vec()?;
+        self.tier_row_misses = d.u64_vec()?;
         self.migrations = d.u64()?;
         self.migration_bytes = d.u64()?;
         self.epochs = d.u64()?;
@@ -252,7 +266,20 @@ impl HmmuCounters {
             tier_reads: vec![0; n],
             tier_writes: vec![0; n],
             tier_pages_placed: vec![0; n],
+            tier_row_hits: vec![0; n],
+            tier_row_misses: vec![0; n],
             ..Default::default()
+        }
+    }
+
+    /// Row-buffer hit rate of tier `t` (0 when the tier saw no traffic).
+    pub fn tier_row_hit_rate(&self, t: usize) -> f64 {
+        let hits = Self::tier(&self.tier_row_hits, t);
+        let total = hits + Self::tier(&self.tier_row_misses, t);
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
         }
     }
 
@@ -559,6 +586,29 @@ mod tests {
         restored.decode_state(&mut d).unwrap();
         assert!(d.is_done());
         assert_eq!(format!("{restored:?}"), format!("{c:?}"));
+    }
+
+    #[test]
+    fn row_hit_rate_derives_from_vectors_and_round_trips() {
+        let mut c = HmmuCounters::with_tiers(2);
+        c.tier_row_hits[1] = 30;
+        c.tier_row_misses[1] = 10;
+        assert!((c.tier_row_hit_rate(1) - 0.75).abs() < 1e-12);
+        assert_eq!(c.tier_row_hit_rate(0), 0.0, "no traffic, no rate");
+        // Two-tier Debug keeps the legacy layout (row vectors are a
+        // deep-stack / JSON / fingerprint surface).
+        let s = format!("{c:?}");
+        assert!(!s.contains("tier_row_hits"), "{s}");
+
+        let mut e = Encoder::new();
+        c.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut r = HmmuCounters::with_tiers(2);
+        let mut d = Decoder::new(&bytes);
+        r.decode_state(&mut d).unwrap();
+        assert!(d.is_done());
+        assert_eq!(r.tier_row_hits, c.tier_row_hits);
+        assert_eq!(r.tier_row_misses, c.tier_row_misses);
     }
 
     #[test]

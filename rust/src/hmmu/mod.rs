@@ -137,13 +137,17 @@ struct CplScratch {
 #[derive(Clone, Default)]
 struct PendingAccesses {
     pages: Vec<u64>,
-    /// Tier rank in bits 0..6, write flag in bit 7.
+    /// Tier rank in bits 0..5, row-miss flag in bit 6, write flag in
+    /// bit 7.
     meta: Vec<u8>,
     /// True between `begin_block` and `end_block`.
     active: bool,
 }
 
 const PENDING_WRITE_BIT: u8 = 0x80;
+/// The request's device access missed the row buffer (recorded only
+/// when the policy consumes the RBL signal).
+const PENDING_ROW_MISS_BIT: u8 = 0x40;
 
 /// The HMMU model.
 #[derive(Clone)]
@@ -292,6 +296,22 @@ impl Hmmu {
 
     pub fn dram_stats(&self) -> &crate::mem::DeviceStats {
         self.tier_stats(TierId::Dram)
+    }
+
+    /// Mirror every tier's device-level row-buffer outcome counters into
+    /// the HMMU counter block (rank order). Called by the platform just
+    /// before the counters are cloned into a report — the same pattern
+    /// as the `link_retries` mirror — so the row-hit-rate columns always
+    /// reflect the devices' cumulative truth.
+    pub fn sync_row_counters(&mut self) {
+        let n = self.tiers.len();
+        self.counters.tier_row_hits.resize(n, 0);
+        self.counters.tier_row_misses.resize(n, 0);
+        for (i, t) in self.tiers.iter().enumerate() {
+            let s = t.device().stats();
+            self.counters.tier_row_hits[i] = s.row_hits;
+            self.counters.tier_row_misses[i] = s.row_misses;
+        }
     }
 
     pub fn nvm_stats(&self) -> &crate::mem::DeviceStats {
@@ -454,7 +474,19 @@ impl Hmmu {
             self.policy.record_access(page, kind.is_write());
             self.counters.record_tier_access(device.index(), kind.is_write());
         }
-        let mut done = self.tiers[device.index()].issue(dev_addr, kind, bytes, t);
+        let (mut done, row_hit) = self.tiers[device.index()].issue_hit(dev_addr, kind, bytes, t);
+        // RBL sampling: the device's row-buffer outcome feeds the
+        // per-page miss-intensity counters — only when the policy
+        // actually consumes the signal, so every other policy's hot
+        // path (and its block meta encoding) is untouched.
+        if !row_hit && self.policy.wants_row_misses() {
+            if self.pending.active {
+                // The meta byte for *this* request was pushed just above.
+                *self.pending.meta.last_mut().unwrap() |= PENDING_ROW_MISS_BIT;
+            } else {
+                self.policy.record_row_miss(page);
+            }
+        }
 
         // --- fault layer: wear-driven errors, ECC, frame retirement ---
         if self.cfg.fault.mem_enabled() {
@@ -508,8 +540,13 @@ impl Hmmu {
         for (&page, &m) in pages.iter().zip(meta.iter()) {
             let is_write = m & PENDING_WRITE_BIT != 0;
             self.policy.record_access(page, is_write);
-            self.counters
-                .record_tier_access((m & !PENDING_WRITE_BIT) as usize, is_write);
+            if m & PENDING_ROW_MISS_BIT != 0 {
+                self.policy.record_row_miss(page);
+            }
+            self.counters.record_tier_access(
+                (m & !(PENDING_WRITE_BIT | PENDING_ROW_MISS_BIT)) as usize,
+                is_write,
+            );
         }
         self.pending.pages = pages;
         self.pending.meta = meta;

@@ -9,6 +9,7 @@
 mod first_touch;
 mod hints_policy;
 mod hotness;
+mod rbl;
 mod static_split;
 mod wear_aware;
 
@@ -18,6 +19,7 @@ pub use hotness::{
     select_boundary_into, BoundaryBias, HotnessEngine, HotnessPolicy, NativeHotnessEngine,
     PolicyStepOutput, SelectParams, HOTNESS_DECAY, HOTNESS_TILE, NEG_INF, WRITE_WEIGHT,
 };
+pub use rbl::RblPolicy;
 pub use static_split::StaticPolicy;
 pub use wear_aware::{WearAwarePolicy, WEAR_BIAS};
 
@@ -87,6 +89,7 @@ pub enum PolicyImpl {
     Hints(HintsPolicy),
     Hotness(HotnessPolicy),
     WearAware(WearAwarePolicy),
+    Rbl(RblPolicy),
 }
 
 impl PolicyImpl {
@@ -98,6 +101,7 @@ impl PolicyImpl {
             PolicyImpl::Hints(p) => p.name(),
             PolicyImpl::Hotness(p) => p.name(),
             PolicyImpl::WearAware(p) => p.name(),
+            PolicyImpl::Rbl(p) => p.name(),
         }
     }
 
@@ -110,6 +114,7 @@ impl PolicyImpl {
             PolicyImpl::Hints(p) => p.place(page, hint),
             PolicyImpl::Hotness(p) => p.place(page, hint),
             PolicyImpl::WearAware(p) => p.place(page, hint),
+            PolicyImpl::Rbl(p) => p.place(page, hint),
         }
     }
 
@@ -123,7 +128,27 @@ impl PolicyImpl {
             PolicyImpl::Hints(p) => p.record_access(page, is_write),
             PolicyImpl::Hotness(p) => p.record_access(page, is_write),
             PolicyImpl::WearAware(p) => p.record_access(page, is_write),
+            PolicyImpl::Rbl(p) => p.record_access(page, is_write),
         }
+    }
+
+    /// Account one row-buffer *miss* on `page` — the RBL sampling hook.
+    /// Only the RBL policy consumes the signal; for every other policy
+    /// this is a no-op the compiler folds away, so the existing hot
+    /// paths (and their timing/counter surfaces) are untouched.
+    #[inline]
+    pub fn record_row_miss(&mut self, page: u64) {
+        if let PolicyImpl::Rbl(p) = self {
+            p.record_row_miss(page);
+        }
+    }
+
+    /// Whether this policy consumes the row-buffer-outcome signal (the
+    /// HMMU samples misses only when true, keeping the block-mode meta
+    /// encoding and the per-request branch off the common path).
+    #[inline]
+    pub fn wants_row_misses(&self) -> bool {
+        matches!(self, PolicyImpl::Rbl(_))
     }
 
     /// Epoch boundary: migration pair selection (off the request path).
@@ -135,6 +160,7 @@ impl PolicyImpl {
             PolicyImpl::Hints(p) => p.epoch(view),
             PolicyImpl::Hotness(p) => p.epoch(view),
             PolicyImpl::WearAware(p) => p.epoch(view),
+            PolicyImpl::Rbl(p) => p.epoch(view),
         }
     }
 }
@@ -147,6 +173,7 @@ impl PolicyImpl {
             PolicyImpl::Hints(_) => 2,
             PolicyImpl::Hotness(_) => 3,
             PolicyImpl::WearAware(_) => 4,
+            PolicyImpl::Rbl(_) => 5,
         }
     }
 }
@@ -163,6 +190,7 @@ impl CodecState for PolicyImpl {
             PolicyImpl::Hints(p) => p.encode_state(e),
             PolicyImpl::Hotness(p) => p.encode_state(e),
             PolicyImpl::WearAware(p) => p.encode_state(e),
+            PolicyImpl::Rbl(p) => p.encode_state(e),
         }
     }
 
@@ -180,6 +208,7 @@ impl CodecState for PolicyImpl {
             PolicyImpl::Hints(p) => p.decode_state(d),
             PolicyImpl::Hotness(p) => p.decode_state(d),
             PolicyImpl::WearAware(p) => p.decode_state(d),
+            PolicyImpl::Rbl(p) => p.decode_state(d),
         }
     }
 }
@@ -200,6 +229,7 @@ pub fn build_policy(cfg: &SystemConfig, engine: Option<Box<dyn HotnessEngine>>) 
             engine.unwrap_or_else(|| Box::new(NativeHotnessEngine)),
         )),
         PolicyKind::WearAware => PolicyImpl::WearAware(WearAwarePolicy::new_tiered(pages, tiers)),
+        PolicyKind::Rbl => PolicyImpl::Rbl(RblPolicy::new_tiered(pages, tiers)),
     }
 }
 
@@ -215,6 +245,7 @@ mod tests {
             PolicyKind::Hotness,
             PolicyKind::Hints,
             PolicyKind::WearAware,
+            PolicyKind::Rbl,
         ] {
             let mut cfg = SystemConfig::default_scaled(16);
             cfg.policy = kind;

@@ -1,0 +1,290 @@
+//! Row-buffer-locality (RBL) migration policy — the Yoon et al.
+//! (arXiv 1804.11040) observation turned into a placement signal: a
+//! row-buffer *hit* costs roughly the same in DRAM and NVM, so the
+//! pages worth promoting are not the merely-hot ones but the ones whose
+//! accesses keep *missing* the NVM row buffer and paying the slow array
+//! access. The HMMU samples each request's row-buffer outcome (the
+//! `issue_hit` bit) into per-page miss counts; at the epoch boundary
+//! this policy decays them into a running **miss intensity** and ranks
+//! promotion candidates by it:
+//!
+//! ```text
+//! intensity' = DECAY * intensity + epoch_row_misses
+//! ```
+//!
+//! Promotion/demotion selection reuses the shared boundary machinery
+//! ([`select_boundary_into`]) over the intensity array at every tier
+//! boundary, so the cascade, hysteresis gate and tie-breaks are
+//! identical to the hotness/wear-aware policies — only the metric
+//! differs. Pages with high row-buffer locality (hot but mostly
+//! hitting) stay put: they already run at near-DRAM speed where they
+//! are.
+
+use super::hotness::{
+    select_boundary_into, BoundaryBias, SelectParams, HOTNESS_DECAY, HYSTERESIS, TIER_UNMAPPED,
+};
+use super::{Device, PlacementPolicy, PolicyView};
+use crate::alloc::Placement;
+use crate::hmmu::redirection::TierId;
+use crate::util::codec::{check_len, CodecState, Decoder, Encoder};
+use crate::util::error::Result;
+
+/// Row-buffer-locality epoch-migration policy.
+#[derive(Clone)]
+pub struct RblPolicy {
+    // audit: allow(codec-coverage) — geometry, validated not restored
+    pages: usize,
+    /// Number of tiers in the stack (2 = the classic pair).
+    // audit: allow(codec-coverage) — geometry, re-derived from config
+    tiers: usize,
+    /// Row misses observed this epoch, per page.
+    misses: Vec<f32>,
+    /// Decayed running miss intensity (the ranking metric).
+    intensity: Vec<f32>,
+    /// Per-page tier rank scratch, reused across epochs (drives the
+    /// boundary cascade).
+    // audit: allow(codec-coverage) — scratch, rebuilt every epoch
+    tier_of: Vec<u8>,
+    /// Selected migration pairs, reused across epochs (§Perf — same
+    /// zero-steady-state-growth contract as the other policies).
+    // audit: allow(codec-coverage) — scratch, refilled every epoch
+    pairs: Vec<(u64, u64)>,
+    pub epochs: u64,
+}
+
+impl CodecState for RblPolicy {
+    fn encode_state(&self, e: &mut Encoder) {
+        // Persistent state only: `tier_of`/`pairs` are rebuilt each
+        // epoch. Both miss arrays ride the checkpoint so a forked run
+        // replays migrations exactly like a cold one (fork == cold).
+        e.put_f32_slice(&self.misses);
+        e.put_f32_slice(&self.intensity);
+        e.put_u64(self.epochs);
+    }
+
+    fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
+        let misses = d.f32_vec()?;
+        check_len("rbl pages", self.pages, misses.len())?;
+        self.misses = misses;
+        let intensity = d.f32_vec()?;
+        check_len("rbl pages", self.pages, intensity.len())?;
+        self.intensity = intensity;
+        self.epochs = d.u64()?;
+        Ok(())
+    }
+}
+
+impl RblPolicy {
+    pub fn new(pages: u64) -> Self {
+        Self::new_tiered(pages, 2)
+    }
+
+    /// Policy for a `tiers`-deep stack.
+    pub fn new_tiered(pages: u64, tiers: usize) -> Self {
+        let pages = pages as usize;
+        RblPolicy {
+            pages,
+            tiers: tiers.max(2),
+            misses: vec![0.0; pages],
+            intensity: vec![0.0; pages],
+            tier_of: vec![TIER_UNMAPPED; pages],
+            pairs: Vec::new(),
+            epochs: 0,
+        }
+    }
+
+    /// Account one row-buffer miss against `page` — the per-request
+    /// sampling call (the HMMU invokes it only for this policy, so the
+    /// other policies' hot path is untouched).
+    #[inline]
+    pub fn record_row_miss(&mut self, page: u64) {
+        self.misses[page as usize] += 1.0;
+    }
+
+    /// Capacity of the recycled migration-pair buffer (tests pin that it
+    /// stops growing once warm).
+    pub fn pairs_capacity(&self) -> usize {
+        self.pairs.capacity()
+    }
+}
+
+impl PlacementPolicy for RblPolicy {
+    fn name(&self) -> &'static str {
+        "rbl"
+    }
+
+    fn place(&mut self, _page: u64, hint: Placement) -> Device {
+        match hint {
+            Placement::PreferNvm => TierId::Nvm,
+            _ => TierId::Dram,
+        }
+    }
+
+    fn record_access(&mut self, _page: u64, _is_write: bool) {
+        // Intentionally a no-op: RBL ranks purely by row-miss intensity.
+        // A page hammering an open row is fast wherever it lives.
+    }
+
+    fn epoch(&mut self, view: &PolicyView) -> &[(u64, u64)] {
+        self.epochs += 1;
+        self.tier_of.fill(TIER_UNMAPPED);
+        for (page, m) in view.table.iter_mapped() {
+            self.tier_of[page as usize] = m.device.rank();
+        }
+        // Same decay shape as the hotness step: fma per page.
+        for i in 0..self.pages {
+            self.intensity[i] = HOTNESS_DECAY * self.intensity[i] + self.misses[i];
+        }
+        // Every boundary runs the shared selection over the intensity
+        // array: promote the miss-heaviest pages of the lower rank,
+        // demote the miss-lightest pages of the upper rank (they hit
+        // their rows — or are idle — and lose least by moving down).
+        self.pairs.clear();
+        for upper in 0..(self.tiers as u8 - 1) {
+            select_boundary_into(
+                &self.intensity,
+                &self.tier_of,
+                upper,
+                SelectParams::new(view.budget(upper as usize) as usize, HYSTERESIS),
+                BoundaryBias::default(),
+                view.migrating,
+                &mut self.pairs,
+            );
+        }
+        self.misses.iter_mut().for_each(|x| *x = 0.0);
+        &self.pairs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmmu::redirection::RedirectionTable;
+    use crate::util::codec::{Decoder, Encoder};
+
+    fn view(t: &RedirectionTable) -> PolicyView<'_> {
+        PolicyView {
+            table: t,
+            migrating: &|_| false,
+            max_migrations: 4,
+            boundary_budgets: &[],
+        }
+    }
+
+    #[test]
+    fn miss_heavy_page_promoted_over_hit_heavy() {
+        let mut t = RedirectionTable::two_tier(8, 4, 8, 4096);
+        t.identity_map(); // 0-3 DRAM, 4-7 NVM
+        let mut p = RblPolicy::new(8);
+        // Page 4: many accesses, all row hits (no misses recorded).
+        // Page 5: fewer accesses but every one misses the row buffer.
+        for _ in 0..100 {
+            p.record_access(4, false);
+        }
+        for _ in 0..10 {
+            p.record_row_miss(5);
+        }
+        let pairs = p.epoch(&view(&t));
+        assert!(!pairs.is_empty());
+        assert_eq!(pairs[0].0, 5, "miss-heavy page must promote: {pairs:?}");
+        assert!(
+            !pairs.iter().any(|&(promo, _)| promo == 4),
+            "hit-heavy page stays in NVM: {pairs:?}"
+        );
+    }
+
+    #[test]
+    fn intensity_decays_across_epochs() {
+        let mut t = RedirectionTable::two_tier(4, 2, 4, 4096);
+        t.identity_map();
+        let mut p = RblPolicy::new(4);
+        for _ in 0..8 {
+            p.record_row_miss(2);
+        }
+        p.epoch(&view(&t));
+        assert_eq!(p.misses[2], 0.0, "epoch counts reset");
+        assert_eq!(p.intensity[2], 8.0);
+        p.epoch(&view(&t));
+        assert_eq!(p.intensity[2], 4.0, "decay halves a quiet epoch");
+    }
+
+    #[test]
+    fn deep_stack_cascade_promotes_one_rank_per_epoch() {
+        let mut t = RedirectionTable::new(8, &[2, 2, 4], 4096);
+        t.identity_map(); // 0-1 tier0, 2-3 tier1, 4-7 tier2
+        let mut p = RblPolicy::new_tiered(8, 3);
+        // Keep tier-0 pages miss-hot so the rank-0 boundary stays closed;
+        // tier-2 page 6 is the only deep miss generator.
+        for d in 0..2u64 {
+            for _ in 0..50 {
+                p.record_row_miss(d);
+            }
+        }
+        for _ in 0..20 {
+            p.record_row_miss(6);
+        }
+        let pairs = p.epoch(&view(&t)).to_vec();
+        assert!(!pairs.is_empty(), "cascade must fire");
+        assert_eq!(pairs[0].0, 6, "deep miss-heavy page climbs: {pairs:?}");
+        assert!(pairs[0].1 == 2 || pairs[0].1 == 3, "victim comes from tier 1: {pairs:?}");
+    }
+
+    #[test]
+    fn epoch_pair_buffer_reaches_steady_state() {
+        let mut t = RedirectionTable::two_tier(64, 32, 32, 4096);
+        t.identity_map();
+        let mut p = RblPolicy::new(64);
+        let mut warm = 0usize;
+        for epoch in 0..20 {
+            for page in 32..64u64 {
+                for _ in 0..50 {
+                    p.record_row_miss(page);
+                }
+            }
+            assert_eq!(p.epoch(&view(&t)).len(), 4, "epoch {epoch}");
+            if epoch == 0 {
+                warm = p.pairs_capacity();
+            } else {
+                assert_eq!(p.pairs_capacity(), warm, "epoch {epoch}: buffer grew");
+            }
+        }
+        assert!(warm <= 4, "capacity bounded by k: {warm}");
+    }
+
+    #[test]
+    fn codec_round_trip_preserves_intensity() {
+        let mut t = RedirectionTable::two_tier(8, 4, 8, 4096);
+        t.identity_map();
+        let mut p = RblPolicy::new(8);
+        for _ in 0..6 {
+            p.record_row_miss(5);
+        }
+        p.epoch(&view(&t));
+        for _ in 0..3 {
+            p.record_row_miss(6); // un-flushed epoch counts must ride too
+        }
+        let mut e = Encoder::new();
+        p.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut q = RblPolicy::new(8);
+        let mut d = Decoder::new(&bytes);
+        q.decode_state(&mut d).unwrap();
+        assert!(d.is_done());
+        assert_eq!(q.intensity, p.intensity);
+        assert_eq!(q.misses, p.misses);
+        assert_eq!(q.epochs, p.epochs);
+        // And the forked policy selects the same pairs as the original.
+        assert_eq!(p.epoch(&view(&t)).to_vec(), q.epoch(&view(&t)).to_vec());
+    }
+
+    #[test]
+    fn geometry_mismatch_fails_loudly() {
+        let p = RblPolicy::new(8);
+        let mut e = Encoder::new();
+        p.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut q = RblPolicy::new(16);
+        let mut d = Decoder::new(&bytes);
+        assert!(q.decode_state(&mut d).is_err());
+    }
+}

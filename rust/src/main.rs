@@ -76,6 +76,11 @@ fn config_from(args: &Args) -> SystemConfig {
             }
         }
     }
+    // Row-buffer-aware stall charging (applies to the full stack, so it
+    // must fold in after `--tech` / `--tiers` rebuilt the tier specs).
+    if args.flag("row-aware") {
+        cfg = cfg.with_row_buffer();
+    }
     cfg.seed = args.get_u64("seed", cfg.seed);
     if let Some(e) = args.get("epoch") {
         cfg.hmmu.epoch_requests = e.parse().unwrap_or(cfg.hmmu.epoch_requests);
@@ -615,9 +620,9 @@ fn print_help() {
 USAGE: hymem <command> [--options]
 
 COMMANDS:
-  run             --workload <name> [--policy static|first-touch|hotness|hints|wear-aware]
+  run             --workload <name> [--policy static|first-touch|hotness|hints|wear-aware|rbl]
                   [--ops N] [--scale N] [--tech 3dxpoint|stt-ram|...] [--flush]
-                  [--tiers dram+pcm+xpoint] [--native-engine]
+                  [--tiers dram+pcm+xpoint] [--row-aware] [--native-engine]
                   [--host-managed-dma] [--coalesce-writes]
                   [--rber R] wear-driven NVM bit-error rate (ECC + frame
                   retirement); [--link-ber R] PCIe TLP corruption/replay
@@ -628,7 +633,9 @@ COMMANDS:
                   [x --rber 0,1e-5,1e-4] [x --link-ber 0,1e-6] on
                   --threads N OS threads (default: all cores; bit-identical
                   to serial), writes --json <path> (default BENCH_sweep.json)
-                  [--ops N] [--host-managed-dma] [--coalesce-writes]
+                  [--ops N] [--row-aware] row-buffer-outcome stall charging
+                  (pair with --policies rbl for row-miss-guided migration)
+                  [--host-managed-dma] [--coalesce-writes]
                   [--fault-seed N]
                   [--warmup-ops N] pay warm-up once per workload group and
                   fork it across the grid; [--checkpoint-dir D] cache warm

@@ -63,6 +63,18 @@ impl<D: MemDevice> MemoryController<D> {
     /// Issue an access at `now`; returns its completion time, including
     /// any stall waiting for a queue slot.
     pub fn issue(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> Time {
+        self.issue_hit(addr, kind, bytes, now).0
+    }
+
+    /// [`Self::issue`], also exposing the device's row-buffer outcome —
+    /// the RBL signal the HMMU samples into per-page miss intensity.
+    pub fn issue_hit(
+        &mut self,
+        addr: u64,
+        kind: AccessKind,
+        bytes: u64,
+        now: Time,
+    ) -> (Time, bool) {
         // §Perf: retire completed entries lazily — only when the queue
         // looks full (amortized O(log depth) per issue), and only from
         // the heap front (single pass; the old Vec retained the whole
@@ -82,9 +94,9 @@ impl<D: MemDevice> MemoryController<D> {
         }
 
         let cmd_ns = self.clock.cycles_to_ns(self.cmd_cycles);
-        let (done, _hit) = self.device.access(addr, kind, bytes, start + cmd_ns);
+        let (done, hit) = self.device.access(addr, kind, bytes, start + cmd_ns);
         self.inflight.push(Reverse(done));
-        done
+        (done, hit)
     }
 
     pub fn device(&self) -> &D {
@@ -179,6 +191,16 @@ mod tests {
         m.issue(0, AccessKind::Read, 64, 1_000_000);
         assert_eq!(m.stalls, before, "no stall: retired entries drained");
         assert_eq!(m.outstanding(), 1);
+    }
+
+    #[test]
+    fn issue_hit_exposes_row_outcome() {
+        let mut m = mc();
+        let (t1, h1) = m.issue_hit(0, AccessKind::Read, 64, 0);
+        assert!(!h1, "cold bank is a row miss");
+        let (t2, h2) = m.issue_hit(64, AccessKind::Read, 64, t1);
+        assert!(h2, "same open row hits");
+        assert!(t2 > t1);
     }
 
     #[test]

@@ -63,6 +63,20 @@ impl DramDevice {
         &self.cfg
     }
 
+    /// Fold an injected stall into the device's occupancy: the mapped
+    /// bank stays busy for `stall_ns` past `done`, and the stall counts
+    /// toward `busy_ns`. The NVM wrapper (§III-F stall injection) calls
+    /// this so back-to-back accesses to a slow tier queue behind the
+    /// stall instead of seeing bare-DRAM bank availability. Bank-level
+    /// only: other banks keep overlapping, as they would on a real DIMM
+    /// whose slow cells stall the array, not the channel.
+    pub(crate) fn occupy_stall(&mut self, addr: u64, done: Time, stall_ns: u64) {
+        let (bank_idx, _) = self.map(addr);
+        let bank = &mut self.banks[bank_idx];
+        bank.next_free = bank.next_free.max(done + stall_ns);
+        self.stats.busy_ns += stall_ns;
+    }
+
     /// Unloaded round-trip latency of a row-miss read (used by the §III-F
     /// calibration path: "we measured the round trip time ... first").
     pub fn unloaded_miss_ns(&self) -> u64 {
@@ -98,6 +112,18 @@ impl CodecState for DramDevice {
 
 impl MemDevice for DramDevice {
     fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> (Time, bool) {
+        // Multi-line transfers map by their first address and charge one
+        // activation, which is only correct while the transfer stays
+        // inside one row. Every call site satisfies that by construction
+        // (64B demand lines and 512B DMA sub-blocks, both naturally
+        // aligned and ≤ `row_bytes`); guard the assumption so a future
+        // row-crossing caller fails loudly instead of being mischarged.
+        debug_assert!(
+            addr / self.cfg.row_bytes as u64
+                == (addr + bytes.max(1) - 1) / self.cfg.row_bytes as u64,
+            "transfer crosses a row boundary: addr={addr:#x} bytes={bytes} row_bytes={}",
+            self.cfg.row_bytes
+        );
         let (bank_idx, row) = self.map(addr);
         let bank = &mut self.banks[bank_idx];
 
@@ -131,7 +157,11 @@ impl MemDevice for DramDevice {
         };
         self.bus_free = done;
 
-        self.stats.record(kind, bytes, done - now, row_hit);
+        // Service time runs from the bank start, not the issue time:
+        // `done - now` would fold queueing behind earlier requests into
+        // `busy_ns`, letting a saturated device report more busy time
+        // than wall time and skewing the utilization/dynamic-power view.
+        self.stats.record(kind, bytes, done - start, row_hit);
         (done, row_hit)
     }
 
@@ -234,5 +264,54 @@ mod tests {
     fn unloaded_miss_matches_timing() {
         let d = dev();
         assert_eq!(d.unloaded_miss_ns(), 32);
+    }
+
+    #[test]
+    fn busy_ns_bounded_by_elapsed_under_contention() {
+        // Seeded burst: every request issued at t=0 to the same bank, so
+        // service windows are disjoint on that bank and summed busy time
+        // must stay within the wall-clock span — the old `done - now`
+        // accounting counted queueing as busy and exceeded it many-fold.
+        let mut d = dev();
+        let bank_span = d.config().row_bytes as u64 * d.config().banks as u64;
+        let line_slots = d.config().row_bytes as u64 / 64;
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        let mut elapsed = 0;
+        for _ in 0..200 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let row = (x >> 33) % 4; // four rows, all mapping to bank 0
+            let offset = ((x >> 7) % line_slots) * 64;
+            let kind = if x & 1 == 0 {
+                AccessKind::Read
+            } else {
+                AccessKind::Write
+            };
+            let (done, _) = d.access(row * bank_span + offset, kind, 64, 0);
+            elapsed = elapsed.max(done);
+        }
+        assert!(
+            d.stats().busy_ns <= elapsed,
+            "busy_ns {} exceeds elapsed {}",
+            d.stats().busy_ns,
+            elapsed
+        );
+        assert!(d.stats().busy_ns > 0);
+    }
+
+    #[test]
+    fn occupy_stall_extends_bank_and_busy_time() {
+        let mut d = dev();
+        let (t1, _) = d.access(0, AccessKind::Read, 64, 0);
+        let busy_before = d.stats().busy_ns;
+        d.occupy_stall(0, t1, 100);
+        assert_eq!(d.stats().busy_ns, busy_before + 100);
+        // Other banks are untouched by the stall window...
+        let row_bytes = d.config().row_bytes as u64;
+        let (t3, _) = d.access(row_bytes, AccessKind::Read, 64, 0);
+        assert!(t3 < t1 + 100);
+        // ...while the stalled bank serializes behind it.
+        let (t2, hit) = d.access(128, AccessKind::Read, 64, 0);
+        assert!(hit);
+        assert!(t2 >= t1 + 100);
     }
 }

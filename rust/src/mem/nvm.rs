@@ -110,10 +110,27 @@ impl CodecState for NvmDevice {
 impl MemDevice for NvmDevice {
     fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> (Time, bool) {
         let (done, hit) = self.inner.access(addr, kind, bytes, now);
-        let stall = match kind {
-            AccessKind::Read => self.cfg.read_stall_ns,
-            AccessKind::Write => self.cfg.write_stall_ns,
+        // Flat mode charges by access kind (the paper's §III-F point);
+        // row-aware mode charges by the substrate's row-buffer outcome
+        // (Yoon et al.: hits run at DRAM speed, misses pay the array).
+        let stall = if self.cfg.row_aware {
+            if hit {
+                self.cfg.row_hit_stall_ns
+            } else {
+                self.cfg.row_miss_stall_ns
+            }
+        } else {
+            match kind {
+                AccessKind::Read => self.cfg.read_stall_ns,
+                AccessKind::Write => self.cfg.write_stall_ns,
+            }
         };
+        // The stall occupies the device: without this, back-to-back
+        // accesses to the same bank saw bare-DRAM availability and a
+        // slow tier produced no extra queueing pressure upstream.
+        if stall > 0 {
+            self.inner.occupy_stall(addr, done, stall);
+        }
         if kind.is_write() {
             let w = self.wear.entry(addr / self.page_bytes).or_insert(0);
             *w += 1;
@@ -185,6 +202,69 @@ mod tests {
         let mut nvm = dev();
         nvm.access(0, AccessKind::Read, 64, 0);
         assert_eq!(nvm.max_wear(), 0);
+    }
+
+    #[test]
+    fn stall_occupies_bank() {
+        // Headline regression: two same-bank accesses issued at t=0 must
+        // serialize by at least the injected stall — the stall owns the
+        // bank, it is not just tacked onto the returned completion time.
+        let c = SystemConfig::paper();
+        let mut nvm = dev();
+        let (t1, _) = nvm.access(0, AccessKind::Read, 64, 0);
+        let (t2, _) = nvm.access(128, AccessKind::Read, 64, 0);
+        assert!(
+            t2 >= t1 + c.nvm.read_stall_ns,
+            "second access ({t2}) must queue behind the first's stall ({t1} + {})",
+            c.nvm.read_stall_ns
+        );
+        // And the stall counts as device busy time.
+        assert!(nvm.stats().busy_ns >= 2 * c.nvm.read_stall_ns);
+    }
+
+    #[test]
+    fn row_aware_charges_by_outcome() {
+        let c = SystemConfig::paper();
+        let mut cfg = c.nvm;
+        cfg.row_aware = true;
+        cfg.row_hit_stall_ns = 7;
+        cfg.row_miss_stall_ns = 100;
+        let mut nvm = NvmDevice::new(cfg, c.dram, c.hmmu.page_bytes);
+        // Cold bank: row miss pays the miss stall over the 32ns substrate.
+        let (t1, h1) = nvm.access(0, AccessKind::Read, 64, 0);
+        assert!(!h1);
+        assert_eq!(t1, 32 + 100);
+        // Open row: hit pays only the hit stall over tCAS + burst.
+        let (t2, h2) = nvm.access(64, AccessKind::Read, 64, t1);
+        assert!(h2);
+        assert_eq!(t2 - t1, 14 + 4 + 7);
+        // Writes charge the same way in row-aware mode (outcome, not kind).
+        let (t3, h3) = nvm.access(128, AccessKind::Write, 64, t2);
+        assert!(h3);
+        assert_eq!(t3 - t2, 14 + 4 + 7);
+    }
+
+    #[test]
+    fn row_fields_inert_without_row_aware() {
+        // Flat charging must ignore the row-aware fields entirely.
+        let c = SystemConfig::paper();
+        let mut weird = c.nvm;
+        weird.row_hit_stall_ns = 9999;
+        weird.row_miss_stall_ns = 12345;
+        let mut a = NvmDevice::new(c.nvm, c.dram, c.hmmu.page_bytes);
+        let mut b = NvmDevice::new(weird, c.dram, c.hmmu.page_bytes);
+        let mut t = 0;
+        for i in 0..32u64 {
+            let kind = if i % 3 == 0 {
+                AccessKind::Write
+            } else {
+                AccessKind::Read
+            };
+            let (ta, ha) = a.access(i * 512, kind, 64, t);
+            let (tb, hb) = b.access(i * 512, kind, 64, t);
+            assert_eq!((ta, ha), (tb, hb), "access {i}");
+            t = ta + 5;
+        }
     }
 
     #[test]

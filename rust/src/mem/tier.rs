@@ -25,11 +25,13 @@ pub enum TierDevice {
 }
 
 impl TierDevice {
-    /// Build the device for `spec`. A zero-stall DRAM-class tier gets the
-    /// bare DDR4 model (no wear map, no stall adds — the fast path);
-    /// everything else gets the stall-injection wrapper.
+    /// Build the device for `spec`. A DRAM-class tier with no effective
+    /// stalls under its charging mode gets the bare DDR4 model (no wear
+    /// map, no stall adds — the fast path); everything else gets the
+    /// stall-injection wrapper, charging flat per-kind stalls or
+    /// row-buffer-outcome stalls per `spec.row_aware`.
     pub fn build(spec: &TierSpec, dram_timing: DramConfig, page_bytes: u64) -> Self {
-        if spec.tech == MemTech::Dram && spec.read_stall_ns == 0 && spec.write_stall_ns == 0 {
+        if spec.tech == MemTech::Dram && !spec.has_stalls() {
             let mut timing = dram_timing;
             timing.size_bytes = spec.size_bytes;
             TierDevice::Dram(DramDevice::new(timing))
@@ -39,6 +41,9 @@ impl TierDevice {
                     size_bytes: spec.size_bytes,
                     read_stall_ns: spec.read_stall_ns,
                     write_stall_ns: spec.write_stall_ns,
+                    row_aware: spec.row_aware,
+                    row_hit_stall_ns: spec.row_hit_stall_ns,
+                    row_miss_stall_ns: spec.row_miss_stall_ns,
                     endurance: spec.endurance,
                 },
                 dram_timing,
@@ -177,6 +182,21 @@ mod tests {
             t = a + 10;
         }
         assert_eq!(tier.max_wear(), legacy.max_wear());
+    }
+
+    #[test]
+    fn row_aware_tier_hits_at_substrate_speed() {
+        let c = SystemConfig::paper();
+        let spec = TierSpec::of(MemTech::Pcm, 8 << 20, 28).with_row_buffer();
+        let mut tier = TierDevice::build(&spec, c.dram, c.hmmu.page_bytes);
+        assert!(matches!(tier, TierDevice::Nvm(_)));
+        let (t1, h1) = tier.access(0, AccessKind::Read, 64, 0);
+        assert!(!h1);
+        assert_eq!(t1, 32 + spec.row_miss_stall_ns);
+        // Open-row hit: no injected stall at all (PCM preset hit = 0).
+        let (t2, h2) = tier.access(64, AccessKind::Read, 64, t1);
+        assert!(h2);
+        assert_eq!(t2 - t1, 14 + 4);
     }
 
     #[test]

@@ -159,9 +159,11 @@ impl WarmPlatform {
         let native_wall_ns = wall1.elapsed().as_nanos() as u64;
 
         let mut backend = self.backend;
-        // Same link_retries mirror as `Platform::run_opts_mode` — the
-        // forked report must be byte-identical to a cold run's.
+        // Same link_retries / row-counter mirrors as
+        // `Platform::run_opts_mode` — the forked report must be
+        // byte-identical to a cold run's.
         backend.hmmu.counters.link_retries = backend.link.link_retries;
+        backend.hmmu.sync_row_counters();
         let specs = backend.hmmu.tier_specs().to_vec();
         let energy_inputs: Vec<_> = specs
             .iter()

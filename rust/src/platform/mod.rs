@@ -319,6 +319,9 @@ impl Platform {
         // counter block so every report surface (Debug golden, sweep
         // fingerprint, checkpoint) sees one consolidated fault tally.
         backend.hmmu.counters.link_retries = backend.link.link_retries;
+        // Same pattern for the per-tier row-buffer outcome counters,
+        // which live on the tier devices.
+        backend.hmmu.sync_row_counters();
 
         Ok(RunReport {
             workload: wl.name.to_string(),

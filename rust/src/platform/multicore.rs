@@ -257,9 +257,10 @@ pub fn run_multicore(
 
         let makespan = cores.iter().map(|c| c.core.stats.time_ns).max().unwrap_or(0);
         backend.drain(makespan);
-        // Mirror link replays into the shared counter block (same as the
-        // single-core report path).
+        // Mirror link replays and device row-buffer outcomes into the
+        // shared counter block (same as the single-core report path).
         backend.hmmu.counters.link_retries = backend.link.link_retries;
+        backend.hmmu.sync_row_counters();
 
         let reports: Vec<CoreReport> = cores
             .iter()

@@ -90,6 +90,23 @@ impl RunReport {
     /// Multi-line detail block.
     pub fn detail(&self) -> String {
         let (rb, wb) = self.counters.fig8_row();
+        // Row-buffer outcome line (per tier): rendered only when the
+        // mirror ran and the devices saw traffic, so legacy hand-built
+        // reports are unchanged.
+        let mut rowbuf = String::new();
+        let row_total: u64 = self.counters.tier_row_hits.iter().sum::<u64>()
+            + self.counters.tier_row_misses.iter().sum::<u64>();
+        if row_total > 0 {
+            rowbuf.push_str("\nrow buffer     ");
+            for t in 0..self.counters.tier_row_hits.len() {
+                rowbuf.push_str(&format!(
+                    " tier{t} {:.1}% hit ({}h/{}m)",
+                    self.counters.tier_row_hit_rate(t) * 100.0,
+                    self.counters.tier_row_hits.get(t).copied().unwrap_or(0),
+                    self.counters.tier_row_misses.get(t).copied().unwrap_or(0),
+                ));
+            }
+        }
         let mut tiers = String::new();
         if self.counters.tiers() > 2 {
             tiers.push_str(&format!("\ntiers           {}", self.topology));
@@ -117,7 +134,7 @@ impl RunReport {
              NVM wear        max {} writes/page\n\
              energy est.     {:.2} mJ dynamic; {}\n\
              latency         mean {:.0}ns p50 {}ns p99 {}ns max {}ns\n\
-             emulator        {} wall, {:.2} modeled-ns/wall-ns{tiers}",
+             emulator        {} wall, {:.2} modeled-ns/wall-ns{rowbuf}{tiers}",
             self.workload,
             self.policy,
             self.scale,
@@ -216,5 +233,17 @@ mod tests {
         let d = report().detail();
         assert!(d.contains("PCIe"));
         assert!(d.contains("NVM wear"));
+        assert!(!d.contains("row buffer"), "no outcomes, no row line: {d}");
+    }
+
+    #[test]
+    fn detail_renders_row_buffer_rates_when_present() {
+        let mut r = report();
+        r.counters.tier_row_hits = vec![30, 5];
+        r.counters.tier_row_misses = vec![10, 15];
+        let d = r.detail();
+        assert!(d.contains("row buffer"), "{d}");
+        assert!(d.contains("tier0 75.0% hit (30h/10m)"), "{d}");
+        assert!(d.contains("tier1 25.0% hit (5h/15m)"), "{d}");
     }
 }

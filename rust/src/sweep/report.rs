@@ -46,6 +46,12 @@ pub struct ScenarioResult {
     pub tier_writes: Vec<u64>,
     /// Per-tier first-touch placement decisions, rank order.
     pub tier_pages_placed: Vec<u64>,
+    /// Per-tier device row-buffer outcomes, rank order (mirrored from
+    /// the tier devices; the RBL observability surface).
+    pub tier_row_hits: Vec<u64>,
+    pub tier_row_misses: Vec<u64>,
+    /// Derived per-tier row-buffer hit rate (0 for a traffic-free tier).
+    pub tier_row_hit_rate: Vec<f64>,
     /// Per-tier resident page counts at end of run.
     pub tier_residency: Vec<u64>,
     /// Per-tier max page wear.
@@ -117,6 +123,11 @@ impl ScenarioResult {
             tier_reads: r.counters.tier_reads.clone(),
             tier_writes: r.counters.tier_writes.clone(),
             tier_pages_placed: r.counters.tier_pages_placed.clone(),
+            tier_row_hits: r.counters.tier_row_hits.clone(),
+            tier_row_misses: r.counters.tier_row_misses.clone(),
+            tier_row_hit_rate: (0..r.counters.tier_row_hits.len())
+                .map(|t| r.counters.tier_row_hit_rate(t))
+                .collect(),
             tier_residency: r.tier_residency.clone(),
             tier_wear: r.tier_wear.clone(),
             tier_energy_mj: r.energy.tiers.iter().map(|&(s, d)| s + d).collect(),
@@ -182,6 +193,11 @@ impl ScenarioResult {
             tier_reads: r.counters.tier_reads.clone(),
             tier_writes: r.counters.tier_writes.clone(),
             tier_pages_placed: r.counters.tier_pages_placed.clone(),
+            tier_row_hits: r.counters.tier_row_hits.clone(),
+            tier_row_misses: r.counters.tier_row_misses.clone(),
+            tier_row_hit_rate: (0..r.counters.tier_row_hits.len())
+                .map(|t| r.counters.tier_row_hit_rate(t))
+                .collect(),
             tier_residency: r.tier_residency.clone(),
             tier_wear: r.tier_wear.clone(),
             tier_energy_mj: Vec::new(),
@@ -235,7 +251,7 @@ impl ScenarioResult {
         let _ = write!(
             s,
             "{}|{}|{}|seed={:#x}|ops={}|cores={}|tiers={}|plat={}|native={}|slow={:?}|l2={:?}|serv={:?}|resid={:?}\
-             |mig={}|migB={}|epochs={}|dr={}|dw={}|nr={}|nw={}|tr={:?}|tw={:?}|tpp={:?}|tres={:?}|twear={:?}|tmj={:?}\
+             |mig={}|migB={}|epochs={}|dr={}|dw={}|nr={}|nw={}|tr={:?}|tw={:?}|tpp={:?}|trh={:?}|trm={:?}|trr={:?}|tres={:?}|twear={:?}|tmj={:?}\
              |hr={}|hw={}|hrb={}|hwb={}|fifo={}|reorder={}|dma={}|hdrSlots={}|hdrStalls={}\
              |dmaPcieB={}|dmaLinkStalls={}|wear={}|mj={:?}|lat=({:?},{},{},{})",
             self.name,
@@ -261,6 +277,9 @@ impl ScenarioResult {
             self.tier_reads,
             self.tier_writes,
             self.tier_pages_placed,
+            self.tier_row_hits,
+            self.tier_row_misses,
+            self.tier_row_hit_rate,
             self.tier_residency,
             self.tier_wear,
             self.tier_energy_mj,
@@ -320,6 +339,9 @@ impl ScenarioResult {
             .set("tier_reads", arr_u64(&self.tier_reads))
             .set("tier_writes", arr_u64(&self.tier_writes))
             .set("tier_pages_placed", arr_u64(&self.tier_pages_placed))
+            .set("tier_row_hits", arr_u64(&self.tier_row_hits))
+            .set("tier_row_misses", arr_u64(&self.tier_row_misses))
+            .set("tier_row_hit_rate", arr_f64(&self.tier_row_hit_rate))
             .set("tier_residency", arr_u64(&self.tier_residency))
             .set("tier_wear", arr_u64(&self.tier_wear))
             .set("tier_energy_mj", arr_f64(&self.tier_energy_mj))
@@ -503,6 +525,8 @@ mod tests {
         assert!(js.contains("\"schema\":\"hymem/sweep/v1\""));
         assert!(js.contains("\"scenarios\":["));
         assert!(js.contains("\"platform_time_ns\""));
+        assert!(js.contains("\"tier_row_hits\":["));
+        assert!(js.contains("\"tier_row_hit_rate\":["));
         let pretty = r.to_json().pretty();
         assert!(pretty.ends_with("}\n"));
     }

@@ -9,7 +9,7 @@
 //!    same warm-up + morph path per scenario. Across thread counts.
 //! 2. **Serialized == in-memory.** A checkpoint that round-trips through
 //!    the binary codec resumes bit-identically to the in-memory clone it
-//!    was saved from — across tier-stack depths and all five policies.
+//!    was saved from — across tier-stack depths and every policy.
 
 use hymem::config::{MemTech, PolicyKind, SystemConfig};
 use hymem::platform::{RunOpts, WarmPlatform};
@@ -97,6 +97,7 @@ fn checkpoint_roundtrip_matches_in_memory_fork_across_stacks_and_policies() {
         PolicyKind::Hints,
         PolicyKind::Hotness,
         PolicyKind::WearAware,
+        PolicyKind::Rbl,
     ];
     let opts = RunOpts {
         ops: OPS,

@@ -9,7 +9,10 @@ use hymem::hmmu::dma::DmaEngine;
 use hymem::hmmu::redirection::{Mapping, RedirectionTable, TierId};
 use hymem::hmmu::Hmmu;
 use hymem::mem::AccessKind;
+use hymem::platform::{Platform, RunOpts, WarmPlatform};
+use hymem::sweep::{run_sweep, Scenario};
 use hymem::util::prop::run_prop;
+use hymem::workload::spec;
 
 fn three_tier_cfg() -> SystemConfig {
     let mut cfg = SystemConfig::default_scaled(64)
@@ -193,4 +196,158 @@ fn migration_wear_lands_on_destination_tiers_only() {
         }
     }
     h.table.check_invariants().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Row-buffer battery: flat charging stays bit-identical with the row
+// fields present, RBL sweeps are thread-count deterministic, the
+// per-tier row counters mirror the device stats, and RBL policy state
+// rides the warm checkpoint (fork == cold).
+// ---------------------------------------------------------------------
+
+/// 2 stacks × 2 policies on one workload, flat charging.
+fn flat_grid(base: &SystemConfig) -> Vec<Scenario> {
+    let wl = spec::by_name("505.mcf").unwrap();
+    let mut out = Vec::new();
+    for (tag, stack) in [
+        ("2t", &[MemTech::Dram, MemTech::Xpoint3D][..]),
+        ("3t", &[MemTech::Dram, MemTech::Pcm, MemTech::Xpoint3D][..]),
+    ] {
+        for policy in [PolicyKind::Static, PolicyKind::Hotness] {
+            let mut cfg = base.clone().with_tiers(stack).unwrap();
+            cfg.policy = policy;
+            out.push(Scenario::new(format!("mcf/{tag}/{}", policy.name()), wl, cfg, 6_000));
+        }
+    }
+    out
+}
+
+#[test]
+fn flat_charging_bit_identical_with_inert_row_fields() {
+    // The row-buffer stall point rides in every TierSpec but must be
+    // dead weight until `row_aware` is set: scribbling garbage into the
+    // row fields of a flat-charging config may not move a single bit of
+    // the sweep fingerprint, across 2/3-tier stacks and both a static
+    // and a migrating policy.
+    let mut base = SystemConfig::default_scaled(64);
+    base.hmmu.epoch_requests = 2_000;
+    let pristine = run_sweep(&flat_grid(&base), 2).unwrap();
+
+    let mut garbage = flat_grid(&base);
+    for sc in &mut garbage {
+        assert!(!sc.cfg.nvm.row_aware, "flat grid must stay flat");
+        sc.cfg.nvm.row_hit_stall_ns = 999;
+        sc.cfg.nvm.row_miss_stall_ns = 12_345;
+        for t in &mut sc.cfg.extra_tiers {
+            t.row_hit_stall_ns = 777;
+            t.row_miss_stall_ns = 31_337;
+        }
+    }
+    let scribbled = run_sweep(&garbage, 2).unwrap();
+    assert_eq!(
+        pristine.deterministic_fingerprint(),
+        scribbled.deterministic_fingerprint(),
+        "inert row fields leaked into flat-charging results"
+    );
+}
+
+#[test]
+fn rbl_sweep_deterministic_across_thread_counts() {
+    // Row-aware charging + the RBL policy through the real sweep engine:
+    // identical fingerprints at 1/2/4 threads, and the new per-tier
+    // row-outcome columns must actually carry traffic.
+    let grid = || -> Vec<Scenario> {
+        let mut base = SystemConfig::default_scaled(64);
+        base.hmmu.epoch_requests = 2_000;
+        base.policy = PolicyKind::Rbl;
+        let base = base.with_row_buffer();
+        [spec::by_name("505.mcf").unwrap(), spec::by_name("557.xz").unwrap()]
+            .into_iter()
+            .map(|wl| Scenario::new(format!("{}/rbl", wl.name), wl, base.clone(), 8_000))
+            .collect()
+    };
+    let serial = run_sweep(&grid(), 1).unwrap();
+    let fp = serial.deterministic_fingerprint();
+    for r in &serial.scenarios {
+        let total: u64 = r.tier_row_hits.iter().sum::<u64>()
+            + r.tier_row_misses.iter().sum::<u64>();
+        assert!(total > 0, "{}: no row outcomes surfaced", r.name);
+        assert_eq!(r.tier_row_hit_rate.len(), r.tier_row_hits.len(), "{}", r.name);
+    }
+    for threads in [2usize, 4] {
+        let par = run_sweep(&grid(), threads).unwrap();
+        assert_eq!(
+            fp,
+            par.deterministic_fingerprint(),
+            "rbl sweep (threads={threads}) diverged from serial"
+        );
+    }
+}
+
+#[test]
+fn row_counters_mirror_device_stats() {
+    // The platform report's per-tier row vectors are a verbatim mirror
+    // of the device stats — on a two-tier run, rank 0 is the DRAM
+    // device and rank 1 the NVM device, both reported alongside.
+    let mut cfg = SystemConfig::default_scaled(64).with_row_buffer();
+    cfg.policy = PolicyKind::Rbl;
+    cfg.hmmu.epoch_requests = 2_000;
+    let wl = spec::by_name("505.mcf").unwrap();
+    let r = Platform::new(cfg)
+        .run_opts(
+            &wl,
+            RunOpts {
+                ops: 20_000,
+                flush_at_end: false,
+            },
+        )
+        .unwrap();
+    assert_eq!(r.counters.tier_row_hits, vec![r.dram_stats.row_hits, r.nvm_stats.row_hits]);
+    assert_eq!(r.counters.tier_row_misses, vec![r.dram_stats.row_misses, r.nvm_stats.row_misses]);
+    let total: u64 = r.counters.tier_row_hits.iter().sum::<u64>()
+        + r.counters.tier_row_misses.iter().sum::<u64>();
+    assert!(total > 0, "run must observe row outcomes");
+    // The Hmmu-level mirror agrees with the per-tier device stats on a
+    // deeper stack too.
+    let cfg = three_tier_cfg().with_row_buffer();
+    let page_bytes = cfg.hmmu.page_bytes;
+    let total_pages = cfg.total_pages();
+    let mut h = Hmmu::new(cfg, None);
+    let mut t = 0;
+    for p in 0..total_pages.min(6000) {
+        t = h.access(p * page_bytes, AccessKind::Read, 64, t + 20);
+    }
+    h.drain(t + 100_000_000);
+    h.sync_row_counters();
+    for rank in 0..3u8 {
+        let stats = h.tier_stats(TierId(rank));
+        assert_eq!(h.counters.tier_row_hits[rank as usize], stats.row_hits);
+        assert_eq!(h.counters.tier_row_misses[rank as usize], stats.row_misses);
+    }
+}
+
+#[test]
+fn rbl_state_rides_the_warm_checkpoint() {
+    // RBL's per-page miss intensity is policy state: a serialized warm
+    // checkpoint must resume bit-identically to the in-memory fork it
+    // was saved from, so fork == cold holds for `--policies rbl` too.
+    let mut cfg = SystemConfig::default_scaled(64).with_row_buffer();
+    cfg.policy = PolicyKind::Rbl;
+    cfg.hmmu.epoch_requests = 2_000;
+    let wl = spec::by_name("505.mcf").unwrap();
+    let opts = RunOpts {
+        ops: 6_000,
+        flush_at_end: false,
+    };
+    let mut warm = WarmPlatform::new(cfg.clone(), &wl, opts);
+    warm.warm_up(3_000);
+    let bytes = warm.save();
+    let restored = WarmPlatform::load(&bytes, cfg, &wl, opts).unwrap();
+    let a = warm.run_to_completion().unwrap();
+    let b = restored.run_to_completion().unwrap();
+    assert_eq!(a.platform_time_ns, b.platform_time_ns);
+    assert_eq!(format!("{:#?}", a.counters), format!("{:#?}", b.counters));
+    assert_eq!(a.tier_residency, b.tier_residency);
+    assert_eq!(a.counters.tier_row_hits, b.counters.tier_row_hits);
+    assert_eq!(a.counters.tier_row_misses, b.counters.tier_row_misses);
 }
