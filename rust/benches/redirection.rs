@@ -1,0 +1,70 @@
+//! Sharded vs monolithic redirection table on the single-threaded fast
+//! path.
+//!
+//! The shard layer must be free when nobody contends: both rows drive
+//! the identical translate-heavy churn (the per-access hot path, plus
+//! cross-shard swaps at migration-ish frequency) through a 1-shard
+//! (monolithic) and a `DEFAULT_SHARDS` table. The property battery
+//! (`tests/redirection_shard_props.rs`) pins them bit-identical; this
+//! pair pins the sharded side not-slower (scripts/check_bench_gate.py
+//! on BENCH_redirection.json).
+
+use hymem::hmmu::redirection::DEFAULT_SHARDS;
+use hymem::hmmu::RedirectionTable;
+use hymem::util::bench::BenchSuite;
+
+/// 64K pages (256 MiB of 4 KiB pages), DRAM half the footprint so the
+/// stack holds a realistic mix of fast- and slow-tier mappings.
+const HOST_PAGES: u64 = 1 << 16;
+const FRAMES: [u32; 2] = [1 << 15, 1 << 16];
+/// Table ops per measured batch: 15 translates per swap, roughly the
+/// migration rate a hotness epoch sustains against its access stream.
+const BATCH: u64 = 160_000;
+
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn churn_row(suite: &mut BenchSuite, name: &str, nshards: usize) {
+    let mut table = RedirectionTable::new_with_shards(HOST_PAGES, &FRAMES, 4096, nshards);
+    table.identity_map();
+    let mut seed = 0x5EED ^ nshards as u64;
+    let mut sink = 0u64;
+    suite.bench_items(name, BATCH, || {
+        let mut ops = 0u64;
+        while ops < BATCH {
+            for _ in 0..15 {
+                let addr = (splitmix(&mut seed) % HOST_PAGES) * 4096 + 128;
+                if let Some((_, dev_addr)) = table.translate(addr) {
+                    sink ^= dev_addr;
+                }
+            }
+            let a = splitmix(&mut seed) % HOST_PAGES;
+            let b = splitmix(&mut seed) % HOST_PAGES;
+            if a != b {
+                table.swap(a, b).unwrap();
+            }
+            ops += 16;
+        }
+        std::hint::black_box(sink);
+        BATCH
+    });
+    table.check_invariants().expect("churn must preserve invariants");
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("redirection table: monolithic vs sharded fast path");
+    suite.header();
+
+    churn_row(&mut suite, "redirection/mono (translate+swap mix)", 1);
+    churn_row(&mut suite, "redirection/sharded (translate+swap mix)", DEFAULT_SHARDS);
+
+    suite
+        .write_json("BENCH_redirection.json")
+        .expect("writing BENCH_redirection.json");
+    suite.finish();
+}

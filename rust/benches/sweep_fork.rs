@@ -65,6 +65,36 @@ fn main() {
         grid_ops
     });
 
+    // Intra-group fork parallelism: one warm group × 6 members (policy
+    // and stall are fork axes, so a single workload is a single group).
+    // Serial forks the members on one worker; parallel fans the same
+    // members across 4 workers after the one shared warm-up. Results
+    // are bit-identical (`tests/checkpoint_fork.rs`); the gate pins the
+    // parallel row not-slower.
+    let members = {
+        let mut base = SystemConfig::default_scaled(64);
+        base.hmmu.epoch_requests = 2_000;
+        let grid = Scenario::grid(
+            &[spec::by_name("505.mcf").unwrap()],
+            &[PolicyKind::Static, PolicyKind::Hotness],
+            &base,
+            OPS,
+        );
+        Scenario::stall_grid(&grid, &[(50, 225), (200, 900), (400, 1_800)])
+    };
+    assert_eq!(members.len(), 6);
+    let member_ops = members.len() as u64 * OPS;
+    suite.bench_items("sweep_group/serial (6-member group)", member_ops, || {
+        let r = run_sweep_forked(&members, 1, &forked).unwrap();
+        assert_eq!(r.scenarios.len(), 6);
+        member_ops
+    });
+    suite.bench_items("sweep_group/parallel (6-member group)", member_ops, || {
+        let r = run_sweep_forked(&members, 4, &forked).unwrap();
+        assert_eq!(r.scenarios.len(), 6);
+        member_ops
+    });
+
     suite
         .write_json("BENCH_sweep_fork.json")
         .expect("writing BENCH_sweep_fork.json");

@@ -47,6 +47,14 @@ PAIRS = [
     ("tier_access/rowbuf (batch 4096)", "tier_access/flat (batch 4096)", None),
     # Strict: forked sweep must beat cold replay outright (ratio > 1.0).
     ("sweep/cold (8-point grid)", "sweep/forked (8-point grid)", 1.0),
+    # Sharding must be free on the uncontended fast path: the sharded
+    # table may not run slower than the 1-shard (monolithic) build on
+    # the identical translate+swap churn.
+    ("redirection/mono (translate+swap mix)", "redirection/sharded (translate+swap mix)", None),
+    # Fanning a warm group's members across the pool may not lose to
+    # forking them serially (it normally wins ~Nx on the tails; the
+    # noise tolerance absorbs starved 1-2 vCPU runners).
+    ("sweep_group/serial (6-member group)", "sweep_group/parallel (6-member group)", None),
 ]
 
 

@@ -226,7 +226,11 @@ pub fn select_boundary_into(
 }
 
 /// The hotness math, swappable between native Rust and the XLA artifact.
-pub trait HotnessEngine {
+///
+/// `Send + Sync` so warm platform state (which boxes an engine) can be
+/// shared by reference across the sweep worker pool when group members
+/// fork in parallel.
+pub trait HotnessEngine: Send + Sync {
     /// `reads`/`writes`: epoch counters; `prev`: hotness from last epoch;
     /// `in_dram`: 1.0 where the page is DRAM-resident, 0.0 NVM-resident
     /// (unmapped pages have 0 counters and are never candidates).

@@ -1,5 +1,6 @@
 //! Address redirection table — the paper's §III-B "heterogeneity
-//! transparency" mechanism, generalized to an N-tier stack.
+//! transparency" mechanism, generalized to an N-tier stack and sharded
+//! into power-of-two page-range stripes.
 //!
 //! The OS sees one flat physical space (the BAR window); the HMMU
 //! translates each host page to a *device frame* in one of the stack's
@@ -7,6 +8,22 @@
 //! placement policy, and page migration is a frame swap in this table.
 //! Frame pools and residency counters are **per tier** — the binary
 //! `dram`/`nvm` pair is just the two-tier special case.
+//!
+//! # Shard layout
+//!
+//! The flat page space is striped across [`DEFAULT_SHARDS`] shards in
+//! 64-page regions: stripe `t` (pages `t*64 .. t*64+64`) belongs to
+//! shard `t % nshards`. Each shard owns its stripe entries plus
+//! per-tier frame pools (frames `f` with `f % nshards == shard`),
+//! retired pools, and O(1) mapped/residency counters that sum to the
+//! global view — so future per-shard locking partitions *all* mutable
+//! state, not just the entry array. The single-threaded fast path stays
+//! lock-free, and allocation is **bit-identical** to the monolithic
+//! table: pools are pop-only (frames are consumed by `place`, and
+//! retirement moves frames to the retired pool, never back to a free
+//! list), so the monolithic allocator always hands out the globally
+//! lowest free frame of a tier — which the sharded table reproduces
+//! exactly by popping the minimum across shard pool heads.
 
 use crate::bail;
 use crate::util::codec::{check_len, CodecState, Decoder, Encoder};
@@ -72,39 +89,84 @@ const UNMAPPED: u32 = u32::MAX;
 const FRAME_BITS: u32 = 28;
 const FRAME_MASK: u32 = (1 << FRAME_BITS) - 1;
 
+/// Pages per shard stripe: 2^6 = 64 pages (256 KiB of 4 KiB pages), so
+/// spatially-local traffic stays inside one shard while distinct
+/// workload regions spread across all of them.
+const STRIPE_SHIFT: u32 = 6;
+const STRIPE_LEN: u64 = 1 << STRIPE_SHIFT;
+const STRIPE_MASK: u64 = STRIPE_LEN - 1;
+
+/// Default shard count (power of two). One shard per plausible worker
+/// core keeps future per-shard locking uncontended; a count of 1 is the
+/// monolithic table (the shard-property tests pin 1 vs N bit-identity).
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// One page-range shard: stripe entries plus the shard's slice of every
+/// tier's frame pool, retired pool, and counters.
+#[derive(Clone, Debug)]
+struct Shard {
+    /// Packed entries for this shard's stripes, stripe-major: local
+    /// index `(k << STRIPE_SHIFT) | offset` is the k-th stripe owned by
+    /// the shard. Tail padding past `host_pages` stays `UNMAPPED`.
+    entries: Vec<u32>,
+    /// Per-tier free pools over frames `f` with `f % nshards == shard`,
+    /// descending (popped from the back → the shard's lowest frame
+    /// first).
+    free: Vec<Vec<u32>>,
+    /// Per-tier retired frames owned by this shard.
+    retired: Vec<Vec<u32>>,
+    /// Mapped pages owned by this shard.
+    mapped: u64,
+    /// Per-tier residency of this shard's pages; sums to `mapped`.
+    resident: Vec<u64>,
+}
+
 /// Host-page → tier-frame redirection table with per-tier frame free
-/// lists and residency counters.
+/// lists and residency counters, sharded by page range.
 #[derive(Clone, Debug)]
 pub struct RedirectionTable {
     // audit: allow(codec-coverage) — geometry, re-derived from config
     page_bytes: u64,
-    /// Packed entries: bits 28..31 = tier rank, bits 0..27 = frame;
-    /// `UNMAPPED` = not yet placed.
-    entries: Vec<u32>,
-    /// Per-tier free frame lists (popped from the back → low frames
-    /// allocate first).
-    free: Vec<Vec<u32>>,
+    /// Size of the flat host space. Shard entry arrays are padded to
+    /// whole stripes, so the true page count is stored explicitly (and
+    /// validated on decode).
+    host_pages: u64,
+    // audit: allow(codec-coverage) — geometry, re-derived from shard count
+    shard_bits: u32,
+    // audit: allow(codec-coverage) — geometry, re-derived from shard count
+    shard_mask: usize,
     /// Frame capacity per tier.
     // audit: allow(codec-coverage) — geometry, validated not restored
     frames: Vec<u32>,
+    /// Page-range shards; every mutable field below is the sum of its
+    /// per-shard counterparts.
+    shards: Vec<Shard>,
     /// Mapped-page count, maintained on place (§Perf: keeps residency
     /// reporting O(1) instead of a full-table walk).
     mapped: u64,
     /// Mapped pages currently backed by each tier, maintained on
     /// place/swap; sums to `mapped`.
     resident: Vec<u64>,
-    /// Per-tier retired frames (uncorrectable/dead): permanently removed
-    /// from circulation — never pushed back to a free list — so the
-    /// tier's effective capacity shrinks as the device wears out.
-    retired: Vec<Vec<u32>>,
 }
 
 impl RedirectionTable {
     /// `host_pages` = size of the flat space; `tier_frames` = frame
     /// capacity per tier, rank order. Pages start **unmapped** (policies
     /// place them on first touch) unless [`Self::identity_map`] is
-    /// called.
+    /// called. Uses [`DEFAULT_SHARDS`] page-range shards.
     pub fn new(host_pages: u64, tier_frames: &[u32], page_bytes: u64) -> Self {
+        Self::new_with_shards(host_pages, tier_frames, page_bytes, DEFAULT_SHARDS)
+    }
+
+    /// [`Self::new`] with an explicit shard count (power of two).
+    /// `nshards == 1` is the monolithic table; the shard property tests
+    /// pin every count bit-identical to it.
+    pub fn new_with_shards(
+        host_pages: u64,
+        tier_frames: &[u32],
+        page_bytes: u64,
+        nshards: usize,
+    ) -> Self {
         assert!(
             (2..=crate::config::MAX_TIERS).contains(&tier_frames.len()),
             "tier stack must hold 2..=8 tiers"
@@ -114,16 +176,44 @@ impl RedirectionTable {
             "tier frame count exceeds the packed-entry range"
         );
         assert!(host_pages <= tier_frames.iter().map(|&f| f as u64).sum());
-        // Free lists popped from the back → allocate low frames first.
-        let free: Vec<Vec<u32>> = tier_frames.iter().map(|&f| (0..f).rev().collect()).collect();
+        assert!(
+            nshards.is_power_of_two(),
+            "shard count must be a power of two"
+        );
+        let tiers = tier_frames.len();
+        let stripes = host_pages.div_ceil(STRIPE_LEN);
+        let mut shards: Vec<Shard> = (0..nshards)
+            .map(|s| {
+                // Stripes are dealt round-robin: shard s owns stripe t
+                // iff t % nshards == s.
+                let own = stripes / nshards as u64
+                    + u64::from((s as u64) < stripes % nshards as u64);
+                Shard {
+                    entries: vec![UNMAPPED; (own * STRIPE_LEN) as usize],
+                    free: vec![Vec::new(); tiers],
+                    retired: vec![Vec::new(); tiers],
+                    mapped: 0,
+                    resident: vec![0; tiers],
+                }
+            })
+            .collect();
+        // Pools popped from the back → each shard allocates its lowest
+        // frame first; `pop_lowest` takes the minimum across shards.
+        let mask = nshards - 1;
+        for (t, &f) in tier_frames.iter().enumerate() {
+            for frame in (0..f).rev() {
+                shards[frame as usize & mask].free[t].push(frame);
+            }
+        }
         RedirectionTable {
             page_bytes,
-            entries: vec![UNMAPPED; host_pages as usize],
-            free,
+            host_pages,
+            shard_bits: nshards.trailing_zeros(),
+            shard_mask: mask,
             frames: tier_frames.to_vec(),
+            shards,
             mapped: 0,
-            resident: vec![0; tier_frames.len()],
-            retired: vec![Vec::new(); tier_frames.len()],
+            resident: vec![0; tiers],
         }
     }
 
@@ -146,8 +236,24 @@ impl RedirectionTable {
         }
     }
 
+    /// (shard, local entry index) of a host page.
+    #[inline]
+    fn locate(&self, page: u64) -> (usize, usize) {
+        assert!(page < self.host_pages, "page {page} out of range");
+        let stripe = page >> STRIPE_SHIFT;
+        let shard = stripe as usize & self.shard_mask;
+        let local = ((stripe >> self.shard_bits) << STRIPE_SHIFT) | (page & STRIPE_MASK);
+        (shard, local as usize)
+    }
+
+    #[inline]
+    fn slot(&self, page: u64) -> u32 {
+        let (s, l) = self.locate(page);
+        self.shards[s].entries[l]
+    }
+
     pub fn host_pages(&self) -> u64 {
-        self.entries.len() as u64
+        self.host_pages
     }
 
     pub fn page_bytes(&self) -> u64 {
@@ -159,32 +265,68 @@ impl RedirectionTable {
         self.frames.len()
     }
 
+    /// Number of page-range shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Pop the globally lowest free frame of tier `t` — the monolithic
+    /// allocation order, recovered as the min across shard pool heads
+    /// (each head is its shard's minimum; pools are pop-only, so the
+    /// partition never loses the global order).
+    fn pop_lowest(&mut self, t: usize) -> Option<u32> {
+        let mut best_shard = usize::MAX;
+        let mut best_frame = u32::MAX;
+        for (s, sh) in self.shards.iter().enumerate() {
+            if let Some(&head) = sh.free[t].last() {
+                if head < best_frame {
+                    best_frame = head;
+                    best_shard = s;
+                }
+            }
+        }
+        if best_shard == usize::MAX {
+            return None;
+        }
+        self.shards[best_shard].free[t].pop()
+    }
+
     /// Identity mapping: host pages fill the tiers in rank order 1:1
     /// (the paper's "straightforward approach" / the static policy's
     /// starting point).
     pub fn identity_map(&mut self) {
         debug_assert!(
-            self.retired.iter().all(Vec::is_empty),
+            self.shards.iter().all(|s| s.retired.iter().all(Vec::is_empty)),
             "identity_map re-issues every frame; only valid on a fresh table"
         );
+        for sh in &mut self.shards {
+            sh.mapped = 0;
+            sh.resident.fill(0);
+            for pool in &mut sh.free {
+                pool.clear();
+            }
+        }
         self.resident.fill(0);
         let mut tier = 0usize;
         let mut next_frame = 0u32;
-        for page in 0..self.entries.len() {
+        for page in 0..self.host_pages {
             while next_frame >= self.frames[tier] {
                 tier += 1;
                 next_frame = 0;
             }
-            self.entries[page] = Self::pack(Mapping {
+            let (s, l) = self.locate(page);
+            self.shards[s].entries[l] = Self::pack(Mapping {
                 device: TierId(tier as u8),
                 frame: next_frame,
             });
+            self.shards[s].mapped += 1;
+            self.shards[s].resident[tier] += 1;
             self.resident[tier] += 1;
             next_frame += 1;
         }
         // Remaining frames of the partially-filled tier and every deeper
-        // tier stay free.
-        for (t, f) in self.free.iter_mut().enumerate() {
+        // tier stay free, dealt back to their owning shards.
+        for t in 0..self.tiers() {
             let used = if t < tier {
                 self.frames[t]
             } else if t == tier {
@@ -192,15 +334,17 @@ impl RedirectionTable {
             } else {
                 0
             };
-            *f = (used..self.frames[t]).rev().collect();
+            for frame in (used..self.frames[t]).rev() {
+                self.shards[frame as usize & self.shard_mask].free[t].push(frame);
+            }
         }
-        self.mapped = self.entries.len() as u64;
+        self.mapped = self.host_pages;
     }
 
     /// Look up a host page; `None` if unmapped.
     #[inline]
     pub fn lookup(&self, page: u64) -> Option<Mapping> {
-        let e = self.entries[page as usize];
+        let e = self.slot(page);
         if e == UNMAPPED {
             None
         } else {
@@ -223,14 +367,15 @@ impl RedirectionTable {
     /// exactly the legacy behavior (DRAM→NVM, NVM→DRAM). Returns the
     /// final mapping.
     pub fn place(&mut self, page: u64, tier: TierId) -> Result<Mapping> {
-        if self.entries[page as usize] != UNMAPPED {
+        let (ps, pl) = self.locate(page);
+        if self.shards[ps].entries[pl] != UNMAPPED {
             bail!("page {page} already mapped");
         }
         let start = tier.index().min(self.tiers() - 1);
         let order = (start..self.tiers()).chain((0..start).rev());
         let mut found = None;
         for t in order {
-            if let Some(f) = self.free[t].pop() {
+            if let Some(f) = self.pop_lowest(t) {
                 found = Some(Mapping {
                     device: TierId(t as u8),
                     frame: f,
@@ -241,36 +386,51 @@ impl RedirectionTable {
         let Some(m) = found else {
             bail!("no free frames");
         };
-        self.entries[page as usize] = Self::pack(m);
+        self.shards[ps].entries[pl] = Self::pack(m);
+        self.shards[ps].mapped += 1;
+        self.shards[ps].resident[m.device.index()] += 1;
         self.mapped += 1;
         self.resident[m.device.index()] += 1;
         Ok(m)
     }
 
     /// Swap the frames of two host pages (post-DMA commit of a migration).
-    /// Residency counters are conserved: the two entries trade places, so
-    /// the multiset of mapped frames is unchanged.
+    /// Residency counters are conserved globally: the two entries trade
+    /// places, so the multiset of mapped frames is unchanged — but when
+    /// the pages live in different shards *and* different tiers, the
+    /// per-shard residency moves with them.
     pub fn swap(&mut self, page_a: u64, page_b: u64) -> Result<()> {
-        let (a, b) = (self.entries[page_a as usize], self.entries[page_b as usize]);
+        let (sa, la) = self.locate(page_a);
+        let (sb, lb) = self.locate(page_b);
+        let a = self.shards[sa].entries[la];
+        let b = self.shards[sb].entries[lb];
         if a == UNMAPPED || b == UNMAPPED {
             bail!("swap of unmapped page");
         }
-        self.entries[page_a as usize] = b;
-        self.entries[page_b as usize] = a;
+        self.shards[sa].entries[la] = b;
+        self.shards[sb].entries[lb] = a;
+        let (ta, tb) = (Self::unpack(a).device.index(), Self::unpack(b).device.index());
+        if ta != tb {
+            self.shards[sa].resident[ta] -= 1;
+            self.shards[sa].resident[tb] += 1;
+            self.shards[sb].resident[tb] -= 1;
+            self.shards[sb].resident[ta] += 1;
+        }
         Ok(())
     }
 
     /// Retire the frame backing `page` (uncorrectable error / endurance
     /// death) and remap the page onto a healthy frame, preferring the
     /// same tier then falling down-then-up the stack in [`Self::place`]
-    /// order. The dead frame lands in the per-tier retired pool — it is
-    /// **never** returned to a free list, so the tier's effective
-    /// capacity shrinks. Returns the new mapping, or `None` when no free
-    /// frame exists anywhere in the stack (fully mapped: the page must
-    /// survive on its degraded frame rather than be lost, and the caller
-    /// skips the retirement).
+    /// order. The dead frame lands in the retired pool of the shard that
+    /// owns it — it is **never** returned to a free list, so the tier's
+    /// effective capacity shrinks. Returns the new mapping, or `None`
+    /// when no free frame exists anywhere in the stack (fully mapped:
+    /// the page must survive on its degraded frame rather than be lost,
+    /// and the caller skips the retirement).
     pub fn retire_and_remap(&mut self, page: u64) -> Result<Option<Mapping>> {
-        let e = self.entries[page as usize];
+        let (ps, pl) = self.locate(page);
+        let e = self.shards[ps].entries[pl];
         if e == UNMAPPED {
             bail!("retire of unmapped page {page}");
         }
@@ -279,7 +439,7 @@ impl RedirectionTable {
         let order = (start..self.tiers()).chain((0..start).rev());
         let mut found = None;
         for t in order {
-            if let Some(f) = self.free[t].pop() {
+            if let Some(f) = self.pop_lowest(t) {
                 found = Some(Mapping {
                     device: TierId(t as u8),
                     frame: f,
@@ -290,27 +450,33 @@ impl RedirectionTable {
         let Some(m) = found else {
             return Ok(None);
         };
-        self.entries[page as usize] = Self::pack(m);
+        self.shards[ps].entries[pl] = Self::pack(m);
+        self.shards[ps].resident[old.device.index()] -= 1;
+        self.shards[ps].resident[m.device.index()] += 1;
         self.resident[old.device.index()] -= 1;
         self.resident[m.device.index()] += 1;
-        self.retired[old.device.index()].push(old.frame);
+        let owner = old.frame as usize & self.shard_mask;
+        self.shards[owner].retired[old.device.index()].push(old.frame);
         Ok(Some(m))
     }
 
-    /// Frames permanently retired on `tier`.
+    /// Frames permanently retired on `tier`, summed across shards.
     pub fn retired_frames(&self, tier: TierId) -> usize {
-        self.retired[tier.index()].len()
+        self.shards
+            .iter()
+            .map(|s| s.retired[tier.index()].len())
+            .sum()
     }
 
     /// Usable frame capacity of `tier` after retirements — the
     /// degradation sweep's "effective capacity" column.
     pub fn effective_frames(&self, tier: TierId) -> u64 {
-        self.frames[tier.index()] as u64 - self.retired[tier.index()].len() as u64
+        self.frames[tier.index()] as u64 - self.retired_frames(tier) as u64
     }
 
-    /// Free frames currently available on `tier`.
+    /// Free frames currently available on `tier`, summed across shards.
     pub fn free_frames(&self, tier: TierId) -> usize {
-        self.free[tier.index()].len()
+        self.shards.iter().map(|s| s.free[tier.index()].len()).sum()
     }
 
     pub fn free_dram_frames(&self) -> usize {
@@ -345,10 +511,12 @@ impl RedirectionTable {
     }
 
     /// Full-table recount of pages resident on `tier`; tests pin the
-    /// O(1) counters against this.
+    /// O(1) counters against this. Shard padding entries are `UNMAPPED`,
+    /// so the raw scan over shard arrays is exact.
     pub fn recount_resident(&self, tier: TierId) -> u64 {
-        self.entries
+        self.shards
             .iter()
+            .flat_map(|s| s.entries.iter())
             .filter(|&&e| e != UNMAPPED && Self::unpack(e).device == tier)
             .count() as u64
     }
@@ -358,25 +526,29 @@ impl RedirectionTable {
         self.recount_resident(TierId::Dram)
     }
 
-    /// Iterate mapped (page, mapping) pairs.
+    /// Iterate mapped (page, mapping) pairs in ascending page order —
+    /// the sorted merge across shards (page order interleaves stripe
+    /// storage, so walking the flat space in order reads each shard's
+    /// stripes in sequence). Codec and fingerprint consumers rely on
+    /// this order being shard-count independent.
     pub fn iter_mapped(&self) -> impl Iterator<Item = (u64, Mapping)> + '_ {
-        self.entries.iter().enumerate().filter_map(|(p, &e)| {
-            if e == UNMAPPED {
-                None
-            } else {
-                Some((p as u64, Self::unpack(e)))
-            }
-        })
+        (0..self.host_pages).filter_map(|p| self.lookup(p).map(|m| (p, m)))
     }
 
     /// Invariant check (used by property tests): every mapped frame is
-    /// unique per tier, no mapped frame is also on a free list, and the
-    /// O(1) counters match a full recount (per-tier residency sums to
-    /// the mapped count by construction).
+    /// unique per tier, no mapped frame is also on a free list, every
+    /// shard holds only its own frames (in descending pool order) and
+    /// its counters sum to the global O(1) view, retired frames are out
+    /// of circulation, and per-tier accounting is conservative
+    /// (resident + free + retired == capacity).
     pub fn check_invariants(&self) -> Result<()> {
         let mut seen: Vec<Vec<bool>> =
             self.frames.iter().map(|&f| vec![false; f as usize]).collect();
-        for &e in &self.entries {
+        let mut mapped_recount = 0u64;
+        let mut resident_recount = vec![0u64; self.tiers()];
+        let mut shard_page_recount = vec![0u64; self.shards.len()];
+        for page in 0..self.host_pages {
+            let e = self.slot(page);
             if e == UNMAPPED {
                 continue;
             }
@@ -389,54 +561,118 @@ impl RedirectionTable {
                 bail!("frame {:?}:{} double-mapped", m.device, m.frame);
             }
             *s = true;
+            mapped_recount += 1;
+            resident_recount[m.device.index()] += 1;
+            shard_page_recount[self.locate(page).0] += 1;
         }
-        for (t, frees) in self.free.iter().enumerate() {
-            for &f in frees {
-                if seen[t][f as usize] {
-                    bail!("{:?} frame {f} both mapped and free", TierId(t as u8));
-                }
-            }
+        // Stripe tail padding must stay unmapped: the raw entry count
+        // across shards equals the per-page walk above.
+        let raw_mapped = self
+            .shards
+            .iter()
+            .flat_map(|s| s.entries.iter())
+            .filter(|&&e| e != UNMAPPED)
+            .count() as u64;
+        if raw_mapped != mapped_recount {
+            bail!("shard padding entries are mapped ({raw_mapped} != {mapped_recount})");
         }
-        // Retired frames are out of circulation: in range, not mapped,
-        // not free, never retired twice.
         let mut dead: Vec<Vec<bool>> =
             self.frames.iter().map(|&f| vec![false; f as usize]).collect();
-        for (t, retired) in self.retired.iter().enumerate() {
-            let tier = TierId(t as u8);
-            for &f in retired {
-                if f >= self.frames[t] {
-                    bail!("retired frame {tier:?}:{f} out of range");
+        for (snum, shard) in self.shards.iter().enumerate() {
+            for (t, frees) in shard.free.iter().enumerate() {
+                for (i, &f) in frees.iter().enumerate() {
+                    if f >= self.frames[t] {
+                        bail!("free frame {:?}:{f} out of range", TierId(t as u8));
+                    }
+                    if f as usize & self.shard_mask != snum {
+                        bail!("shard {snum} pool holds foreign frame {:?}:{f}", TierId(t as u8));
+                    }
+                    if seen[t][f as usize] {
+                        bail!("{:?} frame {f} both mapped and free", TierId(t as u8));
+                    }
+                    if i > 0 && frees[i - 1] <= f {
+                        bail!("shard {snum} {:?} pool not descending", TierId(t as u8));
+                    }
                 }
-                if seen[t][f as usize] {
-                    bail!("{tier:?} frame {f} both mapped and retired");
-                }
-                if dead[t][f as usize] {
-                    bail!("{tier:?} frame {f} retired twice");
-                }
-                dead[t][f as usize] = true;
             }
-            for &f in &self.free[t] {
-                if dead[t][f as usize] {
-                    bail!("{tier:?} frame {f} both retired and free");
+            // Retired frames are out of circulation: in range, owned by
+            // this shard, not mapped, not free, never retired twice.
+            for (t, retired) in shard.retired.iter().enumerate() {
+                let tier = TierId(t as u8);
+                for &f in retired {
+                    if f >= self.frames[t] {
+                        bail!("retired frame {tier:?}:{f} out of range");
+                    }
+                    if f as usize & self.shard_mask != snum {
+                        bail!("shard {snum} retired pool holds foreign frame {tier:?}:{f}");
+                    }
+                    if seen[t][f as usize] {
+                        bail!("{tier:?} frame {f} both mapped and retired");
+                    }
+                    if dead[t][f as usize] {
+                        bail!("{tier:?} frame {f} retired twice");
+                    }
+                    dead[t][f as usize] = true;
+                }
+                for &f in &shard.free[t] {
+                    if dead[t][f as usize] {
+                        bail!("{tier:?} frame {f} both retired and free");
+                    }
                 }
             }
         }
-        let mapped_recount = self.entries.iter().filter(|&&e| e != UNMAPPED).count() as u64;
         if self.mapped != mapped_recount {
             bail!("mapped counter {} != recount {mapped_recount}", self.mapped);
         }
         for t in 0..self.tiers() {
             let tier = TierId(t as u8);
-            let recount = self.recount_resident(tier);
-            if self.resident[t] != recount {
+            if self.resident[t] != resident_recount[t] {
                 bail!(
-                    "{tier:?} resident counter {} != recount {recount}",
-                    self.resident[t]
+                    "{tier:?} resident counter {} != recount {}",
+                    self.resident[t],
+                    resident_recount[t]
+                );
+            }
+            // Conservation: every frame is mapped, free, or retired.
+            let accounted = self.resident[t]
+                + self.free_frames(tier) as u64
+                + self.retired_frames(tier) as u64;
+            if accounted != self.frames[t] as u64 {
+                bail!(
+                    "{tier:?} accounting {accounted} != capacity {}",
+                    self.frames[t]
                 );
             }
         }
         if self.resident.iter().sum::<u64>() != self.mapped {
             bail!("per-tier residency does not sum to the mapped count");
+        }
+        // Per-shard counters sum to the global view.
+        let shard_mapped: u64 = self.shards.iter().map(|s| s.mapped).sum();
+        if shard_mapped != self.mapped {
+            bail!("shard mapped sum {shard_mapped} != global {}", self.mapped);
+        }
+        for (snum, shard) in self.shards.iter().enumerate() {
+            if shard.mapped != shard_page_recount[snum] {
+                bail!(
+                    "shard {snum} mapped {} != recount {}",
+                    shard.mapped,
+                    shard_page_recount[snum]
+                );
+            }
+            if shard.resident.iter().sum::<u64>() != shard.mapped {
+                bail!("shard {snum} residency does not sum to its mapped count");
+            }
+        }
+        for t in 0..self.tiers() {
+            let sum: u64 = self.shards.iter().map(|s| s.resident[t]).sum();
+            if sum != self.resident[t] {
+                bail!(
+                    "{:?} shard residency sum {sum} != global {}",
+                    TierId(t as u8),
+                    self.resident[t]
+                );
+            }
         }
         Ok(())
     }
@@ -444,58 +680,92 @@ impl RedirectionTable {
 
 impl CodecState for RedirectionTable {
     fn encode_state(&self, e: &mut Encoder) {
-        // Geometry (page_bytes, frames) is config-derived and validated on
-        // decode rather than serialized; the mutable state is the entry
-        // array, the per-tier free lists, and the O(1) counters.
-        e.put_u32_slice(&self.entries);
-        e.put_len(self.free.len());
-        for f in &self.free {
-            e.put_u32_slice(f);
+        // Geometry (page_bytes, frames, shard striping) is config-derived
+        // and validated on decode rather than serialized; the mutable
+        // state is each shard's entry array, free/retired pools, and
+        // counters, plus the global O(1) counters.
+        e.put_u64(self.host_pages);
+        e.put_len(self.shards.len());
+        e.put_len(self.frames.len());
+        for sh in &self.shards {
+            e.put_u32_slice(&sh.entries);
+            for f in &sh.free {
+                e.put_u32_slice(f);
+            }
+            e.put_u64(sh.mapped);
+            e.put_u64_slice(&sh.resident);
+            for r in &sh.retired {
+                e.put_u32_slice(r);
+            }
         }
         e.put_u64(self.mapped);
         e.put_u64_slice(&self.resident);
-        for r in &self.retired {
-            e.put_u32_slice(r);
-        }
     }
 
     fn decode_state(&mut self, d: &mut Decoder) -> Result<()> {
-        let entries = d.u32_vec()?;
-        check_len("redirection entries", self.entries.len(), entries.len())?;
+        let host_pages = d.u64()?;
+        check_len(
+            "redirection host pages",
+            self.host_pages as usize,
+            host_pages as usize,
+        )?;
+        let nshards = d.len()?;
+        check_len("redirection shards", self.shards.len(), nshards)?;
         let tiers = d.len()?;
-        check_len("redirection tiers", self.free.len(), tiers)?;
-        let mut free = Vec::with_capacity(tiers);
-        for t in 0..tiers {
-            let f = d.u32_vec()?;
-            if f.len() > self.frames[t] as usize {
-                bail!(
-                    "checkpoint geometry mismatch: tier {t} free list {} exceeds {} frames",
-                    f.len(),
-                    self.frames[t]
-                );
+        check_len("redirection tiers", self.frames.len(), tiers)?;
+        let mut shards = Vec::with_capacity(nshards);
+        for snum in 0..nshards {
+            let entries = d.u32_vec()?;
+            check_len(
+                "redirection shard entries",
+                self.shards[snum].entries.len(),
+                entries.len(),
+            )?;
+            let mut free = Vec::with_capacity(tiers);
+            for t in 0..tiers {
+                let f = d.u32_vec()?;
+                if f.len() > self.frames[t] as usize {
+                    bail!(
+                        "checkpoint geometry mismatch: tier {t} free list {} exceeds {} frames",
+                        f.len(),
+                        self.frames[t]
+                    );
+                }
+                free.push(f);
             }
-            free.push(f);
+            let mapped = d.u64()?;
+            let resident = d.u64_vec()?;
+            check_len(
+                "redirection shard residency",
+                self.shards[snum].resident.len(),
+                resident.len(),
+            )?;
+            let mut retired = Vec::with_capacity(tiers);
+            for t in 0..tiers {
+                let r = d.u32_vec()?;
+                if r.len() > self.frames[t] as usize {
+                    bail!(
+                        "checkpoint geometry mismatch: tier {t} retired pool {} exceeds {} frames",
+                        r.len(),
+                        self.frames[t]
+                    );
+                }
+                retired.push(r);
+            }
+            shards.push(Shard {
+                entries,
+                free,
+                retired,
+                mapped,
+                resident,
+            });
         }
         let mapped = d.u64()?;
         let resident = d.u64_vec()?;
         check_len("redirection residency", self.resident.len(), resident.len())?;
-        let mut retired = Vec::with_capacity(tiers);
-        for t in 0..tiers {
-            let r = d.u32_vec()?;
-            if r.len() > self.frames[t] as usize {
-                bail!(
-                    "checkpoint geometry mismatch: tier {t} retired pool {} exceeds {} frames",
-                    r.len(),
-                    self.frames[t]
-                );
-            }
-            retired.push(r);
-        }
-        self.entries = entries;
-        self.free = free;
+        self.shards = shards;
         self.mapped = mapped;
         self.resident = resident;
-        self.retired = retired;
         // A decoded table must satisfy the same invariants a live one
         // does — catches corrupt/mismatched snapshots up front.
         self.check_invariants()
@@ -814,6 +1084,9 @@ mod tests {
         // Different tier count refuses too.
         let mut wrong3 = RedirectionTable::new(8, &[4, 4, 8], 4096);
         assert!(wrong3.decode_state(&mut Decoder::new(&bytes)).is_err());
+        // Different shard count refuses: the stripe layout is geometry.
+        let mut wrong_shards = RedirectionTable::new_with_shards(8, &[4, 8], 4096, 2);
+        assert!(wrong_shards.decode_state(&mut Decoder::new(&bytes)).is_err());
     }
 
     #[test]
@@ -825,5 +1098,127 @@ mod tests {
         assert!(TierId::Dram < TierId::Nvm);
         assert_eq!(format!("{:?}", TierId::Dram), "Dram");
         assert_eq!(format!("{:?}", TierId(3)), "Tier3");
+    }
+
+    // ---- shard-specific pins -------------------------------------------
+
+    /// Every (shard, local) pair is distinct and stays in bounds, so the
+    /// striped layout is a bijection over the host space.
+    #[test]
+    fn stripe_layout_is_a_bijection() {
+        for nshards in [1usize, 2, 4, 8] {
+            let pages = 5 * STRIPE_LEN + 7; // partial tail stripe
+            let t = RedirectionTable::new_with_shards(pages, &[512, 512], 4096, nshards);
+            let mut seen = std::collections::HashSet::new();
+            for p in 0..pages {
+                let (s, l) = t.locate(p);
+                assert!(s < nshards);
+                assert!(l < t.shards[s].entries.len(), "page {p} shard {s}");
+                assert!(seen.insert((s, l)), "page {p} collides");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_power_of_two_shards_rejected() {
+        RedirectionTable::new_with_shards(8, &[4, 8], 4096, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_page_panics() {
+        table().lookup(8);
+    }
+
+    /// The monolithic table (1 shard) and the sharded default allocate
+    /// identical frames through a place/swap/retire churn — the
+    /// bit-identity the pop-only/min-of-heads argument guarantees.
+    #[test]
+    fn sharded_allocation_matches_monolithic() {
+        let mk = |n| RedirectionTable::new_with_shards(300, &[96, 128, 128], 4096, n);
+        let mut mono = mk(1);
+        let mut shrd = mk(8);
+        let mut rng = crate::util::rng::Xoshiro256::new(7);
+        let mut placed: Vec<u64> = Vec::new();
+        for page in 0..260u64 {
+            let tier = TierId(rng.below(3) as u8);
+            let a = mono.place(page, tier).unwrap();
+            let b = shrd.place(page, tier).unwrap();
+            assert_eq!(a, b, "page {page}");
+            placed.push(page);
+        }
+        for round in 0..400 {
+            let a = placed[rng.below(placed.len() as u64) as usize];
+            let b = placed[rng.below(placed.len() as u64) as usize];
+            if a != b {
+                mono.swap(a, b).unwrap();
+                shrd.swap(a, b).unwrap();
+            }
+            if round % 13 == 0 {
+                let victim = placed[rng.below(placed.len() as u64) as usize];
+                assert_eq!(
+                    mono.retire_and_remap(victim).unwrap(),
+                    shrd.retire_and_remap(victim).unwrap(),
+                    "round {round}"
+                );
+            }
+        }
+        for p in 0..300 {
+            assert_eq!(mono.lookup(p), shrd.lookup(p), "page {p}");
+        }
+        assert_eq!(mono.residency(), shrd.residency());
+        assert_eq!(mono.mapped_pages(), shrd.mapped_pages());
+        for t in 0..3u8 {
+            assert_eq!(
+                mono.retired_frames(TierId(t)),
+                shrd.retired_frames(TierId(t))
+            );
+            assert_eq!(mono.free_frames(TierId(t)), shrd.free_frames(TierId(t)));
+        }
+        mono.check_invariants().unwrap();
+        shrd.check_invariants().unwrap();
+    }
+
+    /// identity_map on the sharded table matches the monolithic fill and
+    /// leaves per-shard counters summing to the global view.
+    #[test]
+    fn sharded_identity_map_matches_monolithic() {
+        let mut mono = RedirectionTable::new_with_shards(200, &[64, 96, 128], 4096, 1);
+        let mut shrd = RedirectionTable::new_with_shards(200, &[64, 96, 128], 4096, 4);
+        mono.identity_map();
+        shrd.identity_map();
+        for p in 0..200 {
+            assert_eq!(mono.lookup(p), shrd.lookup(p), "page {p}");
+        }
+        assert_eq!(mono.residency(), shrd.residency());
+        let i_mono: Vec<_> = mono.iter_mapped().collect();
+        let i_shrd: Vec<_> = shrd.iter_mapped().collect();
+        assert_eq!(i_mono, i_shrd, "iter_mapped order is shard-independent");
+        shrd.check_invariants().unwrap();
+    }
+
+    /// Codec round-trip preserves shard structure (not just the merged
+    /// view): a restored table passes the per-shard invariants.
+    #[test]
+    fn codec_round_trip_preserves_shards() {
+        let mut t = RedirectionTable::new_with_shards(200, &[64, 96, 128], 4096, 4);
+        t.identity_map();
+        t.swap(0, 70).unwrap();
+        t.retire_and_remap(5).unwrap().unwrap();
+        let mut e = Encoder::new();
+        t.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut restored = RedirectionTable::new_with_shards(200, &[64, 96, 128], 4096, 4);
+        restored.decode_state(&mut Decoder::new(&bytes)).unwrap();
+        assert_eq!(restored.shard_count(), 4);
+        for (a, b) in t.shards.iter().zip(&restored.shards) {
+            assert_eq!(a.entries, b.entries);
+            assert_eq!(a.free, b.free);
+            assert_eq!(a.retired, b.retired);
+            assert_eq!(a.mapped, b.mapped);
+            assert_eq!(a.resident, b.resident);
+        }
+        restored.check_invariants().unwrap();
     }
 }

@@ -132,6 +132,27 @@ fn config_from(args: &Args) -> SystemConfig {
             std::process::exit(1);
         }
     }
+    // DRAM bank count (row-buffer banking frontier). For `sweep`,
+    // `--banks` may be a comma-separated axis, handled in cmd_sweep;
+    // `0` keeps the stack default.
+    if let Some(s) = args.get("banks") {
+        if !s.contains(',') {
+            match s.parse::<u32>() {
+                Ok(0) => {}
+                Ok(b) => cfg.dram.banks = b,
+                _ => {
+                    eprintln!("bad --banks {s:?}; want a bank count, e.g. 8 (0 = default)");
+                    std::process::exit(1);
+                }
+            }
+        } else if args.command.as_deref() != Some("sweep") {
+            eprintln!(
+                "--banks {s:?}: a comma-separated bank list is only a sweep axis; \
+                 pass one count (e.g. 8) to this command"
+            );
+            std::process::exit(1);
+        }
+    }
     cfg
 }
 
@@ -295,6 +316,26 @@ fn cmd_sweep(args: &Args) -> i32 {
                 }
             }
             scenarios = Scenario::link_fault_grid(&scenarios, &points);
+        }
+    }
+    // Optional DRAM bank-count axis: `--banks 4,8,16` (bank count per
+    // point; 0 keeps the stack default unsuffixed). A single count was
+    // already folded into `cfg` by config_from.
+    if let Some(list) = args.get("banks") {
+        if list.contains(',') {
+            let mut points = Vec::new();
+            for tok in list.split(',') {
+                match tok.trim().parse::<u32>() {
+                    Ok(b) => points.push(b),
+                    _ => {
+                        eprintln!(
+                            "bad --banks entry {tok:?}; want a bank count, e.g. 8 (0 = default)"
+                        );
+                        return 1;
+                    }
+                }
+            }
+            scenarios = Scenario::banks_grid(&scenarios, &points);
         }
     }
 
@@ -630,7 +671,8 @@ COMMANDS:
   sweep           parallel scenario sweep: 12 workloads [x --policies a,b,..]
                   [x --nvm-stalls rd:wr,rd:wr,..] [x --cores 1,4,..]
                   [x --tiers dram+pcm,dram+xpoint,dram+pcm+xpoint]
-                  [x --rber 0,1e-5,1e-4] [x --link-ber 0,1e-6] on
+                  [x --rber 0,1e-5,1e-4] [x --link-ber 0,1e-6]
+                  [x --banks 4,8,16] (0 = stack default, unsuffixed) on
                   --threads N OS threads (default: all cores; bit-identical
                   to serial), writes --json <path> (default BENCH_sweep.json)
                   [--ops N] [--row-aware] row-buffer-outcome stall charging
@@ -638,7 +680,8 @@ COMMANDS:
                   [--host-managed-dma] [--coalesce-writes]
                   [--fault-seed N]
                   [--warmup-ops N] pay warm-up once per workload group and
-                  fork it across the grid; [--checkpoint-dir D] cache warm
+                  fork it across the grid (single- and multicore rows,
+                  members fanned across threads); [--checkpoint-dir D] cache warm
                   states on disk; [--cold-replay] re-warm per scenario
                   (fork-speedup baseline, bit-identical results)
   fig7            full comparison vs gem5-like and champsim-like

@@ -28,8 +28,15 @@ use crate::util::error::Result;
 use crate::workload::{TraceBlock, TraceGenerator, Workload, TRACE_BLOCK_OPS};
 
 /// Serialized-checkpoint magic ("HYMW" little-endian) + format version.
-const CHECKPOINT_MAGIC: u32 = 0x574d_5948;
-const CHECKPOINT_VERSION: u32 = 2;
+/// Version history: v2 = monolithic redirection table; v3 = sharded
+/// redirection table payload + checkpoint-kind byte (old checkpoints fail
+/// to load and the sweep degrades to re-warming, never to wrong results).
+pub(crate) const CHECKPOINT_MAGIC: u32 = 0x574d_5948;
+pub(crate) const CHECKPOINT_VERSION: u32 = 3;
+/// Checkpoint kind discriminant, right after the version: a single-core
+/// [`WarmPlatform`] or a multicore `WarmMulticore` snapshot.
+pub(crate) const CHECKPOINT_KIND_SINGLE: u8 = 0;
+pub(crate) const CHECKPOINT_KIND_MULTI: u8 = 1;
 
 /// One run (platform pass + native reference pass) paused at a trace
 /// block boundary, ready to be forked across scenario variants or
@@ -223,6 +230,7 @@ impl WarmPlatform {
         let mut e = Encoder::new();
         e.put_u32(CHECKPOINT_MAGIC);
         e.put_u32(CHECKPOINT_VERSION);
+        e.put_u8(CHECKPOINT_KIND_SINGLE);
         e.put_u64(fingerprint64(&format!("{:?}", self.cfg)));
         e.put_str(self.wl.name);
         e.put_u64(self.cfg.scale);
@@ -255,6 +263,10 @@ impl WarmPlatform {
         let version = d.u32()?;
         if version != CHECKPOINT_VERSION {
             crate::bail!("checkpoint version {version} != {CHECKPOINT_VERSION}");
+        }
+        let kind = d.u8()?;
+        if kind != CHECKPOINT_KIND_SINGLE {
+            crate::bail!("checkpoint kind {kind} is not a single-core checkpoint");
         }
         let fp = d.u64()?;
         let want_fp = fingerprint64(&format!("{:?}", cfg));

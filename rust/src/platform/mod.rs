@@ -18,7 +18,7 @@ pub mod native;
 pub mod report;
 
 pub use checkpoint::WarmPlatform;
-pub use multicore::{run_multicore, MulticoreReport};
+pub use multicore::{run_multicore, MulticoreReport, WarmMulticore};
 pub use report::RunReport;
 
 use crate::config::SystemConfig;

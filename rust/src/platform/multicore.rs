@@ -14,12 +14,14 @@
 
 use std::sync::mpsc;
 
+use super::checkpoint::{CHECKPOINT_KIND_MULTI, CHECKPOINT_MAGIC, CHECKPOINT_VERSION};
 use super::{HmmuBackend, RunOpts};
 use crate::config::SystemConfig;
 use crate::cpu::{CacheHierarchy, CoreModel, MemBackend};
 use crate::hmmu::{HmmuCounters, HotnessEngine};
 use crate::mem::AccessKind;
 use crate::sim::Time;
+use crate::util::codec::{fingerprint64, CodecState, Decoder, Encoder};
 use crate::workload::{TraceBlock, TraceGenerator, Workload};
 use crate::bail;
 use crate::util::error::Result;
@@ -93,6 +95,19 @@ fn core_stripe(cfg: &SystemConfig, core: usize, n_cores: usize) -> u64 {
     (stripe & !(cfg.hmmu.page_bytes - 1)) * core as u64
 }
 
+/// Shim that offsets addresses into the core's stripe. Shared by the
+/// cold scheduler loop and the warm checkpoint engine below so both
+/// charge the identical addresses to the shared backend.
+struct StripedBackend<'a> {
+    inner: &'a mut HmmuBackend,
+    stripe: u64,
+}
+impl MemBackend for StripedBackend<'_> {
+    fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> Time {
+        self.inner.access(addr + self.stripe, kind, bytes, now)
+    }
+}
+
 /// Run `workloads` (one per core) against a single shared HMMU.
 pub fn run_multicore(
     cfg: SystemConfig,
@@ -162,17 +177,6 @@ pub fn run_multicore(
             let op = self.block.get(self.cursor);
             self.cursor += 1;
             Some(op)
-        }
-    }
-
-    /// Shim that offsets addresses into the core's stripe.
-    struct StripedBackend<'a> {
-        inner: &'a mut HmmuBackend,
-        stripe: u64,
-    }
-    impl MemBackend for StripedBackend<'_> {
-        fn access(&mut self, addr: u64, kind: AccessKind, bytes: u64, now: Time) -> Time {
-            self.inner.access(addr + self.stripe, kind, bytes, now)
         }
     }
 
@@ -292,6 +296,317 @@ pub fn run_multicore(
     })
 }
 
+/// One core's warm state inside a [`WarmMulticore`] snapshot: the core
+/// model, its private cache hierarchy, and its trace-generator cursor.
+#[derive(Clone)]
+struct WarmCore {
+    core: CoreModel,
+    hier: CacheHierarchy,
+    gen: TraceGenerator,
+    /// Trace exhausted and `core.finish()` already charged.
+    done: bool,
+    stripe: u64,
+    workload: String,
+}
+
+/// A multicore run paused mid-interleaving, ready to be forked across
+/// scenario variants or resumed to completion — the `cores > 1`
+/// counterpart of [`super::WarmPlatform`].
+///
+/// The warm engine pulls each core's [`TraceGenerator`] directly instead
+/// of through `run_multicore`'s producer threads; the op streams are
+/// bit-identical either way (`fill_block` shares `gen_op` with the
+/// `Iterator` impl, pinned by `fill_block_bit_identical_to_iterator`),
+/// so the time-ordered interleaving — and every shared-resource
+/// contention outcome — matches the cold path exactly. Unlike the
+/// single-core engine there is no native reference pass (multicore
+/// reports carry no native columns), and `flush_at_end` is ignored just
+/// as `run_multicore` ignores it.
+#[derive(Clone)]
+pub struct WarmMulticore {
+    cfg: SystemConfig,
+    opts: RunOpts,
+    /// Ops already executed across all cores (the warm prefix length).
+    warmed: u64,
+    backend: HmmuBackend,
+    cores: Vec<WarmCore>,
+}
+
+impl WarmMulticore {
+    /// A cold multicore platform: identical initial state to the top of
+    /// `run_multicore`'s scheduling loop (same per-core seeds, scale
+    /// inflation, L2 halving, and stripe offsets).
+    pub fn new(cfg: SystemConfig, workloads: &[Workload], opts: RunOpts) -> Result<Self> {
+        let n = workloads.len();
+        if n == 0 || n > cfg.cpu.cores as usize {
+            bail!(
+                "need 1..={} workloads for {} cores, got {n}",
+                cfg.cpu.cores,
+                cfg.cpu.cores
+            );
+        }
+        let mut wl_cfg = cfg.clone();
+        wl_cfg.scale = cfg.scale * n as u64;
+        let mut core_cfg = cfg.clone();
+        core_cfg.l2.size_bytes = (cfg.l2.size_bytes / 2).max(64 * 1024);
+        let backend = HmmuBackend::new(cfg.clone(), None);
+        let cores = workloads
+            .iter()
+            .enumerate()
+            .map(|(i, wl)| WarmCore {
+                core: CoreModel::new(cfg.cpu),
+                hier: CacheHierarchy::new(&core_cfg),
+                gen: TraceGenerator::new(*wl, wl_cfg.scale, cfg.seed ^ (i as u64) << 32)
+                    .take_ops(opts.ops),
+                done: false,
+                stripe: core_stripe(&cfg, i, n),
+                workload: wl.name.to_string(),
+            })
+            .collect();
+        Ok(WarmMulticore {
+            cfg,
+            opts,
+            warmed: 0,
+            backend,
+            cores,
+        })
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// Total ops executed so far across all cores (warm prefix length).
+    pub fn warmed_ops(&self) -> u64 {
+        self.warmed
+    }
+
+    /// Step the time-ordered interleaving for up to `budget` ops (summed
+    /// across cores), then pause. The heap is rebuilt from each live
+    /// core's current clock on every call — each live core has exactly
+    /// one entry either way, so pause/resume is bit-identical to one
+    /// continuous scheduling loop. Returns the ops actually stepped.
+    fn advance(&mut self, budget: u64) -> u64 {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let mut ready: BinaryHeap<Reverse<(Time, usize)>> = self
+            .cores
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| !c.done)
+            .map(|(i, c)| Reverse((c.core.now(), i)))
+            .collect();
+        let mut stepped = 0u64;
+        while stepped < budget {
+            let Some(Reverse((_, idx))) = ready.pop() else {
+                break;
+            };
+            let c = &mut self.cores[idx];
+            match c.gen.next() {
+                Some(op) => {
+                    let mut shim = StripedBackend {
+                        inner: &mut self.backend,
+                        stripe: c.stripe,
+                    };
+                    c.core.step(&op, &mut c.hier, &mut shim);
+                    ready.push(Reverse((c.core.now(), idx)));
+                    stepped += 1;
+                }
+                None => {
+                    c.core.finish();
+                    c.done = true;
+                }
+            }
+        }
+        self.warmed += stepped;
+        stepped
+    }
+
+    /// Advance the interleaved run by up to `n` ops total across cores
+    /// (the multicore warm budget is per-run, not per-core: cores that
+    /// stall on shared resources naturally warm fewer ops, exactly as
+    /// they would in the cold run's prefix).
+    pub fn warm_up(&mut self, n: u64) {
+        self.advance(n);
+    }
+
+    /// Fork this warm state at scenario `cfg`, which may differ from the
+    /// warm config only on the fork axes (policy kind, rank-1 stalls).
+    /// O(state size) clone; no simulation happens here.
+    pub fn fork(&self, cfg: &SystemConfig) -> WarmMulticore {
+        let mut wm = self.clone();
+        wm.backend.hmmu.morph_for_fork(cfg);
+        wm.cfg = cfg.clone();
+        wm
+    }
+
+    /// Run the remaining interleaving and produce the same
+    /// [`MulticoreReport`] a cold `run_multicore` of the full run would.
+    pub fn run_to_completion(mut self) -> Result<MulticoreReport> {
+        self.advance(u64::MAX);
+        let makespan = self
+            .cores
+            .iter()
+            .map(|c| c.core.stats.time_ns)
+            .max()
+            .unwrap_or(0);
+        self.backend.drain(makespan);
+        // Same link_retries / row-counter mirrors as `run_multicore` —
+        // the forked report must be byte-identical to a cold run's.
+        self.backend.hmmu.counters.link_retries = self.backend.link.link_retries;
+        self.backend.hmmu.sync_row_counters();
+
+        let reports: Vec<CoreReport> = self
+            .cores
+            .iter()
+            .enumerate()
+            .map(|(i, c)| CoreReport {
+                core: i,
+                workload: c.workload.clone(),
+                instructions: c.core.stats.instructions,
+                mem_ops: c.core.stats.mem_ops,
+                memory_accesses: c.core.stats.memory_accesses,
+                time_ns: c.core.stats.time_ns,
+            })
+            .collect();
+        let total_instr: u64 = reports.iter().map(|r| r.instructions).sum();
+        let backend = self.backend;
+        Ok(MulticoreReport {
+            aggregate_mips: total_instr as f64 / (makespan.max(1) as f64 / 1000.0),
+            hmmu_requests: backend.hmmu.counters.total_host_requests(),
+            pcie_credit_stalls: backend.link.credit_stalls,
+            fifo_full_stalls: backend.hmmu.counters.fifo_full_stalls,
+            dram_residency: backend.hmmu.dram_residency(),
+            nvm_max_wear: backend.hmmu.nvm_max_wear(),
+            topology: self.cfg.topology_label(),
+            tier_wear: backend.hmmu.tier_wear(),
+            tier_residency: backend.hmmu.tier_residency(),
+            counters: backend.hmmu.counters.clone(),
+            cores: reports,
+            makespan_ns: makespan,
+        })
+    }
+
+    /// Cache key for a serialized multicore checkpoint. The `mc{n}|`
+    /// prefix keeps multicore keys disjoint from single-core ones (core
+    /// count is a scenario axis, not part of the config Debug surface).
+    pub fn cache_key(
+        cfg: &SystemConfig,
+        workloads: &[Workload],
+        opts: RunOpts,
+        warm_ops: u64,
+    ) -> u64 {
+        let names: Vec<&str> = workloads.iter().map(|w| w.name).collect();
+        fingerprint64(&format!(
+            "mc{}|{:?}|{}|{}|{}|{warm_ops}",
+            workloads.len(),
+            cfg,
+            names.join("+"),
+            opts.ops,
+            opts.flush_at_end
+        ))
+    }
+
+    /// Serialize the warm state (versioned header + shared backend +
+    /// every core's [`CodecState`] payload).
+    pub fn save(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        e.put_u32(CHECKPOINT_MAGIC);
+        e.put_u32(CHECKPOINT_VERSION);
+        e.put_u8(CHECKPOINT_KIND_MULTI);
+        e.put_u64(fingerprint64(&format!("{:?}", self.cfg)));
+        e.put_len(self.cores.len());
+        for c in &self.cores {
+            e.put_str(&c.workload);
+        }
+        e.put_u64(self.cfg.scale);
+        e.put_u64(self.cfg.seed);
+        e.put_u64(self.opts.ops);
+        e.put_bool(self.opts.flush_at_end);
+        e.put_u64(self.warmed);
+        self.backend.encode_state(&mut e);
+        for c in &self.cores {
+            c.core.encode_state(&mut e);
+            c.hier.encode_state(&mut e);
+            c.gen.encode_state(&mut e);
+            e.put_bool(c.done);
+        }
+        e.into_bytes()
+    }
+
+    /// Rebuild a warm multicore platform from checkpoint `bytes`. The
+    /// geometry comes from the arguments — the header only *validates*
+    /// that the bytes belong to this scenario (config fingerprint, core
+    /// count, per-core workload names, run sizing).
+    pub fn load(
+        bytes: &[u8],
+        cfg: SystemConfig,
+        workloads: &[Workload],
+        opts: RunOpts,
+    ) -> Result<Self> {
+        let mut d = Decoder::new(bytes);
+        let magic = d.u32()?;
+        if magic != CHECKPOINT_MAGIC {
+            bail!("not a checkpoint: bad magic {magic:#x}");
+        }
+        let version = d.u32()?;
+        if version != CHECKPOINT_VERSION {
+            bail!("checkpoint version {version} != {CHECKPOINT_VERSION}");
+        }
+        let kind = d.u8()?;
+        if kind != CHECKPOINT_KIND_MULTI {
+            bail!("checkpoint kind {kind} is not a multicore checkpoint");
+        }
+        let fp = d.u64()?;
+        let want_fp = fingerprint64(&format!("{:?}", cfg));
+        if fp != want_fp {
+            bail!("checkpoint config fingerprint {fp:#x} != {want_fp:#x}");
+        }
+        let n = d.len()?;
+        if n != workloads.len() {
+            bail!("checkpoint core count {n} != {}", workloads.len());
+        }
+        for wl in workloads {
+            let name = d.str()?;
+            if name != wl.name {
+                bail!("checkpoint workload {name:?} != {:?}", wl.name);
+            }
+        }
+        let scale = d.u64()?;
+        let seed = d.u64()?;
+        if scale != cfg.scale || seed != cfg.seed {
+            bail!(
+                "checkpoint scale/seed {scale}/{seed} != {}/{}",
+                cfg.scale,
+                cfg.seed
+            );
+        }
+        let ops = d.u64()?;
+        let flush = d.bool()?;
+        if ops != opts.ops || flush != opts.flush_at_end {
+            bail!(
+                "checkpoint run sizing {ops}/{flush} != {}/{}",
+                opts.ops,
+                opts.flush_at_end
+            );
+        }
+        let warmed = d.u64()?;
+        let mut wm = WarmMulticore::new(cfg, workloads, opts)?;
+        wm.warmed = warmed;
+        wm.backend.decode_state(&mut d)?;
+        for c in &mut wm.cores {
+            c.core.decode_state(&mut d)?;
+            c.hier.decode_state(&mut d)?;
+            c.gen.decode_state(&mut d)?;
+            c.done = d.bool()?;
+        }
+        if !d.is_done() {
+            bail!("checkpoint has {} trailing bytes", d.remaining());
+        }
+        Ok(wm)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -379,6 +694,117 @@ mod tests {
         let wl = spec::by_name("541.leela").unwrap();
         let wls = vec![wl; cfg.cpu.cores as usize + 1];
         assert!(run_multicore(cfg, &wls, opts(100), None).is_err());
+    }
+
+    /// Full-fidelity comparison of two multicore reports.
+    fn assert_reports_match(a: &MulticoreReport, b: &MulticoreReport, label: &str) {
+        assert_eq!(a.makespan_ns, b.makespan_ns, "{label}");
+        assert_eq!(
+            format!("{:?}", a.counters),
+            format!("{:?}", b.counters),
+            "{label}"
+        );
+        assert_eq!(a.tier_residency, b.tier_residency, "{label}");
+        assert_eq!(a.tier_wear, b.tier_wear, "{label}");
+        assert_eq!(a.nvm_max_wear, b.nvm_max_wear, "{label}");
+        for (ca, cb) in a.cores.iter().zip(&b.cores) {
+            assert_eq!(ca.time_ns, cb.time_ns, "{label}/core{}", ca.core);
+            assert_eq!(ca.instructions, cb.instructions, "{label}/core{}", ca.core);
+            assert_eq!(ca.mem_ops, cb.mem_ops, "{label}/core{}", ca.core);
+        }
+    }
+
+    #[test]
+    fn warm_then_run_matches_cold_multicore() {
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = crate::config::PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = 2_000;
+        let wls = vec![
+            spec::by_name("505.mcf").unwrap(),
+            spec::by_name("520.omnetpp").unwrap(),
+        ];
+        let cold = run_multicore(cfg.clone(), &wls, opts(12_000), None).unwrap();
+        for warm_ops in [0u64, 5_000] {
+            let mut warm = WarmMulticore::new(cfg.clone(), &wls, opts(12_000)).unwrap();
+            warm.warm_up(warm_ops);
+            let split = warm.run_to_completion().unwrap();
+            assert_reports_match(&cold, &split, &format!("warm={warm_ops}"));
+        }
+    }
+
+    #[test]
+    fn serialized_round_trip_resumes_identically() {
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = crate::config::PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = 2_000;
+        let wls = vec![
+            spec::by_name("505.mcf").unwrap(),
+            spec::by_name("538.imagick").unwrap(),
+        ];
+        let mut warm = WarmMulticore::new(cfg.clone(), &wls, opts(10_000)).unwrap();
+        warm.warm_up(6_000);
+        let bytes = warm.save();
+        let restored = WarmMulticore::load(&bytes, cfg, &wls, opts(10_000)).unwrap();
+        assert_eq!(restored.warmed_ops(), warm.warmed_ops());
+        let a = warm.run_to_completion().unwrap();
+        let b = restored.run_to_completion().unwrap();
+        assert_reports_match(&a, &b, "roundtrip");
+    }
+
+    #[test]
+    fn load_rejects_wrong_scenario() {
+        let cfg = SystemConfig::default_scaled(64);
+        let wls = vec![
+            spec::by_name("505.mcf").unwrap(),
+            spec::by_name("538.imagick").unwrap(),
+        ];
+        let mut warm = WarmMulticore::new(cfg.clone(), &wls, opts(4_000)).unwrap();
+        warm.warm_up(1_000);
+        let bytes = warm.save();
+        // Different config → fingerprint mismatch.
+        let mut other = cfg.clone();
+        other.policy = crate::config::PolicyKind::Hotness;
+        assert!(WarmMulticore::load(&bytes, other, &wls, opts(4_000)).is_err());
+        // Different core count → count mismatch.
+        assert!(WarmMulticore::load(&bytes, cfg.clone(), &wls[..1], opts(4_000)).is_err());
+        // Different workload order → name mismatch.
+        let swapped = vec![wls[1], wls[0]];
+        assert!(WarmMulticore::load(&bytes, cfg.clone(), &swapped, opts(4_000)).is_err());
+        // Truncated payload → positioned decode error.
+        let truncated = &bytes[..bytes.len() / 2];
+        assert!(WarmMulticore::load(truncated, cfg.clone(), &wls, opts(4_000)).is_err());
+        // A single-core checkpoint must be rejected by kind.
+        let wl = spec::by_name("505.mcf").unwrap();
+        let single = super::super::WarmPlatform::new(
+            cfg.clone(),
+            &wl,
+            RunOpts {
+                ops: 4_000,
+                flush_at_end: false,
+            },
+        )
+        .save();
+        assert!(WarmMulticore::load(&single, cfg, &wls, opts(4_000)).is_err());
+    }
+
+    #[test]
+    fn fork_morphs_policy() {
+        let mut cfg = SystemConfig::default_scaled(64);
+        cfg.policy = crate::config::PolicyKind::Hotness;
+        cfg.hmmu.epoch_requests = 2_000;
+        let wls = vec![
+            spec::by_name("505.mcf").unwrap(),
+            spec::by_name("520.omnetpp").unwrap(),
+        ];
+        let mut warm = WarmMulticore::new(cfg.clone(), &wls, opts(40_000)).unwrap();
+        warm.warm_up(2_000);
+        let mut static_cfg = cfg.clone();
+        static_cfg.policy = crate::config::PolicyKind::Static;
+        let forked = warm.fork(&static_cfg).run_to_completion().unwrap();
+        let hot = warm.run_to_completion().unwrap();
+        // The hotness run migrates; the statically-placed fork does not
+        // migrate after the fork point, so it must see strictly fewer.
+        assert!(hot.counters.migrations > forked.counters.migrations);
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub mod report;
 pub use report::{ScenarioResult, SweepReport};
 
 use crate::config::{PolicyKind, SystemConfig};
-use crate::platform::{run_multicore, Platform, RunOpts, WarmPlatform};
+use crate::platform::{run_multicore, Platform, RunOpts, WarmMulticore, WarmPlatform};
 use crate::util::error::Result;
 use crate::util::rng::splitmix64;
 use crate::workload::Workload;
@@ -205,6 +205,27 @@ impl Scenario {
         out
     }
 
+    /// Expand scenarios across a DRAM bank-count axis, suffixing names
+    /// with `%bk<n>` (e.g. `505.mcf/hotness%bk8`). Each point sets
+    /// [`crate::config::DramConfig`] `banks` — the banking-sensitivity
+    /// frontier for row-buffer-aware stacks; `0` keeps the stack default
+    /// and the unsuffixed name, mirroring [`Self::fault_grid`] so
+    /// default-bank baselines stay comparable across series.
+    pub fn banks_grid(scenarios: &[Scenario], bank_points: &[u32]) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(scenarios.len() * bank_points.len());
+        for sc in scenarios {
+            for &banks in bank_points {
+                let mut s = sc.clone();
+                if banks > 0 {
+                    s.cfg.dram.banks = banks;
+                    s.name = format!("{}%bk{banks}", sc.name);
+                }
+                out.push(s);
+            }
+        }
+        out
+    }
+
     /// `n` statistical replicates of each scenario, with distinct seeds
     /// derived from the replicate index (names suffixed `#k`). This is
     /// the opt-in path for decorrelated traces; plain grids share the
@@ -333,53 +354,82 @@ fn warm_group_key(sc: &Scenario) -> String {
     )
 }
 
-/// Run one warm group: pay the warm-up once on the group leader's
-/// config, then fork the warm state across every member (morphing the
-/// fork axes). Falls back to the classic cold path for multicore
-/// scenarios (no single-platform state to fork) and `warmup_ops == 0`.
-fn run_warm_group(
-    scenarios: &[Scenario],
-    members: &[usize],
-    fork: &ForkOpts,
-    slots: &[Mutex<Option<Result<ScenarioResult>>>],
-) {
-    let leader = &scenarios[members[0]];
-    if leader.cores > 1 || fork.warmup_ops == 0 {
-        for &i in members {
-            *slots[i].lock().unwrap() = Some(run_scenario(&scenarios[i]));
-        }
-        return;
-    }
-    let opts = RunOpts {
+/// A group's warm state: the single-core platform engine or its
+/// multicore counterpart, chosen by the leader's core count. Shared by
+/// reference across the worker pool in phase B of [`run_sweep_forked`]
+/// (both engines are plain data behind `Send + Sync` policy engines).
+enum Warm {
+    Single(WarmPlatform),
+    Multi(WarmMulticore),
+}
+
+/// Sizing for a group leader's warm run.
+fn leader_opts(leader: &Scenario) -> RunOpts {
+    RunOpts {
         ops: leader.ops,
         flush_at_end: leader.flush_at_end,
-    };
-    // The warm prefix runs under the **leader's** full config (its policy
-    // included) — cold replay below replays exactly that, so the two
-    // modes are bit-identical by construction. A fork whose policy
-    // differs from the leader's inherits the leader-warmed table layout;
-    // that is the checkpoint-fork methodology, pinned as such by
-    // `tests/checkpoint_fork.rs`.
-    let warm = if fork.cold_replay {
-        None
+    }
+}
+
+/// Simulate a fresh warm-up on the leader's config — no checkpoint
+/// cache. This is both the cold-replay per-member path and the cache-miss
+/// path of [`obtain_warm_group`], so the two modes share one
+/// construction and stay bit-identical by construction.
+///
+/// The warm prefix runs under the **leader's** full config (its policy
+/// included). A fork whose policy differs from the leader's inherits the
+/// leader-warmed table layout; that is the checkpoint-fork methodology,
+/// pinned as such by `tests/checkpoint_fork.rs`. Multicore groups warm
+/// `warmup_ops × cores` interleaved ops (the same per-core average as the
+/// single-core budget).
+fn fresh_warm(leader: &Scenario, warmup_ops: u64) -> Result<Warm> {
+    let opts = leader_opts(leader);
+    if leader.cores > 1 {
+        let wls = vec![leader.workload; leader.cores];
+        let mut w = WarmMulticore::new(leader.cfg.clone(), &wls, opts)?;
+        w.warm_up(warmup_ops.saturating_mul(leader.cores as u64));
+        Ok(Warm::Multi(w))
     } else {
-        Some(obtain_warm(leader, opts, fork))
-    };
-    for &i in members {
-        let sc = &scenarios[i];
-        let wall = Instant::now();
-        let wp = match &warm {
-            Some(w) => w.fork(&sc.cfg),
-            None => {
-                let mut w = WarmPlatform::new(leader.cfg.clone(), &leader.workload, opts);
-                w.warm_up(fork.warmup_ops);
-                w.fork(&sc.cfg)
-            }
-        };
-        let result = wp.run_to_completion().map(|report| {
-            ScenarioResult::new(sc, sc.cfg.seed, &report, wall.elapsed().as_nanos() as u64)
-        });
-        *slots[i].lock().unwrap() = Some(result);
+        let mut w = WarmPlatform::new(leader.cfg.clone(), &leader.workload, opts);
+        w.warm_up(warmup_ops);
+        Ok(Warm::Single(w))
+    }
+}
+
+/// Produce a group's warm state, consulting the checkpoint cache when
+/// one is configured.
+fn obtain_warm_group(leader: &Scenario, fork: &ForkOpts) -> Result<Warm> {
+    if leader.cores > 1 {
+        obtain_warm_multicore(leader, leader_opts(leader), fork).map(Warm::Multi)
+    } else {
+        Ok(Warm::Single(obtain_warm(leader, leader_opts(leader), fork)))
+    }
+}
+
+/// Fork `warm` at the member's config and run it to completion, shaping
+/// the report into the member's [`ScenarioResult`] row. `wall` is the
+/// member's wall-clock origin: the fork point in forked mode, the top of
+/// the member's own warm-up in cold-replay mode.
+fn run_forked_member(sc: &Scenario, warm: &Warm, wall: Instant) -> Result<ScenarioResult> {
+    match warm {
+        Warm::Single(w) => {
+            let report = w.fork(&sc.cfg).run_to_completion()?;
+            Ok(ScenarioResult::new(
+                sc,
+                sc.cfg.seed,
+                &report,
+                wall.elapsed().as_nanos() as u64,
+            ))
+        }
+        Warm::Multi(w) => {
+            let report = w.fork(&sc.cfg).run_to_completion()?;
+            Ok(ScenarioResult::from_multicore(
+                sc,
+                sc.cfg.seed,
+                &report,
+                wall.elapsed().as_nanos() as u64,
+            ))
+        }
     }
 }
 
@@ -411,47 +461,162 @@ fn obtain_warm(leader: &Scenario, opts: RunOpts, fork: &ForkOpts) -> WarmPlatfor
     wp
 }
 
-/// Warm-state forked sweep: group scenarios by [`warm_group_key`], fan
-/// the **groups** across `threads` workers (each group's warm-up runs
-/// once, inside the worker that owns it), fork per member. Results come
-/// back in scenario order and are bit-identical across thread counts —
-/// and bit-identical to `cold_replay` mode, which replays the identical
-/// warm+morph path per scenario (`tests/checkpoint_fork.rs` pins both).
+/// Multicore counterpart of [`obtain_warm`]: same cache discipline
+/// (stale or unwritable checkpoints degrade to a fresh warm-up, never an
+/// error), keyed with the core count so single- and multicore groups
+/// never collide on a checkpoint file.
+fn obtain_warm_multicore(
+    leader: &Scenario,
+    opts: RunOpts,
+    fork: &ForkOpts,
+) -> Result<WarmMulticore> {
+    let wls = vec![leader.workload; leader.cores];
+    let path = fork.checkpoint_dir.as_ref().map(|dir| {
+        let key = WarmMulticore::cache_key(&leader.cfg, &wls, opts, fork.warmup_ops);
+        dir.join(format!("warm-{key:016x}.ckpt"))
+    });
+    if let Some(p) = &path {
+        if let Ok(bytes) = std::fs::read(p) {
+            match WarmMulticore::load(&bytes, leader.cfg.clone(), &wls, opts) {
+                Ok(wm) => return Ok(wm),
+                Err(e) => eprintln!("warning: stale checkpoint {}: {e}", p.display()),
+            }
+        }
+    }
+    let mut wm = WarmMulticore::new(leader.cfg.clone(), &wls, opts)?;
+    wm.warm_up(fork.warmup_ops.saturating_mul(leader.cores as u64));
+    if let Some(p) = &path {
+        let write = std::fs::create_dir_all(p.parent().unwrap_or(std::path::Path::new(".")))
+            .and_then(|()| std::fs::write(p, wm.save()));
+        if let Err(e) = write {
+            eprintln!("warning: cannot cache checkpoint {}: {e}", p.display());
+        }
+    }
+    Ok(wm)
+}
+
+/// Warm-state forked sweep, in two phases: **phase A** groups scenarios
+/// by [`warm_group_key`] and fans the group warm-ups across `threads`
+/// workers (each group's warm-up runs once); **phase B** fans *every
+/// scenario* across the workers, forking from its group's shared warm
+/// state — so a sweep of 2 groups × 16 members keeps all N threads
+/// busy instead of 2. Results come back in scenario order and are
+/// bit-identical across thread counts — and bit-identical to
+/// `cold_replay` mode, which replays the identical warm+morph path per
+/// scenario (`tests/checkpoint_fork.rs` pins both). Multicore rows warm
+/// and fork through [`WarmMulticore`]; `warmup_ops == 0` degrades to the
+/// classic cold sweep with a per-row stderr warning.
 pub fn run_sweep_forked(
     scenarios: &[Scenario],
     threads: usize,
     fork: &ForkOpts,
 ) -> Result<SweepReport> {
     let n = scenarios.len();
+    if fork.warmup_ops == 0 {
+        // Satellite contract: never silently degrade a row to the cold
+        // path — name the row and the reason on stderr.
+        for sc in scenarios {
+            eprintln!(
+                "warning: scenario {:?} falls back to the classic cold path: --warmup-ops is 0",
+                sc.name
+            );
+        }
+        return run_sweep(scenarios, threads);
+    }
+
     let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut group_of = vec![0usize; n];
     for (i, sc) in scenarios.iter().enumerate() {
         let key = warm_group_key(sc);
-        match groups.iter_mut().find(|(k, _)| *k == key) {
-            Some((_, v)) => v.push(i),
-            None => groups.push((key, vec![i])),
-        }
+        let gi = match groups.iter().position(|(k, _)| *k == key) {
+            Some(gi) => {
+                groups[gi].1.push(i);
+                gi
+            }
+            None => {
+                groups.push((key, vec![i]));
+                groups.len() - 1
+            }
+        };
+        group_of[i] = gi;
     }
     let g = groups.len();
-    let threads = threads.max(1).min(g.max(1));
-    let next = AtomicUsize::new(0);
+    let workers = threads.max(1).min(n.max(1));
     let slots: Vec<Mutex<Option<Result<ScenarioResult>>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
-
     let wall = Instant::now();
+
+    if fork.cold_replay {
+        // Baseline mode: every member replays its own warm-up through
+        // the identical warm+morph construction, fanned member-wise.
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let leader = &scenarios[groups[group_of[i]].1[0]];
+                    let member_wall = Instant::now();
+                    let result = fresh_warm(leader, fork.warmup_ops)
+                        .and_then(|w| run_forked_member(&scenarios[i], &w, member_wall));
+                    *slots[i].lock().unwrap() = Some(result);
+                });
+            }
+        });
+        let wall_ns = wall.elapsed().as_nanos() as u64;
+        return collect_slots(scenarios, slots, workers, wall_ns);
+    }
+
+    // Phase A: one warm state per group, fanned across the workers.
+    // Errors are carried as strings so every member of a failed group
+    // can report the same cause.
+    let warm_slots: Vec<Mutex<Option<std::result::Result<Warm, String>>>> =
+        (0..g).map(|_| Mutex::new(None)).collect();
+    {
+        let next = AtomicUsize::new(0);
+        let warm_workers = threads.max(1).min(g.max(1));
+        std::thread::scope(|s| {
+            for _ in 0..warm_workers {
+                s.spawn(|| loop {
+                    let gi = next.fetch_add(1, Ordering::Relaxed);
+                    if gi >= g {
+                        break;
+                    }
+                    let leader = &scenarios[groups[gi].1[0]];
+                    let warm = obtain_warm_group(leader, fork).map_err(|e| e.to_string());
+                    *warm_slots[gi].lock().unwrap() = Some(warm);
+                });
+            }
+        });
+    }
+    let warms: Vec<std::result::Result<Warm, String>> = warm_slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("phase A fills every group"))
+        .collect();
+
+    // Phase B: fork every member from its group's shared warm state,
+    // fanned member-wise across the workers.
+    let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
-        for _ in 0..threads {
+        for _ in 0..workers {
             s.spawn(|| loop {
-                let gi = next.fetch_add(1, Ordering::Relaxed);
-                if gi >= g {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
                     break;
                 }
-                run_warm_group(scenarios, &groups[gi].1, fork, &slots);
+                let result = match &warms[group_of[i]] {
+                    Ok(w) => run_forked_member(&scenarios[i], w, Instant::now()),
+                    Err(e) => Err(crate::anyhow!("warm-up failed: {e}")),
+                };
+                *slots[i].lock().unwrap() = Some(result);
             });
         }
     });
     let wall_ns = wall.elapsed().as_nanos() as u64;
 
-    collect_slots(scenarios, slots, threads, wall_ns)
+    collect_slots(scenarios, slots, workers, wall_ns)
 }
 
 fn collect_slots(
@@ -586,6 +751,25 @@ mod tests {
         assert_eq!(grid[0].cores, 1);
         assert_eq!(grid[1].name, "mcf/staticx4");
         assert_eq!(grid[1].cores, 4);
+    }
+
+    #[test]
+    fn banks_grid_expands_and_suffixes() {
+        let wl = spec::by_name("505.mcf").unwrap();
+        let base = vec![Scenario::new("mcf/static", wl, small_cfg(), 1000)];
+        let default_banks = base[0].cfg.dram.banks;
+        let grid = Scenario::banks_grid(&base, &[0, 8, 32]);
+        assert_eq!(grid.len(), 3);
+        // The 0 point keeps the stack default and the unsuffixed name.
+        assert_eq!(grid[0].name, "mcf/static");
+        assert_eq!(grid[0].cfg.dram.banks, default_banks);
+        assert_eq!(grid[1].name, "mcf/static%bk8");
+        assert_eq!(grid[1].cfg.dram.banks, 8);
+        assert_eq!(grid[2].name, "mcf/static%bk32");
+        assert_eq!(grid[2].cfg.dram.banks, 32);
+        // The axis composes with the others (suffix order is stable).
+        let both = Scenario::fault_grid(&grid[1..2], &[1e-4]);
+        assert_eq!(both[0].name, "mcf/static%bk8%0.0001");
     }
 
     #[test]

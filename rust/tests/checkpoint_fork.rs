@@ -157,27 +157,67 @@ fn checkpoint_dir_cache_hit_is_bit_identical() {
 }
 
 #[test]
-fn multicore_scenarios_fall_back_to_cold_path() {
-    // cores > 1 has no single-platform state to fork; the forked sweep
-    // must still produce the classic result for those rows.
+fn multicore_rows_fork_warm_and_match_cold_replay_across_threads() {
+    // cores > 1 rows warm and fork through `WarmMulticore` — no cold
+    // fallback. The forked result must be bit-identical to cold-replay
+    // mode (which replays the identical warm+morph path per scenario)
+    // at every thread count, and the multicore warm engine itself is
+    // pinned identical to `run_multicore` in its unit tests, so the
+    // classic sweep agrees too.
     let mut base = SystemConfig::default_scaled(64);
     base.hmmu.epoch_requests = 2_000;
     let wl = spec::by_name("541.leela").unwrap();
-    let scenarios = vec![
-        Scenario::new("leela/static", wl, base.clone(), 4_000),
-        Scenario::new("leela/staticx2", wl, base, 4_000).with_cores(2),
-    ];
+    let policies = [PolicyKind::Static, PolicyKind::Hotness];
+    let mut scenarios = Vec::new();
+    for policy in policies {
+        let mut cfg = base.clone();
+        cfg.policy = policy;
+        scenarios.push(
+            Scenario::new(format!("leela/{policy:?}x2"), wl, cfg.clone(), 4_000).with_cores(2),
+        );
+        scenarios.push(Scenario::new(format!("leela/{policy:?}"), wl, cfg, 4_000));
+    }
+    let cold = run_sweep_forked(&scenarios, 1, &forked(2_000, true)).unwrap();
+    let fp_cold = cold.deterministic_fingerprint();
+    assert_eq!(fp_cold.lines().count(), 4);
+    for threads in [1usize, 2, 4] {
+        let fork = run_sweep_forked(&scenarios, threads, &forked(2_000, false)).unwrap();
+        assert_eq!(
+            fp_cold,
+            fork.deterministic_fingerprint(),
+            "multicore forked sweep (threads={threads}) diverged from cold replay"
+        );
+    }
+    // The classic sweep agrees with the warm engine on the multicore
+    // rows (full counter surface via the deterministic key).
     let classic = hymem::sweep::run_sweep(&scenarios, 2).unwrap();
     let fork = run_sweep_forked(&scenarios, 2, &forked(2_000, false)).unwrap();
-    // The multicore row is identical to classic; the single-core row is
-    // identical to its own cold replay (same warm+morph path).
-    assert_eq!(
-        classic.scenarios[1].deterministic_key(),
-        fork.scenarios[1].deterministic_key()
-    );
-    let cold = run_sweep_forked(&scenarios, 1, &forked(2_000, true)).unwrap();
-    assert_eq!(
-        cold.deterministic_fingerprint(),
-        fork.deterministic_fingerprint()
-    );
+    for (c, f) in classic.scenarios.iter().zip(&fork.scenarios) {
+        if c.cores > 1 {
+            assert_eq!(c.deterministic_key(), f.deterministic_key(), "{}", c.name);
+        }
+    }
+}
+
+#[test]
+fn intra_group_fork_parallelism_is_deterministic() {
+    // One warm group × many members: phase B fans the members (not the
+    // groups) across the pool, so thread counts beyond the group count
+    // must still produce the serial fork order bit-for-bit.
+    let mut base = SystemConfig::default_scaled(64);
+    base.hmmu.epoch_requests = 2_000;
+    let wl = spec::by_name("505.mcf").unwrap();
+    let policies = [PolicyKind::Static, PolicyKind::Hotness];
+    let grid = Scenario::grid(&[wl], &policies, &base, OPS);
+    let grid = Scenario::stall_grid(&grid, &[(50, 225), (200, 900), (400, 1_800)]);
+    assert_eq!(grid.len(), 6, "six members, one warm group");
+    let serial = run_sweep_forked(&grid, 1, &forked(WARM, false)).unwrap();
+    for threads in [2usize, 4] {
+        let par = run_sweep_forked(&grid, threads, &forked(WARM, false)).unwrap();
+        assert_eq!(
+            serial.deterministic_fingerprint(),
+            par.deterministic_fingerprint(),
+            "intra-group fork (threads={threads}) diverged from serial"
+        );
+    }
 }

@@ -1,0 +1,267 @@
+//! Sharded redirection-table property pins.
+//!
+//! The sharded table's contract: **every shard count is bit-identical to
+//! the monolithic table** (`nshards == 1`) — same placements, same
+//! fallback order, same swap/retire outcomes, same counter surface —
+//! under arbitrary churn, at the table level and end-to-end through the
+//! HMMU with the fault layer retiring frames mid-run.
+
+use hymem::config::{MemTech, PolicyKind, SystemConfig};
+use hymem::cpu::{CacheHierarchy, CoreModel};
+use hymem::hmmu::redirection::DEFAULT_SHARDS;
+use hymem::hmmu::{Mapping, RedirectionTable, TierId};
+use hymem::platform::HmmuBackend;
+use hymem::workload::{spec, TraceGenerator};
+
+/// Deterministic splitmix64 stream (no rand dependency).
+fn mix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Full observable-surface equality against `tables[0]` (the monolithic
+/// reference), plus the internal invariant check on every table.
+fn assert_surfaces_equal(tables: &[RedirectionTable]) {
+    let a = &tables[0];
+    a.check_invariants().unwrap();
+    for b in &tables[1..] {
+        let n = b.shard_count();
+        b.check_invariants().unwrap();
+        assert_eq!(a.mapped_pages(), b.mapped_pages(), "{n} shards");
+        assert_eq!(a.residency(), b.residency(), "{n} shards");
+        for t in 0..a.tiers() {
+            let tier = TierId(t as u8);
+            assert_eq!(a.free_frames(tier), b.free_frames(tier), "{tier:?} ({n} shards)");
+            assert_eq!(a.retired_frames(tier), b.retired_frames(tier), "{tier:?} ({n} shards)");
+            assert_eq!(a.effective_frames(tier), b.effective_frames(tier), "{tier:?} ({n} shards)");
+            assert_eq!(a.resident_pages(tier), b.resident_pages(tier), "{tier:?} ({n} shards)");
+            assert_eq!(a.recount_resident(tier), b.recount_resident(tier), "{tier:?} ({n} shards)");
+        }
+        let ma: Vec<(u64, Mapping)> = a.iter_mapped().collect();
+        let mb: Vec<(u64, Mapping)> = b.iter_mapped().collect();
+        assert_eq!(ma, mb, "mapped surface diverged at {n} shards");
+    }
+}
+
+/// Drive the identical place/swap/retire/lookup churn through every
+/// table, asserting per-call result equality and (periodically) full
+/// surface equality.
+fn churn(tables: &mut [RedirectionTable], seed: u64, steps: u64) {
+    let host_pages = tables[0].host_pages();
+    let tiers = tables[0].tiers() as u64;
+    let mut s = seed;
+    for step in 0..steps {
+        let a = mix(&mut s) % host_pages;
+        let b = mix(&mut s) % host_pages;
+        match mix(&mut s) % 10 {
+            0..=4 => {
+                if tables[0].lookup(a).is_none() {
+                    let want = TierId((mix(&mut s) % tiers) as u8);
+                    let got: Vec<Mapping> =
+                        tables.iter_mut().map(|t| t.place(a, want).unwrap()).collect();
+                    assert!(got.windows(2).all(|w| w[0] == w[1]), "place({a}) diverged: {got:?}");
+                }
+            }
+            5..=6 => {
+                if a != b && tables[0].lookup(a).is_some() && tables[0].lookup(b).is_some() {
+                    for t in tables.iter_mut() {
+                        t.swap(a, b).unwrap();
+                    }
+                }
+            }
+            7..=8 => {
+                if tables[0].lookup(a).is_some() {
+                    let got: Vec<Option<Mapping>> = tables
+                        .iter_mut()
+                        .map(|t| t.retire_and_remap(a).unwrap())
+                        .collect();
+                    assert!(got.windows(2).all(|w| w[0] == w[1]), "retire({a}) diverged: {got:?}");
+                }
+            }
+            _ => {
+                let m = tables[0].lookup(a);
+                assert!(tables.iter().all(|t| t.lookup(a) == m), "lookup({a}) diverged");
+                let x = tables[0].translate(a * tables[0].page_bytes() + 17);
+                assert!(
+                    tables.iter().all(|t| t.translate(a * t.page_bytes() + 17) == x),
+                    "translate({a}) diverged"
+                );
+            }
+        }
+        if step % 512 == 0 {
+            assert_surfaces_equal(tables);
+        }
+    }
+    assert_surfaces_equal(tables);
+}
+
+fn tables_for(host_pages: u64, frames: &[u32], shard_counts: &[usize]) -> Vec<RedirectionTable> {
+    shard_counts
+        .iter()
+        .map(|&n| RedirectionTable::new_with_shards(host_pages, frames, 4096, n))
+        .collect()
+}
+
+#[test]
+fn churn_battery_matches_monolithic_across_shard_counts() {
+    // Shard 1 is the monolithic reference; 16 > stripes exercises
+    // shards that own zero page stripes but still hold frame pools.
+    let counts = [1usize, 2, 4, DEFAULT_SHARDS, 16];
+    // (host_pages, tier frame stack): 2- and 3-tier, DRAM smaller than
+    // the demand so placement overflows down the stack.
+    let stacks: [(u64, &[u32]); 2] = [(512, &[96, 448]), (512, &[64, 128, 384])];
+    for (host_pages, frames) in stacks {
+        let mut tables = tables_for(host_pages, frames, &counts);
+        churn(&mut tables, 0x5EED ^ host_pages ^ frames.len() as u64, 4_000);
+    }
+}
+
+#[test]
+fn identity_map_is_shard_invariant() {
+    // 64 NVM frames stay free after the identity fill, so the
+    // post-identity churn still exercises retirement remaps.
+    let mut tables = tables_for(448, &[128, 384], &[1, 4, DEFAULT_SHARDS]);
+    for t in tables.iter_mut() {
+        t.identity_map();
+    }
+    assert_surfaces_equal(&tables);
+    // Identity layout: page p sits on the p-th frame walking the stack.
+    for t in &tables {
+        assert_eq!(t.lookup(0), Some(Mapping { device: TierId::Dram, frame: 0 }));
+        assert_eq!(t.lookup(127), Some(Mapping { device: TierId::Dram, frame: 127 }));
+        assert_eq!(t.lookup(128), Some(Mapping { device: TierId::Nvm, frame: 0 }));
+    }
+    // Post-identity churn (swap/retire only — everything is mapped).
+    churn(&mut tables, 0xFACE, 2_000);
+}
+
+#[test]
+fn exhaustion_and_fallback_order_match_monolithic() {
+    // host_pages == total frames: retiring frames shrinks capacity below
+    // the page count, so both the "no free frames" place error and the
+    // `Ok(None)` retire denial become reachable — and must agree.
+    let mut tables = tables_for(128, &[64, 64], &[1, DEFAULT_SHARDS]);
+    for page in 0..100u64 {
+        let want = TierId((page % 2) as u8);
+        let got: Vec<Mapping> =
+            tables.iter_mut().map(|t| t.place(page, want).unwrap()).collect();
+        assert_eq!(got[0], got[1], "fallback order diverged at page {page}");
+    }
+    for page in 0..28u64 {
+        let got: Vec<Option<Mapping>> = tables
+            .iter_mut()
+            .map(|t| t.retire_and_remap(page).unwrap())
+            .collect();
+        assert_eq!(got[0], got[1], "retire remap diverged at page {page}");
+        assert!(got[0].is_some(), "free frames remain, retire must remap");
+    }
+    assert_surfaces_equal(&tables);
+    for t in &tables {
+        assert_eq!(t.free_frames(TierId::Dram) + t.free_frames(TierId::Nvm), 0);
+        assert_eq!(t.retired_frames(TierId::Dram) + t.retired_frames(TierId::Nvm), 28);
+    }
+    // No free frame anywhere: placement fails, retirement is denied
+    // (the page survives on its degraded frame) — identically.
+    for t in tables.iter_mut() {
+        assert!(t.place(120, TierId::Dram).is_err(), "place on exhausted stack must fail");
+        assert_eq!(t.retire_and_remap(50).unwrap(), None);
+    }
+    assert_surfaces_equal(&tables);
+}
+
+/// Rebuild the redirection table exactly as `Hmmu::new` does, but with
+/// an explicit shard count — the monolithic reference for the
+/// end-to-end runs below.
+fn table_like_hmmu(cfg: &SystemConfig, nshards: usize) -> RedirectionTable {
+    let page_bytes = cfg.hmmu.page_bytes;
+    let frames: Vec<u32> = cfg
+        .tier_specs()
+        .iter()
+        .map(|s| (s.size_bytes / page_bytes) as u32)
+        .collect();
+    let mut table =
+        RedirectionTable::new_with_shards(cfg.total_pages(), &frames, page_bytes, nshards);
+    if cfg.policy == PolicyKind::Static {
+        table.identity_map();
+    }
+    table
+}
+
+/// Every surface the sweep fingerprints: platform time, the full
+/// counter block, residency, retired-frame counts, mapped pages.
+#[derive(PartialEq, Debug)]
+struct Surface {
+    time_ns: u64,
+    counters: String,
+    residency: Vec<u64>,
+    retired: Vec<usize>,
+    mapped: Vec<(u64, Mapping)>,
+}
+
+/// One full platform pass; `mono` swaps the HMMU's table for a 1-shard
+/// build before the first access.
+fn run_hmmu(cfg: &SystemConfig, wl_name: &str, ops: u64, mono: bool) -> Surface {
+    let mut backend = HmmuBackend::new(cfg.clone(), None);
+    if mono {
+        backend.hmmu.table = table_like_hmmu(cfg, 1);
+    }
+    assert_eq!(backend.hmmu.table.shard_count(), if mono { 1 } else { DEFAULT_SHARDS });
+    let mut core = CoreModel::new(cfg.cpu);
+    let mut hier = CacheHierarchy::new(cfg);
+    let wl = spec::by_name(wl_name).unwrap();
+    let gen = TraceGenerator::new(wl, cfg.scale, cfg.seed).take_ops(ops);
+    for op in gen {
+        core.step(&op, &mut hier, &mut backend);
+    }
+    let t = core.finish();
+    backend.drain(t);
+    let table = &backend.hmmu.table;
+    table.check_invariants().unwrap();
+    Surface {
+        time_ns: t,
+        counters: format!("{:?}", backend.hmmu.counters),
+        residency: table.residency().to_vec(),
+        retired: (0..table.tiers())
+            .map(|i| table.retired_frames(TierId(i as u8)))
+            .collect(),
+        mapped: table.iter_mapped().collect(),
+    }
+}
+
+#[test]
+fn hmmu_runs_bit_identical_mono_vs_sharded_under_fault_churn() {
+    // 2- and 3-tier stacks × policies, with the fault layer hot enough
+    // to retire frames mid-run: the sharded table must not move a single
+    // counter, page, or nanosecond against the monolithic one.
+    let base = SystemConfig::default_scaled(64);
+    let three = base
+        .clone()
+        .with_tiers(&[MemTech::Dram, MemTech::Pcm, MemTech::Xpoint3D])
+        .unwrap();
+    let mut total_retired = 0usize;
+    for stack in [&base, &three] {
+        for policy in [PolicyKind::Static, PolicyKind::Hotness, PolicyKind::WearAware] {
+            let mut cfg = stack.clone();
+            cfg.policy = policy;
+            cfg.hmmu.epoch_requests = 2_000;
+            // Aggressive wear + error knobs so frames actually die
+            // inside 12k ops (`tests/fault_props.rs` calibration).
+            cfg.nvm.endurance = 16;
+            cfg.fault.rber_base = 2e-2;
+            cfg.fault.uncorrectable_frac = 0.2;
+            let label = format!("{}/{policy:?}", cfg.topology_label());
+
+            let sharded = run_hmmu(&cfg, "505.mcf", 12_000, false);
+            let mono = run_hmmu(&cfg, "505.mcf", 12_000, true);
+            assert_eq!(sharded, mono, "mono vs sharded diverged: {label}");
+            total_retired += sharded.retired.iter().sum::<usize>();
+        }
+    }
+    assert!(
+        total_retired > 0,
+        "fault churn never retired a frame — the battery is vacuous"
+    );
+}
